@@ -1,0 +1,55 @@
+"""Fig 10 analog: FL model-transfer time vs model size.
+
+Per-round dispatch+collect time as the model grows; the by-value baseline
+dies at the 5 MB cap (the paper's truncated baseline curve) while proxies
+keep a flat control-plane cost.  The compression row shows the int8 update
+path (4x fewer bytes through the store).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.util import emit, fmt_bytes, tmpdir
+from repro.configs import ARCHS
+from repro.core import Store, serialize
+from repro.core.connectors import FileConnector
+from repro.federated.faas import CloudModel, FaasExecutor, PayloadTooLarge
+from repro.federated.fl import FLConfig, FLOrchestrator
+
+WIDTHS = [64, 192, 448]   # ~0.2 / 1.3 / 6.3 MB of weights
+
+
+def run() -> None:
+    d = tmpdir("fig10")
+    ex = FaasExecutor(n_workers=2, cloud=CloudModel(latency_s=0.01))
+    for width in WIDTHS:
+        cfg = ARCHS["phi4-mini-3.8b"].reduced().replace(
+            n_layers=2, d_model=width, d_ff=2 * width, vocab=256,
+            n_heads=4, n_kv_heads=2, head_dim=width // 4, dtype="float32")
+        for transport, compression in (("value", "none"), ("proxy", "none"),
+                                       ("proxy", "int8")):
+            store = Store(f"fig10-{width}-{transport}-{compression}",
+                          FileConnector(os.path.join(d, "store"))) \
+                if transport == "proxy" else None
+            fl = FLConfig(rounds=1, workers_per_round=2, local_steps=1,
+                          transport=transport, compression=compression,
+                          batch=2, seq=16)
+            orch = FLOrchestrator(cfg, fl, ex, store)
+            n_bytes = len(serialize(orch.params))
+            try:
+                t0 = time.perf_counter()
+                info = orch.run_round(0)
+                dt = time.perf_counter() - t0
+                if info["ok"] == 0:
+                    raise PayloadTooLarge("all workers hit the cap")
+                emit(f"fig10.{transport}-{compression}.{fmt_bytes(n_bytes)}",
+                     dt * 1e6, f"{info['ok']}/2-workers")
+            except PayloadTooLarge:
+                emit(f"fig10.{transport}-{compression}.{fmt_bytes(n_bytes)}",
+                     float("nan"), "exceeds-5MB-cap")
+    ex.shutdown()
+
+
+if __name__ == "__main__":
+    run()

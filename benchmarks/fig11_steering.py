@@ -1,0 +1,55 @@
+"""Fig 11 analog: worker utilization vs scale in an ML-in-the-loop workflow.
+
+Simulation tasks (fixed compute) return bulky results through the task
+server; as worker count grows the server data path saturates and workers
+starve — unless results travel by proxy.  Utilization = ideal wall time /
+measured wall time, the paper's Fig 11 quantity.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.util import emit, payload, tmpdir
+from repro.core import Store
+from repro.core.connectors import SharedMemoryConnector
+from repro.federated.steer import SteerConfig, Steering
+
+TASK_S = 0.05          # per-task "simulation" compute
+RESULT_BYTES = 4_000_000
+N_TASKS = 24
+
+
+def run() -> None:
+    d = tmpdir("fig11")
+    result = payload(RESULT_BYTES)
+
+    def sim(_x):
+        time.sleep(TASK_S)
+        return result
+
+    for n_workers in (2, 4, 8):
+        ideal = N_TASKS * TASK_S / n_workers
+        store = Store(f"fig11-{n_workers}",
+                      SharedMemoryConnector(os.path.join(d, f"s{n_workers}")))
+        s1 = Steering(SteerConfig(n_workers=n_workers,
+                                  proxy_threshold=100_000), store)
+        r1 = s1.run(sim, lambda i: np.int32(i), N_TASKS,
+                    n_outstanding=2 * n_workers)
+        s1.close()
+        s2 = Steering(SteerConfig(n_workers=n_workers,
+                                  proxy_threshold=None), None)
+        r2 = s2.run(sim, lambda i: np.int32(i), N_TASKS,
+                    n_outstanding=2 * n_workers)
+        s2.close()
+        u1, u2 = ideal / r1["wall_s"], ideal / r2["wall_s"]
+        emit(f"fig11.util.proxy.w{n_workers}", r1["wall_s"] * 1e6,
+             f"utilization={u1:.2f}")
+        emit(f"fig11.util.baseline.w{n_workers}", r2["wall_s"] * 1e6,
+             f"utilization={u2:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Fig 5 analog: FaaS round-trip time vs payload size and data path.
+
+Baseline ships task inputs through the payload-capped cloud control plane;
+proxy variants ship a ~300-byte reference via File/Socket stores.  The
+``sleep`` rows reproduce the bottom half of Fig 5: a 0.2 s task that
+``resolve_async``es its input overlaps communication with compute.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.util import emit, fmt_bytes, payload, time_call, tmpdir
+from repro.core import Store, resolve_async
+from repro.core.connectors import FileConnector, SocketConnector
+from repro.core.proxy import extract, is_proxy
+from repro.federated.faas import CloudModel, FaasExecutor, PayloadTooLarge
+
+SIZES = [10_000, 1_000_000, 10_000_000]
+
+
+def noop_task(x):
+    if is_proxy(x):
+        x = extract(x)   # ensure the data is actually materialized
+    return np.asarray(x).shape[0]
+
+
+def sleep_task(x):
+    if is_proxy(x):
+        resolve_async(x)
+    time.sleep(0.2)
+    return np.asarray(extract(x) if is_proxy(x) else x).shape[0]
+
+
+def run() -> None:
+    d = tmpdir("fig5")
+    ex = FaasExecutor(n_workers=1, cloud=CloudModel(latency_s=0.01))
+    stores = {
+        "file": Store("fig5-file", FileConnector(os.path.join(d, "file"))),
+        "socket": Store("fig5-sock", SocketConnector(os.path.join(d, "sock"))),
+    }
+    for size in SIZES:
+        data = payload(size)
+        # baseline: data by value through the cloud (cap applies)
+        try:
+            t = time_call(lambda: ex.submit(noop_task, data).result())
+            emit(f"fig5.noop.baseline.{fmt_bytes(size)}", t * 1e6,
+                 "cloud-value")
+        except PayloadTooLarge:
+            emit(f"fig5.noop.baseline.{fmt_bytes(size)}", float("nan"),
+                 "exceeds-5MB-cap")
+        for name, store in stores.items():
+            t = time_call(
+                lambda: ex.submit(noop_task, store.proxy(data)).result())
+            emit(f"fig5.noop.{name}-proxy.{fmt_bytes(size)}", t * 1e6,
+                 "proxy")
+    # sleep/overlap rows (1 MB)
+    data = payload(1_000_000)
+    try:
+        t = time_call(lambda: ex.submit(sleep_task, data).result(), reps=2)
+        emit("fig5.sleep.baseline.1MB", t * 1e6, "cloud-value+0.2s")
+    except PayloadTooLarge:
+        emit("fig5.sleep.baseline.1MB", float("nan"), "cap")
+    t = time_call(
+        lambda: ex.submit(sleep_task,
+                          stores["file"].proxy(data)).result(), reps=2)
+    emit("fig5.sleep.file-proxy.1MB", t * 1e6, "overlap=resolve_async")
+    ex.shutdown()
+    stores["socket"].connector.shutdown_server()
+
+
+if __name__ == "__main__":
+    run()

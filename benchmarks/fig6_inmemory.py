@@ -1,0 +1,49 @@
+"""Fig 6 analog: distributed in-memory connector comparison.
+
+Paper: Margo/UCX (RDMA) vs ZMQ vs Redis vs DataSpaces.  Here: shm (the
+zero-copy intra-node analog) vs socket store (ZMQ role) vs standalone KV
+server (Redis role) vs file system — put+get round trip per connector.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.util import emit, fmt_bytes, payload, time_call, tmpdir
+from repro.core import serialize
+from repro.core.connectors import (FileConnector, KVServerConnector,
+                                   SharedMemoryConnector, SocketConnector)
+from repro.core.deploy import start_kvserver
+
+SIZES = [10_000, 1_000_000, 10_000_000, 100_000_000]
+
+
+def run() -> None:
+    d = tmpdir("fig6")
+    kv = start_kvserver(d)
+    conns = {
+        "shm": SharedMemoryConnector(os.path.join(d, "shm")),
+        "socket": SocketConnector(os.path.join(d, "sock")),
+        "kvserver": KVServerConnector(kv.host, kv.port),
+        "file": FileConnector(os.path.join(d, "file")),
+    }
+    for size in SIZES:
+        blob = serialize(payload(size))
+
+        for name, conn in conns.items():
+            def rt(conn=conn):
+                key = conn.put(blob)
+                got = conn.get(key)
+                assert got is not None and len(got) == len(blob)
+                conn.evict(key)
+
+            t = time_call(rt)
+            mbps = len(blob) * 2 / t / 1e6
+            emit(f"fig6.{name}.{fmt_bytes(size)}", t * 1e6,
+                 f"{mbps:.0f}MB/s")
+    for conn in conns.values():
+        conn.close()
+    kv.stop()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig 7 analog: % improvement in workflow task round-trip from proxying
+task data above a threshold (Colmena-style library integration).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.util import emit, fmt_bytes, payload, tmpdir
+from repro.core import Store
+from repro.core.connectors import SharedMemoryConnector
+from repro.federated.steer import SteerConfig, Steering
+
+SIZES = [10_000, 1_000_000, 10_000_000]
+N_TASKS = 8
+
+
+def run() -> None:
+    d = tmpdir("fig7")
+    for size in SIZES:
+        data = payload(size)
+
+        def task(x):
+            return np.float64(np.sum(x))  # tiny result; input dominates
+
+        store = Store(f"fig7-{size}",
+                      SharedMemoryConnector(os.path.join(d, f"s{size}")))
+        with_p = Steering(SteerConfig(proxy_threshold=100_000), store)
+        r1 = with_p.run(task, lambda i: data, N_TASKS)
+        with_p.close()
+        no_p = Steering(SteerConfig(proxy_threshold=None), None)
+        r2 = no_p.run(task, lambda i: data, N_TASKS)
+        no_p.close()
+        imp = (r2["wall_s"] - r1["wall_s"]) / r2["wall_s"] * 100
+        emit(f"fig7.rtt.{fmt_bytes(size)}",
+             r1["wall_s"] / N_TASKS * 1e6,
+             f"improvement={imp:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

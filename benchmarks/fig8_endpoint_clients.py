@@ -1,0 +1,59 @@
+"""Fig 8 analog: PS-endpoint get/set latency vs concurrent clients.
+
+The endpoint is a single-threaded asyncio app (as in the paper), so
+per-request time scales ~linearly with client count — reproduced here.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from benchmarks.util import emit, fmt_bytes, payload, tmpdir
+from repro.core import serialize
+from repro.core.connectors import EndpointConnector
+from repro.core.deploy import start_endpoint, start_relay
+
+SIZES = [100_000, 1_000_000]
+CLIENTS = [1, 2, 4]
+REQS = 20
+
+
+def run() -> None:
+    d = tmpdir("fig8")
+    relay = start_relay(d)
+    ep = start_endpoint(d, relay.address, name="fig8")
+    for size in SIZES:
+        blob = serialize(payload(size))
+        for n_clients in CLIENTS:
+            times: list[float] = []
+            lock = threading.Lock()
+
+            def client():
+                conn = EndpointConnector(address=ep.address)
+                for _ in range(REQS):
+                    t0 = time.perf_counter()
+                    key = conn.put(blob)
+                    got = conn.get(key)
+                    dt = time.perf_counter() - t0
+                    assert got == blob
+                    conn.evict(key)
+                    with lock:
+                        times.append(dt)
+                conn.close()
+
+            threads = [threading.Thread(target=client)
+                       for _ in range(n_clients)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            avg = sum(times) / len(times)
+            emit(f"fig8.setget.{fmt_bytes(size)}.c{n_clients}",
+                 avg * 1e6, f"{n_clients}-clients")
+    ep.stop()
+    relay.stop()
+
+
+if __name__ == "__main__":
+    run()

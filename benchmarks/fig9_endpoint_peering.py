@@ -1,0 +1,86 @@
+"""Fig 9 analog: endpoint-to-endpoint request times vs payload size.
+
+Three scenarios mirror the paper: same-site peering (no throttle = the
+Theta-Theta baseline), inter-site peering with the measured aiortc regime
+(~80 Mbps + WAN RTT, §5.3.2), and the "Redis+SSH" comparison (direct KV
+server with the same injected WAN latency, one hop fewer) — reproducing the
+paper's observed crossover: the extra endpoint hop dominates locally, the
+channel ceiling dominates at large payloads.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import emit, fmt_bytes, payload, time_call, tmpdir
+from repro.core import serialize
+from repro.core.connectors import EndpointConnector, KVServerConnector
+from repro.core.deploy import start_endpoint, start_kvserver, start_relay
+
+SIZES = [10_000, 1_000_000, 10_000_000]
+WAN_RTT = 0.03                      # ~30 ms cross-site
+AIORTC_BPS = 80e6 / 8               # the paper's 80 Mbps ceiling
+
+
+class _LatencyKV(KVServerConnector):
+    """Redis-over-SSH-tunnel analog: same WAN latency, direct channel."""
+
+    def __init__(self, host, port, rtt):
+        super().__init__(host, port)
+        self.rtt = rtt
+
+    def get(self, key):
+        time.sleep(self.rtt / 2)
+        return super().get(key)
+
+    def put(self, blob):
+        time.sleep(self.rtt / 2)
+        return super().put(blob)
+
+
+def run() -> None:
+    d = tmpdir("fig9")
+    relay = start_relay(d)
+    # same-site pair
+    ep_a = start_endpoint(d, relay.address, name="a")
+    ep_b = start_endpoint(d, relay.address, name="b")
+    # "inter-site" pair with the aiortc WAN regime
+    ep_c = start_endpoint(d, relay.address, name="c",
+                          throttle_bps=AIORTC_BPS, throttle_rtt=WAN_RTT)
+    ep_e = start_endpoint(d, relay.address, name="e",
+                          throttle_bps=AIORTC_BPS, throttle_rtt=WAN_RTT)
+    kv = start_kvserver(d)
+
+    ca = EndpointConnector(address=ep_a.address)
+    cc = EndpointConnector(address=ep_c.address)
+    for size in SIZES:
+        blob = serialize(payload(size))
+
+        # same-site: B stores, A fetches via peer channel
+        cb = EndpointConnector(address=ep_b.address)
+        key = cb.put(blob)
+        t = time_call(lambda: ca.get(key))
+        emit(f"fig9.same-site.peer.{fmt_bytes(size)}", t * 1e6, "endpoint")
+        cb.evict(key)
+
+        # inter-site: E stores, C fetches through the throttled channel
+        ce = EndpointConnector(address=ep_e.address)
+        key = ce.put(blob)
+        t = time_call(lambda: cc.get(key), reps=2)
+        emit(f"fig9.inter-site.peer.{fmt_bytes(size)}", t * 1e6,
+             "aiortc-regime")
+        ce.evict(key)
+
+        # Redis+SSH analog: direct KV with injected WAN rtt
+        lkv = _LatencyKV(kv.host, kv.port, WAN_RTT)
+        key = lkv.put(blob)
+        t = time_call(lambda: lkv.get(key), reps=2)
+        emit(f"fig9.inter-site.redis-ssh.{fmt_bytes(size)}", t * 1e6,
+             "direct-1-hop")
+        lkv.evict(key)
+
+    for h in (ep_a, ep_b, ep_c, ep_e, relay, kv):
+        h.stop()
+
+
+if __name__ == "__main__":
+    run()

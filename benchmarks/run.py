@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/util.emit) per row.
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig5", "benchmarks.fig5_faas_rtt"),
+    ("fig6", "benchmarks.fig6_inmemory"),
+    ("fig7", "benchmarks.fig7_workflow"),
+    ("fig8", "benchmarks.fig8_endpoint_clients"),
+    ("fig9", "benchmarks.fig9_endpoint_peering"),
+    ("table2", "benchmarks.table2_defect"),
+    ("fig10", "benchmarks.fig10_federated"),
+    ("fig11", "benchmarks.fig11_steering"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig5,table2")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, module in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            __import__(module, fromlist=["run"]).run()
+            print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures.append(tag)
+            print(f"# {tag} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

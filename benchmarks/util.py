@@ -1,0 +1,47 @@
+"""Shared benchmark helpers: timing + CSV emission + fixtures."""
+from __future__ import annotations
+
+import statistics
+import tempfile
+import time
+from typing import Callable
+
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def payload(n_bytes: int, seed: int = 0) -> np.ndarray:
+    """Incompressible float32 payload of ~n_bytes."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(max(n_bytes // 4, 1)).astype(np.float32)
+
+
+def tmpdir(prefix: str) -> str:
+    return tempfile.mkdtemp(prefix=f"psj-bench-{prefix}-")
+
+
+def fmt_bytes(n: int) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024:
+            return f"{n:.0f}{unit}"
+        n /= 1024
+    return f"{n:.0f}TB"

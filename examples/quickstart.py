@@ -1,0 +1,73 @@
+"""Quickstart: the paper's Listing 1, in this framework.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import pickle
+import tempfile
+
+import numpy as np
+
+from repro.core import (MultiConnector, Policy, Store, get_factory,
+                        is_resolved, resolve_async)
+from repro.core.connectors import (FileConnector, LocalMemoryConnector,
+                                   SharedMemoryConnector)
+
+
+def my_function(x):
+    # consumer code is unaware it received a proxy: isinstance holds,
+    # numpy operations forward transparently
+    assert isinstance(x, dict)
+    return float(np.sum(x["data"]))
+
+
+def main() -> None:
+    tmp = tempfile.mkdtemp(prefix="psj-quickstart-")
+
+    # -- Listing 1: store + proxy --------------------------------------
+    store = Store("my-store", FileConnector(os.path.join(tmp, "store")))
+    payload = {"data": np.arange(1_000_000, dtype=np.float32)}
+    p = store.proxy(payload)
+
+    wire = pickle.dumps(p)  # what a FaaS/workflow system would ship
+    print(f"proxy pickles to {len(wire)} bytes "
+          f"(data is {payload['data'].nbytes:,} bytes)")
+
+    p2 = pickle.loads(wire)
+    print("resolved before use?", is_resolved(p2))
+    print("my_function(proxy) =", my_function(p2))   # just-in-time resolve
+    print("resolved after use?", is_resolved(p2))
+
+    # -- async resolution overlaps communication with compute ----------
+    p3 = pickle.loads(pickle.dumps(store.proxy(payload)))
+    resolve_async(p3)          # starts fetching in the background
+    _ = sum(range(10_000))     # ... compute happens here ...
+    print("async-resolved sum:", my_function(p3))
+
+    # -- evict-on-resolve for ephemeral intermediates -------------------
+    p4 = store.proxy(payload, evict=True)
+    key = get_factory(p4).key
+    _ = my_function(p4)
+    print("evicted after first resolve?", not store.exists(key))
+
+    # -- MultiConnector policy routing ----------------------------------
+    multi = MultiConnector([
+        (LocalMemoryConnector(), Policy(max_size=64 << 10, priority=10,
+                                        tags=frozenset({"local"}))),
+        (SharedMemoryConnector(os.path.join(tmp, "shm")),
+         Policy(priority=5, tags=frozenset({"local", "node"}))),
+        (FileConnector(os.path.join(tmp, "bulk")),
+         Policy(priority=0, tags=frozenset({"local", "node", "persistent"}))),
+    ])
+    mstore = Store("multi-store", multi)
+    small = mstore.put(b"tiny control message")
+    rng = np.random.default_rng(0)
+    big = mstore.put(rng.standard_normal(1_000_000).astype(np.float32))
+    durable = mstore.put({"model": "weights"}, constraints=["persistent"])
+    print("routing: small->", small[1], " big->", big[1],
+          " persistent->", durable[1],
+          " (0=memory, 1=shm, 2=file)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving driver (deliverable b): prefill + KV-cache decode, weights
+lazily restorable from a proxy-checkpoint manifest.
+
+Thin wrapper over ``repro.launch.serve``; see that module for flags.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2.5-14b \
+        --preset tiny --requests 4 --new-tokens 16
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

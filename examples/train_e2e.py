@@ -1,0 +1,14 @@
+"""End-to-end training driver (deliverable b): proxy-fed pipeline, async
+proxy checkpoints, crash-resume, any assigned --arch.
+
+Thin wrapper over ``repro.launch.train``; see that module for flags.
+
+    PYTHONPATH=src python examples/train_e2e.py --arch phi4-mini-3.8b \
+        --preset small --steps 200
+    # kill it mid-run, then add --resume: it continues from the last
+    # proxy-checkpoint manifest with an identical data stream.
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Whisper-base — encoder-decoder; conv frontend is a STUB (precomputed
+frame embeddings). [arXiv:2212.04356; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+    vocab=51865, head_dim=64, n_enc_layers=6, enc_frames=1500, act="gelu",
+)

@@ -1,0 +1,13 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention block.
+[arXiv:2411.15242; hf]
+
+kv=32 with 32 heads => full MHA in the shared block (head_dim 64).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, head_dim=64, ssm_state=64, ssm_expand=2, ssm_head_dim=64,
+    attn_every=6,
+)

@@ -1,0 +1,27 @@
+"""ProxyStore core: the paper's contribution.
+
+Public API mirrors the paper's usage (Listing 1):
+
+    from repro.core import Store
+    from repro.core.connectors import FileConnector
+
+    store = Store("my-store", FileConnector("/tmp/psj"))
+    p = store.proxy(obj)          # lightweight, pickles to ~200 bytes
+    consume(p)                    # resolves just-in-time, transparently
+"""
+from repro.core.proxy import (Proxy, ProxyResolveError, extract, get_factory,
+                              is_proxy, is_resolved, resolve)
+from repro.core.serialize import deserialize, serialize
+from repro.core.connector import BaseConnector, Connector, Key
+from repro.core.store import (Store, StoreConfig, StoreFactory, get_store,
+                              get_or_create_store, maybe_proxy,
+                              register_store, resolve_async, unregister_store)
+from repro.core.multi import MultiConnector, NoConnectorMatch, Policy
+
+__all__ = [
+    "Proxy", "ProxyResolveError", "extract", "get_factory", "is_proxy",
+    "is_resolved", "resolve", "serialize", "deserialize", "BaseConnector",
+    "Connector", "Key", "Store", "StoreConfig", "StoreFactory", "get_store",
+    "get_or_create_store", "maybe_proxy", "register_store", "resolve_async",
+    "unregister_store", "MultiConnector", "NoConnectorMatch", "Policy",
+]

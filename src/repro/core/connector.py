@@ -1,0 +1,94 @@
+"""The Connector protocol (paper §3.4).
+
+A Connector is a low-level interface to a *mediated channel*: it moves opaque
+byte strings identified by keys.  Four primary operations — ``put``, ``get``,
+``exists``, ``evict`` — plus batch variants and lifecycle hooks.
+
+Keys are plain tuples of msgpack-serializable scalars so they can ride inside
+factories across process and site boundaries.
+
+Connectors must additionally be *reconstructible from config*: ``config()``
+returns kwargs such that ``type(conn)(**conn.config())`` connects to the same
+channel from any process.  This is what lets a proxy resolved on a remote
+process re-materialize its Store (paper §3.5's registry behavior).
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+Key = tuple  # (str | int, ...)
+
+
+@runtime_checkable
+class Connector(Protocol):
+    """Byte-level mediated-channel interface."""
+
+    def put(self, blob: bytes) -> Key:
+        """Store ``blob``; return a unique key."""
+        ...
+
+    def get(self, key: Key) -> bytes | None:
+        """Return the blob for ``key`` or None if absent/evicted."""
+        ...
+
+    def exists(self, key: Key) -> bool:
+        ...
+
+    def evict(self, key: Key) -> None:
+        ...
+
+    def config(self) -> dict[str, Any]:
+        """Kwargs to reconstruct an equivalent connector anywhere."""
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+class BaseConnector:
+    """Shared batch defaults + context-manager plumbing."""
+
+    def put_batch(self, blobs: Sequence[bytes]) -> list[Key]:
+        return [self.put(b) for b in blobs]
+
+    def get_batch(self, keys: Sequence[Key]) -> list[bytes | None]:
+        return [self.get(k) for k in keys]
+
+    def exists_batch(self, keys: Sequence[Key]) -> list[bool]:
+        return [self.exists(k) for k in keys]
+
+    def evict_batch(self, keys: Sequence[Key]) -> None:
+        for k in keys:
+            self.evict(k)
+
+    def close(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- config round-trip --------------------------------------------------
+    def config(self) -> dict[str, Any]:  # pragma: no cover - abstract-ish
+        raise NotImplementedError
+
+    @classmethod
+    def from_config(cls, config: dict[str, Any]):
+        return cls(**config)
+
+
+def import_path(cls: type) -> str:
+    return f"{cls.__module__}:{cls.__qualname__}"
+
+
+def resolve_import_path(path: str) -> type:
+    import importlib
+
+    mod, _, qual = path.partition(":")
+    obj: Any = importlib.import_module(mod)
+    for part in qual.split("."):
+        obj = getattr(obj, part)
+    return obj

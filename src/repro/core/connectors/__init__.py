@@ -1,0 +1,31 @@
+"""Connector implementations (paper §4, Table 1).
+
+=============  ============================  ==========  ==========  ===========
+Connector      Storage                       Intra-site  Inter-site  Persistence
+=============  ============================  ==========  ==========  ===========
+LocalMemory    in-process dict               same proc   —           —
+File           shared file system            ✓           —           ✓
+SharedMemory   POSIX shm (Margo/UCX role)    ✓ (node)    —           —
+Socket         spawned TCP store (ZMQ role)  ✓           —           —
+KVServer       standalone TCP KV (Redis)     ✓           —           ✓ (opt)
+Globus         simulated inter-site staging  —           ✓           ✓
+Endpoint       PS-endpoint peering           ✓           ✓           ✓ (opt)
+=============  ============================  ==========  ==========  ===========
+"""
+from repro.core.connectors.memory import LocalMemoryConnector
+from repro.core.connectors.file import FileConnector
+from repro.core.connectors.shm import SharedMemoryConnector
+from repro.core.connectors.socket import SocketConnector
+from repro.core.connectors.kvserver import KVServerConnector
+from repro.core.connectors.globus import GlobusConnector
+from repro.core.connectors.endpoint import EndpointConnector
+
+__all__ = [
+    "LocalMemoryConnector",
+    "FileConnector",
+    "SharedMemoryConnector",
+    "SocketConnector",
+    "KVServerConnector",
+    "GlobusConnector",
+    "EndpointConnector",
+]

@@ -1,0 +1,69 @@
+"""EndpointConnector — client of PS-endpoints (§4.2.2).
+
+Keys are ``("ep", object_id, endpoint_uuid)``.  The connector always talks to
+its *local* endpoint; if the key's endpoint_uuid differs, the local endpoint
+forwards the request over a peer channel (established via the relay server).
+
+Which endpoint is "local" is site-dependent, so ``config()`` deliberately does
+NOT pin an address: it records the name of an environment variable
+(``PSJ_ENDPOINT`` by default, format ``host:port``) consulted at construction
+time on the consuming process — the analog of the paper's hostname-regex →
+endpoint mapping.  An explicit ``address`` overrides for single-site use.
+"""
+from __future__ import annotations
+
+import os
+import uuid as uuid_mod
+from typing import Any
+
+from repro.core.connector import BaseConnector, Key
+from repro.core.kv_tcp import KVClient
+
+
+class EndpointConnector(BaseConnector):
+    def __init__(self, address: str | None = None,
+                 env: str = "PSJ_ENDPOINT") -> None:
+        self.env = env
+        self.address = address
+        addr = address or os.environ.get(env)
+        if not addr:
+            raise RuntimeError(
+                f"no local PS-endpoint: pass address= or set ${env}")
+        host, port = addr.rsplit(":", 1)
+        # the endpoint speaks the same framed protocol as kv_tcp
+        self._client = KVClient(host, int(port))
+        resp = self._client.request({"op": "uuid"})
+        self.endpoint_uuid: str = resp["data"]
+
+    def put(self, blob: bytes) -> Key:
+        object_id = uuid_mod.uuid4().hex
+        resp = self._client.request({"op": "put", "object_id": object_id,
+                                     "data": bytes(blob),
+                                     "endpoint_id": self.endpoint_uuid})
+        if not resp["ok"]:
+            raise RuntimeError(resp.get("error"))
+        return ("ep", object_id, self.endpoint_uuid)
+
+    def get(self, key: Key) -> bytes | None:
+        resp = self._client.request({"op": "get", "object_id": key[1],
+                                     "endpoint_id": key[2]})
+        if not resp["ok"]:
+            raise ConnectionError(resp.get("error"))
+        return resp.get("data")
+
+    def exists(self, key: Key) -> bool:
+        resp = self._client.request({"op": "exists", "object_id": key[1],
+                                     "endpoint_id": key[2]})
+        return bool(resp.get("data"))
+
+    def evict(self, key: Key) -> None:
+        self._client.request({"op": "evict", "object_id": key[1],
+                              "endpoint_id": key[2]})
+
+    def config(self) -> dict[str, Any]:
+        # no address: consumers bind to THEIR local endpoint via env
+        return {"env": self.env, "address": None if os.environ.get(self.env)
+                else self.address}
+
+    def close(self) -> None:
+        self._client.close()

@@ -1,0 +1,52 @@
+"""FileConnector — mediated communication via a shared file system (§4.1.1).
+
+Writes are atomic (tmp + rename) so concurrent readers never observe partial
+objects; this is what makes the connector safe as a checkpoint target.
+"""
+from __future__ import annotations
+
+import os
+import uuid
+from pathlib import Path
+from typing import Any
+
+from repro.core.connector import BaseConnector, Key
+
+
+class FileConnector(BaseConnector):
+    def __init__(self, store_dir: str, clear: bool = False) -> None:
+        self.store_dir = str(store_dir)
+        self._dir = Path(store_dir)
+        self._dir.mkdir(parents=True, exist_ok=True)
+        if clear:
+            for f in self._dir.glob("*.obj"):
+                f.unlink(missing_ok=True)
+
+    def _path(self, object_id: str) -> Path:
+        return self._dir / f"{object_id}.obj"
+
+    def put(self, blob: bytes) -> Key:
+        object_id = uuid.uuid4().hex
+        tmp = self._dir / f".{object_id}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(object_id))
+        return ("file", self.store_dir, object_id)
+
+    def get(self, key: Key) -> bytes | None:
+        path = self._path(key[2])
+        try:
+            return path.read_bytes()
+        except FileNotFoundError:
+            return None
+
+    def exists(self, key: Key) -> bool:
+        return self._path(key[2]).exists()
+
+    def evict(self, key: Key) -> None:
+        self._path(key[2]).unlink(missing_ok=True)
+
+    def config(self) -> dict[str, Any]:
+        return {"store_dir": self.store_dir}

@@ -1,0 +1,56 @@
+"""KVServerConnector — the Redis role (§4.1.2).
+
+Connects to a standalone :mod:`repro.core.kv_tcp` server, which provides the
+hybrid memory/disk semantics the paper gets from Redis: in-memory serving with
+optional write-through persistence (``persist_dir``) surviving restarts.
+
+The paper highlights that its RedisConnector is 31 lines on top of the
+Connector protocol; this file is in the same spirit — the server itself lives
+in ``kv_tcp.py``.
+"""
+from __future__ import annotations
+
+import uuid
+from typing import Any
+
+from repro.core.connector import BaseConnector, Key
+from repro.core.kv_tcp import KVClient
+
+
+class KVServerConnector(BaseConnector):
+    def __init__(self, host: str, port: int) -> None:
+        self.host, self.port = host, int(port)
+        self._client = KVClient(self.host, self.port)
+
+    def put(self, blob: bytes) -> Key:
+        object_id = uuid.uuid4().hex
+        self._client.put(object_id, blob)
+        return ("kv", self.host, self.port, object_id)
+
+    def put_batch(self, blobs) -> list[Key]:
+        ids = [uuid.uuid4().hex for _ in blobs]
+        self._client.request({"op": "mput", "keys": ids,
+                              "blobs": [bytes(b) for b in blobs]})
+        return [("kv", self.host, self.port, i) for i in ids]
+
+    def get(self, key: Key) -> bytes | None:
+        return self._client.get(key[3])
+
+    def get_batch(self, keys) -> list[bytes | None]:
+        if not keys:
+            return []
+        resp = self._client.request({"op": "mget",
+                                     "keys": [k[3] for k in keys]})
+        return resp["data"]
+
+    def exists(self, key: Key) -> bool:
+        return self._client.exists(key[3])
+
+    def evict(self, key: Key) -> None:
+        self._client.evict(key[3])
+
+    def config(self) -> dict[str, Any]:
+        return {"host": self.host, "port": self.port}
+
+    def close(self) -> None:
+        self._client.close()

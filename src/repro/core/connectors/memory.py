@@ -1,0 +1,49 @@
+"""In-process memory connector.
+
+Not a distributed channel — it backs unit tests, the Store cache layer, and
+single-process workflows.  ``config()`` round-trips to an *empty* store in a
+new process by design (documented paper-divergence: the real analog is the
+process-local portion of Margo/UCX stores).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import uuid
+from typing import Any
+
+from repro.core.connector import BaseConnector, Key
+
+# Keyed globally so that config() reconnection within the same process sees
+# the same data (mirrors how a respawned RedisConnector sees the same server).
+_STORES: dict[str, dict[Key, bytes]] = {}
+_LOCK = threading.Lock()
+
+
+class LocalMemoryConnector(BaseConnector):
+    def __init__(self, store_id: str | None = None) -> None:
+        self.store_id = store_id or uuid.uuid4().hex
+        with _LOCK:
+            self._data = _STORES.setdefault(self.store_id, {})
+        self._counter = itertools.count()
+
+    def put(self, blob: bytes) -> Key:
+        key = ("mem", self.store_id, uuid.uuid4().hex)
+        self._data[key] = bytes(blob)
+        return key
+
+    def get(self, key: Key) -> bytes | None:
+        return self._data.get(tuple(key))
+
+    def exists(self, key: Key) -> bool:
+        return tuple(key) in self._data
+
+    def evict(self, key: Key) -> None:
+        self._data.pop(tuple(key), None)
+
+    def config(self) -> dict[str, Any]:
+        return {"store_id": self.store_id}
+
+    def close(self) -> None:
+        with _LOCK:
+            _STORES.pop(self.store_id, None)

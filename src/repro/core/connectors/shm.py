@@ -1,0 +1,109 @@
+"""SharedMemoryConnector — zero-copy intra-node channel (§4.1.3 role).
+
+Plays the role of the paper's Margo/UCX RDMA-backed distributed memory for
+node-local producers/consumers: objects live in named POSIX shared-memory
+segments, so ``get`` is a page-mapped read, not a socket copy.
+
+Hardware adaptation note (DESIGN.md §2): no RDMA NIC exists in this container;
+POSIX shm is the intra-node analog of memory-to-memory transfer.  Cross-node
+traffic falls to SocketConnector/KVServerConnector, as the paper's ZMQ
+fallback does.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import threading
+import uuid
+from multiprocessing import shared_memory
+from pathlib import Path
+from typing import Any
+
+from repro.core.connector import BaseConnector, Key
+
+# Ownership is explicit (the on-disk index + close()), so segments are NEVER
+# handed to multiprocessing's resource tracker: track=False (Python >= 3.13).
+
+
+class SharedMemoryConnector(BaseConnector):
+    """Named-segment shm store with an on-disk index for discovery.
+
+    ``registry_dir`` is a small shared directory (tmpfs is fine) holding one
+    JSON sidecar per object: {"segment": name, "size": n}.  Data never touches
+    the file system — only 60-byte index entries do.
+    """
+
+    def __init__(self, registry_dir: str, clear: bool = False) -> None:
+        self.registry_dir = str(registry_dir)
+        self._dir = Path(registry_dir)
+        self._dir.mkdir(parents=True, exist_ok=True)
+        self._owned: set[str] = set()
+        self._lock = threading.Lock()
+        if clear:
+            for f in self._dir.glob("*.json"):
+                self._evict_entry(f)
+        atexit.register(self.close)
+
+    # -- helpers ------------------------------------------------------------
+    def _idx(self, object_id: str) -> Path:
+        return self._dir / f"{object_id}.json"
+
+    def _evict_entry(self, idx_path: Path) -> None:
+        try:
+            meta = json.loads(idx_path.read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            return
+        idx_path.unlink(missing_ok=True)
+        try:
+            seg = shared_memory.SharedMemory(name=meta["segment"], track=False)
+            seg.close()
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+
+    # -- Connector ops -------------------------------------------------------
+    def put(self, blob: bytes) -> Key:
+        object_id = uuid.uuid4().hex
+        seg_name = f"psj_{object_id[:24]}"
+        seg = shared_memory.SharedMemory(name=seg_name, create=True,
+                                         size=max(1, len(blob)), track=False)
+        seg.buf[: len(blob)] = blob
+        seg.close()
+        tmp = self._dir / f".{object_id}.tmp"
+        tmp.write_text(json.dumps({"segment": seg_name, "size": len(blob)}))
+        tmp.replace(self._idx(object_id))
+        with self._lock:
+            self._owned.add(object_id)
+        return ("shm", self.registry_dir, object_id)
+
+    def get(self, key: Key) -> bytes | None:
+        try:
+            meta = json.loads(self._idx(key[2]).read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+        try:
+            seg = shared_memory.SharedMemory(name=meta["segment"], track=False)
+        except FileNotFoundError:
+            return None
+        try:
+            return bytes(seg.buf[: meta["size"]])
+        finally:
+            seg.close()
+
+    def exists(self, key: Key) -> bool:
+        return self._idx(key[2]).exists()
+
+    def evict(self, key: Key) -> None:
+        self._evict_entry(self._idx(key[2]))
+        with self._lock:
+            self._owned.discard(key[2])
+
+    def config(self) -> dict[str, Any]:
+        return {"registry_dir": self.registry_dir}
+
+    def close(self) -> None:
+        """Unlink segments created by this process (producer-side cleanup)."""
+        with self._lock:
+            owned, self._owned = self._owned, set()
+        for object_id in owned:
+            self._evict_entry(self._idx(object_id))

@@ -1,0 +1,111 @@
+"""SocketConnector — spawned per-node TCP store servers (§4.1.3 ZMQ role).
+
+"When one of these connectors is initialized for the first time in a process,
+it spawns a process that acts as the storage server for that node" — the
+discovery directory holds one address file per logical node; the first
+connector to grab the lock spawns the server, later connectors (any process
+on the "node") connect to it.  The store is elastic: proxies carry the
+discovery dir, so new nodes spin up their own servers on first use.
+"""
+from __future__ import annotations
+
+import os
+import uuid
+from pathlib import Path
+from typing import Any
+
+from repro.core.connector import BaseConnector, Key
+from repro.core.kv_tcp import KVClient, spawn_server
+
+
+class SocketConnector(BaseConnector):
+    def __init__(self, discovery_dir: str, node_id: str = "node0") -> None:
+        self.discovery_dir = str(discovery_dir)
+        self.node_id = node_id
+        Path(discovery_dir).mkdir(parents=True, exist_ok=True)
+        self._client = self._attach_or_spawn()
+
+    # -- server lifecycle ----------------------------------------------------
+    def _addr_file(self) -> Path:
+        return Path(self.discovery_dir) / f"{self.node_id}.addr"
+
+    def _attach_or_spawn(self) -> KVClient:
+        addr = self._addr_file()
+        lock = Path(self.discovery_dir) / f"{self.node_id}.lock"
+        for _ in range(3):
+            if addr.exists():
+                host, port, _pid = addr.read_text().split(":")
+                client = KVClient(host, int(port))
+                if client.ping():
+                    return client
+                addr.unlink(missing_ok=True)  # stale server
+            # race to spawn: O_EXCL lock file
+            try:
+                fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                os.close(fd)
+            except FileExistsError:
+                import time
+
+                time.sleep(0.1)
+                continue
+            try:
+                host, port, _pid = spawn_server(ready_file=str(addr))
+                return KVClient(host, port)
+            finally:
+                lock.unlink(missing_ok=True)
+        raise RuntimeError("could not attach to or spawn socket store server")
+
+    # -- Connector ops --------------------------------------------------------
+    def put(self, blob: bytes) -> Key:
+        object_id = uuid.uuid4().hex
+        self._client.put(object_id, blob)
+        return ("sock", self.discovery_dir, self.node_id, object_id)
+
+    def put_batch(self, blobs) -> list[Key]:
+        keys = [uuid.uuid4().hex for _ in blobs]
+        self._client.request({"op": "mput", "keys": keys,
+                              "blobs": [bytes(b) for b in blobs]})
+        return [("sock", self.discovery_dir, self.node_id, k) for k in keys]
+
+    def get(self, key: Key) -> bytes | None:
+        return self._client_for(key).get(key[3])
+
+    def get_batch(self, keys) -> list[bytes | None]:
+        if not keys:
+            return []
+        # group by node to amortize round trips
+        out: list[bytes | None] = [None] * len(keys)
+        by_node: dict[str, list[int]] = {}
+        for i, k in enumerate(keys):
+            by_node.setdefault(k[2], []).append(i)
+        for node, idxs in by_node.items():
+            client = self._client_for(keys[idxs[0]])
+            resp = client.request({"op": "mget",
+                                   "keys": [keys[i][3] for i in idxs]})
+            for i, blob in zip(idxs, resp["data"]):
+                out[i] = blob
+        return out
+
+    def exists(self, key: Key) -> bool:
+        return self._client_for(key).exists(key[3])
+
+    def evict(self, key: Key) -> None:
+        self._client_for(key).evict(key[3])
+
+    def _client_for(self, key: Key) -> KVClient:
+        if key[2] == self.node_id:
+            return self._client
+        # remote node on the same fabric: dial its published address
+        addr = Path(key[1]) / f"{key[2]}.addr"
+        host, port, _pid = addr.read_text().split(":")
+        return KVClient(host, int(port))
+
+    def config(self) -> dict[str, Any]:
+        return {"discovery_dir": self.discovery_dir, "node_id": self.node_id}
+
+    def close(self) -> None:
+        self._client.close()
+
+    def shutdown_server(self) -> None:
+        self._client.shutdown_server()
+        self._addr_file().unlink(missing_ok=True)

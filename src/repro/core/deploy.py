@@ -1,0 +1,91 @@
+"""Process-level deployment helpers for relay servers and PS-endpoints.
+
+The paper manages endpoints with the ``proxystore-endpoint`` CLI; here the
+same lifecycle is scripted for tests/benchmarks: spawn, await readiness,
+terminate.  All children are started in their own session so killing the
+parent never orphans a test run.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+
+@dataclass
+class ProcHandle:
+    proc: subprocess.Popen
+    host: str
+    port: int
+    uuid: str | None = None
+
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def stop(self) -> None:
+        if self.proc.poll() is None:
+            try:
+                os.killpg(self.proc.pid, signal.SIGTERM)
+            except (ProcessLookupError, PermissionError):
+                self.proc.terminate()
+            try:
+                self.proc.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+
+
+def _spawn(module: str, args: list[str], ready_file: str,
+           timeout: float = 30.0) -> tuple[subprocess.Popen, list[str]]:
+    Path(ready_file).unlink(missing_ok=True)
+    cmd = [sys.executable, "-m", module, *args, "--ready-file", ready_file]
+    proc = subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.PIPE,
+                            start_new_session=True)
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if Path(ready_file).exists():
+            return proc, Path(ready_file).read_text().split(":")
+        if proc.poll() is not None:
+            err = proc.stderr.read().decode() if proc.stderr else ""
+            raise RuntimeError(f"{module} died at startup: {err[-2000:]}")
+        time.sleep(0.02)
+    proc.kill()
+    raise TimeoutError(f"{module} did not become ready")
+
+
+def start_relay(workdir: str) -> ProcHandle:
+    ready = str(Path(workdir) / "relay.ready")
+    proc, (host, port, _pid) = _spawn("repro.core.relay", [], ready)
+    return ProcHandle(proc=proc, host=host, port=int(port))
+
+
+def start_endpoint(workdir: str, relay_address: str, *, name: str = "ep",
+                   persist_dir: str | None = None,
+                   throttle_bps: float | None = None,
+                   throttle_rtt: float = 0.0) -> ProcHandle:
+    ready = str(Path(workdir) / f"{name}.ready")
+    args = ["--relay", relay_address]
+    if persist_dir:
+        args += ["--persist-dir", persist_dir]
+    if throttle_bps:
+        args += ["--throttle-bps", str(throttle_bps)]
+    if throttle_rtt:
+        args += ["--throttle-rtt", str(throttle_rtt)]
+    proc, fields = _spawn("repro.core.endpoint", args, ready)
+    host, port, _pid, uuid = fields
+    return ProcHandle(proc=proc, host=host, port=int(port), uuid=uuid)
+
+
+def start_kvserver(workdir: str, *, name: str = "kv",
+                   persist_dir: str | None = None) -> ProcHandle:
+    ready = str(Path(workdir) / f"{name}.ready")
+    args = ["--host", "127.0.0.1", "--port", "0"]
+    if persist_dir:
+        args += ["--persist-dir", persist_dir]
+    proc, (host, port, _pid) = _spawn("repro.core.kv_tcp", args, ready)
+    return ProcHandle(proc=proc, host=host, port=int(port))

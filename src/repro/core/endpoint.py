@@ -1,0 +1,320 @@
+"""PS-endpoint: peer-connected in-memory object store (paper §4.2.2).
+
+A single-threaded asyncio application (as in the paper) running three duties:
+
+1. an in-memory object store (optional disk spill via ``--persist-dir``),
+2. a client API server — local processes (EndpointConnector) issue
+   get/put/exists/evict with a target ``endpoint_id``; requests whose
+   endpoint_id is not ours are forwarded over a peer channel,
+3. peering — on first contact with a remote endpoint, an offer/answer
+   exchange via the relay server introduces the peers (Fig 4), after which a
+   direct "data channel" (TCP here; SCTP-over-DTLS in the paper) carries all
+   object traffic.  Channels are kept open and re-established on loss.
+
+``--throttle-bps``/``--throttle-rtt`` emulate the WAN regimes of Fig 9
+(including the paper's observed ~80 Mbps aiortc ceiling, §5.3.2).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import os
+import struct
+import time
+import uuid as uuid_mod
+from pathlib import Path
+
+import msgpack
+
+_LEN = struct.Struct(">I")
+
+
+def _frame(msg: dict) -> bytes:
+    body = msgpack.packb(msg, use_bin_type=True)
+    return _LEN.pack(len(body)) + body
+
+
+async def _read(reader: asyncio.StreamReader) -> dict | None:
+    try:
+        header = await reader.readexactly(4)
+        (length,) = _LEN.unpack(header)
+        body = await reader.readexactly(length)
+    except (asyncio.IncompleteReadError, ConnectionResetError, OSError):
+        return None
+    return msgpack.unpackb(body, raw=False, strict_map_key=False)
+
+
+class PeerChannel:
+    """A multiplexed request/response channel to one remote endpoint."""
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter,
+                 throttle_bps: float | None, throttle_rtt: float) -> None:
+        self.reader, self.writer = reader, writer
+        self.throttle_bps, self.throttle_rtt = throttle_bps, throttle_rtt
+        self._rid = 0
+        self._pending: dict[int, asyncio.Future] = {}
+        self._send_lock = asyncio.Lock()
+        self.alive = True
+
+    async def send(self, msg: dict) -> None:
+        data = _frame(msg)
+        async with self._send_lock:
+            # WAN emulation: latency + serialization over the capped link
+            if self.throttle_rtt:
+                await asyncio.sleep(self.throttle_rtt / 2)
+            if self.throttle_bps:
+                await asyncio.sleep(len(data) / self.throttle_bps)
+            self.writer.write(data)
+            await self.writer.drain()
+
+    async def request(self, msg: dict, timeout: float = 120.0) -> dict:
+        self._rid += 1
+        rid = self._rid
+        fut: asyncio.Future = asyncio.get_running_loop().create_future()
+        self._pending[rid] = fut
+        msg = dict(msg, rid=rid, kind="req")
+        await self.send(msg)
+        try:
+            return await asyncio.wait_for(fut, timeout)
+        finally:
+            self._pending.pop(rid, None)
+
+    def dispatch_response(self, msg: dict) -> None:
+        fut = self._pending.get(msg.get("rid"))
+        if fut is not None and not fut.done():
+            fut.set_result(msg)
+
+    def close(self) -> None:
+        self.alive = False
+        try:
+            self.writer.close()
+        except Exception:
+            pass
+
+
+class Endpoint:
+    def __init__(self, *, uuid: str | None, relay_host: str, relay_port: int,
+                 persist_dir: str | None = None,
+                 throttle_bps: float | None = None,
+                 throttle_rtt: float = 0.0) -> None:
+        self.uuid = uuid  # may be assigned by the relay at registration
+        self.relay_host, self.relay_port = relay_host, relay_port
+        self.persist = Path(persist_dir) if persist_dir else None
+        self.throttle_bps, self.throttle_rtt = throttle_bps, throttle_rtt
+        self._data: dict[str, bytes] = {}
+        self._peers: dict[str, PeerChannel] = {}
+        self._relay_writer: asyncio.StreamWriter | None = None
+        self._relay_replies: dict[str, asyncio.Queue] = {}
+        self._rid = 0
+        self._shutdown = asyncio.Event()
+        self._peer_host = "127.0.0.1"
+        self._peer_port = 0
+        if self.persist:
+            self.persist.mkdir(parents=True, exist_ok=True)
+            for f in self.persist.glob("*.obj"):
+                self._data[f.stem] = f.read_bytes()
+
+    # ------------------------------------------------------------------
+    # local store ops
+    # ------------------------------------------------------------------
+    def _local(self, req: dict) -> dict:
+        op = req["op"]
+        oid = req.get("object_id")
+        if op == "put":
+            self._data[oid] = req["data"]
+            if self.persist:
+                (self.persist / f"{oid}.obj").write_bytes(req["data"])
+            return {"ok": True}
+        if op == "get":
+            return {"ok": True, "data": self._data.get(oid)}
+        if op == "exists":
+            return {"ok": True, "data": oid in self._data}
+        if op == "evict":
+            self._data.pop(oid, None)
+            if self.persist:
+                (self.persist / f"{oid}.obj").unlink(missing_ok=True)
+            return {"ok": True}
+        if op == "stats":
+            return {"ok": True, "data": {"n": len(self._data),
+                                         "peers": list(self._peers)}}
+        return {"ok": False, "error": f"bad op {op!r}"}
+
+    # ------------------------------------------------------------------
+    # relay client
+    # ------------------------------------------------------------------
+    async def _relay_connect(self) -> None:
+        reader, writer = await asyncio.open_connection(self.relay_host,
+                                                       self.relay_port)
+        self._relay_writer = writer
+        writer.write(_frame({"type": "register", "uuid": self.uuid,
+                             "meta": {"peer_host": self._peer_host,
+                                      "peer_port": self._peer_port}}))
+        await writer.drain()
+        msg = await _read(reader)
+        assert msg and msg["type"] == "registered"
+        self.uuid = msg["uuid"]
+        asyncio.create_task(self._relay_loop(reader))
+
+    async def _relay_loop(self, reader: asyncio.StreamReader) -> None:
+        while True:
+            msg = await _read(reader)
+            if msg is None:
+                return
+            mtype = msg.get("type")
+            if mtype == "offer":
+                # remote endpoint wants to peer with us: answer with our
+                # listening address (our "session description")
+                await self._relay_send({
+                    "type": "answer", "target": msg["source"],
+                    "rid": msg.get("rid"),
+                    "sdp": {"host": self._peer_host, "port": self._peer_port},
+                })
+            elif mtype in ("answer", "error", "endpoints"):
+                q = self._relay_replies.get(str(msg.get("rid")))
+                if q is not None:
+                    q.put_nowait(msg)
+
+    async def _relay_send(self, msg: dict) -> None:
+        assert self._relay_writer is not None
+        self._relay_writer.write(_frame(msg))
+        await self._relay_writer.drain()
+
+    async def _relay_request(self, msg: dict, timeout: float = 30.0) -> dict:
+        self._rid += 1
+        rid = f"r{self._rid}"
+        q: asyncio.Queue = asyncio.Queue()
+        self._relay_replies[rid] = q
+        try:
+            await self._relay_send(dict(msg, rid=rid))
+            return await asyncio.wait_for(q.get(), timeout)
+        finally:
+            self._relay_replies.pop(rid, None)
+
+    # ------------------------------------------------------------------
+    # peering
+    # ------------------------------------------------------------------
+    async def _get_peer(self, target: str) -> PeerChannel:
+        chan = self._peers.get(target)
+        if chan is not None and chan.alive:
+            return chan
+        # offer/answer via relay (Fig 4 steps 1-4), then direct dial (step 5)
+        reply = await self._relay_request({
+            "type": "offer", "target": target,
+            "sdp": {"host": self._peer_host, "port": self._peer_port},
+        })
+        if reply.get("type") == "error":
+            raise ConnectionError(reply.get("error"))
+        sdp = reply["sdp"]
+        reader, writer = await asyncio.open_connection(sdp["host"], sdp["port"])
+        writer.write(_frame({"kind": "hello", "uuid": self.uuid}))
+        await writer.drain()
+        chan = PeerChannel(reader, writer, self.throttle_bps, self.throttle_rtt)
+        self._peers[target] = chan
+        asyncio.create_task(self._peer_read_loop(target, chan))
+        return chan
+
+    async def _peer_read_loop(self, peer_uuid: str, chan: PeerChannel) -> None:
+        while True:
+            msg = await _read(chan.reader)
+            if msg is None:
+                chan.close()
+                if self._peers.get(peer_uuid) is chan:
+                    del self._peers[peer_uuid]
+                return
+            if msg.get("kind") == "req":
+                resp = self._local(msg)
+                resp.update(rid=msg["rid"], kind="resp")
+                await chan.send(resp)
+            elif msg.get("kind") == "resp":
+                chan.dispatch_response(msg)
+
+    async def _peer_accept(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        hello = await _read(reader)
+        if not hello or hello.get("kind") != "hello":
+            writer.close()
+            return
+        peer_uuid = hello["uuid"]
+        chan = PeerChannel(reader, writer, self.throttle_bps, self.throttle_rtt)
+        self._peers[peer_uuid] = chan
+        await self._peer_read_loop(peer_uuid, chan)
+
+    # ------------------------------------------------------------------
+    # client API server
+    # ------------------------------------------------------------------
+    async def _client_loop(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                req = await _read(reader)
+                if req is None:
+                    break
+                if req.get("op") == "shutdown":
+                    writer.write(_frame({"ok": True}))
+                    await writer.drain()
+                    self._shutdown.set()
+                    break
+                if req.get("op") == "uuid":
+                    resp = {"ok": True, "data": self.uuid}
+                else:
+                    target = req.get("endpoint_id") or self.uuid
+                    if target == self.uuid:
+                        resp = self._local(req)
+                    else:
+                        try:
+                            chan = await self._get_peer(target)
+                            r = await chan.request({k: v for k, v in req.items()
+                                                    if k != "endpoint_id"})
+                            resp = {k: v for k, v in r.items()
+                                    if k in ("ok", "data", "error")}
+                        except (ConnectionError, asyncio.TimeoutError) as e:
+                            resp = {"ok": False, "error": str(e)}
+                writer.write(_frame(resp))
+                await writer.drain()
+        finally:
+            writer.close()
+
+    # ------------------------------------------------------------------
+    async def run(self, api_host: str, api_port: int,
+                  ready_file: str | None) -> None:
+        peer_server = await asyncio.start_server(self._peer_accept,
+                                                 "127.0.0.1", 0)
+        self._peer_port = peer_server.sockets[0].getsockname()[1]
+        await self._relay_connect()
+        api_server = await asyncio.start_server(self._client_loop,
+                                                api_host, api_port)
+        actual = api_server.sockets[0].getsockname()[1]
+        if ready_file:
+            tmp = Path(ready_file + ".tmp")
+            tmp.write_text(f"{api_host}:{actual}:{os.getpid()}:{self.uuid}")
+            tmp.replace(ready_file)
+        async with peer_server, api_server:
+            await self._shutdown.wait()
+        # drop peer channels so remote ends re-establish later (paper: the
+        # connection is re-established if lost for any reason)
+        for chan in self._peers.values():
+            chan.close()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--relay", required=True, help="host:port of relay server")
+    ap.add_argument("--uuid", default=None)
+    ap.add_argument("--api-host", default="127.0.0.1")
+    ap.add_argument("--api-port", type=int, default=0)
+    ap.add_argument("--persist-dir", default=None)
+    ap.add_argument("--throttle-bps", type=float, default=None)
+    ap.add_argument("--throttle-rtt", type=float, default=0.0)
+    ap.add_argument("--ready-file", default=None)
+    args = ap.parse_args()
+    rhost, rport = args.relay.rsplit(":", 1)
+    ep = Endpoint(uuid=args.uuid, relay_host=rhost, relay_port=int(rport),
+                  persist_dir=args.persist_dir,
+                  throttle_bps=args.throttle_bps,
+                  throttle_rtt=args.throttle_rtt)
+    asyncio.run(ep.run(args.api_host, args.api_port, args.ready_file))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Asyncio TCP key-value server + blocking client.
+
+Plays two roles from the paper:
+
+* the per-node storage servers spawned by the ZMQ/Margo/UCX connectors
+  (§4.1.3: "these connectors act as interfaces to these spawned servers"),
+* the Redis-style standalone hybrid store (§4.1.2) when started with
+  ``--persist-dir`` (write-through to disk, reload on restart).
+
+Wire format: 4-byte big-endian length | msgpack map.
+Requests:  {"op": put|get|exists|evict|mput|mget|ping|stats|shutdown,
+            "key": str, "data": bytes, "keys": [...], "blobs": [...]}
+Responses: {"ok": bool, "data": ..., "error": str}
+
+The server is a single asyncio loop (as the paper's PS-endpoints are) — the
+Fig 8 benchmark reproduces the resulting linear scaling with client count.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import os
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import msgpack
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 31
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+async def read_frame(reader: asyncio.StreamReader) -> dict | None:
+    try:
+        header = await reader.readexactly(4)
+    except (asyncio.IncompleteReadError, ConnectionResetError):
+        return None
+    (length,) = _LEN.unpack(header)
+    if length > MAX_FRAME:
+        raise ValueError(f"frame too large: {length}")
+    body = await reader.readexactly(length)
+    return msgpack.unpackb(body, raw=False, strict_map_key=False)
+
+
+def write_frame_sync(sock: socket.socket, msg: dict) -> None:
+    body = msgpack.packb(msg, use_bin_type=True)
+    sock.sendall(_LEN.pack(len(body)) + body)
+
+
+def read_frame_sync(sock: socket.socket) -> dict:
+    header = _recv_exact(sock, 4)
+    (length,) = _LEN.unpack(header)
+    body = _recv_exact(sock, length)
+    return msgpack.unpackb(body, raw=False, strict_map_key=False)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed connection")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+class KVServer:
+    def __init__(self, persist_dir: str | None = None) -> None:
+        self._data: dict[str, bytes] = {}
+        self._persist = Path(persist_dir) if persist_dir else None
+        self._n_ops = 0
+        if self._persist:
+            self._persist.mkdir(parents=True, exist_ok=True)
+            for f in self._persist.glob("*.kv"):
+                self._data[f.stem] = f.read_bytes()
+        self._shutdown = asyncio.Event()
+
+    # -- op handlers --------------------------------------------------------
+    def _put(self, key: str, data: bytes) -> None:
+        self._data[key] = data
+        if self._persist:
+            tmp = self._persist / f".{key}.tmp"
+            tmp.write_bytes(data)
+            tmp.replace(self._persist / f"{key}.kv")
+
+    def _evict(self, key: str) -> None:
+        self._data.pop(key, None)
+        if self._persist:
+            (self._persist / f"{key}.kv").unlink(missing_ok=True)
+
+    def handle(self, req: dict) -> dict:
+        self._n_ops += 1
+        op = req["op"]
+        if op == "put":
+            self._put(req["key"], req["data"])
+            return {"ok": True}
+        if op == "get":
+            data = self._data.get(req["key"])
+            return {"ok": True, "data": data}
+        if op == "exists":
+            return {"ok": True, "data": req["key"] in self._data}
+        if op == "evict":
+            self._evict(req["key"])
+            return {"ok": True}
+        if op == "mput":
+            for k, b in zip(req["keys"], req["blobs"]):
+                self._put(k, b)
+            return {"ok": True}
+        if op == "mget":
+            return {"ok": True, "data": [self._data.get(k) for k in req["keys"]]}
+        if op == "ping":
+            return {"ok": True, "data": "pong"}
+        if op == "stats":
+            return {"ok": True, "data": {
+                "n_objects": len(self._data),
+                "bytes": sum(len(v) for v in self._data.values()),
+                "n_ops": self._n_ops,
+            }}
+        if op == "shutdown":
+            self._shutdown.set()
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+    async def client_loop(self, reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                req = await read_frame(reader)
+                if req is None:
+                    break
+                resp = self.handle(req)
+                body = msgpack.packb(resp, use_bin_type=True)
+                writer.write(_LEN.pack(len(body)) + body)
+                await writer.drain()
+                if req.get("op") == "shutdown":
+                    break
+        finally:
+            writer.close()
+
+
+async def serve(host: str, port: int, persist_dir: str | None,
+                ready_file: str | None) -> None:
+    kv = KVServer(persist_dir)
+    server = await asyncio.start_server(kv.client_loop, host, port)
+    actual_port = server.sockets[0].getsockname()[1]
+    if ready_file:
+        tmp = Path(ready_file + ".tmp")
+        tmp.write_text(f"{host}:{actual_port}:{os.getpid()}")
+        tmp.replace(ready_file)
+    async with server:
+        await kv._shutdown.wait()
+
+
+def spawn_server(*, host: str = "127.0.0.1", persist_dir: str | None = None,
+                 ready_file: str, timeout: float = 20.0) -> tuple[str, int, int]:
+    """Launch a KV server subprocess; block until it publishes its address.
+
+    Returns (host, port, pid).
+    """
+    cmd = [sys.executable, "-m", "repro.core.kv_tcp", "--host", host,
+           "--port", "0", "--ready-file", ready_file]
+    if persist_dir:
+        cmd += ["--persist-dir", persist_dir]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL,
+                            start_new_session=True)
+    deadline = time.time() + timeout
+    path = Path(ready_file)
+    while time.time() < deadline:
+        if path.exists():
+            h, p, pid = path.read_text().split(":")
+            return h, int(p), int(pid)
+        if proc.poll() is not None:
+            raise RuntimeError(f"kv server died at startup (rc={proc.returncode})")
+        time.sleep(0.02)
+    proc.kill()
+    raise TimeoutError("kv server did not start in time")
+
+
+# ---------------------------------------------------------------------------
+# blocking client (thread-safe via lock; one socket per client)
+# ---------------------------------------------------------------------------
+class KVClient:
+    def __init__(self, host: str, port: int, timeout: float = 60.0) -> None:
+        self.host, self.port, self.timeout = host, port, timeout
+        self._lock = threading.Lock()
+        self._sock: socket.socket | None = None
+
+    def _connect(self) -> socket.socket:
+        if self._sock is None:
+            s = socket.create_connection((self.host, self.port),
+                                         timeout=self.timeout)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._sock = s
+        return self._sock
+
+    def request(self, msg: dict) -> dict:
+        with self._lock:
+            for attempt in (0, 1):
+                try:
+                    sock = self._connect()
+                    write_frame_sync(sock, msg)
+                    return read_frame_sync(sock)
+                except (ConnectionError, OSError):
+                    self._drop()
+                    if attempt:
+                        raise
+            raise ConnectionError("unreachable")
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop()
+
+    # convenience ops
+    def put(self, key: str, data: bytes) -> None:
+        resp = self.request({"op": "put", "key": key, "data": data})
+        if not resp["ok"]:
+            raise RuntimeError(resp.get("error"))
+
+    def get(self, key: str) -> bytes | None:
+        resp = self.request({"op": "get", "key": key})
+        return resp.get("data")
+
+    def exists(self, key: str) -> bool:
+        return bool(self.request({"op": "exists", "key": key}).get("data"))
+
+    def evict(self, key: str) -> None:
+        self.request({"op": "evict", "key": key})
+
+    def ping(self) -> bool:
+        try:
+            return self.request({"op": "ping"}).get("data") == "pong"
+        except (ConnectionError, OSError, TimeoutError):
+            return False
+
+    def shutdown_server(self) -> None:
+        try:
+            self.request({"op": "shutdown"})
+        except (ConnectionError, OSError):
+            pass
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--persist-dir", default=None)
+    ap.add_argument("--ready-file", default=None)
+    args = ap.parse_args()
+    asyncio.run(serve(args.host, args.port, args.persist_dir, args.ready_file))
+
+
+if __name__ == "__main__":
+    main()

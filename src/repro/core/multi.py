@@ -1,0 +1,117 @@
+"""MultiConnector — policy-routed composition of connectors (paper §4.3).
+
+Initialized with ``[(connector, Policy), ...]``; every ``put`` is matched
+against each policy (size bounds, site tags, arbitrary constraint tags) and
+routed to the highest-priority connector that accepts.  ``get``/``exists``/
+``evict`` dispatch on the key, which records which child connector stored the
+object.  If nothing matches, an error is raised unless a fallback (policy
+with no constraints) is configured — mirroring the paper's guidance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+from repro.core.connector import (BaseConnector, Connector, Key, import_path,
+                                  resolve_import_path)
+
+
+class NoConnectorMatch(RuntimeError):
+    pass
+
+
+@dataclass
+class Policy:
+    min_size: int = 0
+    max_size: int | None = None          # bytes; None = unbounded
+    tags: frozenset = frozenset()         # sites/capabilities this connector serves
+    priority: int = 0                     # higher wins among matches
+
+    def accepts(self, size: int, constraints: frozenset) -> bool:
+        if size < self.min_size:
+            return False
+        if self.max_size is not None and size > self.max_size:
+            return False
+        # every requested constraint must be offered by this connector
+        return constraints <= self.tags if constraints else True
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"min_size": self.min_size, "max_size": self.max_size,
+                "tags": sorted(self.tags), "priority": self.priority}
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "Policy":
+        return cls(min_size=d.get("min_size", 0), max_size=d.get("max_size"),
+                   tags=frozenset(d.get("tags", ())),
+                   priority=d.get("priority", 0))
+
+
+class MultiConnector(BaseConnector):
+    def __init__(self, connectors: Sequence[tuple[Connector, Policy]] | None = None,
+                 *, _config: list[dict] | None = None) -> None:
+        if connectors is None and _config is not None:
+            connectors = [
+                (resolve_import_path(c["path"])(**c["config"]),
+                 Policy.from_dict(c["policy"]))
+                for c in _config
+            ]
+        assert connectors
+        self.children: list[tuple[Connector, Policy]] = list(connectors)
+        # stable ids for key dispatch
+        self._by_id = {i: conn for i, (conn, _) in enumerate(self.children)}
+
+    def _route(self, size: int, constraints: frozenset) -> tuple[int, Connector]:
+        best: tuple[int, int, Connector] | None = None
+        for i, (conn, policy) in enumerate(self.children):
+            if policy.accepts(size, constraints):
+                if best is None or policy.priority > best[0]:
+                    best = (policy.priority, i, conn)
+        if best is None:
+            raise NoConnectorMatch(
+                f"no connector accepts size={size} constraints={set(constraints)}")
+        return best[1], best[2]
+
+    # -- ops -------------------------------------------------------------------
+    def put(self, blob: bytes, constraints: Sequence[str] = ()) -> Key:
+        idx, conn = self._route(len(blob), frozenset(constraints))
+        sub = conn.put(blob)
+        return ("multi", idx) + tuple(sub)
+
+    def put_batch(self, blobs, constraints: Sequence[str] = ()) -> list[Key]:
+        # route per-blob but batch per-child
+        routed: dict[int, list[int]] = {}
+        for j, b in enumerate(blobs):
+            idx, _ = self._route(len(b), frozenset(constraints))
+            routed.setdefault(idx, []).append(j)
+        keys: list[Key] = [None] * len(blobs)  # type: ignore[list-item]
+        for idx, js in routed.items():
+            subkeys = self._by_id[idx].put_batch([blobs[j] for j in js])
+            for j, sk in zip(js, subkeys):
+                keys[j] = ("multi", idx) + tuple(sk)
+        return keys
+
+    def _child(self, key: Key) -> tuple[Connector, Key]:
+        return self._by_id[key[1]], tuple(key[2:])
+
+    def get(self, key: Key) -> bytes | None:
+        conn, sub = self._child(key)
+        return conn.get(sub)
+
+    def exists(self, key: Key) -> bool:
+        conn, sub = self._child(key)
+        return conn.exists(sub)
+
+    def evict(self, key: Key) -> None:
+        conn, sub = self._child(key)
+        conn.evict(sub)
+
+    def config(self) -> dict[str, Any]:
+        return {"_config": [
+            {"path": import_path(type(conn)), "config": conn.config(),
+             "policy": policy.to_dict()}
+            for conn, policy in self.children
+        ]}
+
+    def close(self) -> None:
+        for conn, _ in self.children:
+            conn.close()

@@ -1,0 +1,272 @@
+"""Transparent, lazy object proxies (the paper's §3.3).
+
+A :class:`Proxy` wraps a *factory* — any zero-argument callable returning the
+target object — and behaves identically to the target: ``isinstance(p,
+type(target))`` holds, every attribute access / operator / dunder is forwarded,
+and the factory is invoked at most once, just-in-time on first use
+("resolving" the proxy).
+
+Pickling a proxy serializes ONLY the factory (paper §3.3: "proxies are small
+when communicated" and "a proxy can still be resolved after being communicated
+to another process").
+
+Implementation notes
+--------------------
+CPython resolves dunder methods on the *type*, not the instance, so
+transparency requires every relevant ``__op__`` to exist on the Proxy class
+and forward to the resolved target.  We generate those forwarders explicitly
+(the same approach taken by ``lazy-object-proxy``, which the paper's
+implementation builds on).
+
+``__class__`` is a property returning ``type(target)`` which is what makes
+``isinstance`` transparent without metaclass games.
+"""
+from __future__ import annotations
+
+import operator
+from typing import Any, Callable, Generic, TypeVar
+
+T = TypeVar("T")
+
+_UNRESOLVED = object()  # sentinel: target not yet materialized
+
+
+class ProxyResolveError(RuntimeError):
+    """Raised when a proxy's factory fails to produce the target."""
+
+
+def _do_resolve(proxy: "Proxy") -> Any:
+    """Resolve ``proxy`` in place (idempotent) and return the target."""
+    target = object.__getattribute__(proxy, "_proxy_target")
+    if target is not _UNRESOLVED:
+        return target
+    factory = object.__getattribute__(proxy, "_proxy_factory")
+    try:
+        target = factory()
+    except Exception as e:  # noqa: BLE001 - surface context, keep cause
+        raise ProxyResolveError(
+            f"factory {factory!r} failed to resolve proxy target: {e}"
+        ) from e
+    object.__setattr__(proxy, "_proxy_target", target)
+    return target
+
+
+class Proxy(Generic[T]):
+    """Lazy transparent proxy of the object returned by ``factory``."""
+
+    __slots__ = ("_proxy_factory", "_proxy_target", "__weakref__")
+
+    def __init__(self, factory: Callable[[], T]) -> None:
+        if not callable(factory):
+            raise TypeError(f"factory must be callable, got {type(factory)}")
+        object.__setattr__(self, "_proxy_factory", factory)
+        object.__setattr__(self, "_proxy_target", _UNRESOLVED)
+
+    # -- pickling: factory only, never the target -------------------------
+    def __reduce__(self):
+        return (Proxy, (object.__getattribute__(self, "_proxy_factory"),))
+
+    def __reduce_ex__(self, protocol):
+        return self.__reduce__()
+
+    # -- attribute protocol ------------------------------------------------
+    def __getattr__(self, name: str) -> Any:
+        # __slots__ attrs are found by __getattribute__; anything reaching
+        # here is for the target.
+        return getattr(_do_resolve(self), name)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        setattr(_do_resolve(self), name, value)
+
+    def __delattr__(self, name: str) -> None:
+        delattr(_do_resolve(self), name)
+
+    # -- transparency: class/dir/repr/hash/eq etc. -------------------------
+    @property  # type: ignore[misc]
+    def __class__(self):  # noqa: D105
+        return type(_do_resolve(self))
+
+    def __dir__(self):
+        return dir(_do_resolve(self))
+
+    def __repr__(self) -> str:
+        return repr(_do_resolve(self))
+
+    def __str__(self) -> str:
+        return str(_do_resolve(self))
+
+    def __format__(self, spec: str) -> str:
+        return format(_do_resolve(self), spec)
+
+    def __hash__(self) -> int:
+        return hash(_do_resolve(self))
+
+    def __bool__(self) -> bool:
+        return bool(_do_resolve(self))
+
+    def __len__(self) -> int:
+        return len(_do_resolve(self))
+
+    def __iter__(self):
+        return iter(_do_resolve(self))
+
+    def __next__(self):
+        return next(_do_resolve(self))
+
+    def __reversed__(self):
+        return reversed(_do_resolve(self))
+
+    def __contains__(self, item) -> bool:
+        return item in _do_resolve(self)
+
+    def __getitem__(self, key):
+        return _do_resolve(self)[key]
+
+    def __setitem__(self, key, value) -> None:
+        _do_resolve(self)[key] = value
+
+    def __delitem__(self, key) -> None:
+        del _do_resolve(self)[key]
+
+    def __call__(self, *args, **kwargs):
+        return _do_resolve(self)(*args, **kwargs)
+
+    def __enter__(self):
+        return _do_resolve(self).__enter__()
+
+    def __exit__(self, *exc):
+        return _do_resolve(self).__exit__(*exc)
+
+    def __index__(self) -> int:
+        return operator.index(_do_resolve(self))
+
+    def __int__(self) -> int:
+        return int(_do_resolve(self))
+
+    def __float__(self) -> float:
+        return float(_do_resolve(self))
+
+    def __complex__(self) -> complex:
+        return complex(_do_resolve(self))
+
+    def __bytes__(self) -> bytes:
+        return bytes(_do_resolve(self))
+
+    # numpy/jax interop: let np.asarray(proxy) etc. see the target
+    def __array__(self, *args, **kwargs):
+        import numpy as np
+
+        return np.asarray(_do_resolve(self), *args, **kwargs)
+
+    @property
+    def __array_interface__(self):
+        return _do_resolve(self).__array_interface__
+
+    def __jax_array__(self):
+        import jax.numpy as jnp
+
+        return jnp.asarray(_do_resolve(self))
+
+
+def _forward_binary(name: str):
+    op = getattr(operator, name, None)
+
+    if op is not None:
+        def fwd(self, other, _op=op):
+            return _op(_do_resolve(self), _unwrap(other))
+    else:
+        def fwd(self, other, _name=f"__{name.strip('_')}__"):
+            return getattr(_do_resolve(self), _name)(_unwrap(other))
+
+    return fwd
+
+
+def _forward_rbinary(dunder: str):
+    def fwd(self, other):
+        target = _do_resolve(self)
+        meth = getattr(target, dunder, None)
+        if meth is not None:
+            return meth(_unwrap(other))
+        return NotImplemented
+
+    return fwd
+
+
+def _forward_unary(dunder: str):
+    def fwd(self):
+        return getattr(_do_resolve(self), dunder)()
+
+    return fwd
+
+
+def _unwrap(obj):
+    if type(obj) is Proxy:
+        return _do_resolve(obj)
+    return obj
+
+
+_BINARY = {
+    "__add__": "add", "__sub__": "sub", "__mul__": "mul",
+    "__truediv__": "truediv", "__floordiv__": "floordiv", "__mod__": "mod",
+    "__pow__": "pow", "__matmul__": "matmul", "__and__": "and_",
+    "__or__": "or_", "__xor__": "xor", "__lshift__": "lshift",
+    "__rshift__": "rshift", "__lt__": "lt", "__le__": "le", "__eq__": "eq",
+    "__ne__": "ne", "__gt__": "gt", "__ge__": "ge", "__divmod__": None,
+}
+for dunder, opname in _BINARY.items():
+    if opname is not None:
+        op = getattr(operator, opname)
+
+        def _mk(op):
+            def fwd(self, other):
+                return op(_do_resolve(self), _unwrap(other))
+            return fwd
+
+        setattr(Proxy, dunder, _mk(op))
+    else:
+        def _mkd(dunder):
+            def fwd(self, other):
+                return getattr(_do_resolve(self), dunder)(_unwrap(other))
+            return fwd
+
+        setattr(Proxy, dunder, _mkd(dunder))
+
+for dunder in (
+    "__radd__", "__rsub__", "__rmul__", "__rtruediv__", "__rfloordiv__",
+    "__rmod__", "__rpow__", "__rmatmul__", "__rand__", "__ror__", "__rxor__",
+    "__rlshift__", "__rrshift__", "__rdivmod__",
+):
+    setattr(Proxy, dunder, _forward_rbinary(dunder))
+
+for dunder in ("__neg__", "__pos__", "__abs__", "__invert__", "__round__",
+               "__trunc__", "__floor__", "__ceil__"):
+    setattr(Proxy, dunder, _forward_unary(dunder))
+
+
+# ---------------------------------------------------------------------------
+# Module-level utilities (mirroring proxystore.proxy's API)
+# ---------------------------------------------------------------------------
+
+def is_resolved(proxy: Proxy) -> bool:
+    """True if ``proxy``'s target has been materialized."""
+    return object.__getattribute__(proxy, "_proxy_target") is not _UNRESOLVED
+
+
+def resolve(proxy: Proxy) -> None:
+    """Force resolution of ``proxy`` (no-op if already resolved)."""
+    _do_resolve(proxy)
+
+
+def extract(proxy: Proxy):
+    """Return the target object of ``proxy``, resolving if necessary."""
+    return _do_resolve(proxy)
+
+
+def get_factory(proxy: Proxy) -> Callable[[], Any]:
+    """Return the factory embedded in ``proxy``."""
+    return object.__getattribute__(proxy, "_proxy_factory")
+
+
+def is_proxy(obj: Any) -> bool:
+    """True if ``obj`` is a Proxy instance (bypasses __class__ lie)."""
+    return type(obj) is Proxy

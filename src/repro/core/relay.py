@@ -1,0 +1,117 @@
+"""Relay (signaling) server for PS-endpoint peering (paper Fig 4).
+
+Endpoints register over a persistent TCP connection; the relay brokers the
+offer/answer exchange that introduces two endpoints to each other.  In the
+paper this carries WebRTC SDP + ICE candidates for UDP hole punching; on a
+single host the "session description" degenerates to the peer's listening
+address — which is exactly the information hole punching exists to establish.
+The message flow (offer -> forward -> answer -> forward) is reproduced 1:1.
+
+Hosting requirements are minimal (paper §4.2.2): the relay only moves O(KB)
+introduction messages, never object data.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import os
+import struct
+import uuid as uuid_mod
+from pathlib import Path
+
+import msgpack
+
+_LEN = struct.Struct(">I")
+
+
+async def _read(reader: asyncio.StreamReader) -> dict | None:
+    try:
+        header = await reader.readexactly(4)
+        (length,) = _LEN.unpack(header)
+        body = await reader.readexactly(length)
+    except (asyncio.IncompleteReadError, ConnectionResetError):
+        return None
+    return msgpack.unpackb(body, raw=False)
+
+
+def _frame(msg: dict) -> bytes:
+    body = msgpack.packb(msg, use_bin_type=True)
+    return _LEN.pack(len(body)) + body
+
+
+class RelayServer:
+    def __init__(self) -> None:
+        # uuid -> (writer, metadata)
+        self.endpoints: dict[str, tuple[asyncio.StreamWriter, dict]] = {}
+        self._shutdown = asyncio.Event()
+
+    async def handle(self, reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter) -> None:
+        registered: str | None = None
+        try:
+            while True:
+                msg = await _read(reader)
+                if msg is None:
+                    break
+                mtype = msg.get("type")
+                if mtype == "register":
+                    # assign a UUID if the endpoint doesn't have one yet
+                    ep_uuid = msg.get("uuid") or uuid_mod.uuid4().hex
+                    registered = ep_uuid
+                    self.endpoints[ep_uuid] = (writer, msg.get("meta", {}))
+                    writer.write(_frame({"type": "registered", "uuid": ep_uuid}))
+                    await writer.drain()
+                elif mtype in ("offer", "answer"):
+                    # forward the session description to the target endpoint
+                    target = msg.get("target")
+                    entry = self.endpoints.get(target)
+                    if entry is None:
+                        writer.write(_frame({
+                            "type": "error", "rid": msg.get("rid"),
+                            "error": f"unknown endpoint {target}",
+                        }))
+                        await writer.drain()
+                    else:
+                        fwd = dict(msg)
+                        fwd["source"] = registered
+                        entry[0].write(_frame(fwd))
+                        await entry[0].drain()
+                elif mtype == "list":
+                    writer.write(_frame({
+                        "type": "endpoints", "rid": msg.get("rid"),
+                        "uuids": list(self.endpoints),
+                    }))
+                    await writer.drain()
+                elif mtype == "shutdown":
+                    self._shutdown.set()
+                    break
+        finally:
+            if registered and registered in self.endpoints:
+                if self.endpoints[registered][0] is writer:
+                    del self.endpoints[registered]
+            writer.close()
+
+
+async def serve(host: str, port: int, ready_file: str | None) -> None:
+    relay = RelayServer()
+    server = await asyncio.start_server(relay.handle, host, port)
+    actual = server.sockets[0].getsockname()[1]
+    if ready_file:
+        tmp = Path(ready_file + ".tmp")
+        tmp.write_text(f"{host}:{actual}:{os.getpid()}")
+        tmp.replace(ready_file)
+    async with server:
+        await relay._shutdown.wait()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--ready-file", default=None)
+    args = ap.parse_args()
+    asyncio.run(serve(args.host, args.port, args.ready_file))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""The Store (paper §3.5): object-level interface over a Connector.
+
+* (de)serializes Python objects / JAX pytrees (custom hooks registerable),
+* caches *after deserialization* (paper: "to avoid duplicate deserializations"),
+* ``proxy()`` / ``proxy_batch()`` produce transparent lazy proxies whose
+  factories carry only ``(store config, key)``,
+* an ``evict`` flag on proxies evicts the object on first resolve (ephemeral
+  intermediates),
+* ``resolve_async`` overlaps proxy resolution with compute,
+* stores register globally by name: a proxy resolved on a process without the
+  store re-materializes it from the factory's embedded config, and later
+  proxies reuse the registered instance (shared caches, live connections).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from repro.core.connector import (Connector, Key, import_path,
+                                  resolve_import_path)
+from repro.core.proxy import Proxy, get_factory, is_proxy
+from repro.core.serialize import deserialize, serialize
+
+_REGISTRY: dict[str, "Store"] = {}
+_REGISTRY_LOCK = threading.RLock()
+_RESOLVE_POOL: ThreadPoolExecutor | None = None
+_POOL_LOCK = threading.Lock()
+
+
+def _pool() -> ThreadPoolExecutor:
+    global _RESOLVE_POOL
+    with _POOL_LOCK:
+        if _RESOLVE_POOL is None:
+            _RESOLVE_POOL = ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="psj-resolve")
+        return _RESOLVE_POOL
+
+
+class _LRUCache:
+    def __init__(self, maxsize: int) -> None:
+        self.maxsize = maxsize
+        self._data: OrderedDict[Key, Any] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Key, default=None):
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return default
+
+    def put(self, key: Key, value: Any) -> None:
+        if self.maxsize <= 0:
+            return
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+
+    def pop(self, key: Key) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def __contains__(self, key: Key) -> bool:
+        with self._lock:
+            return key in self._data
+
+
+@dataclass
+class StoreConfig:
+    name: str
+    connector_path: str
+    connector_config: dict[str, Any]
+    cache_size: int = 16
+
+    def build(self) -> "Store":
+        cls = resolve_import_path(self.connector_path)
+        connector = cls(**self.connector_config)
+        return Store(self.name, connector, cache_size=self.cache_size)
+
+
+@dataclass
+class StoreFactory:
+    """Callable that retrieves ``key`` from the named store.
+
+    Self-contained (paper §3.3): includes everything needed to re-create the
+    Store on any process.  Supports async pre-resolution via ``resolve_async``
+    (the Future intentionally does not survive pickling).
+    """
+
+    key: Key
+    store_config: StoreConfig
+    evict: bool = False
+    _future: Future | None = field(default=None, repr=False, compare=False)
+
+    def __call__(self) -> Any:
+        fut, self._future = self._future, None
+        if fut is not None:
+            return fut.result()
+        return self._fetch()
+
+    def _fetch(self) -> Any:
+        store = get_or_create_store(self.store_config)
+        obj = store.get(self.key)
+        if obj is None and not store.exists(self.key):
+            raise LookupError(
+                f"key {self.key} not found in store {self.store_config.name!r}")
+        if self.evict:
+            store.evict(self.key)
+        return obj
+
+    def resolve_async(self) -> None:
+        if self._future is None:
+            self._future = _pool().submit(self._fetch)
+
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state["_future"] = None
+        return state
+
+
+class Store:
+    def __init__(self, name: str, connector: Connector, *,
+                 cache_size: int = 16,
+                 serializer: Callable[[Any], bytes] | None = None,
+                 deserializer: Callable[[bytes], Any] | None = None,
+                 register: bool = True) -> None:
+        self.name = name
+        self.connector = connector
+        self._serialize = serializer or serialize
+        self._deserialize = deserializer or deserialize
+        self.cache = _LRUCache(cache_size)
+        self.cache_size = cache_size
+        if register:
+            register_store(self)
+
+    # -- config round trip -----------------------------------------------------
+    def config(self) -> StoreConfig:
+        return StoreConfig(
+            name=self.name,
+            connector_path=import_path(type(self.connector)),
+            connector_config=self.connector.config(),
+            cache_size=self.cache_size,
+        )
+
+    # -- object ops --------------------------------------------------------------
+    def put(self, obj: Any, **kwargs) -> Key:
+        return self.connector.put(self._serialize(obj), **kwargs) \
+            if kwargs else self.connector.put(self._serialize(obj))
+
+    def put_batch(self, objs: Sequence[Any]) -> list[Key]:
+        return self.connector.put_batch([self._serialize(o) for o in objs])
+
+    def get(self, key: Key, default: Any = None) -> Any:
+        key = tuple(key)
+        cached = self.cache.get(key, _MISS)
+        if cached is not _MISS:
+            return cached
+        blob = self.connector.get(key)
+        if blob is None:
+            return default
+        obj = self._deserialize(blob)
+        self.cache.put(key, obj)  # cache post-deserialization (paper §3.5)
+        return obj
+
+    def exists(self, key: Key) -> bool:
+        return tuple(key) in self.cache or self.connector.exists(tuple(key))
+
+    def evict(self, key: Key) -> None:
+        key = tuple(key)
+        self.cache.pop(key)
+        self.connector.evict(key)
+
+    # -- the proxy interface -----------------------------------------------------
+    def proxy(self, obj: Any, evict: bool = False) -> Proxy:
+        key = self.put(obj)
+        return self.proxy_from_key(key, evict=evict)
+
+    def proxy_from_key(self, key: Key, evict: bool = False) -> Proxy:
+        return Proxy(StoreFactory(key=tuple(key), store_config=self.config(),
+                                  evict=evict))
+
+    def proxy_batch(self, objs: Sequence[Any], evict: bool = False) -> list[Proxy]:
+        keys = self.put_batch(objs)  # single batch op (e.g. one Globus task)
+        return [self.proxy_from_key(k, evict=evict) for k in keys]
+
+    def close(self, *, close_connector: bool = True) -> None:
+        unregister_store(self.name)
+        if close_connector:
+            self.connector.close()
+
+    def __repr__(self) -> str:
+        return f"Store(name={self.name!r}, connector={type(self.connector).__name__})"
+
+
+_MISS = object()
+
+
+# ---------------------------------------------------------------------------
+# global registry (paper §3.5)
+# ---------------------------------------------------------------------------
+def register_store(store: Store) -> None:
+    with _REGISTRY_LOCK:
+        existing = _REGISTRY.get(store.name)
+        if existing is not None and existing is not store:
+            raise ValueError(f"store {store.name!r} already registered")
+        _REGISTRY[store.name] = store
+
+
+def unregister_store(name: str) -> None:
+    with _REGISTRY_LOCK:
+        _REGISTRY.pop(name, None)
+
+
+def get_store(name: str) -> Store | None:
+    with _REGISTRY_LOCK:
+        return _REGISTRY.get(name)
+
+
+def get_or_create_store(config: StoreConfig) -> Store:
+    with _REGISTRY_LOCK:
+        store = _REGISTRY.get(config.name)
+        if store is None:
+            store = config.build()  # Store() self-registers
+        return store
+
+
+# ---------------------------------------------------------------------------
+# proxy helpers
+# ---------------------------------------------------------------------------
+def resolve_async(proxy: Proxy) -> None:
+    """Begin resolving ``proxy`` in a background thread (paper §3.5)."""
+    factory = get_factory(proxy)
+    if isinstance(factory, StoreFactory):
+        factory.resolve_async()
+
+
+def maybe_proxy(store: Store, obj: Any, threshold_bytes: int = 0) -> Any:
+    """Proxy ``obj`` through ``store`` if it serializes above the threshold.
+
+    The Colmena-integration pattern (§5.2): small objects ride the control
+    plane, large ones go by proxy.
+    """
+    if is_proxy(obj):
+        return obj
+    blob = serialize(obj)
+    if len(blob) < threshold_bytes:
+        return obj
+    key = store.connector.put(blob)
+    return store.proxy_from_key(key)

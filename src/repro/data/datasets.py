@@ -1,0 +1,36 @@
+"""Deterministic synthetic token datasets (seeded; reproducible across
+producers and restarts — a restarted trainer regenerates identical batches).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def lm_batch(seed: int, index: int, batch: int, seq: int, vocab: int,
+             extras: dict | None = None) -> dict:
+    """Batch ``index`` of a virtual infinite corpus.
+
+    Markov-ish synthetic text: next token depends on the previous one plus
+    seeded noise, so models can actually reduce loss on it (used by the e2e
+    training example to show learning).
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([seed, index]))
+    base = rng.integers(0, vocab, size=(batch, 1), dtype=np.int32)
+    steps = rng.integers(0, 17, size=(batch, seq), dtype=np.int32)
+    toks = (np.cumsum(steps, axis=1, dtype=np.int64) + base) % vocab
+    tokens = toks.astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = tokens[:, 0]
+    out = {"tokens": tokens, "labels": labels}
+    if extras:
+        for name, (shape, dtype) in extras.items():
+            out[name] = rng.standard_normal((batch, *shape)).astype(dtype) * 0.02
+    return out
+
+
+def extras_for(cfg) -> dict:
+    if cfg.family == "vlm":
+        return {"vision_emb": ((cfg.n_img_tokens, cfg.d_model), np.float32)}
+    if cfg.family == "audio":
+        return {"frames": ((cfg.enc_frames, cfg.d_model), np.float32)}
+    return {}

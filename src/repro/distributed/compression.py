@@ -1,0 +1,92 @@
+"""Gradient/update compression for the federated update path (+ tests).
+
+* ``int8``: per-tensor symmetric quantization, 4x smaller than fp32.
+* ``int8_ef``: int8 with error feedback — the residual of each round is
+  added back before the next quantization, making compression *unbiased
+  over time* (Seide et al.; standard in comm-efficient FL).
+* ``topk``: magnitude sparsification (indices + values), with EF.
+
+All operate on pytrees of numpy/jax arrays and return plain-dict payloads
+that serialize compactly through the Store.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _quant_int8(x: np.ndarray) -> dict:
+    scale = float(np.max(np.abs(x)) or 1.0) / 127.0
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return {"q": q, "scale": scale, "kind": "int8"}
+
+
+def _dequant_int8(p: dict) -> np.ndarray:
+    return p["q"].astype(np.float32) * p["scale"]
+
+
+def _topk(x: np.ndarray, frac: float) -> dict:
+    flat = x.reshape(-1)
+    k = max(1, int(len(flat) * frac))
+    idx = np.argpartition(np.abs(flat), -k)[-k:].astype(np.int32)
+    return {"idx": idx, "val": flat[idx].astype(np.float32),
+            "shape": list(x.shape), "kind": "topk"}
+
+
+def _untopk(p: dict) -> np.ndarray:
+    flat = np.zeros(int(np.prod(p["shape"])), np.float32)
+    flat[p["idx"]] = p["val"]
+    return flat.reshape(p["shape"])
+
+
+class Compressor:
+    """Stateful (error-feedback) tree compressor."""
+
+    def __init__(self, method: str = "int8_ef", topk_frac: float = 0.05):
+        assert method in ("none", "int8", "int8_ef", "topk", "topk_ef")
+        self.method = method
+        self.topk_frac = topk_frac
+        self._residual: Any = None
+
+    def compress(self, tree) -> Any:
+        if self.method == "none":
+            return jax.tree.map(np.asarray, tree)
+        use_ef = self.method.endswith("_ef")
+        base = self.method.replace("_ef", "")
+        leaves, treedef = jax.tree_util.tree_flatten(
+            jax.tree.map(lambda a: np.asarray(a, np.float32), tree))
+        if use_ef and self._residual is None:
+            self._residual = [np.zeros_like(l) for l in leaves]
+        out, new_res = [], []
+        for i, leaf in enumerate(leaves):
+            if use_ef:
+                leaf = leaf + self._residual[i]
+            payload = _quant_int8(leaf) if base == "int8" \
+                else _topk(leaf, self.topk_frac)
+            if use_ef:
+                approx = _dequant_int8(payload) if base == "int8" \
+                    else _untopk(payload)
+                new_res.append(leaf - approx)
+            out.append(payload)
+        if use_ef:
+            self._residual = new_res
+        return {"treedef": treedef, "leaves": out, "kind": "compressed"}
+
+    @staticmethod
+    def decompress(payload) -> Any:
+        if not (isinstance(payload, dict) and
+                payload.get("kind") == "compressed"):
+            return payload
+        leaves = [
+            _dequant_int8(p) if p["kind"] == "int8" else _untopk(p)
+            for p in payload["leaves"]
+        ]
+        return jax.tree_util.tree_unflatten(payload["treedef"], leaves)
+
+    @staticmethod
+    def payload_bytes(payload) -> int:
+        from repro.core import serialize
+
+        return len(serialize(payload))

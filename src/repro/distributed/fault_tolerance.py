@@ -1,0 +1,90 @@
+"""Fault-tolerance primitives shared by the trainer and FL orchestrator.
+
+* file-based heartbeats (worker liveness without a network dependency),
+* retry-with-backoff wrapper,
+* round deadlines with straggler over-provisioning math.
+"""
+from __future__ import annotations
+
+import json
+import random
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable
+
+
+class HeartbeatWriter:
+    def __init__(self, directory: str, worker_id: str) -> None:
+        self.path = Path(directory) / f"{worker_id}.hb"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def beat(self, **info) -> None:
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"ts": time.time(), **info}))
+        tmp.replace(self.path)
+
+
+class HeartbeatMonitor:
+    def __init__(self, directory: str, stale_s: float = 10.0) -> None:
+        self.dir = Path(directory)
+        self.stale_s = stale_s
+
+    def alive(self) -> dict[str, dict]:
+        out = {}
+        now = time.time()
+        for f in self.dir.glob("*.hb"):
+            try:
+                info = json.loads(f.read_text())
+            except (json.JSONDecodeError, FileNotFoundError):
+                continue
+            if now - info.get("ts", 0) <= self.stale_s:
+                out[f.stem] = info
+        return out
+
+    def dead(self, known: list[str]) -> list[str]:
+        alive = self.alive()
+        return [w for w in known if w not in alive]
+
+
+@dataclass
+class RetryPolicy:
+    max_attempts: int = 3
+    base_delay_s: float = 0.2
+    max_delay_s: float = 5.0
+    retry_on: tuple = (ConnectionError, TimeoutError, OSError)
+
+
+def with_retries(fn: Callable[..., Any], policy: RetryPolicy = RetryPolicy()):
+    def wrapped(*args, **kwargs):
+        delay = policy.base_delay_s
+        for attempt in range(policy.max_attempts):
+            try:
+                return fn(*args, **kwargs)
+            except policy.retry_on:
+                if attempt == policy.max_attempts - 1:
+                    raise
+                time.sleep(delay * (1 + 0.2 * random.random()))
+                delay = min(delay * 2, policy.max_delay_s)
+    return wrapped
+
+
+def overprovision(n_required: int, p_failure: float,
+                  confidence: float = 0.99) -> int:
+    """Workers to launch so >= n_required finish with given confidence.
+
+    Simple binomial-tail search (the straggler math behind FL round
+    deadlines and redundant data producers).
+    """
+    import math
+
+    n = n_required
+    while n < 10 * n_required + 10:
+        # P[successes >= n_required] with n trials
+        p_ok = sum(
+            math.comb(n, k) * (1 - p_failure) ** k * p_failure ** (n - k)
+            for k in range(n_required, n + 1))
+        if p_ok >= confidence:
+            return n
+        n += 1
+    return n

@@ -1,0 +1,89 @@
+"""Logical-axis sharding: model code names *logical* dims; a per-arch rules
+table maps them to mesh axes (MaxText-style).
+
+    with sharding_rules(mesh, {"batch": ("pod", "data"), "heads": "model", ...}):
+        lowered = jax.jit(step, ...).lower(...)
+
+``shard_as(x, *dims)`` is a no-op outside a rules context (smoke tests run on
+one device), and silently drops mesh axes that don't divide the dim — that is
+what lets e.g. kv_heads=8 fall back gracefully on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> tuple[Mesh, dict[str, Any]] | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextmanager
+def sharding_rules(mesh: Mesh, rules: dict[str, Any]):
+    prev = _current()
+    _STATE.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _axes_of(rule) -> tuple[str, ...]:
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def resolve_spec(mesh: Mesh, shape: Sequence[int],
+                 dims: Sequence[str | None],
+                 rules: dict[str, Any]) -> P:
+    """Build a PartitionSpec for ``shape`` from logical ``dims``.
+
+    Axes that don't divide their dim are dropped (prefix-wise for composed
+    axes); axes may be used at most once across the whole spec.
+    """
+    used: set[str] = set()
+    spec: list[Any] = []
+    for size, dim in zip(shape, dims):
+        if dim is None:
+            spec.append(None)
+            continue
+        axes = []
+        prod = 1
+        for ax in _axes_of(rules.get(dim)):
+            if ax in used:
+                continue
+            ax_size = mesh.shape[ax]
+            if size % (prod * ax_size) == 0:
+                axes.append(ax)
+                prod *= ax_size
+        used.update(axes)
+        spec.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*spec)
+
+
+def shard_as(x, *dims: str | None):
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(dims) != x.ndim:
+        raise ValueError(f"shard_as: {len(dims)} dims for rank-{x.ndim} array")
+    spec = resolve_spec(mesh, x.shape, dims, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for(shape: Sequence[int], dims: Sequence[str | None]) -> P:
+    """resolve_spec against the active context (for in/out shardings)."""
+    ctx = _current()
+    assert ctx is not None, "spec_for requires an active sharding_rules context"
+    mesh, rules = ctx
+    return resolve_spec(mesh, shape, dims, rules)

@@ -1,0 +1,123 @@
+"""Globus-Compute-analog FaaS executor (paper §2, §5.1).
+
+Reproduces the properties that make the paper's baseline slow so the
+benchmarks can measure what proxies remove:
+
+* every task payload (pickled fn + args) and every result transits the
+  "cloud" — modeled as latency + bandwidth on BOTH legs,
+* a hard payload cap (Globus Compute enforces 5 MB) raises
+  ``PayloadTooLarge``,
+* workers are persistent processes on the "endpoint"; they can resolve
+  proxies (import repro) like any consumer.
+
+With ProxyStore, tasks carry ~300-byte proxies instead of data, so the cloud
+hop cost collapses to the latency floor (Fig 5's effect).
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import queue as queue_mod
+import threading
+import time
+import traceback
+import uuid
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+_CTX = mp.get_context("spawn")
+
+
+class PayloadTooLarge(RuntimeError):
+    pass
+
+
+@dataclass
+class CloudModel:
+    # Defaults calibrated to the paper's measured Globus Compute regime:
+    # tens-of-ms cloud latency floor, ~20 MB/s effective relay throughput.
+    latency_s: float = 0.02          # per hop (client->cloud->endpoint)
+    bandwidth_bps: float = 20e6      # cloud relay throughput
+    payload_cap: int = 5 << 20       # Globus Compute's 5 MB
+
+    def hop(self, n_bytes: int) -> float:
+        return 2 * self.latency_s + n_bytes / self.bandwidth_bps
+
+
+def _worker_main(task_q, result_q) -> None:
+    while True:
+        item = task_q.get()
+        if item is None:
+            return
+        task_id, blob = item
+        try:
+            fn, args, kwargs = pickle.loads(blob)
+            result = fn(*args, **kwargs)
+            payload = pickle.dumps(("ok", result), protocol=5)
+        except Exception:  # noqa: BLE001
+            payload = pickle.dumps(("err", traceback.format_exc()), protocol=5)
+        result_q.put((task_id, payload))
+
+
+class FaasExecutor:
+    """submit(fn, *args) -> Future, with simulated cloud data path."""
+
+    def __init__(self, n_workers: int = 2,
+                 cloud: CloudModel | None = None) -> None:
+        self.cloud = cloud or CloudModel()
+        self._task_q = _CTX.Queue()
+        self._result_q = _CTX.Queue()
+        self._futures: dict[str, Future] = {}
+        self._lock = threading.Lock()
+        self._workers = [
+            _CTX.Process(target=_worker_main,
+                         args=(self._task_q, self._result_q), daemon=True)
+            for _ in range(n_workers)
+        ]
+        for w in self._workers:
+            w.start()
+        self._collector = threading.Thread(target=self._collect, daemon=True)
+        self._collector.start()
+
+    def submit(self, fn, *args, **kwargs) -> Future:
+        blob = pickle.dumps((fn, args, kwargs), protocol=5)
+        if len(blob) > self.cloud.payload_cap:
+            raise PayloadTooLarge(
+                f"task payload {len(blob)}B exceeds cap "
+                f"{self.cloud.payload_cap}B (pass a proxy instead)")
+        time.sleep(self.cloud.hop(len(blob)))  # client -> cloud -> endpoint
+        task_id = uuid.uuid4().hex
+        fut: Future = Future()
+        with self._lock:
+            self._futures[task_id] = fut
+        self._task_q.put((task_id, blob))
+        return fut
+
+    def _collect(self) -> None:
+        while True:
+            try:
+                task_id, payload = self._result_q.get(timeout=1.0)
+            except queue_mod.Empty:
+                continue
+            with self._lock:
+                fut = self._futures.pop(task_id, None)
+            if fut is None:
+                continue
+            if len(payload) > self.cloud.payload_cap:
+                fut.set_exception(PayloadTooLarge(
+                    f"result {len(payload)}B exceeds cap"))
+                continue
+            time.sleep(self.cloud.hop(len(payload)))  # endpoint -> cloud -> client
+            status, value = pickle.loads(payload)
+            if status == "ok":
+                fut.set_result(value)
+            else:
+                fut.set_exception(RuntimeError(value))
+
+    def shutdown(self) -> None:
+        for _ in self._workers:
+            self._task_q.put(None)
+        for w in self._workers:
+            w.join(timeout=3)
+            if w.is_alive():
+                w.terminate()

@@ -1,0 +1,168 @@
+"""Federated learning orchestrator (paper §5.5, Fig 10 — FLoX analog).
+
+An aggregator drives rounds of local training on edge workers executed
+through the FaaS executor (payload-capped cloud control plane, as in the
+paper).  Data movement is pluggable:
+
+* ``transport="value"`` — the baseline: model weights ride the FaaS payload
+  (fails beyond the cap as model size grows; Fig 10's truncated baseline),
+* ``transport="proxy"`` — weights go through a Store once per round; workers
+  receive a ~300-byte proxy and resolve just-in-time; updates return by
+  proxy too.
+
+Production FL features: update compression (int8/topk + error feedback),
+round deadlines with straggler dropping, worker failure injection +
+over-provisioning, elastic worker counts per round, heartbeats.
+"""
+from __future__ import annotations
+
+import math
+import pickle
+import random
+import time
+from concurrent.futures import FIRST_COMPLETED, wait
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import Store
+from repro.core.proxy import extract, get_factory, is_proxy
+from repro.core.store import StoreConfig, get_or_create_store
+from repro.data.datasets import lm_batch
+from repro.distributed.compression import Compressor
+from repro.federated.faas import FaasExecutor, PayloadTooLarge
+
+
+@dataclass
+class FLConfig:
+    rounds: int = 3
+    workers_per_round: int = 4
+    local_steps: int = 4
+    batch: int = 4
+    seq: int = 32
+    lr: float = 0.05
+    transport: str = "proxy"          # proxy | value
+    compression: str = "none"         # none | int8 | int8_ef | topk
+    deadline_s: float = 60.0
+    fail_rate: float = 0.0            # injected worker failures
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# worker task (module-level: picklable by reference for spawn workers)
+# ---------------------------------------------------------------------------
+def local_train_task(model_ref: Any, cfg: ArchConfig, fl_blob: bytes,
+                     worker_seed: int, store_cfg_blob: bytes | None,
+                     compression: str) -> Any:
+    fl: FLConfig = pickle.loads(fl_blob)
+    if fl.fail_rate and random.random() < fl.fail_rate:
+        raise RuntimeError(f"injected worker failure (seed {worker_seed})")
+
+    params = extract(model_ref) if is_proxy(model_ref) else model_ref
+    params = jax.tree.map(np.asarray, params)
+
+    from repro.models.model import build_model
+
+    model = build_model(cfg)
+
+    def loss_fn(p, batch):
+        return model.loss(p, batch)[0]
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    p = jax.tree.map(jax.numpy.asarray, params)
+    for step in range(fl.local_steps):
+        batch = lm_batch(worker_seed, step, fl.batch, fl.seq, cfg.vocab)
+        _, g = grad_fn(p, {k: jax.numpy.asarray(v) for k, v in batch.items()})
+        p = jax.tree.map(lambda w, gg: (w.astype(np.float32)
+                                        - fl.lr * gg.astype(np.float32)
+                                        ).astype(w.dtype), p, g)
+    update = jax.tree.map(
+        lambda new, old: np.asarray(new, np.float32)
+        - np.asarray(old, np.float32), p, params)
+    if compression != "none":
+        update = Compressor(compression).compress(update)
+    if store_cfg_blob is not None:
+        store = get_or_create_store(pickle.loads(store_cfg_blob))
+        return store.proxy(update)   # lightweight reference back
+    return update
+
+
+class FLOrchestrator:
+    def __init__(self, cfg: ArchConfig, fl: FLConfig,
+                 executor: FaasExecutor, store: Store | None) -> None:
+        self.cfg, self.fl = cfg, fl
+        self.executor = executor
+        self.store = store
+        from repro.models.model import build_model
+
+        self.model = build_model(cfg)
+        self.params = jax.tree.map(np.asarray,
+                                   self.model.init(jax.random.key(fl.seed)))
+        self.log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _dispatch_model(self):
+        if self.fl.transport == "proxy":
+            assert self.store is not None
+            return self.store.proxy(self.params)   # ONE put per round
+        return self.params                         # by value (cap applies)
+
+    def run_round(self, rnd: int, n_workers: int | None = None) -> dict:
+        fl = self.fl
+        n = n_workers or fl.workers_per_round
+        model_ref = self._dispatch_model()
+        store_blob = pickle.dumps(self.store.config()) \
+            if fl.transport == "proxy" else None
+        fl_blob = pickle.dumps(fl)
+        t0 = time.time()
+        futures = {}
+        for w in range(n):
+            fut = self.executor.submit(
+                local_train_task, model_ref, self.cfg, fl_blob,
+                1000 * rnd + w, store_blob, fl.compression)
+            futures[fut] = w
+        done, not_done = wait(list(futures), timeout=fl.deadline_s)
+        updates, failures = [], 0
+        for fut in done:
+            try:
+                result = fut.result()
+                if is_proxy(result):
+                    payload = extract(result)
+                    self.store.evict(get_factory(result).key)
+                else:
+                    payload = result
+                updates.append(Compressor.decompress(payload))
+            except (RuntimeError, PayloadTooLarge):
+                failures += 1
+        stragglers = len(not_done)
+        if updates:
+            mean_update = jax.tree.map(
+                lambda *us: np.mean(np.stack(us), axis=0), *updates)
+            self.params = jax.tree.map(
+                lambda p, u: (p.astype(np.float32) + u).astype(p.dtype),
+                self.params, mean_update)
+        if is_proxy(model_ref):  # round over: evict the round's weights
+            self.store.evict(get_factory(model_ref).key)
+        info = {"round": rnd, "workers": n, "ok": len(updates),
+                "failures": failures, "stragglers": stragglers,
+                "wall_s": time.time() - t0}
+        self.log.append(info)
+        return info
+
+    def eval_loss(self) -> float:
+        batch = lm_batch(999, 0, self.fl.batch, self.fl.seq, self.cfg.vocab)
+        p = jax.tree.map(jax.numpy.asarray, self.params)
+        loss, _ = self.model.loss(p, {k: jax.numpy.asarray(v)
+                                      for k, v in batch.items()})
+        return float(np.asarray(loss))
+
+    def run(self, worker_schedule: list[int] | None = None) -> dict:
+        losses = [self.eval_loss()]
+        for rnd in range(self.fl.rounds):
+            n = worker_schedule[rnd] if worker_schedule else None
+            self.run_round(rnd, n)
+            losses.append(self.eval_loss())
+        return {"losses": losses, "rounds": self.log}

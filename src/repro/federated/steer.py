@@ -1,0 +1,115 @@
+"""Colmena-analog ensemble steering (paper §5.2, §5.6).
+
+Thinker -> TaskServer -> workers, with the paper's library-level ProxyStore
+integration: task inputs/results above a per-task-type threshold are
+replaced by proxies before entering the task server queue
+(``maybe_proxy``), exactly as Colmena registers a Store + threshold.
+
+The TaskServer models the workflow-engine data path: every queued message is
+serialized through the server with a configurable relay throughput, so bulky
+values clog it (Fig 7/11's effect) while proxies do not.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core import Store, serialize
+from repro.core.proxy import extract, is_proxy
+from repro.core.store import maybe_proxy
+
+
+@dataclass
+class SteerConfig:
+    n_workers: int = 2
+    proxy_threshold: int | None = 100_000   # None -> proxies disabled
+    server_bandwidth_bps: float = 50e6      # pickle-through-Redis regime
+    server_latency_s: float = 0.002
+
+
+class TaskServer:
+    """In-process stand-in for the workflow engine's central data path."""
+
+    def __init__(self, cfg: SteerConfig, store: Store | None) -> None:
+        self.cfg = cfg
+        self.store = store
+        self.tasks: queue.Queue = queue.Queue()
+        self.results: queue.Queue = queue.Queue()
+        self.bytes_moved = 0
+        self._lock = threading.Lock()
+
+    def _relay(self, obj: Any) -> Any:
+        """Everything passing the server pays serialization + bandwidth —
+        twice (into and out of the engine process), as in the hub-spoke
+        Parsl/Colmena data path the paper measures (§5.2)."""
+        blob = serialize(obj)
+        with self._lock:
+            self.bytes_moved += len(blob)
+        time.sleep(self.cfg.server_latency_s
+                   + 2 * len(blob) / self.cfg.server_bandwidth_bps)
+        return obj
+
+    def submit(self, fn: Callable, arg: Any) -> None:
+        if self.store is not None and self.cfg.proxy_threshold is not None:
+            arg = maybe_proxy(self.store, arg, self.cfg.proxy_threshold)
+        self.tasks.put((fn, self._relay(arg)))
+
+    def put_result(self, value: Any) -> None:
+        if self.store is not None and self.cfg.proxy_threshold is not None:
+            value = maybe_proxy(self.store, value, self.cfg.proxy_threshold)
+        self.results.put(self._relay(value))
+
+
+def _worker_loop(server: TaskServer, stop: threading.Event) -> None:
+    while not stop.is_set():
+        try:
+            fn, arg = server.tasks.get(timeout=0.1)
+        except queue.Empty:
+            continue
+        if is_proxy(arg):
+            arg = extract(arg)
+        server.put_result(fn(arg))
+
+
+class Steering:
+    """Thinker loop: keep ``n_outstanding`` tasks in flight, consume results."""
+
+    def __init__(self, cfg: SteerConfig, store: Store | None) -> None:
+        self.cfg = cfg
+        self.server = TaskServer(cfg, store)
+        self._stop = threading.Event()
+        self._threads = [
+            threading.Thread(target=_worker_loop,
+                             args=(self.server, self._stop), daemon=True)
+            for _ in range(cfg.n_workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def run(self, fn: Callable, make_input: Callable[[int], Any],
+            n_tasks: int, n_outstanding: int = 4) -> dict:
+        t0 = time.time()
+        submitted = received = 0
+        results = []
+        while received < n_tasks:
+            while submitted < n_tasks and \
+                    submitted - received < n_outstanding:
+                self.server.submit(fn, make_input(submitted))
+                submitted += 1
+            value = self.server.results.get()
+            if is_proxy(value):
+                value = extract(value)
+            results.append(value)
+            received += 1
+        wall = time.time() - t0
+        return {"wall_s": wall, "tasks_per_s": n_tasks / wall,
+                "server_bytes": self.server.bytes_moved,
+                "results": results}
+
+    def close(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=1)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B, Sq, H, HD); k, v: (B, Skv, KV, HD) -> (B, Sq, H, HD)."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p).astype(q.dtype)  # fully-masked rows
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, sq, h, hd)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q: (B, 1, H, HD); caches: (B, S, KV, HD); length: scalar valid count."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1]) < length
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
+    return o.reshape(b, 1, h, hd)
+
+
+def ssd_scan_ref(x, dt, a_log, b, c):
+    """Sequential SSD recurrence (exact; O(L) state updates).
+
+    x: (B, L, H, P); dt: (B, L, H); a_log: (H,); b, c: (B, L, N)
+    -> y: (B, L, H, P)
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t.astype(jnp.float32) * a)[..., None, None]
+        inject = jnp.einsum("bhp,bn->bhpn",
+                            (x_t * dt_t[..., None]).astype(jnp.float32),
+                            b_t.astype(jnp.float32))
+        state = decay * state + inject
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t.astype(jnp.float32))
+        return state, y_t
+
+    s0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (jnp.moveaxis(x, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(b, 1, 0),
+                                    jnp.moveaxis(c, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (artifacts/<arch>__<shape>__<mesh>.json):
+
+1. REAL variant — the production config (scan-over-layers, chunked attention/
+   loss).  Its successful ``.lower().compile()`` is the deliverable proof;
+   ``memory_analysis()`` gives per-device bytes; its HLO text gives the
+   collective op census.
+2. COST variant — same shardings, ``scan_layers=False`` and unchunked
+   attention/loss, lowered at n_layers = {k, 2k}.  XLA's cost analysis counts
+   a while-loop body ONCE regardless of trip count (verified empirically), so
+   scanned programs under-report; the unrolled 1/2-layer pair gives an exact
+   per-layer delta to extrapolate FLOPs / bytes / collective-bytes to the
+   full depth:  total(L) = base(k) + (L-k)/k * delta.
+
+Roofline terms are then derived in launch/roofline.py from these artifacts.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.distributed.rules import (batch_specs_tree, cache_specs_tree,
+                                     make_rules, tree_specs)
+from repro.distributed.sharding import sharding_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import abstract_params, cache_specs, input_specs
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (abstract_train_state, make_prefill_step,
+                                    make_serve_step, make_train_step)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# HLO collective census
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Per-op counts and estimated per-device link bytes.
+
+    Ring estimates with group size g: all-gather/all-to-all: out*(g-1)/g;
+    all-reduce: 2*out*(g-1)/g; reduce-scatter: out*(g-1) (out is the shard);
+    collective-permute: out.
+    """
+    census: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        out_bytes = _shape_bytes(shape_str)
+        g = 0
+        mi = _GROUPS_IOTA_RE.search(line)
+        if mi:
+            g = int(mi.group(2))
+        else:
+            ml = _GROUPS_LIST_RE.search(line)
+            if ml:
+                g = len(ml.group(1).split(","))
+        g = max(g, 2)
+        if op == "all-reduce":
+            link = 2 * out_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            link = out_bytes * (g - 1)
+        elif op == "collective-permute":
+            link = out_bytes
+        else:  # all-gather, all-to-all
+            link = out_bytes * (g - 1) / g
+        c = census.setdefault(op, {"count": 0, "bytes": 0.0, "link_bytes": 0.0})
+        c["count"] += 1
+        c["bytes"] += out_bytes
+        c["link_bytes"] += link
+    return census
+
+
+def census_total(census: dict) -> float:
+    return sum(c["link_bytes"] for c in census.values())
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+def _shardings_for(mesh, rules, cfg, shape, kind, opt_cfg):
+    """(in_shardings, out_shardings, donate, abstract_args, step_fn)."""
+    from repro.distributed.sharding import resolve_spec
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    b = shape.global_batch
+    logits_sh = ns(resolve_spec(mesh, (b, cfg.padded_vocab),
+                                ("batch", "vocab"), rules))
+    token_sh = ns(resolve_spec(mesh, (b, 1), ("batch", None), rules))
+
+    if kind == "train":
+        step = make_train_step(cfg, opt_cfg,
+                               n_microbatches=getattr(opt_cfg, "_n_micro", 1))
+        state = abstract_train_state(cfg, opt_cfg)
+        batch = input_specs(cfg, shape)["batch"]
+        state_sh = jax.tree.map(ns, tree_specs(mesh, rules, state))
+        batch_sh = jax.tree.map(ns, batch_specs_tree(mesh, rules, batch))
+        metric_sh = {k: ns(P()) for k in
+                     ("loss", "nll", "grad_norm", "lr", "lb_loss", "z_loss")}
+        metric_sh = None  # let XLA infer scalar outputs
+        return (dict(fn=step, args=(state, batch),
+                     in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate=(0,)))
+    if kind == "prefill":
+        step = make_prefill_step(cfg)
+        params = abstract_params(cfg)
+        batch = input_specs(cfg, shape)["batch"]
+        params_sh = jax.tree.map(ns, tree_specs(mesh, rules, params))
+        batch_sh = jax.tree.map(ns, batch_specs_tree(mesh, rules, batch))
+        cache = cache_specs(cfg, shape)
+        cache_sh = jax.tree.map(ns, cache_specs_tree(mesh, rules, cache))
+        return (dict(fn=step, args=(params, batch),
+                     in_shardings=(params_sh, batch_sh),
+                     out_shardings=(logits_sh, cache_sh), donate=()))
+    if kind == "decode":
+        step = make_serve_step(cfg)
+        params = abstract_params(cfg)
+        spec = input_specs(cfg, shape)
+        cache, token, pos = spec["cache"], spec["token"], spec["pos"]
+        params_sh = jax.tree.map(ns, tree_specs(mesh, rules, params))
+        cache_sh = jax.tree.map(ns, cache_specs_tree(mesh, rules, cache))
+        pos_sh = ns(P())
+        return (dict(fn=step, args=(params, cache, token, pos),
+                     in_shardings=(params_sh, cache_sh, token_sh, pos_sh),
+                     out_shardings=(logits_sh, cache_sh), donate=(1,)))
+    raise ValueError(kind)
+
+
+def lower_cell(cfg, shape, mesh, *, opt_cfg=None, rules_overrides=None,
+               fsdp=True, n_microbatches=1):
+    """Lower + compile one cell; returns (compiled, seconds, spec_dict)."""
+    opt_cfg = opt_cfg or OptConfig()
+    object.__setattr__(opt_cfg, "_n_micro", n_microbatches) \
+        if n_microbatches != 1 else None
+    rules = make_rules(mesh, fsdp=fsdp, overrides=rules_overrides)
+    with sharding_rules(mesh, rules):
+        spec = _shardings_for(mesh, rules, cfg, shape, shape.kind, opt_cfg)
+        t0 = time.time()
+        jitted = jax.jit(spec["fn"], in_shardings=spec["in_shardings"],
+                         out_shardings=spec["out_shardings"],
+                         donate_argnums=spec["donate"])
+        lowered = jitted.lower(*spec["args"])
+        compiled = lowered.compile()
+        dt = time.time() - t0
+    return compiled, dt
+
+
+def _cost_variant_cfg(cfg, shape):
+    """Fully-unrolled config for exact cost analysis.
+
+    Layers, attention chunks and loss chunks all become straight-line HLO
+    (no while loops), but keep the REAL chunked shapes — replacing chunked
+    attention with one full S^2 einsum (the first version of this harness)
+    let the SPMD partitioner reshard the giant score tensor, inflating the
+    collective term ~300x vs the real program (documented §Perf B).
+    """
+    return cfg.replace(scan_layers=False, attn_unroll=True,
+                       loss_unroll=True, remat="none")
+
+
+def _depth_pair(cfg):
+    k = cfg.attn_every if cfg.family == "hybrid" else 1
+    if cfg.family == "audio":
+        return k, 2 * k
+    return k, 2 * k
+
+
+def _with_depth(cfg, n):
+    kw = {"n_layers": n}
+    if cfg.family == "audio":
+        kw["n_enc_layers"] = n
+    return cfg.replace(**kw)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = ARTIFACTS, force: bool = False,
+             skip_cost: bool = False, fsdp: bool = True,
+             rules_overrides=None, tag: str = "",
+             cfg_overrides=None, opt_cfg=None,
+             n_microbatches: int = 1) -> dict:
+    cfg = ARCHS[arch_name]
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch_name}__{shape_name}__{mesh_name}{tag}"
+    out_path = out_dir / f"{cell_id}.json"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        result = {"cell": cell_id, "status": "skipped", "reason": why}
+        out_path.write_text(json.dumps(result, indent=1))
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    result = {"cell": cell_id, "arch": arch_name, "shape": shape_name,
+              "cfg_overrides": cfg_overrides or {},
+              "rules_overrides": {k: str(v) for k, v in (rules_overrides or {}).items()},
+              "n_microbatches": n_microbatches,
+              "mesh": list(mesh.shape.values()), "n_devices": n_dev,
+              "kind": shape.kind, "status": "ok", "fsdp": fsdp}
+    try:
+        # ---- REAL variant: compile proof + memory + collective census ----
+        compiled, secs = lower_cell(cfg, shape, mesh, fsdp=fsdp,
+                                    rules_overrides=rules_overrides,
+                                    opt_cfg=opt_cfg,
+                                    n_microbatches=n_microbatches)
+        ma = compiled.memory_analysis()
+        result["compile_s"] = round(secs, 2)
+        result["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        }
+        ca = compiled.cost_analysis() or {}
+        result["cost_scanned"] = {"flops": ca.get("flops", 0.0),
+                                  "bytes": ca.get("bytes accessed", 0.0)}
+        census = collective_census(compiled.as_text())
+        result["collectives_scanned"] = census
+
+        if not skip_cost:
+            # ---- COST variant: unrolled depth pair -> per-layer delta ----
+            ka, kb = _depth_pair(cfg)
+            costs = {}
+            for n in (ka, kb):
+                ccfg = _with_depth(_cost_variant_cfg(cfg, shape), n)
+                comp, _ = lower_cell(ccfg, shape, mesh, fsdp=fsdp,
+                                     rules_overrides=rules_overrides,
+                                     opt_cfg=opt_cfg,
+                                     n_microbatches=n_microbatches)
+                c = comp.cost_analysis() or {}
+                costs[n] = {"flops": c.get("flops", 0.0),
+                            "bytes": c.get("bytes accessed", 0.0),
+                            "coll": census_total(
+                                collective_census(comp.as_text()))}
+            L = cfg.n_layers
+            scale = (L - ka) / (kb - ka)
+            ext = {}
+            for key in ("flops", "bytes", "coll"):
+                delta = costs[kb][key] - costs[ka][key]
+                ext[key] = costs[ka][key] + scale * delta
+            result["cost_extrapolated"] = {
+                "flops_per_device": ext["flops"],
+                "bytes_per_device": ext["bytes"],
+                "collective_link_bytes_per_device": ext["coll"],
+                "depth_pair": [ka, kb],
+            }
+    except Exception as e:  # noqa: BLE001 - record the failure, keep matrix
+        result["status"] = "failed"
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+    out_path.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                r = run_cell(arch, shape, mp, out_dir=Path(args.out),
+                             force=args.force, skip_cost=args.skip_cost,
+                             fsdp=not args.no_fsdp)
+                mem = r.get("memory", {}).get("peak_device_bytes")
+                print(f"{r['cell']:58s} {r['status']:8s} "
+                      f"peak={mem/1e9:.2f}GB " if mem else
+                      f"{r['cell']:58s} {r['status']:8s} ",
+                      f"({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

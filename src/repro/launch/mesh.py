@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches JAX device state.  The dry-run process sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to obtain placeholder devices; smoke tests and benchmarks see 1.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh (tests use (2,2,2) etc. on fake devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

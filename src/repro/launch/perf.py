@@ -1,0 +1,174 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: lower tagged variants of the three chosen cells
+and record roofline deltas (hypothesis -> change -> before -> after).
+
+    PYTHONPATH=src python -m repro.launch.perf [--only A1,B1] [--force]
+
+Variants (see EXPERIMENTS.md §Perf for the napkin math):
+
+Cell A = llama3-405b x train_4k   (worst roofline fraction; 842 GB/dev)
+  A1  act_seq='model'  — Megatron-SP residual stream: the 126-layer scan
+      saves one (B/16, 4096, 16384) bf16 carry per layer (~2.1 GB each);
+      sharding the seq dim 16-way should cut the stack ~16x.
+  A2  A1 + 4 microbatches — activation stack scales ~1/4 again.
+  A3  A2 + bf16 optimizer moments — mu/nu 2 bytes: -6.3 GB/dev.
+
+Cell B = qwen2.5-14b x prefill_32k   (most collective-bound: 316 s vs 1.6 s)
+  B1  KV-cache layout (cache_seq=None, hd_tp='model') — k/v are computed
+      head-dim-sharded (wk columns on 'model'), so writing the cache in the
+      same layout removes the per-layer seq-reshard all-to-alls.
+
+Cell C = mixtral-8x7b x train_4k   (MoE; useful ratio 0.25)
+  C1  moe_impl='scatter' — dispatch/combine by segment-sum+gather:
+      removes ~3 x 2*B*S*E*C*D einsum FLOPs per layer (~26% of layer cost).
+  C2  C1 + act_seq='model' — fit memory (61 GB/dev baseline).
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import ARTIFACTS, run_cell
+from repro.train.optimizer import OptConfig
+
+PERF_DIR = ARTIFACTS.parent / "perf"
+
+EXPERIMENTS = {
+    # --- Cell A: llama3-405b train_4k ---
+    "A1": dict(arch="llama3-405b", shape="train_4k",
+               rules_overrides={"act_seq": "model"}),
+    "A2": dict(arch="llama3-405b", shape="train_4k",
+               rules_overrides={"act_seq": "model"}, n_microbatches=4),
+    "A3": dict(arch="llama3-405b", shape="train_4k",
+               rules_overrides={"act_seq": "model"}, n_microbatches=4,
+               opt_cfg=OptConfig(moment_dtype="bfloat16")),
+    "A4": dict(arch="llama3-405b", shape="train_4k", n_microbatches=4,
+               cfg_overrides={"scan_group": 9},
+               opt_cfg=OptConfig(moment_dtype="bfloat16")),
+    "A5": dict(arch="llama3-405b", shape="train_4k", n_microbatches=4,
+               cfg_overrides={"scan_group": 9}, multi_pod=True,
+               opt_cfg=OptConfig(moment_dtype="bfloat16"), skip_cost=True),
+    # --- Cell B: qwen2.5-14b prefill_32k ---
+    "B1": dict(arch="qwen2.5-14b", shape="prefill_32k",
+               rules_overrides={"cache_seq": None, "hd_tp": "model"}),
+    # --- Cell C: mixtral-8x7b train_4k ---
+    "C1": dict(arch="mixtral-8x7b", shape="train_4k",
+               cfg_overrides={"moe_impl": "scatter"}),
+    "C2": dict(arch="mixtral-8x7b", shape="train_4k",
+               cfg_overrides={"moe_impl": "scatter"},
+               rules_overrides={"act_seq": "model"}),
+    "B2": dict(arch="qwen2.5-14b", shape="prefill_32k",
+               rules_overrides={"cache_seq": None, "hd_tp": "model"},
+               cfg_overrides={"attn_chunk": 256}),
+    "C3": dict(arch="mixtral-8x7b", shape="train_4k", n_microbatches=4,
+               cfg_overrides={"moe_impl": "scatter"}),
+    "C4": dict(arch="mixtral-8x7b", shape="train_4k", n_microbatches=8,
+               cfg_overrides={"moe_impl": "scatter"}),
+    # attn_q: pin score-tensor sharding to query positions (see layers.py)
+    "B3": dict(arch="qwen2.5-14b", shape="prefill_32k",
+               rules_overrides={"attn_q": "model"}),
+    "A6": dict(arch="llama3-405b", shape="train_4k", n_microbatches=4,
+               cfg_overrides={"scan_group": 9},
+               rules_overrides={"attn_q": "model"},
+               opt_cfg=OptConfig(moment_dtype="bfloat16")),
+    "C5": dict(arch="mixtral-8x7b", shape="train_4k", n_microbatches=8,
+               cfg_overrides={"moe_impl": "scatter"},
+               rules_overrides={"attn_q": "model"}),
+}
+
+
+def measure_flash_adjustment(arch: str, shape_name: str,
+                             rules_overrides=None) -> dict:
+    """Attention's exact HLO contribution via ablation, replaced by the
+    Pallas flash kernel's analytic HBM traffic.
+
+    Lowers the L=1 cost variant twice (normal vs attention_impl='ablate');
+    the delta IS attention's per-layer FLOPs/bytes in this program.  The
+    flash kernel (validated in tests/test_kernels.py) performs the same
+    matmul FLOPs but streams only Q/K/V/O through HBM, so:
+
+        adj_bytes = bytes - L*(attn_bytes_delta) + L*flash_bytes_analytic
+        adj_flops = flops (unchanged)
+    """
+    from repro.configs import ARCHS, SHAPES
+    from repro.launch.dryrun import (_cost_variant_cfg, _with_depth,
+                                     lower_cell)
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    base = _with_depth(_cost_variant_cfg(cfg, shape), 1)
+    out = {}
+    for tag, c in (("normal", base),
+                   ("ablate", base.replace(attention_impl="ablate"))):
+        comp, _ = lower_cell(c, shape, mesh, rules_overrides=rules_overrides)
+        ca = comp.cost_analysis() or {}
+        out[tag] = {"flops": ca.get("flops", 0.0),
+                    "bytes": ca.get("bytes accessed", 0.0)}
+    attn_flops = out["normal"]["flops"] - out["ablate"]["flops"]
+    attn_bytes = out["normal"]["bytes"] - out["ablate"]["bytes"]
+    # flash HBM traffic per layer per device: read Q,K,V + write O (fwd);
+    # bwd ~2x more passes for train
+    b, sq = shape.global_batch, shape.seq_len
+    dt_bytes = 2
+    qo = b * sq * cfg.n_heads * cfg.hd * dt_bytes
+    kv = b * sq * cfg.n_kv_heads * cfg.hd * dt_bytes
+    passes = 3.0 if shape.kind == "train" else 1.0
+    flash_bytes_global = passes * (2 * qo + 2 * kv)
+    flash_bytes = flash_bytes_global / mesh.size
+    result = {
+        "cell": f"{arch}__{shape_name}", "per_layer": out,
+        "attn_flops_per_layer_dev": attn_flops,
+        "attn_bytes_per_layer_dev": attn_bytes,
+        "flash_bytes_per_layer_dev": flash_bytes,
+        "bytes_saved_per_layer_dev": attn_bytes - flash_bytes,
+    }
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    (PERF_DIR / f"flashadj__{arch}__{shape_name}.json").write_text(
+        json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--flash-adjust", default=None,
+                    help="arch:shape[:hd] — measure attention ablation")
+    args = ap.parse_args()
+    if args.flash_adjust:
+        parts = args.flash_adjust.split(":")
+        ro = None
+        if "hd" in parts:
+            ro = {"cache_seq": None, "hd_tp": "model"}
+        if "attnq" in parts:
+            ro = dict(ro or {}, attn_q="model")
+        r = measure_flash_adjustment(parts[0], parts[1], rules_overrides=ro)
+        print(json.dumps(r, indent=1))
+        return
+    only = set(args.only.split(",")) if args.only else None
+
+    for name, exp in EXPERIMENTS.items():
+        if only and name not in only:
+            continue
+        kw = dict(exp)
+        arch, shape = kw.pop("arch"), kw.pop("shape")
+        multi_pod = kw.pop("multi_pod", False)
+        skip_cost = kw.pop("skip_cost", args.skip_cost)
+        r = run_cell(arch, shape, multi_pod=multi_pod, out_dir=PERF_DIR,
+                     force=args.force, skip_cost=skip_cost,
+                     tag=f"__{name}", **kw)
+        mem = r.get("memory", {}).get("peak_device_bytes", 0)
+        ext = r.get("cost_extrapolated", {})
+        print(f"{name}: {r['status']} peak={mem/1e9:.1f}GB "
+              f"flops/dev={ext.get('flops_per_device', 0):.2e} "
+              f"bytes/dev={ext.get('bytes_per_device', 0):.2e} "
+              f"coll/dev={ext.get('collective_link_bytes_per_device', 0):.2e}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Aggregate §Perf artifacts into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.perf_report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+
+ART = Path(__file__).resolve().parents[3] / "artifacts"
+
+CELLS = {
+    "A": ("llama3-405b", "train_4k", 126),
+    "B": ("qwen2.5-14b", "prefill_32k", 48),
+    "C": ("mixtral-8x7b", "train_4k", 32),
+}
+
+
+def load(path, n_micro=1):
+    d = json.loads(Path(path).read_text())
+    ext = d.get("cost_extrapolated")
+    mem = d.get("memory", {}).get("peak_device_bytes", 0)
+    if ext is None:
+        return {"peak": mem, "flops": None, "bytes": None, "coll": None,
+                "n_micro": n_micro}
+    return {"peak": mem,
+            "flops": ext["flops_per_device"] * n_micro,
+            "bytes": ext["bytes_per_device"] * n_micro,
+            "coll": ext["collective_link_bytes_per_device"] * n_micro,
+            "n_micro": n_micro}
+
+
+def row(tag, arch, shape_name, m, flash_L=None):
+    cfg, shape = ARCHS[arch], SHAPES[shape_name]
+    if m["flops"] is None:
+        print(f"{tag:28s} peak={m['peak']/1e9:7.1f}GB  (compile-proof only)")
+        return
+    b = m["bytes"]
+    if flash_L:
+        adj = json.loads((ART / "perf" /
+                          f"flashadj__{arch}__{shape_name}.json").read_text())
+        b = b - flash_L * adj["attn_bytes_per_layer_dev"] \
+            + flash_L * adj["flash_bytes_per_layer_dev"]
+    cs, ms, cls = m["flops"] / PEAK_FLOPS, b / HBM_BW, m["coll"] / LINK_BW
+    terms = {"compute": cs, "memory": ms, "collective": cls}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / (m["flops"] * 256)
+    mfu = mf / (256 * PEAK_FLOPS * max(terms.values()))
+    print(f"{tag:28s} compute={cs:9.2f}s memory={ms:9.2f}s "
+          f"coll={cls:9.2f}s bound={dom:10s} useful={useful:5.2f} "
+          f"MFU@bound={mfu:6.3f} peak={m['peak']/1e9:7.1f}GB")
+
+
+def main() -> None:
+    for cell, (arch, shape, L) in CELLS.items():
+        print(f"--- Cell {cell}: {arch} x {shape} ---")
+        base = ART / "dryrun" / f"{arch}__{shape}__single.json"
+        row(f"{cell}0 baseline", arch, shape, load(base))
+        for v in sorted(ART.glob(f"perf/{arch}__{shape}__*__{cell}*.json")):
+            tag = v.stem.split("__")[-1]
+            d = json.loads(v.read_text())
+            n_micro = d.get("n_microbatches", 1)
+            row(f"{tag} {d.get('rules_overrides', {})}"
+                f"{d.get('cfg_overrides', {})}"[:40],
+                arch, shape, load(v, n_micro))
+        fa = ART / "perf" / f"flashadj__{arch}__{shape}.json"
+        # flash adjustment is only claimed where the L=1 ablation is
+        # self-consistent with the depth-pair increment (cell B; see
+        # EXPERIMENTS.md §Perf) — adopted variants: A4 / B3 / C4
+        if fa.exists() and cell == "B":
+            best = "B3"
+            bv = ART / "perf" / f"{arch}__{shape}__single__{best}.json"
+            if bv.exists():
+                d = json.loads(bv.read_text())
+                if d.get("cost_extrapolated"):
+                    row(f"{best}+flash-adjusted", arch, shape,
+                        load(bv, d.get("n_microbatches", 1)), flash_L=L)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape), single-pod mesh (256 x TPU v5e):
+
+    compute_s    = HLO_FLOPs_per_device  / 197e12      (bf16 peak / chip)
+    memory_s     = HLO_bytes_per_device  / 819e9       (HBM BW / chip)
+    collective_s = link_bytes_per_device / 50e9        (ICI / link)
+
+HLO numbers come from the scan-corrected cost extrapolation (see
+dryrun.py).  MODEL_FLOPS is the analytic "useful work" (6ND convention +
+attention/SSD terms); the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat/replication waste.
+
+Usage:  PYTHONPATH=src python -m repro.launch.roofline [--json] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+
+PEAK_FLOPS = 197e12     # bf16 / chip, TPU v5e
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / link
+HBM_BYTES = 16e9        # v5e HBM capacity
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (global, per step)
+# ---------------------------------------------------------------------------
+def _attn_eff_len(cfg, s: int) -> float:
+    """Average attended length per query under causal (+window) masking."""
+    w = cfg.sliding_window
+    if w and s > w:
+        return w / 2 + w / 2  # steady state: between w/2 and w; use ~w*0.75
+    return s / 2
+
+
+def model_flops(cfg, shape) -> float:
+    n_total, n_active = cfg.param_count()
+    b, s = shape.global_batch, shape.seq_len
+    h, hd, lyr = cfg.n_heads, cfg.hd, cfg.n_layers
+
+    def attn_fwd(tokens, kv_len):
+        # scores + PV: 2 * 2 * tokens * kv_len * H * HD
+        return 4.0 * tokens * kv_len * h * hd * lyr
+
+    def ssd_fwd(tokens):
+        if not cfg.ssm_state:
+            return 0.0
+        q = cfg.ssm_chunk
+        hp, n_h, st = cfg.ssm_head_dim, cfg.n_ssm_heads, cfg.ssm_state
+        per_tok = (2 * q * st                # CB^T scores row
+                   + 2 * q * n_h * hp        # y_diag row
+                   + 4 * st * n_h * hp)      # state inject + y_off
+        return per_tok * tokens * lyr
+
+    if shape.kind == "train":
+        tokens = b * s
+        f = 6.0 * n_active * tokens
+        if cfg.family == "hybrid":
+            sites = (lyr + cfg.attn_every - 1) // cfg.attn_every
+            f += 3 * 4.0 * tokens * (s / 2) * h * hd * sites
+            f += 3 * ssd_fwd(tokens)
+        elif cfg.family == "ssm":
+            f += 3 * ssd_fwd(tokens)
+        elif cfg.family == "audio":
+            f += 3 * attn_fwd(tokens, s / 2)                       # self
+            f += 3 * 4.0 * tokens * cfg.enc_frames * h * hd * lyr  # cross
+            f += 3 * 4.0 * b * cfg.enc_frames * (cfg.enc_frames / 2) \
+                * h * hd * cfg.n_enc_layers
+        else:
+            f += 3 * attn_fwd(tokens, _attn_eff_len(cfg, s))
+        return f
+    if shape.kind == "prefill":
+        tokens = b * s
+        f = 2.0 * n_active * tokens
+        if cfg.family == "hybrid":
+            sites = (lyr + cfg.attn_every - 1) // cfg.attn_every
+            f += 4.0 * tokens * (s / 2) * h * hd * sites + ssd_fwd(tokens)
+        elif cfg.family == "ssm":
+            f += ssd_fwd(tokens)
+        elif cfg.family == "audio":
+            f += attn_fwd(tokens, s / 2)
+            f += 4.0 * tokens * cfg.enc_frames * h * hd * lyr
+        else:
+            f += attn_fwd(tokens, _attn_eff_len(cfg, s))
+        return f
+    # decode: one token per sequence
+    f = 2.0 * n_active * b
+    cache = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    if cfg.family in ("ssm", "hybrid"):
+        hp, n_h, st = cfg.ssm_head_dim, cfg.n_ssm_heads, cfg.ssm_state
+        f += 4.0 * b * st * n_h * hp * lyr
+        if cfg.family == "hybrid":
+            sites = (lyr + cfg.attn_every - 1) // cfg.attn_every
+            f += 4.0 * b * cache * h * hd * sites
+    elif cfg.family == "audio":
+        f += 4.0 * b * cache * h * hd * lyr
+        f += 4.0 * b * cfg.enc_frames * h * hd * lyr
+    else:
+        f += 4.0 * b * cache * h * hd * lyr
+    return f
+
+
+# ---------------------------------------------------------------------------
+def analyze_cell(path: Path) -> dict | None:
+    d = json.loads(path.read_text())
+    if d.get("status") != "ok" or "cost_extrapolated" not in d:
+        return d if d.get("status") == "skipped" else None
+    cfg = ARCHS[d["arch"]]
+    shape = SHAPES[d["shape"]]
+    ext = d["cost_extrapolated"]
+    n_dev = d["n_devices"]
+
+    compute_s = ext["flops_per_device"] / PEAK_FLOPS
+    memory_s = ext["bytes_per_device"] / HBM_BW
+    coll_s = ext["collective_link_bytes_per_device"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+
+    mf = model_flops(cfg, shape)
+    hlo_global = ext["flops_per_device"] * n_dev
+    useful_ratio = mf / hlo_global if hlo_global else 0.0
+    # achievable MFU if the dominant term were the only cost
+    mfu_bound = mf / (n_dev * PEAK_FLOPS * bound_s) if bound_s else 0.0
+
+    peak_mem = d["memory"]["peak_device_bytes"]
+    return {
+        "cell": d["cell"], "arch": d["arch"], "shape": d["shape"],
+        "kind": d["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": useful_ratio, "roofline_mfu": mfu_bound,
+        "peak_device_gb": peak_mem / 1e9,
+        "fits_hbm": peak_mem <= HBM_BYTES,
+        "compile_s": d.get("compile_s"),
+    }
+
+
+def recommendation(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("shrink collective bytes: reshard to cut all-gathers "
+                "(FSDP off / different TP split) or overlap via async "
+                "collectives")
+    if d == "memory":
+        if row["kind"] == "decode":
+            return ("decode is HBM-bound on KV/state reads: quantize cache "
+                    "to int8 or shard cache_seq wider")
+        return ("cut bytes: fuse attention (flash kernel), reduce remat "
+                "recompute, or bf16-ize fp32 intermediates")
+    if row["useful_ratio"] < 0.5:
+        return ("compute-bound but <50% useful: remove replicated/remat "
+                "FLOPs (check einsum partitioning)")
+    return "near compute roofline: raise per-device batch or fuse elementwise"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    rows, skips = [], []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            p = ARTIFACTS / f"{arch}__{shape}__{args.mesh}.json"
+            if not p.exists():
+                continue
+            r = analyze_cell(p)
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                skips.append(f"{arch} x {shape}: {r['reason']}")
+            else:
+                rows.append(r)
+
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+
+    hdr = (f"| {'arch':22s} | {'shape':11s} | {'compute':>9s} | "
+           f"{'memory':>9s} | {'collective':>10s} | {'bound':>10s} | "
+           f"{'useful':>6s} | {'MFU@bound':>9s} | {'GB/dev':>6s} |")
+    sep = "|" + "|".join("-" * (len(c) + 2) for c in
+                         hdr.strip("|").split("|")) + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']:22s} | {r['shape']:11s} "
+            f"| {r['compute_s']*1e3:8.1f}ms | {r['memory_s']*1e3:8.1f}ms "
+            f"| {r['collective_s']*1e3:9.1f}ms | {r['dominant']:>10s} "
+            f"| {r['useful_ratio']:6.2f} | {r['roofline_mfu']:9.2f} "
+            f"| {r['peak_device_gb']:6.2f} |")
+    table = "\n".join(lines)
+    print(table)
+    print("\nSkipped cells:")
+    for s in skips:
+        print("  -", s)
+    if args.out:
+        Path(args.out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

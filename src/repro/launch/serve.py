@@ -1,0 +1,57 @@
+"""Batched serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --preset small --requests 8 --new-tokens 32 [--ckpt-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.launch.train import build_cfg
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b", choices=sorted(ARCHS))
+    ap.add_argument("--preset", default="small")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore weights from a proxy-checkpoint directory")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.arch, args.preset)
+    ckpts = None
+    if args.ckpt_dir:
+        from repro.core import Store
+        from repro.core.connectors import FileConnector
+        from repro.train.checkpoints import ProxyCheckpointManager
+
+        store = Store("serve-ckpts", FileConnector(args.ckpt_dir + "/data"))
+        ckpts = ProxyCheckpointManager(store, args.ckpt_dir + "/ckpts")
+    engine = ServeEngine(cfg, ckpts=ckpts, max_batch=args.requests)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab,
+                                             size=args.prompt_len)),
+                    max_new_tokens=args.new_tokens,
+                    temperature=args.temperature)
+            for _ in range(args.requests)]
+    out = engine.generate(reqs)
+    print(json.dumps({
+        "arch": cfg.name, "requests": len(reqs),
+        "prefill_s": round(out["prefill_s"], 3),
+        "decode_s": round(out["decode_s"], 3),
+        "tokens_per_s": round(out["tokens_per_s"], 1),
+        "sample_output": out["outputs"][0][:16],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

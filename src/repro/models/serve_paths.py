@@ -1,0 +1,284 @@
+"""Serving paths: prefill (build cache) + single-token decode, per family.
+
+Cache layouts (leading L dim so layer scans carry them):
+  attention: {"k","v": (L, B, S_c, KV, HD)}  S_c = sliding window if set
+  audio:     + {"ck","cv": (L, B, F, KV, HD)} cross-attn KV (precomputed)
+  ssm:       {"conv": (L, B, K-1, cd), "state": (L, B, H, P, N)}
+  hybrid:    {"ssm": ..., "attn": {"k","v": (n_sites, B, S_c, H, HD)}}
+
+Ring-buffer semantics for sliding windows: slot = pos % W; validity by
+count, not order (softmax is order-invariant; RoPE is baked in at write).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.models import layers as L
+from repro.models.moe import moe_block, moe_decode
+from repro.models.ssm import (init_ssm_cache, ssm_decode_block,
+                              ssm_prefill_block)
+from repro.models.transformer import (_embed_inputs, _encode,
+                                      _shared_attn_block, _maybe_remat)
+
+
+def _layer_scan(body, carry, xs, cfg):
+    """lax.scan over the layer stack, or an unrolled loop when
+    cfg.scan_layers is False (the dry-run cost variant needs unrolled HLO
+    because XLA cost analysis counts while-loop bodies once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        out = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        out = None
+    return carry, out
+
+
+def _cache_len(cfg, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def _shard_cache(t):
+    return shard_as(t, "batch", "cache_seq", "kv_heads", "hd_tp")
+
+
+# ---------------------------------------------------------------------------
+# dense / moe / vlm decoder
+# ---------------------------------------------------------------------------
+def decoder_prefill(params, batch, cfg):
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    positions = jnp.arange(s)
+    w = _cache_len(cfg, s)
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg, positions)
+        o = L.attention(q, k, v, cfg, causal=True)
+        x = x + shard_as(o.reshape(bsz, s, -1) @ p["attn"]["wo"],
+                         "batch", "act_seq", "embed")
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_block(p["moe"], h2, cfg)
+        else:
+            y = L.mlp_block(p["mlp"], h2, cfg)
+        x = shard_as(x + y, "batch", "act_seq", "embed")
+        kc = _shard_cache(k[:, s - w:])
+        vc = _shard_cache(v[:, s - w:])
+        return x, (kc, vc)
+
+    x, (ks, vs) = _layer_scan(_maybe_remat(body, cfg), x, params["layers"], cfg)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h[:, -1:], cfg)[:, 0]
+    return logits.astype(jnp.float32), {"k": ks, "v": vs}
+
+
+def decoder_decode_step(params, cache, token, pos, cfg):
+    """token: (B, 1) int32; pos: scalar int32 (next position index)."""
+    bsz = token.shape[0]
+    x = params["tok"]["emb"][token]
+    positions = pos[None] if pos.ndim == 0 else pos
+    w = cache["k"].shape[2]
+    slot = pos % w if cfg.sliding_window else pos
+    length = jnp.minimum(pos + 1, w)
+
+    def body(x, p_kv):
+        p, kc, vc = p_kv
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = L.decode_attention(q, kc, vc, length, cfg)
+        x = x + o.reshape(bsz, 1, -1) @ p["attn"]["wo"]
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_decode(p["moe"], h2, cfg)
+        else:
+            y = L.mlp_block(p["mlp"], h2, cfg)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = _layer_scan(body, x, (params["layers"], cache["k"],
+                                        cache["v"]), cfg)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h, cfg)[:, 0]
+    return logits.astype(jnp.float32), {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# whisper-style enc-dec
+# ---------------------------------------------------------------------------
+def audio_prefill(params, batch, cfg):
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    memory = _encode(params, batch["frames"], cfg)
+    positions = jnp.arange(s)
+    x = params["tok"]["emb"][tokens]
+    f = memory.shape[1]
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg, positions)
+        o = L.attention(q, k, v, cfg, causal=True)
+        x = x + o.reshape(bsz, s, -1) @ p["attn"]["wo"]
+        hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        ck = (memory @ p["xattn"]["wk"]).reshape(bsz, f, kv, hd)
+        cv = (memory @ p["xattn"]["wv"]).reshape(bsz, f, kv, hd)
+        qx = (hx @ p["xattn"]["wq"]).reshape(bsz, s, cfg.n_heads, hd)
+        ox = L.attention(qx, ck, cv, cfg, causal=False)
+        x = x + ox.reshape(bsz, s, -1) @ p["xattn"]["wo"]
+        x = x + L.mlp_block(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x, (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = _layer_scan(_maybe_remat(body, cfg), x,
+                                        params["layers"], cfg)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h[:, -1:], cfg)[:, 0]
+    return logits.astype(jnp.float32), {"k": ks, "v": vs, "ck": cks, "cv": cvs}
+
+
+def audio_decode_step(params, cache, token, pos, cfg):
+    bsz = token.shape[0]
+    x = params["tok"]["emb"][token]
+    positions = pos[None]
+    f = cache["ck"].shape[2]
+    length = pos + 1
+
+    def body(x, p_kv):
+        p, kc, vc, ck, cv = p_kv
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        o = L.decode_attention(q, kc, vc, length, cfg)
+        x = x + o.reshape(bsz, 1, -1) @ p["attn"]["wo"]
+        hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        qx = (hx @ p["xattn"]["wq"]).reshape(bsz, 1, cfg.n_heads, cfg.hd)
+        ox = L.decode_attention(qx, ck, cv, f, cfg)
+        x = x + ox.reshape(bsz, 1, -1) @ p["xattn"]["wo"]
+        x = x + L.mlp_block(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x, (kc, vc)
+
+    x, (ks, vs) = _layer_scan(
+        body, x, (params["layers"], cache["k"], cache["v"], cache["ck"],
+                  cache["cv"]), cfg)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h, cfg)[:, 0]
+    return logits.astype(jnp.float32), {"k": ks, "v": vs, "ck": cache["ck"],
+                                        "cv": cache["cv"]}
+
+
+# ---------------------------------------------------------------------------
+# ssm
+# ---------------------------------------------------------------------------
+def ssm_prefill(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = _embed_inputs(params, batch, cfg)
+
+    def body(x, p):
+        y, c = ssm_prefill_block(p["ssm"],
+                                 L.rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+        return shard_as(x + y, "batch", "act_seq", "embed"), c
+
+    x, cache = _layer_scan(_maybe_remat(body, cfg), x, params["layers"], cfg)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h[:, -1:], cfg)[:, 0]
+    return logits.astype(jnp.float32), cache
+
+
+def ssm_decode_step(params, cache, token, pos, cfg):
+    x = params["tok"]["emb"][token]
+
+    def body(x, p_c):
+        p, conv, state = p_c
+        y, c = ssm_decode_block(p["ssm"],
+                                L.rms_norm(x, p["ln"], cfg.norm_eps),
+                                {"conv": conv, "state": state}, cfg)
+        return x + y, (c["conv"], c["state"])
+
+    x, (convs, states) = _layer_scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]), cfg)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h, cfg)[:, 0]
+    return logits.astype(jnp.float32), {"conv": convs, "state": states}
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2): python loop; shared attention keeps per-site KV caches
+# ---------------------------------------------------------------------------
+def _attn_sites(cfg) -> list[int]:
+    return [i for i in range(cfg.n_layers) if i % cfg.attn_every == 0]
+
+
+def hybrid_prefill(params, batch, cfg):
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    positions = jnp.arange(s)
+    x = _embed_inputs(params, batch, cfg)
+    shared = params["shared"]
+    sites = _attn_sites(cfg)
+    ssm_caches, aks, avs = [], [], []
+    for i in range(cfg.n_layers):
+        if i in sites:
+            h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(shared["attn"], h, cfg, positions)
+            o = L.attention(q, k, v, cfg, causal=True)
+            x = x + o.reshape(bsz, s, -1) @ shared["attn"]["wo"]
+            x = x + L.mlp_block(shared["mlp"],
+                                L.rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+            aks.append(k)
+            avs.append(v)
+        p = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+        y, c = ssm_prefill_block(p["ssm"],
+                                 L.rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+        x = x + y
+        ssm_caches.append(c)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h[:, -1:], cfg)[:, 0]
+    cache = {"ssm": jax.tree.map(lambda *a: jnp.stack(a), *ssm_caches),
+             "attn": {"k": jnp.stack(aks), "v": jnp.stack(avs)}}
+    return logits.astype(jnp.float32), cache
+
+
+def hybrid_decode_step(params, cache, token, pos, cfg):
+    bsz = token.shape[0]
+    x = params["tok"]["emb"][token]
+    positions = pos[None]
+    shared = params["shared"]
+    sites = _attn_sites(cfg)
+    length = pos + 1
+    new_ssm, new_k, new_v = [], [], []
+    for i in range(cfg.n_layers):
+        if i in sites:
+            s_i = sites.index(i)
+            h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(shared["attn"], h, cfg, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["attn"]["k"][s_i],
+                                                     k, pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["attn"]["v"][s_i],
+                                                     v, pos, axis=1)
+            o = L.decode_attention(q, kc, vc, length, cfg)
+            x = x + o.reshape(bsz, 1, -1) @ shared["attn"]["wo"]
+            x = x + L.mlp_block(shared["mlp"],
+                                L.rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+            new_k.append(kc)
+            new_v.append(vc)
+        p = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+        c = jax.tree.map(lambda a, i=i: a[i], cache["ssm"])
+        y, c2 = ssm_decode_block(p["ssm"],
+                                 L.rms_norm(x, p["ln"], cfg.norm_eps), c, cfg)
+        x = x + y
+        new_ssm.append(c2)
+    h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["tok"], h, cfg)[:, 0]
+    cache = {"ssm": jax.tree.map(lambda *a: jnp.stack(a), *new_ssm),
+             "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}}
+    return logits.astype(jnp.float32), cache

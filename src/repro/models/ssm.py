@@ -1,0 +1,245 @@
+"""Mamba2 / SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked "dual form": within-chunk attention-like einsums + an inter-chunk
+linear recurrence over per-chunk states.  ngroups=1 (B, C shared across
+heads).  The chunked scan body is the compute hot-spot the Pallas
+``ssd_scan`` kernel replaces on TPU (cfg.attention_impl == "pallas").
+
+Block layout (per layer):
+  in_proj: D -> [z (di), xBC (di + 2*N), dt (nh)]
+  causal depthwise conv (K=4) over xBC; silu
+  SSD(x, dt, A, B, C) + D*x skip
+  gated RMSNorm: rms(y * silu(z)) ; out_proj: di -> D
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.models.layers import dtype_of, rms_norm
+
+
+def _segsum(x):
+    """Lower-triangular cumulative sums: out[..., i, j] = sum_{j<k<=i} x[k]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """SSD scan (reference jnp path).
+
+    x: (B, L, H, P)   inputs (already multiplied by nothing; dt applied here)
+    dt: (B, L, H)     positive step sizes
+    a_log: (H,)       A = -exp(a_log)
+    b, c: (B, L, N)   input/output projections (ngroups=1, shared over heads)
+    returns y: (B, L, H, P)
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    if l % q:  # zero-pad: dta=0 (decay 1) + zero injection leaves states exact
+        pad = q - l % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    l_pad = x.shape[1]
+    nc = l_pad // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # (H,)
+    dta = dt.astype(jnp.float32) * a                            # (B, L, H)
+    xdt = x * dt[..., None].astype(x.dtype)                     # fold dt into x
+
+    # chunk views
+    xc = xdt.reshape(bs, nc, q, h, p)
+    bc = b.reshape(bs, nc, q, n)
+    cc = c.reshape(bs, nc, q, n)
+    dtac = dta.reshape(bs, nc, q, h).transpose(0, 3, 1, 2)      # (B, H, nc, Q)
+    dtac = shard_as(dtac, "batch", "ssm_heads", None, None)
+
+    cum = jnp.cumsum(dtac, axis=-1)                             # (B, H, nc, Q)
+    # 1) within-chunk (dual quadratic form)
+    decay = jnp.exp(_segsum(dtac))                              # (B,H,nc,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc,
+                        preferred_element_type=jnp.float32)     # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqs,bhcqs,bcshp->bcqhp", scores, decay, xc,
+                        preferred_element_type=jnp.float32)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(cum[..., -1:] - cum)                 # (B,H,nc,Q)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", bc, decay_states, xc,
+                        preferred_element_type=jnp.float32)     # (B,nc,H,P,N)
+
+    # 3) inter-chunk recurrence  s_{c} = exp(sum dta_c) * s_{c-1} + states_c
+    chunk_decay = jnp.exp(cum[..., -1]).transpose(0, 2, 1)      # (B, nc, H)
+
+    def step(s_prev, inp):
+        dec, st = inp  # (B, H), (B, H, P, N)
+        s = dec[..., None, None] * s_prev + st
+        return s, s_prev  # emit the state ENTERING this chunk
+
+    s0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    s_final, states_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(states, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)                   # (B,nc,H,P,N)
+
+    # 4) state -> output contribution
+    state_decay = jnp.exp(cum)                                  # (B,H,nc,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", cc, states_in, state_decay,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(bs, l_pad, h, p)[:, :l]
+    return y.astype(x.dtype), s_final
+
+
+def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t):
+    """One-token SSD recurrence.
+
+    state: (B, H, P, N) fp32; x_t: (B, H, P); dt_t: (B, H); b_t/c_t: (B, N)
+    returns (y_t: (B, H, P), new_state)
+    """
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt_t.astype(jnp.float32) * a                          # (B, H)
+    decay = jnp.exp(dta)[..., None, None]                       # (B,H,1,1)
+    xdt = (x_t * dt_t[..., None]).astype(jnp.float32)
+    inject = jnp.einsum("bhp,bn->bhpn", xdt, b_t.astype(jnp.float32))
+    new_state = decay * state + inject
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    dt_ = dtype_of(cfg)
+    proj_out = 2 * di + 2 * n + nh
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dt_) * std,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dt_) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dt_),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d), dt_)
+        * (std / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt_raw = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def ssm_block(p, x, cfg):
+    """Mamba2 block over a full sequence. x: (B, S, D)."""
+    bsz, s, _ = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+
+    # causal depthwise conv over the sequence (kernel K)
+    k = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s, :] * p["conv_w"][i] for i in range(k))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+
+    xs = xbc[..., :di].reshape(bsz, s, nh, hp)
+    xs = shard_as(xs, "batch", "seq", "ssm_heads", None)
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.ops import ssd_scan as _ssd
+
+        y = _ssd(xs, dt, p["a_log"], b, c, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, p["a_log"], b, c, chunk=min(cfg.ssm_chunk, s))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return shard_as(out, "batch", "act_seq", "embed")
+
+
+def ssm_decode_block(p, x, cache, cfg):
+    """One-token Mamba2 step.
+
+    x: (B, 1, D); cache: {"conv": (B, K-1, conv_dim), "state": (B,H,P,N)}.
+    """
+    bsz = x.shape[0]
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,cd)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    x_t = xbc_t[..., :di].reshape(bsz, nh, hp)
+    b_t = xbc_t[..., di:di + n]
+    c_t = xbc_t[..., di + n:]
+    dt_t = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    y_t, new_state = ssd_decode_step(cache["state"], x_t, dt_t, p["a_log"],
+                                     b_t, c_t)
+    y_t = y_t + x_t * p["d_skip"][None, :, None].astype(x_t.dtype)
+    y = y_t.reshape(bsz, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "state": new_state}
+
+
+def init_ssm_cache(cfg, batch):
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_dim = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype_of(cfg)),
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, n),
+                           jnp.float32),
+    }
+
+
+def ssm_prefill_block(p, x, cfg):
+    """Full-sequence Mamba2 block that also returns the decode cache."""
+    bsz, s, _ = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(zxbcdt, cfg)
+
+    k = cfg.ssm_conv
+    pad = jnp.pad(xbc_raw, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s, :] * p["conv_w"][i] for i in range(k))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+
+    xs = xbc[..., :di].reshape(bsz, s, nh, hp)
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    y, s_final = ssd_chunked(xs, dt, p["a_log"], b, c,
+                             chunk=min(cfg.ssm_chunk, s))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    cache = {"conv": xbc_raw[:, s - (k - 1):, :], "state": s_final}
+    return out, cache

@@ -1,0 +1,306 @@
+"""Model assembly for all assigned families.
+
+``build_model(cfg)`` returns a :class:`Model` namespace:
+
+* ``init(key) -> params``                    (materializes; smoke/reduced only)
+* ``loss(params, batch) -> (loss, metrics)`` (train shapes)
+* ``prefill(params, batch) -> (last_logits, cache)``
+* ``decode_step(params, cache, token, pos) -> (logits, cache)``
+
+Layer stacks are ``lax.scan`` over stacked params (cfg.scan_layers) with
+per-layer remat — mandatory for the 126-layer/405B dry-run; the hybrid decode
+path is a Python loop (38 small layers, shared attention needs per-site KV).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_block, moe_decode
+from repro.models.ssm import (init_ssm, init_ssm_cache, ssm_block,
+                              ssm_decode_block)
+
+
+@dataclass
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _stacked(init_one, key, n):
+    """vmap an init over layer indices -> stacked (L, ...) params."""
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _scan_layers(body, x, stacked_params, cfg, extra=None):
+    """Scan ``body(x, layer_params, extra) -> x`` over the layer stack.
+
+    cfg.scan_group > 0 enables sqrt-remat: an outer scan over G groups whose
+    body (an inner scan over L/G layers) is itself rematerialized — the
+    bwd-saved residual stack shrinks from L x |x| to (G + L/G) x |x|
+    (classic sqrt(L) checkpointing; the 405B memory lever in §Perf).
+    """
+    fn = _maybe_remat(lambda carry, p: (body(carry, p, extra), None), cfg)
+    if cfg.scan_layers and cfg.scan_group > 1:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        g = cfg.scan_group
+        assert n % g == 0, (n, g)
+        grouped = jax.tree.map(
+            lambda a: a.reshape(g, n // g, *a.shape[1:]), stacked_params)
+
+        @jax.checkpoint
+        def group_body(carry, group_params):
+            carry, _ = jax.lax.scan(fn, carry, group_params)
+            return carry, None
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        return x
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(fn, x, stacked_params)
+        return x
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    for i in range(n):
+        x, _ = fn(x, jax.tree.map(lambda a: a[i], stacked_params))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decoder blocks (dense / moe)
+# ---------------------------------------------------------------------------
+def _init_dense_layer(cfg):
+    def one(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"ln1": L.init_rms(k1, cfg.d_model),
+                "attn": L.init_attn(k2, cfg),
+                "ln2": L.init_rms(k3, cfg.d_model),
+                "mlp": L.init_mlp(k4, cfg)}
+    return one
+
+
+def _init_moe_layer(cfg):
+    def one(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"ln1": L.init_rms(k1, cfg.d_model),
+                "attn": L.init_attn(k2, cfg),
+                "ln2": L.init_rms(k3, cfg.d_model),
+                "moe": init_moe(k4, cfg)}
+    return one
+
+
+def _dense_body(x, p, cfg, positions):
+    x = x + L.attn_block(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                         cfg, positions=positions)
+    x = x + L.mlp_block(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return shard_as(x, "batch", "act_seq", "embed")
+
+
+def _moe_body(carry, p, cfg, positions):
+    x, aux = carry
+    x = x + L.attn_block(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                         cfg, positions=positions)
+    y, a = moe_block(p["moe"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    x = shard_as(x + y, "batch", "act_seq", "embed")
+    return x, {k: aux[k] + a[k] for k in aux}
+
+
+# ---------------------------------------------------------------------------
+# forward passes (hidden states)
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg):
+    x = params["tok"]["emb"][batch["tokens"]]
+    if cfg.family == "vlm":
+        # patch embeddings (stub frontend) occupy the first n_img positions
+        x = jax.lax.dynamic_update_slice(
+            x, batch["vision_emb"].astype(x.dtype), (0, 0, 0))
+    return shard_as(x, "batch", "act_seq", "embed")
+
+
+def _decoder_hidden(params, x, cfg, positions):
+    """Dense/vlm/moe decoder stack -> (hidden, aux)."""
+    if cfg.family == "moe":
+        def body(carry, p, _):
+            return _moe_body(carry, p, cfg, positions)
+        aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+                "z_loss": jnp.zeros((), jnp.float32)}
+        x, aux = _scan_layers_carry(body, (x, aux0), params["layers"], cfg)
+    else:
+        def body(x, p, _):
+            return _dense_body(x, p, cfg, positions)
+        x = _scan_layers(body, x, params["layers"], cfg)
+        aux = {}
+    return L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps), aux
+
+
+def _scan_layers_carry(body, carry, stacked_params, cfg):
+    fn = _maybe_remat(lambda c, p: (body(c, p, None), None), cfg)
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(fn, carry, stacked_params)
+        return carry
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    for i in range(n):
+        carry, _ = fn(carry, jax.tree.map(lambda a: a[i], stacked_params))
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# ssm / hybrid stacks
+# ---------------------------------------------------------------------------
+def _ssm_body(x, p, cfg):
+    x = x + ssm_block(p["ssm"], L.rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+    return shard_as(x, "batch", "act_seq", "embed")
+
+
+def _shared_attn_block(shared, x, cfg, positions):
+    x = x + L.attn_block(shared["attn"],
+                         L.rms_norm(x, shared["ln1"], cfg.norm_eps),
+                         cfg, positions=positions)
+    x = x + L.mlp_block(shared["mlp"],
+                        L.rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+    return x
+
+
+def _hybrid_hidden(params, x, cfg, positions):
+    shared = params["shared"]
+    flags = (jnp.arange(cfg.n_layers) % cfg.attn_every) == 0
+
+    def body(x, p_flag, _):
+        p, flag = p_flag
+        x = jax.lax.cond(
+            flag,
+            lambda x: _shared_attn_block(shared, x, cfg, positions),
+            lambda x: x, x)
+        return _ssm_body(x, p, cfg)
+
+    x = _scan_layers(body, x, (params["layers"], flags), cfg)
+    return L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps), {}
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+def _enc_body(x, p, cfg, positions):
+    x = x + L.attn_block(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                         cfg, positions=positions, causal=False)
+    x = x + L.mlp_block(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return shard_as(x, "batch", "act_seq", "embed")
+
+
+def _dec_body(x, p, cfg, positions, memory):
+    x = x + L.attn_block(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                         cfg, positions=positions)
+    x = x + L.attn_block(p["xattn"], L.rms_norm(x, p["lnx"], cfg.norm_eps),
+                         cfg, positions=positions, memory=memory)
+    x = x + L.mlp_block(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return shard_as(x, "batch", "act_seq", "embed")
+
+
+def _encode(params, frames, cfg):
+    x = frames.astype(L.dtype_of(cfg)) + params["enc_pos"].astype(L.dtype_of(cfg))
+    pos = jnp.arange(frames.shape[1])
+
+    def body(x, p, _):
+        return _enc_body(x, p, cfg, pos)
+
+    x = _scan_layers(body, x, params["enc"], cfg)
+    return L.rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {"tok": L.init_embeddings(ks[0], cfg)}
+    if cfg.family in ("dense", "vlm"):
+        params["layers"] = _stacked(_init_dense_layer(cfg), ks[1], cfg.n_layers)
+    elif cfg.family == "moe":
+        params["layers"] = _stacked(_init_moe_layer(cfg), ks[1], cfg.n_layers)
+    elif cfg.family == "ssm":
+        def one(key):
+            k1, k2 = jax.random.split(key)
+            return {"ln": L.init_rms(k1, cfg.d_model), "ssm": init_ssm(k2, cfg)}
+        params["layers"] = _stacked(one, ks[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        def one(key):
+            k1, k2 = jax.random.split(key)
+            return {"ln": L.init_rms(k1, cfg.d_model), "ssm": init_ssm(k2, cfg)}
+        params["layers"] = _stacked(one, ks[1], cfg.n_layers)
+        k1, k2, k3, k4 = jax.random.split(ks[2], 4)
+        params["shared"] = {"ln1": L.init_rms(k1, cfg.d_model),
+                            "attn": L.init_attn(k2, cfg),
+                            "ln2": L.init_rms(k3, cfg.d_model),
+                            "mlp": L.init_mlp(k4, cfg)}
+    elif cfg.family == "audio":
+        def dec_one(key):
+            k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+            return {"ln1": L.init_rms(k1, cfg.d_model),
+                    "attn": L.init_attn(k2, cfg),
+                    "lnx": L.init_rms(k3, cfg.d_model),
+                    "xattn": L.init_attn(k4, cfg),
+                    "ln2": L.init_rms(k5, cfg.d_model),
+                    "mlp": L.init_mlp(k6, cfg)}
+        params["layers"] = _stacked(dec_one, ks[1], cfg.n_layers)
+        params["enc"] = _stacked(_init_dense_layer(cfg), ks[2], cfg.n_enc_layers)
+        params["enc_pos"] = jax.random.normal(
+            ks[3], (cfg.enc_frames, cfg.d_model), jnp.float32) * 0.02
+        params["enc_ln_f"] = L.init_rms(ks[4], cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# loss (train shapes)
+# ---------------------------------------------------------------------------
+def model_loss(params, batch, cfg):
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    if cfg.family == "audio":
+        memory = _encode(params, batch["frames"], cfg)
+
+        def body(x, p, _):
+            return _dec_body(x, p, cfg, positions, memory)
+
+        x = _embed_inputs(params, batch, cfg)
+        x = _scan_layers(body, x, params["layers"], cfg)
+        h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+        aux = {}
+    elif cfg.family == "hybrid":
+        x = _embed_inputs(params, batch, cfg)
+        h, aux = _hybrid_hidden(params, x, cfg, positions)
+    elif cfg.family == "ssm":
+        x = _embed_inputs(params, batch, cfg)
+
+        def body(x, p, _):
+            return _ssm_body(x, p, cfg)
+
+        x = _scan_layers(body, x, params["layers"], cfg)
+        h = L.rms_norm(x, params["tok"]["ln_f"], cfg.norm_eps)
+        aux = {}
+    else:
+        x = _embed_inputs(params, batch, cfg)
+        h, aux = _decoder_hidden(params, x, cfg, positions)
+
+    weights = None
+    if cfg.family == "vlm":  # no next-token loss on image positions
+        weights = (positions >= cfg.n_img_tokens).astype(jnp.float32)[None, :]
+    nll = L.chunked_xent(params["tok"], h, batch["labels"], cfg, weights=weights)
+    metrics = {"nll": nll}
+    loss = nll
+    if aux:
+        n_l = cfg.n_layers
+        loss = loss + 0.01 * aux["lb_loss"] / n_l + 1e-3 * aux["z_loss"] / n_l
+        metrics.update({k: v / n_l for k, v in aux.items()})
+    return loss, metrics

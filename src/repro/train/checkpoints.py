@@ -1,0 +1,177 @@
+"""Proxy-based checkpointing — the paper's model applied to training state.
+
+A checkpoint is a *manifest of proxies*: every leaf (or leaf chunk) of the
+train-state pytree is ``put`` through a Store and represented by a lazy
+transparent proxy.  Because proxies are self-contained (factory embeds the
+store config), the manifest is tiny, travels anywhere, and each consumer
+resolves ONLY what it needs:
+
+* a restoring host materializes just its shards (lazy restore),
+* a different mesh can restore the same manifest (elastic resharding) —
+  proxies are location- and layout-transparent,
+* an inspection tool can look at one tensor without touching the rest.
+
+Write path is crash-safe: data puts complete first, then the manifest, then
+the ``latest`` pointer (atomic rename).  ``save_async`` overlaps serialization
+with the next training step (the paper's §3.5 async pattern, producer side).
+``keep_last`` garbage-collects via connector evictions.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import Store, serialize, deserialize
+from repro.core.proxy import Proxy, get_factory, is_proxy
+
+
+class ProxyCheckpointManager:
+    def __init__(self, store: Store, directory: str, *, keep_last: int = 3,
+                 chunk_bytes: int = 256 << 20) -> None:
+        self.store = store
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.chunk_bytes = chunk_bytes
+        self._save_thread: threading.Thread | None = None
+        self._last_error: Exception | None = None
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+    def _leaf_to_proxies(self, leaf) -> dict:
+        """One leaf -> proxy or list of chunk proxies (nested-proxy pattern)."""
+        arr = np.asarray(leaf)
+        if arr.nbytes <= self.chunk_bytes or arr.ndim == 0:
+            return {"kind": "whole", "proxy": self.store.proxy(arr)}
+        n_chunks = -(-arr.nbytes // self.chunk_bytes)
+        chunks = np.array_split(arr, min(n_chunks, arr.shape[0]), axis=0)
+        return {"kind": "chunked",
+                "proxies": self.store.proxy_batch(list(chunks))}
+
+    def save(self, step: int, state: Any, *, blocking: bool = True) -> None:
+        if blocking:
+            self._do_save(step, state)
+        else:
+            self.wait()  # one in-flight async save at a time
+            # snapshot to host first so training can donate/overwrite buffers
+            host_state = jax.tree.map(lambda a: np.asarray(a).copy(), state)
+            self._save_thread = threading.Thread(
+                target=self._guarded_save, args=(step, host_state),
+                daemon=True)
+            self._save_thread.start()
+
+    save_async = lambda self, step, state: self.save(step, state,
+                                                     blocking=False)
+
+    def _guarded_save(self, step, state):
+        try:
+            self._do_save(step, state)
+        except Exception as e:  # noqa: BLE001
+            self._last_error = e
+
+    def _do_save(self, step: int, state: Any) -> None:
+        t0 = time.time()
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        entries = [self._leaf_to_proxies(leaf) for leaf in leaves]
+        manifest = {
+            "step": int(step),
+            "treedef": jax.tree_util.tree_structure(state),
+            "entries": entries,
+            "ts": time.time(),
+            "save_s": None,
+        }
+        manifest["save_s"] = round(time.time() - t0, 3)
+        blob = serialize(manifest)
+        tmp = self.dir / f".ckpt_{step:08d}.tmp"
+        tmp.write_bytes(blob)
+        tmp.replace(self.dir / f"ckpt_{step:08d}.manifest")
+        latest = self.dir / ".latest.tmp"
+        latest.write_text(json.dumps({"step": int(step)}))
+        latest.replace(self.dir / "latest.json")
+        self._gc()
+
+    def wait(self) -> None:
+        if self._save_thread is not None:
+            self._save_thread.join()
+            self._save_thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(int(f.stem.split("_")[1])
+                      for f in self.dir.glob("ckpt_*.manifest"))
+
+    def latest_step(self) -> int | None:
+        p = self.dir / "latest.json"
+        if not p.exists():
+            return None
+        step = json.loads(p.read_text())["step"]
+        return step if (self.dir / f"ckpt_{step:08d}.manifest").exists() \
+            else (self.steps() or [None])[-1]
+
+    def _manifest(self, step: int) -> dict:
+        blob = (self.dir / f"ckpt_{step:08d}.manifest").read_bytes()
+        return deserialize(blob)
+
+    def restore(self, step: int | None = None, *,
+                leaf_filter=None, like: Any | None = None) -> Any:
+        """Materialize a checkpoint.
+
+        ``leaf_filter(index) -> bool`` restores a subset (hosts resolve only
+        their shards); skipped leaves come back as unresolved proxies.
+        ``like`` (a matching abstract/concrete pytree) re-casts dtypes and
+        validates shapes after elastic resharding.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        man = self._manifest(step)
+
+        def materialize(i, entry):
+            if leaf_filter is not None and not leaf_filter(i):
+                return entry["proxy"] if entry["kind"] == "whole" \
+                    else entry["proxies"]
+            if entry["kind"] == "whole":
+                from repro.core.proxy import extract
+
+                return extract(entry["proxy"])
+            return np.concatenate([np.asarray(p) for p in entry["proxies"]],
+                                  axis=0)
+
+        leaves = [materialize(i, e) for i, e in enumerate(man["entries"])]
+        state = jax.tree_util.tree_unflatten(man["treedef"], leaves)
+        if like is not None:
+            state = jax.tree.map(
+                lambda ref, got: np.asarray(got).astype(ref.dtype), like,
+                state)
+        return state
+
+    def restore_step_count(self) -> int | None:
+        s = self.latest_step()
+        return None if s is None else self._manifest(s)["step"]
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_last] if self.keep_last else []:
+            try:
+                man = self._manifest(s)
+                for e in man["entries"]:
+                    proxies = [e["proxy"]] if e["kind"] == "whole" \
+                        else e["proxies"]
+                    for p in proxies:
+                        self.store.evict(get_factory(p).key)
+            except Exception:  # noqa: BLE001 - GC best-effort
+                pass
+            (self.dir / f"ckpt_{s:08d}.manifest").unlink(missing_ok=True)

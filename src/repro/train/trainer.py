@@ -1,0 +1,119 @@
+"""Restartable trainer: proxy-fed inputs, async proxy checkpoints, resume.
+
+Fault-tolerance contract (tested in tests/test_fault_tolerance.py):
+* checkpoint every ``ckpt_every`` steps via ProxyCheckpointManager
+  (async — overlaps the next step),
+* on restart, resume from the newest complete manifest; the data pipeline
+  is deterministic by (seed, batch index), so the token stream continues
+  exactly where the failed run left off,
+* a mid-step crash loses at most ``ckpt_every`` steps of work.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import Store
+from repro.core.connectors import SharedMemoryConnector
+from repro.data.datasets import extras_for, lm_batch
+from repro.data.pipeline import ProxyDataPipeline
+from repro.train.checkpoints import ProxyCheckpointManager
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 4
+    seq: int = 128
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 25
+    keep_last: int = 3
+    n_producers: int = 2
+    redundancy: int = 1
+    workdir: str = "/tmp/repro_train"
+    resume: bool = True
+    crash_at_step: int | None = None   # fault-injection (tests)
+
+
+def _make_batch_fn(cfg: ArchConfig, tc: TrainConfig) -> Callable[[int], Any]:
+    return partial(lm_batch, tc.seed, batch=tc.batch, seq=tc.seq,
+                   vocab=cfg.vocab, extras=extras_for(cfg))
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tc: TrainConfig,
+                 opt_cfg: OptConfig | None = None,
+                 store: Store | None = None) -> None:
+        self.cfg, self.tc = cfg, tc
+        self.opt_cfg = opt_cfg or OptConfig(warmup_steps=10,
+                                            decay_steps=max(tc.steps, 2))
+        wd = Path(tc.workdir)
+        wd.mkdir(parents=True, exist_ok=True)
+        self.store = store or Store(
+            f"trainer-{wd.name}", SharedMemoryConnector(str(wd / "shm")))
+        self.ckpts = ProxyCheckpointManager(self.store, str(wd / "ckpts"),
+                                            keep_last=tc.keep_last)
+        self.step_fn = jax.jit(make_train_step(cfg, self.opt_cfg),
+                               donate_argnums=(0,))
+        self.history: list[dict] = []
+
+    def _init_or_resume(self):
+        start = 0
+        if self.tc.resume and self.ckpts.latest_step() is not None:
+            like = jax.eval_shape(lambda: init_train_state(
+                jax.random.key(self.tc.seed), self.cfg, self.opt_cfg))
+            state = self.ckpts.restore(like=like)
+            state = jax.tree.map(jax.numpy.asarray, state)
+            start = int(np.asarray(state["opt"]["step"]))
+            print(f"[trainer] resumed from step {start}", flush=True)
+        else:
+            state = init_train_state(jax.random.key(self.tc.seed), self.cfg,
+                                     self.opt_cfg)
+        return state, start
+
+    def run(self) -> dict:
+        tc = self.tc
+        state, start = self._init_or_resume()
+        pipe = ProxyDataPipeline(
+            self.store, _make_batch_fn(self.cfg, tc),
+            n_producers=tc.n_producers, redundancy=tc.redundancy,
+            start_index=start)
+        t0 = time.time()
+        try:
+            for step in range(start, tc.steps):
+                if tc.crash_at_step is not None and step == tc.crash_at_step:
+                    raise RuntimeError(f"injected crash at step {step}")
+                batch = next(pipe)
+                state, metrics = self.step_fn(state, batch)
+                if (step + 1) % tc.log_every == 0 or step + 1 == tc.steps:
+                    m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                    m["step"] = step + 1
+                    m["s_per_step"] = (time.time() - t0) / (step + 1 - start)
+                    self.history.append(m)
+                    print(f"[trainer] step {step+1}/{tc.steps} "
+                          f"loss={m['loss']:.4f} "
+                          f"({m['s_per_step']:.2f}s/step)", flush=True)
+                if (step + 1) % tc.ckpt_every == 0:
+                    self.ckpts.save_async(step + 1, state)
+            self.ckpts.wait()
+            self.ckpts.save(tc.steps, state)
+            return {"final_loss": self.history[-1]["loss"] if self.history
+                    else None, "history": self.history,
+                    "pipeline": pipe.stats}
+        finally:
+            pipe.close()
+            try:  # crash path: flush any in-flight async checkpoint so the
+                # restart point is the newest COMPLETE manifest
+                self.ckpts.wait()
+            except Exception:  # noqa: BLE001 - best-effort on teardown
+                pass

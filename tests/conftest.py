@@ -1,0 +1,18 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see ONE
+# device; only launch/dryrun.py (a separate process) forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _clean_store_registry():
+    """Each test gets a fresh global Store registry."""
+    yield
+    from repro.core import store as store_mod
+
+    with store_mod._REGISTRY_LOCK:
+        store_mod._REGISTRY.clear()

@@ -1,0 +1,139 @@
+"""Connector contract tests across every implementation + MultiConnector."""
+import os
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MultiConnector, NoConnectorMatch, Policy
+from repro.core.connectors import (FileConnector, GlobusConnector,
+                                   KVServerConnector, LocalMemoryConnector,
+                                   SharedMemoryConnector, SocketConnector)
+from repro.core.deploy import start_kvserver
+
+
+def contract(conn):
+    """The four-op Connector contract (paper §3.4)."""
+    key = conn.put(b"hello world")
+    assert conn.exists(key)
+    assert conn.get(key) == b"hello world"
+    assert conn.get(key) == b"hello world"   # write-once, read-many
+    conn.evict(key)
+    assert not conn.exists(key)
+    assert conn.get(key) is None
+    # batch ops
+    keys = conn.put_batch([b"a", b"bb", b"ccc"])
+    assert conn.get_batch(keys) == [b"a", b"bb", b"ccc"]
+    conn.evict_batch(keys)
+    assert conn.exists_batch(keys) == [False] * 3
+    # empty payload + binary safety
+    k = conn.put(bytes(range(256)))
+    assert conn.get(k) == bytes(range(256))
+    # config round trip reaches the same data
+    k2 = conn.put(b"shared")
+    clone = type(conn)(**conn.config())
+    assert clone.get(k2) == b"shared"
+
+
+def test_memory(tmp_path):
+    contract(LocalMemoryConnector())
+
+
+def test_file(tmp_path):
+    contract(FileConnector(str(tmp_path / "files")))
+
+
+def test_shm(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        contract(conn)
+    finally:
+        conn.close()
+
+
+def test_socket_spawned(tmp_path):
+    conn = SocketConnector(str(tmp_path / "disc"))
+    try:
+        contract(conn)
+    finally:
+        conn.shutdown_server()
+
+
+def test_kvserver_and_persistence(tmp_path):
+    h = start_kvserver(str(tmp_path), persist_dir=str(tmp_path / "p"))
+    conn = KVServerConnector(h.host, h.port)
+    contract(conn)
+    key = conn.put(b"durable")
+    h.stop()
+    h2 = start_kvserver(str(tmp_path), name="kv2",
+                        persist_dir=str(tmp_path / "p"))
+    conn2 = KVServerConnector(h2.host, h2.port)
+    assert conn2.get(key) == b"durable"
+    h2.stop()
+
+
+def test_globus_sim(tmp_path):
+    conn = GlobusConnector({"a": str(tmp_path / "a"), "b": str(tmp_path / "b")},
+                           site="a", latency_s=0.05, bandwidth_mbps=1000)
+    contract(conn)
+    # transfer-task gating: availability delayed by the latency model
+    t0 = time.time()
+    key = conn.put(b"x" * 1000)
+    conn.wait_task(key[2])
+    assert time.time() - t0 >= 0.05
+    # consumer at the other site sees the staged object
+    consumer = GlobusConnector(conn.endpoint_map, site="b", latency_s=0.0)
+    assert consumer.get(key) == b"x" * 1000
+    # batch put files ONE transfer task
+    keys = conn.put_batch([b"1", b"2", b"3"])
+    assert len({k[2] for k in keys}) == 1
+
+
+def test_globus_failure(tmp_path):
+    from repro.core.connectors.globus import TransferError
+
+    conn = GlobusConnector({"a": str(tmp_path / "a")}, site="a",
+                           latency_s=0.0, fail_rate=1.0)
+    key = conn.put(b"doomed")
+    with pytest.raises(TransferError):
+        conn.get(key)
+
+
+def test_multiconnector_routing(tmp_path):
+    mc = MultiConnector([
+        (LocalMemoryConnector(), Policy(max_size=1000, priority=10,
+                                        tags=frozenset({"local"}))),
+        (FileConnector(str(tmp_path / "f")),
+         Policy(priority=0, tags=frozenset({"local", "persistent"}))),
+    ])
+    assert mc.put(b"x" * 10)[1] == 0
+    assert mc.put(b"x" * 5000)[1] == 1
+    assert mc.put(b"x", constraints=["persistent"])[1] == 1
+    with pytest.raises(NoConnectorMatch):
+        mc.put(b"x", constraints=["nonexistent"])
+    keys = mc.put_batch([b"s", b"x" * 5000])
+    assert keys[0][1] == 0 and keys[1][1] == 1
+    assert mc.get_batch(keys) == [b"s", b"x" * 5000]
+    clone = MultiConnector(None, **mc.config())
+    assert clone.get(keys[1]) == b"x" * 5000
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=st.integers(min_value=0, max_value=20_000),
+       constraints=st.sets(st.sampled_from(["local", "persistent"]),
+                           max_size=2))
+def test_property_multi_policy_invariant(tmp_path_factory, size, constraints):
+    """Whatever is stored is retrievable, and the chosen child satisfies
+    every constraint and the size bounds of its policy."""
+    tmp = tmp_path_factory.mktemp("multi")
+    policies = [Policy(max_size=1000, priority=5, tags=frozenset({"local"})),
+                Policy(priority=1, tags=frozenset({"local", "persistent"}))]
+    mc = MultiConnector([
+        (LocalMemoryConnector(), policies[0]),
+        (FileConnector(str(tmp / "f")), policies[1]),
+    ])
+    blob = b"z" * size
+    key = mc.put(blob, constraints=sorted(constraints))
+    chosen = policies[key[1]]
+    assert chosen.accepts(len(blob), frozenset(constraints))
+    assert mc.get(key) == blob

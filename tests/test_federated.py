@@ -1,0 +1,155 @@
+"""FaaS executor, FL orchestrator, steering, compression, fault tolerance."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import Store
+from repro.core.connectors import FileConnector, SharedMemoryConnector
+from repro.distributed.compression import Compressor
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               HeartbeatWriter, RetryPolicy,
+                                               overprovision, with_retries)
+from repro.federated.faas import CloudModel, FaasExecutor, PayloadTooLarge
+from repro.federated.fl import FLConfig, FLOrchestrator
+from repro.federated.steer import SteerConfig, Steering
+
+TINY = ARCHS["phi4-mini-3.8b"].reduced().replace(
+    n_layers=2, d_model=64, d_ff=128, vocab=128, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def executor():
+    ex = FaasExecutor(n_workers=2, cloud=CloudModel(latency_s=0.001))
+    yield ex
+    ex.shutdown()
+
+
+def test_faas_basic(executor):
+    assert executor.submit(sum, [1, 2, 3]).result() == 6
+    with pytest.raises(RuntimeError):
+        executor.submit(int, "not-a-number").result()
+
+
+def test_faas_payload_cap():
+    ex = FaasExecutor(n_workers=1,
+                      cloud=CloudModel(latency_s=0.0, payload_cap=10_000))
+    try:
+        with pytest.raises(PayloadTooLarge):
+            ex.submit(len, b"x" * 100_000)
+        # a proxy of the same data passes the cap
+        assert ex.submit(len, b"x" * 100).result() == 100
+    finally:
+        ex.shutdown()
+
+
+@pytest.mark.slow
+def test_fl_round_learns(executor, tmp_path):
+    store = Store("fl-t", FileConnector(str(tmp_path / "fl")))
+    fl = FLConfig(rounds=2, workers_per_round=2, local_steps=3,
+                  transport="proxy", deadline_s=120)
+    orch = FLOrchestrator(TINY, fl, executor, store)
+    res = orch.run()
+    assert res["losses"][-1] < res["losses"][0]
+    assert all(r["ok"] == 2 for r in res["rounds"])
+
+
+@pytest.mark.slow
+def test_fl_elastic_and_compression(executor, tmp_path):
+    store = Store("fl-e", FileConnector(str(tmp_path / "fl")))
+    fl = FLConfig(rounds=2, workers_per_round=2, local_steps=2,
+                  transport="proxy", compression="int8", deadline_s=120)
+    orch = FLOrchestrator(TINY, fl, executor, store)
+    res = orch.run(worker_schedule=[1, 3])
+    assert [r["workers"] for r in res["rounds"]] == [1, 3]
+    assert res["losses"][-1] < res["losses"][0] + 0.01
+
+
+def test_steering_proxy_reduces_server_traffic(tmp_path):
+    rng = np.random.default_rng(0)
+    payload = rng.standard_normal(300_000).astype(np.float32)
+    store = Store("steer-t", SharedMemoryConnector(str(tmp_path / "shm")))
+    s1 = Steering(SteerConfig(proxy_threshold=50_000), store)
+    r1 = s1.run(lambda x: float(np.sum(x)), lambda i: payload, 4)
+    s1.close()
+    s2 = Steering(SteerConfig(proxy_threshold=None), None)
+    r2 = s2.run(lambda x: float(np.sum(x)), lambda i: payload, 4)
+    s2.close()
+    assert r1["server_bytes"] < r2["server_bytes"] / 50
+    assert sorted(r1["results"]) == pytest.approx(sorted(r2["results"]))
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    tree = {"w": rng.standard_normal((64, 64)).astype(np.float32)}
+    comp = Compressor("int8")
+    out = Compressor.decompress(comp.compress(tree))
+    scale = np.abs(tree["w"]).max() / 127
+    assert np.abs(out["w"] - tree["w"]).max() <= scale * 0.51
+    # 4x smaller on the wire
+    assert Compressor.payload_bytes(comp.compress(tree)) < \
+        tree["w"].nbytes / 2
+
+
+def test_error_feedback_is_unbiased_over_time():
+    rng = np.random.default_rng(2)
+    g = rng.standard_normal((256,)).astype(np.float32) * 0.01
+    comp = Compressor("int8_ef")
+    acc = np.zeros_like(g)
+    for _ in range(50):
+        acc += Compressor.decompress(comp.compress({"g": g}))["g"]
+    # mean of decompressed matches true gradient closely thanks to EF
+    np.testing.assert_allclose(acc / 50, g, atol=2e-4)
+
+
+def test_topk_keeps_largest():
+    x = np.array([[0.1, -5.0, 0.2, 3.0]], np.float32)
+    out = Compressor.decompress(Compressor("topk", topk_frac=0.5)
+                                .compress({"x": x}))["x"]
+    np.testing.assert_array_equal(out, [[0.0, -5.0, 0.0, 3.0]])
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance utilities
+# ---------------------------------------------------------------------------
+def test_heartbeats(tmp_path):
+    w = HeartbeatWriter(str(tmp_path), "w0")
+    w.beat(round=3)
+    mon = HeartbeatMonitor(str(tmp_path), stale_s=5.0)
+    assert "w0" in mon.alive()
+    assert mon.alive()["w0"]["round"] == 3
+    assert mon.dead(["w0", "w1"]) == ["w1"]
+    stale = HeartbeatMonitor(str(tmp_path), stale_s=0.0)
+    time.sleep(0.01)
+    assert "w0" not in stale.alive()
+
+
+def test_with_retries():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ConnectionError("transient")
+        return "ok"
+
+    assert with_retries(flaky, RetryPolicy(max_attempts=5,
+                                           base_delay_s=0.01))() == "ok"
+    assert len(calls) == 3
+
+
+def test_overprovision_math():
+    assert overprovision(4, 0.0) == 4
+    n = overprovision(4, 0.3, confidence=0.99)
+    assert n > 4
+    # sanity: with n workers at p=0.3 failure, P[>=4 ok] >= 0.99
+    import math
+
+    p_ok = sum(math.comb(n, k) * 0.7 ** k * 0.3 ** (n - k)
+               for k in range(4, n + 1))
+    assert p_ok >= 0.99

@@ -1,0 +1,109 @@
+"""Proxy data pipeline + restartable trainer (fault-tolerance contract)."""
+import os
+from functools import partial
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import Store
+from repro.core.connectors import SharedMemoryConnector
+from repro.core.store import unregister_store
+from repro.data.datasets import lm_batch
+from repro.data.pipeline import ProxyDataPipeline
+from repro.train.trainer import TrainConfig, Trainer
+
+TINY = ARCHS["phi4-mini-3.8b"].reduced().replace(
+    n_layers=2, d_model=64, d_ff=128, vocab=128)
+
+
+def test_dataset_determinism():
+    a = lm_batch(7, 3, 4, 32, 100)
+    b = lm_batch(7, 3, 4, 32, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(7, 4, 4, 32, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_pipeline_order_and_determinism(tmp_path):
+    store = Store("pipe-a", SharedMemoryConnector(str(tmp_path / "shm")))
+    make = partial(lm_batch, 42, batch=2, seq=16, vocab=50)
+    pipe = ProxyDataPipeline(store, make, n_producers=2, deadline_s=20)
+    try:
+        batches = [next(pipe) for _ in range(6)]
+        for i, b in enumerate(batches):
+            np.testing.assert_array_equal(b["tokens"], make(i)["tokens"])
+    finally:
+        pipe.close()
+
+
+def test_pipeline_redundancy_survives_producer_death(tmp_path):
+    """The real straggler guarantee: kill the primary producer mid-stream;
+    the redundant rank keeps the (deterministic) stream flowing without
+    inline fallbacks.  (With all producers healthy, queue backpressure
+    keeps duplicate production near zero — bounded waste by design.)"""
+    store = Store("pipe-b", SharedMemoryConnector(str(tmp_path / "shm")))
+    make = partial(lm_batch, 1, batch=2, seq=16, vocab=50)
+    pipe = ProxyDataPipeline(store, make, n_producers=1, redundancy=2,
+                             deadline_s=30)
+    try:
+        for i in range(3):
+            b = next(pipe)
+            np.testing.assert_array_equal(b["tokens"], make(i)["tokens"])
+        pipe._procs[0].terminate()          # primary producer dies
+        pipe._procs[0].join(timeout=5)
+        for i in range(3, 8):               # redundant rank takes over
+            b = next(pipe)
+            np.testing.assert_array_equal(b["tokens"], make(i)["tokens"])
+        assert pipe.stats["fallbacks"] == 0
+    finally:
+        pipe.close()
+
+
+def test_pipeline_straggler_fallback(tmp_path):
+    store = Store("pipe-c", SharedMemoryConnector(str(tmp_path / "shm")))
+    make = partial(lm_batch, 2, batch=2, seq=16, vocab=50)
+    pipe = ProxyDataPipeline(store, make, n_producers=1, deadline_s=0.05,
+                             straggler_delay_s=30.0)
+    try:
+        b = next(pipe)  # producer sleeping -> inline fallback
+        np.testing.assert_array_equal(b["tokens"], make(0)["tokens"])
+        assert pipe.stats["fallbacks"] == 1
+    finally:
+        pipe.close()
+
+
+@pytest.mark.slow
+def test_trainer_learns_and_resumes(tmp_path):
+    from repro.train.optimizer import OptConfig
+
+    opt = OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=20)
+    tc = TrainConfig(steps=20, batch=4, seq=32, log_every=5, ckpt_every=5,
+                     workdir=str(tmp_path / "runA"))
+    tr = Trainer(TINY, tc, opt)
+    res = tr.run()
+    assert res["final_loss"] < tr.history[0]["loss"]
+    unregister_store(tr.store.name)
+
+    # crash at step 12, resume, and verify the resumed stream CONTINUES
+    tc2 = TrainConfig(steps=20, batch=4, seq=32, log_every=5, ckpt_every=5,
+                      workdir=str(tmp_path / "runB"), crash_at_step=12)
+    tr2 = Trainer(TINY, tc2)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        tr2.run()
+    unregister_store(tr2.store.name)
+    assert tr2.ckpts.latest_step() == 10
+
+    tc3 = TrainConfig(steps=20, batch=4, seq=32, log_every=5, ckpt_every=5,
+                      workdir=str(tmp_path / "runB"), resume=True)
+    tr3 = Trainer(TINY, tc3)
+    res3 = tr3.run()
+    # bitwise continuity: same data stream + state -> same final metrics
+    # as an uninterrupted run with the same seed
+    uninterrupted = Trainer(
+        TINY, TrainConfig(steps=20, batch=4, seq=32, log_every=5,
+                          ckpt_every=50, workdir=str(tmp_path / "runC")))
+    res_c = uninterrupted.run()
+    assert abs(res3["final_loss"] - res_c["final_loss"]) < 5e-3

@@ -1,0 +1,116 @@
+"""Serializer round-trip correctness (incl. hypothesis pytrees)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import deserialize, serialize
+
+
+def rt(obj):
+    return deserialize(serialize(obj))
+
+
+def test_scalars_and_containers():
+    obj = {"a": 1, "b": 2.5, "c": "x", "d": None, "e": True,
+           "f": b"bytes", "g": [1, [2, 3]], "h": (4, (5,)), "i": {7, 8}}
+    out = rt(obj)
+    assert out == obj
+    assert isinstance(out["h"], tuple) and isinstance(out["h"][1], tuple)
+    assert isinstance(out["i"], set)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64", "int32", "int64",
+                                   "uint8", "bool"])
+def test_numpy_dtypes(dtype):
+    arr = np.arange(24).reshape(2, 3, 4).astype(dtype)
+    out = rt(arr)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+    assert out.flags.writeable
+
+
+def test_bfloat16_and_jax_arrays():
+    import jax.numpy as jnp
+    import ml_dtypes
+
+    x = jnp.linspace(0, 1, 16, dtype=jnp.bfloat16).reshape(4, 4)
+    out = rt({"w": x})["w"]
+    assert str(out.dtype) == "bfloat16"
+    np.testing.assert_array_equal(out.astype(np.float32),
+                                  np.asarray(x).astype(np.float32))
+    f8 = np.zeros((3,), ml_dtypes.float8_e4m3fn)
+    assert str(rt(f8).dtype) == "float8_e4m3fn"
+
+
+def test_compression_flag_and_threshold():
+    small = serialize(b"x" * 100)            # under threshold: raw
+    big = serialize(np.zeros(100_000, np.float32))  # compressible
+    assert small[4] & 1 == 0
+    assert big[4] & 1 == 1
+    assert len(big) < 10_000
+
+
+def test_empty_and_zero_dim():
+    np.testing.assert_array_equal(rt(np.zeros((0, 3))), np.zeros((0, 3)))
+    out = rt(np.float32(3.5))
+    assert float(out) == 3.5
+
+
+def _boom():
+    raise RuntimeError("resolved!")
+
+
+def test_proxies_never_resolved_by_serializer():
+    from functools import partial
+
+    from repro.core import Proxy, is_resolved
+
+    boom = Proxy(_boom)
+    serialize({"p": boom})  # must NOT resolve (array duck-typing guard)
+    assert not is_resolved(boom)
+    p = Proxy(partial(int, 7))
+    assert deserialize(serialize(p)) == 7
+
+
+_leaf = st.one_of(
+    st.integers(min_value=-2**31, max_value=2**31 - 1),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.text(max_size=16),
+    st.booleans(),
+    hnp.arrays(dtype=st.sampled_from([np.float32, np.int32, np.uint8]),
+               shape=hnp.array_shapes(max_dims=3, max_side=5)),
+)
+_tree = st.recursive(
+    _leaf,
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.dictionaries(st.text(max_size=6), children, max_size=4),
+        st.tuples(children, children),
+    ),
+    max_leaves=12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_tree)
+def test_property_pytree_roundtrip(tree):
+    out = rt(tree)
+
+    def eq(a, b):
+        if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+            np.testing.assert_array_equal(a, b)
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            return
+        assert type(a) is type(b)
+        if isinstance(a, dict):
+            assert a.keys() == b.keys()
+            for k in a:
+                eq(a[k], b[k])
+        elif isinstance(a, (list, tuple)):
+            assert len(a) == len(b)
+            for x, y in zip(a, b):
+                eq(x, y)
+        else:
+            assert a == b
+
+    eq(tree, out)

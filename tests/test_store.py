@@ -1,0 +1,98 @@
+"""Store semantics: caching, registry, proxies, async resolve (paper §3.5)."""
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (Store, get_factory, get_or_create_store, get_store,
+                        is_resolved, maybe_proxy, register_store,
+                        resolve_async, unregister_store)
+from repro.core.connectors import FileConnector, LocalMemoryConnector
+
+
+def make_store(tmp_path, name="s"):
+    return Store(name, FileConnector(str(tmp_path / name)))
+
+
+def test_put_get_evict_objects(tmp_path):
+    s = make_store(tmp_path)
+    key = s.put({"x": np.arange(4), "y": (1, 2)})
+    out = s.get(key)
+    np.testing.assert_array_equal(out["x"], np.arange(4))
+    assert out["y"] == (1, 2)
+    s.evict(key)
+    assert s.get(key) is None
+
+
+def test_cache_after_deserialization(tmp_path):
+    s = make_store(tmp_path)
+    key = s.put(np.zeros(1000))
+    a = s.get(key)
+    b = s.get(key)
+    assert a is b                       # cached object identity
+    assert s.cache.hits >= 1
+    s.connector.evict(key)              # bypass store: connector-level evict
+    assert s.get(key) is not None       # cache still serves it
+    s.evict(key)                        # store evict drops cache too
+    assert s.get(key) is None
+
+
+def test_registry_and_factory_rematerialization(tmp_path):
+    s = Store("remat-store", FileConnector(str(tmp_path / "d")))
+    p = s.proxy({"v": 7})
+    blob = pickle.dumps(p)
+    # simulate a remote process: no store registered under that name
+    unregister_store("remat-store")
+    assert get_store("remat-store") is None
+    p2 = pickle.loads(blob)
+    assert p2["v"] == 7                      # factory rebuilt the store
+    assert get_store("remat-store") is not None  # and registered it
+
+
+def test_duplicate_registration_rejected(tmp_path):
+    s1 = Store("dup", LocalMemoryConnector())
+    with pytest.raises(ValueError):
+        Store("dup", LocalMemoryConnector())
+    unregister_store("dup")
+
+
+def test_proxy_evict_flag(tmp_path):
+    s = make_store(tmp_path)
+    p = s.proxy([1, 2, 3], evict=True)
+    key = get_factory(p).key
+    assert s.exists(key)
+    assert p[0] == 1
+    assert not s.connector.exists(key)
+
+
+def test_proxy_batch(tmp_path):
+    s = make_store(tmp_path)
+    proxies = s.proxy_batch([{"i": i} for i in range(5)])
+    assert [p["i"] for p in proxies] == list(range(5))
+
+
+def test_resolve_async(tmp_path):
+    s = make_store(tmp_path)
+    p = pickle.loads(pickle.dumps(s.proxy(np.arange(10))))
+    resolve_async(p)
+    np.testing.assert_array_equal(np.asarray(p), np.arange(10))
+
+
+def test_missing_key_raises_lookup(tmp_path):
+    s = make_store(tmp_path)
+    p = s.proxy_from_key(("file", s.connector.store_dir, "deadbeef"))
+    from repro.core import ProxyResolveError
+
+    with pytest.raises(ProxyResolveError, match="not found"):
+        _ = len(p)
+
+
+def test_maybe_proxy_threshold(tmp_path):
+    s = make_store(tmp_path)
+    small = maybe_proxy(s, [1, 2], threshold_bytes=10_000)
+    assert small == [1, 2] and not hasattr(small, "_proxy_factory")
+    rng = np.random.default_rng(0)
+    big = maybe_proxy(s, rng.standard_normal(10_000), threshold_bytes=10_000)
+    assert not is_resolved(big)
+    assert big.shape == (10_000,)
