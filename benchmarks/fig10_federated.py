@@ -12,7 +12,7 @@ import time
 
 from benchmarks.util import emit, fmt_bytes, tmpdir
 from repro.configs import ARCHS
-from repro.core import Store, serialize
+from repro.core import Store, frame_nbytes, serialize
 from repro.core.connectors import FileConnector
 from repro.federated.faas import CloudModel, FaasExecutor, PayloadTooLarge
 from repro.federated.fl import FLConfig, FLOrchestrator
@@ -36,7 +36,7 @@ def run() -> None:
                           transport=transport, compression=compression,
                           batch=2, seq=16)
             orch = FLOrchestrator(cfg, fl, ex, store)
-            n_bytes = len(serialize(orch.params))
+            n_bytes = frame_nbytes(serialize(orch.params))
             try:
                 t0 = time.perf_counter()
                 info = orch.run_round(0)

@@ -2,14 +2,22 @@
 
 Paper: Margo/UCX (RDMA) vs ZMQ vs Redis vs DataSpaces.  Here: shm (the
 zero-copy intra-node analog) vs socket store (ZMQ role) vs standalone KV
-server (Redis role) vs file system — put+get round trip per connector.
+server (Redis role) vs file system — a full object round trip per connector
+(serialize -> put -> get -> deserialize), which is what the Store hot path
+pays.  PSJ2 frames gather-write the array payload segments and deserialize
+as zero-copy views over the received frame.
+
+``fig6.serdes*`` rows isolate the serializer: the legacy PSJ1 path
+(inline-copy msgpack body) vs the PSJ2 multi-buffer frame.
 """
 from __future__ import annotations
 
 import os
 
+import numpy as np
+
 from benchmarks.util import emit, fmt_bytes, payload, time_call, tmpdir
-from repro.core import serialize
+from repro.core import deserialize, serialize, serialize_v1
 from repro.core.connectors import (FileConnector, KVServerConnector,
                                    SharedMemoryConnector, SocketConnector)
 from repro.core.deploy import start_kvserver
@@ -27,17 +35,23 @@ def run() -> None:
         "file": FileConnector(os.path.join(d, "file")),
     }
     for size in SIZES:
-        blob = serialize(payload(size))
+        data = payload(size)
+        nbytes = serialize(data).nbytes
+
+        t = time_call(lambda: deserialize(serialize_v1(data)))
+        emit(f"fig6.serdes-v1.{fmt_bytes(size)}", t * 1e6, "PSJ1")
+        t = time_call(lambda: deserialize(serialize(data)))
+        emit(f"fig6.serdes.{fmt_bytes(size)}", t * 1e6, "PSJ2")
 
         for name, conn in conns.items():
             def rt(conn=conn):
-                key = conn.put(blob)
-                got = conn.get(key)
-                assert got is not None and len(got) == len(blob)
+                key = conn.put(serialize(data))
+                got = deserialize(conn.get(key))
+                assert np.asarray(got).nbytes == data.nbytes
                 conn.evict(key)
 
             t = time_call(rt)
-            mbps = len(blob) * 2 / t / 1e6
+            mbps = nbytes * 2 / t / 1e6
             emit(f"fig6.{name}.{fmt_bytes(size)}", t * 1e6,
                  f"{mbps:.0f}MB/s")
     for conn in conns.values():

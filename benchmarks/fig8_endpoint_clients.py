@@ -9,7 +9,7 @@ import threading
 import time
 
 from benchmarks.util import emit, fmt_bytes, payload, tmpdir
-from repro.core import serialize
+from repro.core import join_frame, serialize
 from repro.core.connectors import EndpointConnector
 from repro.core.deploy import start_endpoint, start_relay
 
@@ -23,7 +23,7 @@ def run() -> None:
     relay = start_relay(d)
     ep = start_endpoint(d, relay.address, name="fig8")
     for size in SIZES:
-        blob = serialize(payload(size))
+        blob = join_frame(serialize(payload(size)))
         for n_clients in CLIENTS:
             times: list[float] = []
             lock = threading.Lock()

@@ -12,7 +12,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.util import emit, fmt_bytes, payload, time_call, tmpdir
-from repro.core import serialize
+from repro.core import join_frame, serialize
 from repro.core.connectors import EndpointConnector, KVServerConnector
 from repro.core.deploy import start_endpoint, start_kvserver, start_relay
 
@@ -53,7 +53,7 @@ def run() -> None:
     ca = EndpointConnector(address=ep_a.address)
     cc = EndpointConnector(address=ep_c.address)
     for size in SIZES:
-        blob = serialize(payload(size))
+        blob = join_frame(serialize(payload(size)))
 
         # same-site: B stores, A fetches via peer channel
         cb = EndpointConnector(address=ep_b.address)

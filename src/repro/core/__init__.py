@@ -11,7 +11,9 @@ Public API mirrors the paper's usage (Listing 1):
 """
 from repro.core.proxy import (Proxy, ProxyResolveError, extract, get_factory,
                               is_proxy, is_resolved, resolve)
-from repro.core.serialize import deserialize, serialize
+from repro.core.serialize import (Frame, as_segments, deserialize,
+                                  frame_nbytes, join_frame, serialize,
+                                  serialize_v1)
 from repro.core.connector import BaseConnector, Connector, Key
 from repro.core.store import (Store, StoreConfig, StoreFactory, get_store,
                               get_or_create_store, maybe_proxy,
@@ -20,7 +22,8 @@ from repro.core.multi import MultiConnector, NoConnectorMatch, Policy
 
 __all__ = [
     "Proxy", "ProxyResolveError", "extract", "get_factory", "is_proxy",
-    "is_resolved", "resolve", "serialize", "deserialize", "BaseConnector",
+    "is_resolved", "resolve", "serialize", "serialize_v1", "deserialize",
+    "Frame", "as_segments", "frame_nbytes", "join_frame", "BaseConnector",
     "Connector", "Key", "Store", "StoreConfig", "StoreFactory", "get_store",
     "get_or_create_store", "maybe_proxy", "register_store", "resolve_async",
     "unregister_store", "MultiConnector", "NoConnectorMatch", "Policy",

@@ -1,8 +1,14 @@
 """The Connector protocol (paper §3.4).
 
 A Connector is a low-level interface to a *mediated channel*: it moves opaque
-byte strings identified by keys.  Four primary operations — ``put``, ``get``,
+byte payloads identified by keys.  Four primary operations — ``put``, ``get``,
 ``exists``, ``evict`` — plus batch variants and lifecycle hooks.
+
+``put`` accepts ``bytes | Frame | Sequence[memoryview]`` (see
+:mod:`repro.core.serialize`): scatter-gather-capable channels write the
+segments directly, others fall back to a single ``join_frame`` copy.  ``get``
+may return any bytes-like object (``bytes`` or a zero-copy ``memoryview``,
+e.g. a mapped shared-memory segment) suitable for ``deserialize``.
 
 Keys are plain tuples of msgpack-serializable scalars so they can ride inside
 factories across process and site boundaries.
@@ -23,12 +29,12 @@ Key = tuple  # (str | int, ...)
 class Connector(Protocol):
     """Byte-level mediated-channel interface."""
 
-    def put(self, blob: bytes) -> Key:
-        """Store ``blob``; return a unique key."""
+    def put(self, blob) -> Key:
+        """Store ``blob`` (bytes | Frame | segment sequence); return a key."""
         ...
 
-    def get(self, key: Key) -> bytes | None:
-        """Return the blob for ``key`` or None if absent/evicted."""
+    def get(self, key: Key):
+        """Return a bytes-like payload for ``key`` or None if absent."""
         ...
 
     def exists(self, key: Key) -> bool:

@@ -18,6 +18,7 @@ from typing import Any
 
 from repro.core.connector import BaseConnector, Key
 from repro.core.kv_tcp import KVClient
+from repro.core.serialize import join_frame
 
 
 class EndpointConnector(BaseConnector):
@@ -35,10 +36,13 @@ class EndpointConnector(BaseConnector):
         resp = self._client.request({"op": "uuid"})
         self.endpoint_uuid: str = resp["data"]
 
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         object_id = uuid_mod.uuid4().hex
+        # the endpoint protocol embeds payloads in the msgpack frame (they
+        # may be forwarded over peer channels), so multi-segment frames pay
+        # one join copy here
         resp = self._client.request({"op": "put", "object_id": object_id,
-                                     "data": bytes(blob),
+                                     "data": join_frame(blob),
                                      "endpoint_id": self.endpoint_uuid})
         if not resp["ok"]:
             raise RuntimeError(resp.get("error"))

@@ -11,6 +11,7 @@ from pathlib import Path
 from typing import Any
 
 from repro.core.connector import BaseConnector, Key
+from repro.core.serialize import as_segments
 
 
 class FileConnector(BaseConnector):
@@ -25,11 +26,12 @@ class FileConnector(BaseConnector):
     def _path(self, object_id: str) -> Path:
         return self._dir / f"{object_id}.obj"
 
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         object_id = uuid.uuid4().hex
         tmp = self._dir / f".{object_id}.tmp"
         with open(tmp, "wb") as f:
-            f.write(blob)
+            for seg in as_segments(blob):  # writev-style, no join copy
+                f.write(seg)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._path(object_id))

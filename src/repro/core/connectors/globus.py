@@ -27,6 +27,7 @@ from pathlib import Path
 from typing import Any
 
 from repro.core.connector import BaseConnector, Key
+from repro.core.serialize import as_segments, frame_nbytes
 
 
 class TransferError(RuntimeError):
@@ -80,23 +81,26 @@ class GlobusConnector(BaseConnector):
             time.sleep(min(remaining, poll) if remaining > 0 else poll)
 
     # -- Connector ops ---------------------------------------------------------
-    def _stage(self, object_id: str, blob: bytes) -> None:
+    def _stage(self, object_id: str, blob) -> None:
+        segments = as_segments(blob)
         for d in self.endpoint_map.values():
             tmp = Path(d) / f".{object_id}.tmp"
-            tmp.write_bytes(blob)
+            with open(tmp, "wb") as f:
+                for seg in segments:
+                    f.write(seg)
             tmp.replace(Path(d) / f"{object_id}.obj")
 
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         object_id = uuid_mod.uuid4().hex
         self._stage(object_id, blob)
-        task_id = self._submit_task(len(blob))
+        task_id = self._submit_task(frame_nbytes(blob))
         return ("globus", object_id, task_id)
 
     def put_batch(self, blobs) -> list[Key]:
         ids = [uuid_mod.uuid4().hex for _ in blobs]
         for oid, blob in zip(ids, blobs):
             self._stage(oid, blob)
-        task_id = self._submit_task(sum(len(b) for b in blobs))  # ONE task
+        task_id = self._submit_task(sum(frame_nbytes(b) for b in blobs))  # ONE task
         return [("globus", oid, task_id) for oid in ids]
 
     def get(self, key: Key) -> bytes | None:

@@ -15,6 +15,7 @@ from typing import Any
 
 from repro.core.connector import BaseConnector, Key
 from repro.core.kv_tcp import KVClient
+from repro.core.serialize import join_frame
 
 
 class KVServerConnector(BaseConnector):
@@ -22,18 +23,18 @@ class KVServerConnector(BaseConnector):
         self.host, self.port = host, int(port)
         self._client = KVClient(self.host, self.port)
 
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         object_id = uuid.uuid4().hex
-        self._client.put(object_id, blob)
+        self._client.put(object_id, blob)  # gather-write, no join copy
         return ("kv", self.host, self.port, object_id)
 
     def put_batch(self, blobs) -> list[Key]:
         ids = [uuid.uuid4().hex for _ in blobs]
         self._client.request({"op": "mput", "keys": ids,
-                              "blobs": [bytes(b) for b in blobs]})
+                              "blobs": [join_frame(b) for b in blobs]})
         return [("kv", self.host, self.port, i) for i in ids]
 
-    def get(self, key: Key) -> bytes | None:
+    def get(self, key: Key):
         return self._client.get(key[3])
 
     def get_batch(self, keys) -> list[bytes | None]:

@@ -13,6 +13,7 @@ import uuid
 from typing import Any
 
 from repro.core.connector import BaseConnector, Key
+from repro.core.serialize import join_frame
 
 # Keyed globally so that config() reconnection within the same process sees
 # the same data (mirrors how a respawned RedisConnector sees the same server).
@@ -27,9 +28,9 @@ class LocalMemoryConnector(BaseConnector):
             self._data = _STORES.setdefault(self.store_id, {})
         self._counter = itertools.count()
 
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         key = ("mem", self.store_id, uuid.uuid4().hex)
-        self._data[key] = bytes(blob)
+        self._data[key] = join_frame(blob)
         return key
 
     def get(self, key: Key) -> bytes | None:

@@ -2,7 +2,9 @@
 
 Plays the role of the paper's Margo/UCX RDMA-backed distributed memory for
 node-local producers/consumers: objects live in named POSIX shared-memory
-segments, so ``get`` is a page-mapped read, not a socket copy.
+segments.  ``put`` writes frame segments straight into the mapping (no join
+copy) and ``get`` returns a *mapped memoryview* of the segment — the consumer
+deserializes zero-copy out of shared memory; no socket, no ``bytes()`` copy.
 
 Hardware adaptation note (DESIGN.md §2): no RDMA NIC exists in this container;
 POSIX shm is the intra-node analog of memory-to-memory transfer.  Cross-node
@@ -12,17 +14,54 @@ fallback does.
 from __future__ import annotations
 
 import atexit
+import inspect
 import json
 import threading
 import uuid
+from collections import OrderedDict
 from multiprocessing import shared_memory
 from pathlib import Path
 from typing import Any
 
 from repro.core.connector import BaseConnector, Key
+from repro.core.serialize import as_segments, frame_nbytes
 
-# Ownership is explicit (the on-disk index + close()), so segments are NEVER
-# handed to multiprocessing's resource tracker: track=False (Python >= 3.13).
+# Ownership is explicit (the on-disk index + close()), so segments should
+# NEVER be handed to multiprocessing's resource tracker.  Python >= 3.13 has
+# track=False; earlier versions get an explicit unregister after attach.
+_HAS_TRACK = "track" in inspect.signature(
+    shared_memory.SharedMemory.__init__).parameters
+
+
+def _open_segment(name: str, *, create: bool = False,
+                  size: int = 0) -> shared_memory.SharedMemory:
+    kwargs: dict[str, Any] = {"track": False} if _HAS_TRACK else {}
+    if create:
+        seg = shared_memory.SharedMemory(name=name, create=True,
+                                         size=max(1, size), **kwargs)
+    else:
+        seg = shared_memory.SharedMemory(name=name, **kwargs)
+    if not _HAS_TRACK:
+        try:
+            from multiprocessing import resource_tracker
+
+            resource_tracker.unregister(seg._name, "shared_memory")
+        except Exception:  # pragma: no cover - tracker internals vary
+            pass
+    return seg
+
+
+def _unlink_segment(seg: shared_memory.SharedMemory) -> None:
+    """Unlink, balancing the tracker bookkeeping on Python < 3.13 (unlink
+    sends an unregister; we already unregistered at open)."""
+    if not _HAS_TRACK:
+        try:
+            from multiprocessing import resource_tracker
+
+            resource_tracker.register(seg._name, "shared_memory")
+        except Exception:  # pragma: no cover
+            pass
+    seg.unlink()
 
 
 class SharedMemoryConnector(BaseConnector):
@@ -31,13 +70,23 @@ class SharedMemoryConnector(BaseConnector):
     ``registry_dir`` is a small shared directory (tmpfs is fine) holding one
     JSON sidecar per object: {"segment": name, "size": n}.  Data never touches
     the file system — only 60-byte index entries do.
+
+    ``get`` keeps the attached segment mapped (so the returned view stays
+    valid) until ``evict``/``close``; a mapping whose views are still exported
+    at close time is left for the GC rather than invalidated underfoot.
     """
+
+    # mapped-reader cache bound: each entry holds 2 fds + one mapping, so
+    # cap it and LRU-close (views still exported survive via _close_segment)
+    MAX_OPEN_SEGMENTS = 64
 
     def __init__(self, registry_dir: str, clear: bool = False) -> None:
         self.registry_dir = str(registry_dir)
         self._dir = Path(registry_dir)
         self._dir.mkdir(parents=True, exist_ok=True)
         self._owned: set[str] = set()
+        self._open: OrderedDict[
+            str, tuple[shared_memory.SharedMemory, int]] = OrderedDict()
         self._lock = threading.Lock()
         if clear:
             for f in self._dir.glob("*.json"):
@@ -48,6 +97,25 @@ class SharedMemoryConnector(BaseConnector):
     def _idx(self, object_id: str) -> Path:
         return self._dir / f"{object_id}.json"
 
+    def _close_segment(self, seg: shared_memory.SharedMemory) -> None:
+        try:
+            seg.close()
+        except BufferError:
+            # A consumer still holds a zero-copy view: the mapping must stay
+            # alive until that view dies.  Drop the fd now and detach the
+            # wrapper from the mmap (the exported views keep it referenced;
+            # GC unmaps with the last view) so __del__ doesn't re-raise.
+            try:
+                import os
+
+                if seg._fd >= 0:
+                    os.close(seg._fd)
+                    seg._fd = -1
+                seg._mmap = None
+                seg._buf = None
+            except Exception:  # pragma: no cover - stdlib internals shift
+                pass
+
     def _evict_entry(self, idx_path: Path) -> None:
         try:
             meta = json.loads(idx_path.read_text())
@@ -55,55 +123,85 @@ class SharedMemoryConnector(BaseConnector):
             return
         idx_path.unlink(missing_ok=True)
         try:
-            seg = shared_memory.SharedMemory(name=meta["segment"], track=False)
-            seg.close()
-            seg.unlink()
+            seg = _open_segment(meta["segment"])
+            self._close_segment(seg)
+            _unlink_segment(seg)
         except FileNotFoundError:
             pass
 
     # -- Connector ops -------------------------------------------------------
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         object_id = uuid.uuid4().hex
         seg_name = f"psj_{object_id[:24]}"
-        seg = shared_memory.SharedMemory(name=seg_name, create=True,
-                                         size=max(1, len(blob)), track=False)
-        seg.buf[: len(blob)] = blob
+        nbytes = frame_nbytes(blob)
+        seg = _open_segment(seg_name, create=True, size=nbytes)
+        pos = 0
+        for s in as_segments(blob):  # scatter directly into the mapping
+            mv = memoryview(s).cast("B")
+            seg.buf[pos:pos + mv.nbytes] = mv
+            pos += mv.nbytes
         seg.close()
         tmp = self._dir / f".{object_id}.tmp"
-        tmp.write_text(json.dumps({"segment": seg_name, "size": len(blob)}))
+        tmp.write_text(json.dumps({"segment": seg_name, "size": nbytes}))
         tmp.replace(self._idx(object_id))
         with self._lock:
             self._owned.add(object_id)
         return ("shm", self.registry_dir, object_id)
 
-    def get(self, key: Key) -> bytes | None:
+    def get(self, key: Key):
+        object_id = key[2]
+        with self._lock:
+            cached = self._open.get(object_id)
+            if cached is not None:
+                self._open.move_to_end(object_id)
+                seg, size = cached
+                return seg.buf[:size]
         try:
-            meta = json.loads(self._idx(key[2]).read_text())
+            meta = json.loads(self._idx(object_id).read_text())
         except (FileNotFoundError, json.JSONDecodeError):
             return None
         try:
-            seg = shared_memory.SharedMemory(name=meta["segment"], track=False)
+            seg = _open_segment(meta["segment"])
         except FileNotFoundError:
             return None
-        try:
-            return bytes(seg.buf[: meta["size"]])
-        finally:
-            seg.close()
+        stale = []
+        with self._lock:
+            raced = self._open.get(object_id)
+            if raced is not None:            # lost a concurrent first-get
+                stale.append(seg)
+                seg = raced[0]
+            else:
+                self._open[object_id] = (seg, meta["size"])
+                self._open.move_to_end(object_id)
+                while len(self._open) > self.MAX_OPEN_SEGMENTS:
+                    _, (old, _sz) = self._open.popitem(last=False)
+                    stale.append(old)
+        for s in stale:
+            self._close_segment(s)
+        return seg.buf[:meta["size"]]
 
     def exists(self, key: Key) -> bool:
         return self._idx(key[2]).exists()
 
     def evict(self, key: Key) -> None:
-        self._evict_entry(self._idx(key[2]))
+        object_id = key[2]
         with self._lock:
-            self._owned.discard(key[2])
+            cached = self._open.pop(object_id, None)
+        if cached is not None:
+            self._close_segment(cached[0])
+        self._evict_entry(self._idx(object_id))
+        with self._lock:
+            self._owned.discard(object_id)
 
     def config(self) -> dict[str, Any]:
         return {"registry_dir": self.registry_dir}
 
     def close(self) -> None:
-        """Unlink segments created by this process (producer-side cleanup)."""
+        """Unmap reader segments and unlink segments created by this process."""
         with self._lock:
+            open_segs, self._open = self._open, {}
             owned, self._owned = self._owned, set()
+        for seg, _ in open_segs.values():
+            self._close_segment(seg)
         for object_id in owned:
             self._evict_entry(self._idx(object_id))

@@ -16,6 +16,7 @@ from typing import Any
 
 from repro.core.connector import BaseConnector, Key
 from repro.core.kv_tcp import KVClient, spawn_server
+from repro.core.serialize import join_frame
 
 
 class SocketConnector(BaseConnector):
@@ -56,18 +57,18 @@ class SocketConnector(BaseConnector):
         raise RuntimeError("could not attach to or spawn socket store server")
 
     # -- Connector ops --------------------------------------------------------
-    def put(self, blob: bytes) -> Key:
+    def put(self, blob) -> Key:
         object_id = uuid.uuid4().hex
-        self._client.put(object_id, blob)
+        self._client.put(object_id, blob)  # gather-write, no join copy
         return ("sock", self.discovery_dir, self.node_id, object_id)
 
     def put_batch(self, blobs) -> list[Key]:
         keys = [uuid.uuid4().hex for _ in blobs]
         self._client.request({"op": "mput", "keys": keys,
-                              "blobs": [bytes(b) for b in blobs]})
+                              "blobs": [join_frame(b) for b in blobs]})
         return [("sock", self.discovery_dir, self.node_id, k) for k in keys]
 
-    def get(self, key: Key) -> bytes | None:
+    def get(self, key: Key):
         return self._client_for(key).get(key[3])
 
     def get_batch(self, keys) -> list[bytes | None]:

@@ -43,7 +43,13 @@ def _spawn(module: str, args: list[str], ready_file: str,
            timeout: float = 30.0) -> tuple[subprocess.Popen, list[str]]:
     Path(ready_file).unlink(missing_ok=True)
     cmd = [sys.executable, "-m", module, *args, "--ready-file", ready_file]
-    proc = subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+    env = dict(os.environ)
+    # children must import repro even when the parent got it via sys.path
+    # manipulation (e.g. tests' conftest) rather than an installed package
+    src_dir = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src_dir, env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL,
                             stderr=subprocess.PIPE,
                             start_new_session=True)
     deadline = time.time() + timeout

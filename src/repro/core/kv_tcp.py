@@ -12,6 +12,16 @@ Requests:  {"op": put|get|exists|evict|mput|mget|ping|stats|shutdown,
             "key": str, "data": bytes, "keys": [...], "blobs": [...]}
 Responses: {"ok": bool, "data": ..., "error": str}
 
+Bulk ops carry the payload *out of band* so multi-segment frames never pay a
+join or msgpack copy:
+
+* ``put2``: header {"op": "put2", "key": k, "nbytes": n} followed by n raw
+  bytes on the stream — the client scatter-gathers frame segments straight
+  onto the socket (writev-style), the server reads them into one buffer.
+* ``get2``: response header {"ok": True, "raw": n} (-1 = missing) followed by
+  n raw bytes — the client receives into a preallocated buffer and returns a
+  writable memoryview, ready for zero-copy deserialization.
+
 The server is a single asyncio loop (as the paper's PS-endpoints are) — the
 Fig 8 benchmark reproduces the resulting linear scaling with client count.
 """
@@ -54,6 +64,12 @@ def write_frame_sync(sock: socket.socket, msg: dict) -> None:
     sock.sendall(_LEN.pack(len(body)) + body)
 
 
+def send_segments_sync(sock: socket.socket, segments) -> None:
+    """Gather-write raw payload segments (no user-space join)."""
+    for seg in segments:
+        sock.sendall(seg)
+
+
 def read_frame_sync(sock: socket.socket) -> dict:
     header = _recv_exact(sock, 4)
     (length,) = _LEN.unpack(header)
@@ -70,6 +86,14 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
         chunks.append(chunk)
         n -= len(chunk)
     return b"".join(chunks)
+
+
+def _recv_exact_into(sock: socket.socket, view: memoryview) -> None:
+    while view.nbytes:
+        n = sock.recv_into(view)
+        if not n:
+            raise ConnectionError("peer closed connection")
+        view = view[n:]
 
 
 # ---------------------------------------------------------------------------
@@ -139,11 +163,44 @@ class KVServer:
                 req = await read_frame(reader)
                 if req is None:
                     break
-                resp = self.handle(req)
+                op = req.get("op")
+                if op == "put2":
+                    # out-of-band payload: header first, then raw bytes
+                    nbytes = int(req["nbytes"])
+                    if nbytes > MAX_FRAME:
+                        # can't resync the stream without consuming the
+                        # payload; report the reason, then drop the conn
+                        body = msgpack.packb(
+                            {"ok": False,
+                             "error": f"payload too large: {nbytes}"},
+                            use_bin_type=True)
+                        writer.write(_LEN.pack(len(body)) + body)
+                        await writer.drain()
+                        break
+                    data = await reader.readexactly(nbytes) if nbytes else b""
+                    self._n_ops += 1
+                    try:
+                        self._put(req["key"], data)
+                        resp = {"ok": True}
+                    except Exception as e:  # noqa: BLE001 - surface to client
+                        resp = {"ok": False, "error": str(e)}
+                elif op == "get2":
+                    self._n_ops += 1
+                    data = self._data.get(req["key"])
+                    resp = {"ok": True,
+                            "raw": -1 if data is None else len(data)}
+                    body = msgpack.packb(resp, use_bin_type=True)
+                    writer.write(_LEN.pack(len(body)) + body)
+                    if data is not None:
+                        writer.write(data)
+                    await writer.drain()
+                    continue
+                else:
+                    resp = self.handle(req)
                 body = msgpack.packb(resp, use_bin_type=True)
                 writer.write(_LEN.pack(len(body)) + body)
                 await writer.drain()
-                if req.get("op") == "shutdown":
+                if op == "shutdown":
                     break
         finally:
             writer.close()
@@ -173,7 +230,11 @@ def spawn_server(*, host: str = "127.0.0.1", persist_dir: str | None = None,
     if persist_dir:
         cmd += ["--persist-dir", persist_dir]
     env = dict(os.environ)
-    env["PYTHONPATH"] = env.get("PYTHONPATH", "")
+    # the child must import repro even when the parent got it via sys.path
+    # manipulation (e.g. tests' conftest) rather than an installed package
+    src_dir = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src_dir, env.get("PYTHONPATH", "")) if p)
     proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL,
                             stderr=subprocess.DEVNULL,
                             start_new_session=True)
@@ -207,13 +268,30 @@ class KVClient:
             self._sock = s
         return self._sock
 
-    def request(self, msg: dict) -> dict:
+    def request(self, msg: dict, payload=None) -> dict:
+        """Send a framed request, optionally followed by raw payload segments.
+
+        If the response header carries ``raw`` (an out-of-band payload
+        length), the payload is received into a preallocated buffer and
+        returned as ``resp["data"]`` (a writable memoryview; None for -1).
+        """
         with self._lock:
             for attempt in (0, 1):
                 try:
                     sock = self._connect()
                     write_frame_sync(sock, msg)
-                    return read_frame_sync(sock)
+                    if payload is not None:
+                        send_segments_sync(sock, payload)
+                    resp = read_frame_sync(sock)
+                    nraw = resp.pop("raw", None)
+                    if nraw is not None:
+                        if nraw < 0:
+                            resp["data"] = None
+                        else:
+                            buf = bytearray(nraw)
+                            _recv_exact_into(sock, memoryview(buf))
+                            resp["data"] = memoryview(buf)
+                    return resp
                 except (ConnectionError, OSError):
                     self._drop()
                     if attempt:
@@ -233,13 +311,26 @@ class KVClient:
             self._drop()
 
     # convenience ops
-    def put(self, key: str, data: bytes) -> None:
-        resp = self.request({"op": "put", "key": key, "data": data})
+    def put(self, key: str, data) -> None:
+        """Store ``data`` (bytes | Frame | segment sequence) under ``key``.
+
+        Multi-segment frames are gather-written after the header — the
+        client never joins them into one bytes object.
+        """
+        from repro.core.serialize import as_segments, frame_nbytes
+
+        nbytes = frame_nbytes(data)
+        if nbytes > MAX_FRAME:
+            # fail before streaming gigabytes the server will reject
+            raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
+        resp = self.request({"op": "put2", "key": key, "nbytes": nbytes},
+                            payload=as_segments(data))
         if not resp["ok"]:
             raise RuntimeError(resp.get("error"))
 
-    def get(self, key: str) -> bytes | None:
-        resp = self.request({"op": "get", "key": key})
+    def get(self, key: str):
+        """Return the payload as a writable memoryview, or None."""
+        resp = self.request({"op": "get2", "key": key})
         return resp.get("data")
 
     def exists(self, key: str) -> bool:

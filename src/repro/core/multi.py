@@ -14,6 +14,7 @@ from typing import Any, Sequence
 
 from repro.core.connector import (BaseConnector, Connector, Key, import_path,
                                   resolve_import_path)
+from repro.core.serialize import frame_nbytes
 
 
 class NoConnectorMatch(RuntimeError):
@@ -55,7 +56,10 @@ class MultiConnector(BaseConnector):
                  Policy.from_dict(c["policy"]))
                 for c in _config
             ]
-        assert connectors
+        if not connectors:
+            raise ValueError(
+                "MultiConnector requires at least one (connector, policy) "
+                "pair — pass connectors=[...] or _config=[...]")
         self.children: list[tuple[Connector, Policy]] = list(connectors)
         # stable ids for key dispatch
         self._by_id = {i: conn for i, (conn, _) in enumerate(self.children)}
@@ -72,8 +76,8 @@ class MultiConnector(BaseConnector):
         return best[1], best[2]
 
     # -- ops -------------------------------------------------------------------
-    def put(self, blob: bytes, constraints: Sequence[str] = ()) -> Key:
-        idx, conn = self._route(len(blob), frozenset(constraints))
+    def put(self, blob, constraints: Sequence[str] = ()) -> Key:
+        idx, conn = self._route(frame_nbytes(blob), frozenset(constraints))
         sub = conn.put(blob)
         return ("multi", idx) + tuple(sub)
 
@@ -81,7 +85,7 @@ class MultiConnector(BaseConnector):
         # route per-blob but batch per-child
         routed: dict[int, list[int]] = {}
         for j, b in enumerate(blobs):
-            idx, _ = self._route(len(b), frozenset(constraints))
+            idx, _ = self._route(frame_nbytes(b), frozenset(constraints))
             routed.setdefault(idx, []).append(j)
         keys: list[Key] = [None] * len(blobs)  # type: ignore[list-item]
         for idx, js in routed.items():

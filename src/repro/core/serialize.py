@@ -5,33 +5,194 @@ dominant payloads are pytrees of device/numpy arrays (batches, parameter
 shards, gradients), so the serializer here:
 
 * encodes pytree structure + scalars/strings via msgpack (tuples preserved),
-* carries array buffers as raw bytes (no pickle round-trip),
-* supports bfloat16 (via ml_dtypes view tricks; numpy has no native bf16),
-* optionally compresses with zstd,
+* ships large array payloads *out of band* as zero-copy memoryviews,
+* supports bfloat16 / float8 extension dtypes (numpy has no native bf16),
+* optionally compresses with zstd — decided per buffer, not per frame,
 * falls back to pickle for arbitrary Python objects, preserving the paper's
   "any Python object" contract.
 
-Format: 4-byte magic ``PSJ1`` | 1-byte flags (bit0: zstd) | msgpack body.
+``zstandard`` is an *optional* dependency: without it frames are written
+uncompressed, and only reading a zstd-compressed frame raises.
+
+PSJ2 frame layout (``serialize`` returns a :class:`Frame` of segments; the
+wire image is their concatenation)::
+
+    offset 0   4     5          9           17
+           | "PSJ2" | flags u8 | nbuf u32 | body_len u64 |
+           | table: nbuf x (offset u64, stored u64, raw u64, bflags u64) |
+           | msgpack body (zstd-compressed iff flags bit0)               |
+           | pad to 64 B | buffer 0 | pad | buffer 1 | ... | buffer n-1  |
+
+* ``flags`` bit0: the msgpack body is zstd-compressed.
+* the table describes the out-of-band buffers: ``offset`` is from frame
+  start (64-byte aligned), ``stored`` is the on-wire byte count, ``raw``
+  the uncompressed byte count, ``bflags`` bit0 marks a zstd buffer.
+* the body is the pytree: structure, scalars and small arrays inline;
+  each large array is an ext record ``(dtype, shape, buffer_index)``.
+
+``deserialize`` accepts a contiguous received frame (``bytes`` /
+``bytearray`` / ``memoryview``) or a :class:`Frame` and returns arrays that
+are zero-copy views over the input for uncompressed buffers — a round trip
+performs no payload copies for contiguous arrays.
+
+Legacy format: 4-byte magic ``PSJ1`` | 1-byte flags (bit0: zstd) | msgpack
+body with arrays inline.  PSJ1 frames still deserialize (magic-dispatched)
+so persisted objects survive the upgrade; ``serialize_v1`` keeps producing
+them for compatibility tests.
 """
 from __future__ import annotations
 
 import pickle
-from typing import Any
+import struct
+from typing import Any, Iterator, Sequence
 
 import msgpack
 import numpy as np
-import zstandard
 
-_MAGIC = b"PSJ1"
-_FLAG_ZSTD = 0x01
+_MAGIC_V1 = b"PSJ1"
+_MAGIC_V2 = b"PSJ2"
+_FLAG_ZSTD = 0x01           # frame flags bit0 (PSJ1: whole body; PSJ2: body)
+_BUF_ZSTD = 0x01            # per-buffer flags bit0
 
 _EXT_ARRAY = 1
 _EXT_PICKLE = 2
 _EXT_BFLOAT16 = 3
 _EXT_TUPLE = 4
 _EXT_SET = 5
+_EXT_NDBUF = 6              # out-of-band array: (dtype, shape, buffer_index)
 
 _DEFAULT_LEVEL = 3
+_ALIGN = 64                 # out-of-band buffers are 64-byte aligned
+_OOB_MIN = 512              # arrays below this ride inline in the body
+_BODY_ZSTD_MIN = 16 * 1024  # auto-compress bodies larger than this
+_BUF_ZSTD_MIN = 16 * 1024   # never compress buffers smaller than this
+_SAMPLE_BYTES = 64 * 1024   # compressibility probe size
+_SAMPLE_RATIO = 0.9         # probe must beat this ratio to compress
+
+_HEADER = struct.Struct(">4sBIQ")    # magic | flags | nbuf | body_len
+_TABLE = struct.Struct(">QQQQ")      # offset | stored | raw | bflags
+
+_UINT_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+# ---------------------------------------------------------------------------
+# optional zstd
+# ---------------------------------------------------------------------------
+_UNSET = object()
+_zstd: Any = _UNSET
+
+
+def _get_zstd():
+    """Lazy optional import.  Returns the module or None when unavailable."""
+    global _zstd
+    if _zstd is _UNSET:
+        try:
+            import zstandard
+            _zstd = zstandard
+        except ImportError:
+            _zstd = None
+    return _zstd
+
+
+def _require_zstd():
+    z = _get_zstd()
+    if z is None:
+        raise RuntimeError(
+            "this frame is zstd-compressed but the optional dependency "
+            "'zstandard' is not installed; run `pip install zstandard` to "
+            "read it (new frames are written uncompressed without it)")
+    return z
+
+
+# ---------------------------------------------------------------------------
+# the multi-segment frame
+# ---------------------------------------------------------------------------
+class Frame:
+    """A serialized object as a gather list of memoryview segments.
+
+    ``segments`` concatenated are the wire image; connectors may write them
+    with scatter-gather I/O instead of joining.  Payload segments alias the
+    source arrays' memory — no ``tobytes()`` copies are made.  ``nbytes`` is
+    the total wire size (``len()`` is deliberately not defined: a Frame is a
+    segment sequence, not a byte string).
+    """
+
+    __slots__ = ("segments", "nbytes", "_flags", "_table", "_body", "_buffers")
+
+    def __init__(self, segments: list, flags: int, table: list, body,
+                 buffers: list) -> None:
+        self.segments = segments
+        self.nbytes = sum(memoryview(s).nbytes for s in segments)
+        self._flags = flags          # frame flags (body compression)
+        self._table = table          # [(offset, stored, raw, bflags), ...]
+        self._body = body            # stored (possibly compressed) body
+        self._buffers = buffers      # stored out-of-band segments, in order
+
+    def __iter__(self) -> Iterator:
+        return iter(self.segments)
+
+    def __bytes__(self) -> bytes:
+        return b"".join(self.segments)
+
+    def to_bytes(self) -> bytes:
+        return bytes(self)
+
+
+def as_segments(blob) -> list:
+    """Normalize ``bytes | Frame | Sequence[memoryview]`` to a segment list."""
+    if isinstance(blob, Frame):
+        return blob.segments
+    if isinstance(blob, (bytes, bytearray, memoryview)):
+        return [blob]
+    return list(blob)
+
+
+def frame_nbytes(blob) -> int:
+    """Total wire size of ``bytes | Frame | Sequence[memoryview]``."""
+    if isinstance(blob, Frame):
+        return blob.nbytes
+    if isinstance(blob, (bytes, bytearray, memoryview)):
+        return memoryview(blob).nbytes
+    return sum(memoryview(s).nbytes for s in blob)
+
+
+def join_frame(blob) -> bytes:
+    """Contiguous wire image (the copy connectors without scatter-gather pay)."""
+    if isinstance(blob, bytes):
+        return blob
+    return b"".join(as_segments(blob))
+
+
+# ---------------------------------------------------------------------------
+# shared helpers (inline array packing, both formats)
+# ---------------------------------------------------------------------------
+def _raw_view(a: np.ndarray) -> memoryview:
+    """Flat byte view of a C-contiguous array, incl. extension dtypes that
+    do not export the buffer protocol (bfloat16, float8_*)."""
+    try:
+        return a.data.cast("B")
+    except (ValueError, BufferError, TypeError):
+        return a.view(_UINT_VIEW[a.dtype.itemsize]).data.cast("B")
+
+
+def _dtype_name(a: np.ndarray) -> str:
+    return a.dtype.str if _is_std_dtype(a.dtype) else str(a.dtype)
+
+
+def _is_std_dtype(dtype: np.dtype) -> bool:
+    try:
+        return np.dtype(dtype.str) == dtype
+    except TypeError:
+        return False
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def _pack_array(a: np.ndarray) -> msgpack.ExtType:
@@ -41,45 +202,13 @@ def _pack_array(a: np.ndarray) -> msgpack.ExtType:
     return msgpack.ExtType(_EXT_ARRAY, header + a.tobytes())
 
 
-def _default(obj: Any):
-    # Proxies serialize as their factory, NEVER as the (possibly unresolved)
-    # target — checked before array duck-typing, which would resolve them.
-    from repro.core.proxy import is_proxy
-
-    if is_proxy(obj):
-        return msgpack.ExtType(_EXT_PICKLE, pickle.dumps(obj, protocol=5))
-    if isinstance(obj, tuple):
-        return msgpack.ExtType(
-            _EXT_TUPLE, msgpack.packb(list(obj), default=_default, strict_types=True)
-        )
-    if isinstance(obj, (set, frozenset)):
-        return msgpack.ExtType(
-            _EXT_SET, msgpack.packb(sorted(obj), default=_default, strict_types=True)
-        )
-    if isinstance(obj, np.ndarray):
-        if obj.dtype.hasobject:
-            return msgpack.ExtType(_EXT_PICKLE, pickle.dumps(obj, protocol=5))
-        return _pack_any_array(obj)
-    if isinstance(obj, np.generic):
-        return _pack_any_array(np.asarray(obj))
-    # jax.Array and other ndarray-likes (duck-typed; avoids importing jax in
-    # host-only processes such as connector servers).
-    if hasattr(obj, "__array__") and hasattr(obj, "dtype") and hasattr(obj, "shape"):
-        a = np.asarray(obj)  # for bf16 jax arrays this yields ml_dtypes.bfloat16
-        if a.dtype.hasobject:
-            return msgpack.ExtType(_EXT_PICKLE, pickle.dumps(obj, protocol=5))
-        return _pack_any_array(a)
-    return msgpack.ExtType(_EXT_PICKLE, pickle.dumps(obj, protocol=5))
-
-
-def _pack_any_array(a: np.ndarray) -> msgpack.ExtType:
-    """Handles extension dtypes (bfloat16, float8_*) whose dtype.str is
-    an opaque void code — shipped as uint-views tagged with the dtype name."""
-    if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+def _pack_any_array_inline(a: np.ndarray) -> msgpack.ExtType:
+    """Inline packing for small / PSJ1 arrays.  Extension dtypes (bfloat16,
+    float8_*) have a dtype.str numpy cannot re-parse — shipped as uint views
+    tagged with the dtype name."""
+    if not _is_std_dtype(a.dtype):
         name = str(a.dtype)
-        itemsize = a.dtype.itemsize
-        view = np.ascontiguousarray(a).view({1: np.uint8, 2: np.uint16,
-                                             4: np.uint32}[itemsize])
+        view = np.ascontiguousarray(a).view(_UINT_VIEW[a.dtype.itemsize])
         header = msgpack.packb([name, list(a.shape)])
         return msgpack.ExtType(_EXT_BFLOAT16, header + view.tobytes())
     return _pack_array(a)
@@ -93,6 +222,7 @@ def _split_header(data: bytes):
 
 
 def _ext_hook(code: int, data: bytes):
+    """Ext decoding shared by PSJ1 and the inline part of PSJ2 bodies."""
     if code == _EXT_ARRAY:
         (dtype_str, shape), offset = _split_header(data)
         arr = np.frombuffer(data, dtype=np.dtype(dtype_str), offset=offset)
@@ -102,7 +232,7 @@ def _ext_hook(code: int, data: bytes):
         import ml_dtypes
 
         dtype = np.dtype(getattr(ml_dtypes, name))
-        uview = {1: np.uint8, 2: np.uint16, 4: np.uint32}[dtype.itemsize]
+        uview = _UINT_VIEW[dtype.itemsize]
         raw = np.frombuffer(data, dtype=uview, offset=offset).reshape(shape)
         return raw.view(dtype).copy()
     if code == _EXT_TUPLE:
@@ -116,31 +246,233 @@ def _ext_hook(code: int, data: bytes):
     raise ValueError(f"unknown ext type {code}")
 
 
-def serialize(obj: Any, *, compress: bool | None = None,
-              level: int = _DEFAULT_LEVEL) -> bytes:
-    """Serialize ``obj`` to bytes.
+# ---------------------------------------------------------------------------
+# PSJ2 encoding
+# ---------------------------------------------------------------------------
+class _FrameEncoder:
+    """msgpack default hook that siphons large arrays out of band."""
 
-    ``compress=None`` (default) compresses only when the body exceeds 16 KiB —
-    small control messages are latency-sensitive, bulk tensors are
-    bandwidth-sensitive (paper §4: channel choice depends on object size).
+    def __init__(self) -> None:
+        self.buffers: list[memoryview] = []  # raw (uncompressed) views
+
+    def _oob(self, a: np.ndarray) -> msgpack.ExtType:
+        if not a.flags.c_contiguous:
+            a = np.ascontiguousarray(a)
+        index = len(self.buffers)
+        self.buffers.append(_raw_view(a))  # memoryview keeps `a` alive
+        meta = msgpack.packb([_dtype_name(a), list(a.shape), index])
+        return msgpack.ExtType(_EXT_NDBUF, meta)
+
+    def _array(self, a: np.ndarray) -> msgpack.ExtType:
+        if a.nbytes >= _OOB_MIN:
+            return self._oob(a)
+        return _pack_any_array_inline(a)
+
+    def default(self, obj: Any):
+        # Proxies serialize as their factory, NEVER as the (possibly
+        # unresolved) target — checked before array duck-typing, which would
+        # resolve them.
+        from repro.core.proxy import is_proxy
+
+        if is_proxy(obj):
+            return msgpack.ExtType(_EXT_PICKLE, pickle.dumps(obj, protocol=5))
+        if isinstance(obj, tuple):
+            return msgpack.ExtType(
+                _EXT_TUPLE,
+                msgpack.packb(list(obj), default=self.default,
+                              strict_types=True))
+        if isinstance(obj, (set, frozenset)):
+            return msgpack.ExtType(
+                _EXT_SET,
+                msgpack.packb(sorted(obj), default=self.default,
+                              strict_types=True))
+        if isinstance(obj, np.ndarray):
+            if obj.dtype.hasobject:
+                return msgpack.ExtType(_EXT_PICKLE,
+                                       pickle.dumps(obj, protocol=5))
+            return self._array(obj)
+        if isinstance(obj, np.generic):
+            return self._array(np.asarray(obj))
+        # jax.Array and other ndarray-likes (duck-typed; avoids importing jax
+        # in host-only processes such as connector servers).
+        if hasattr(obj, "__array__") and hasattr(obj, "dtype") \
+                and hasattr(obj, "shape"):
+            a = np.asarray(obj)  # bf16 jax arrays yield ml_dtypes.bfloat16
+            if a.dtype.hasobject:
+                return msgpack.ExtType(_EXT_PICKLE,
+                                       pickle.dumps(obj, protocol=5))
+            return self._array(a)
+        return msgpack.ExtType(_EXT_PICKLE, pickle.dumps(obj, protocol=5))
+
+
+def _compressible(view: memoryview, z, level: int) -> bool:
+    """Probe the head of the buffer: already-compressed / random tensors
+    (the common case for trained weights and fp payloads) stay raw."""
+    sample = view[:_SAMPLE_BYTES] if view.nbytes > _SAMPLE_BYTES else view
+    probe = z.ZstdCompressor(level=level).compress(sample)
+    return len(probe) < _SAMPLE_RATIO * sample.nbytes
+
+
+def _pad(n: int) -> int:
+    return -n % _ALIGN
+
+
+def serialize(obj: Any, *, compress: bool | None = None,
+              level: int = _DEFAULT_LEVEL) -> Frame:
+    """Serialize ``obj`` to a PSJ2 :class:`Frame` (gather list of segments).
+
+    ``compress=None`` (default) decides *per buffer*: only buffers over 16 KiB
+    whose head actually compresses are zstd'd; the msgpack body is compressed
+    over 16 KiB.  ``compress=True`` forces a compression attempt on every
+    buffer (kept only when smaller), ``compress=False`` disables it.  Without
+    the optional ``zstandard`` package frames are always uncompressed.
     """
-    body = msgpack.packb(obj, default=_default, use_bin_type=True,
+    enc = _FrameEncoder()
+    body = msgpack.packb(obj, default=enc.default, use_bin_type=True,
+                         strict_types=True)
+    z = None if compress is False else _get_zstd()
+    flags = 0
+    if z is not None and (compress or
+                          (compress is None and len(body) > _BODY_ZSTD_MIN)):
+        body = z.ZstdCompressor(level=level).compress(body)
+        flags |= _FLAG_ZSTD
+
+    stored: list[tuple[Any, int, int]] = []  # (segment, raw_len, bflags)
+    for view in enc.buffers:
+        raw_len = view.nbytes
+        seg: Any = view
+        bflags = 0
+        if z is not None and raw_len and (
+                compress is True or
+                (raw_len >= _BUF_ZSTD_MIN and _compressible(view, z, level))):
+            packed = z.ZstdCompressor(level=level).compress(view)
+            if len(packed) < raw_len:
+                seg, bflags = packed, _BUF_ZSTD
+        stored.append((seg, raw_len, bflags))
+
+    nbuf = len(stored)
+    header_len = _HEADER.size + _TABLE.size * nbuf
+    pos = header_len + len(body)
+    table: list[tuple[int, int, int, int]] = []
+    layout: list[tuple[int, Any]] = []       # (pad_before, segment)
+    for seg, raw_len, bflags in stored:
+        pad = _pad(pos)
+        offset = pos + pad
+        stored_len = memoryview(seg).nbytes
+        table.append((offset, stored_len, raw_len, bflags))
+        layout.append((pad, seg))
+        pos = offset + stored_len
+
+    head = bytearray(_HEADER.pack(_MAGIC_V2, flags, nbuf, len(body)))
+    for entry in table:
+        head += _TABLE.pack(*entry)
+    segments: list[Any] = [memoryview(bytes(head)), memoryview(body)]
+    for pad, seg in layout:
+        if pad:
+            segments.append(memoryview(b"\x00" * pad))
+        segments.append(memoryview(seg) if not isinstance(seg, memoryview)
+                        else seg)
+    return Frame(segments, flags, table, body,
+                 [memoryview(s) for s, _, _ in stored])
+
+
+def serialize_v1(obj: Any, *, compress: bool | None = None,
+                 level: int = _DEFAULT_LEVEL) -> bytes:
+    """Legacy single-``bytes`` PSJ1 frame (arrays inline, whole-frame zstd).
+
+    Kept for backward-compat tests and for peers that predate PSJ2; new code
+    should use :func:`serialize`.
+    """
+    enc = _FrameEncoder()
+    enc._array = _pack_any_array_inline  # type: ignore[assignment] # no OOB
+    body = msgpack.packb(obj, default=enc.default, use_bin_type=True,
                          strict_types=True)
     if compress is None:
-        compress = len(body) > 16 * 1024
+        compress = len(body) > _BODY_ZSTD_MIN
     flags = 0
     if compress:
-        body = zstandard.ZstdCompressor(level=level).compress(body)
-        flags |= _FLAG_ZSTD
-    return _MAGIC + bytes([flags]) + body
+        z = _get_zstd()
+        if z is not None:
+            body = z.ZstdCompressor(level=level).compress(body)
+            flags |= _FLAG_ZSTD
+    return _MAGIC_V1 + bytes([flags]) + body
 
 
-def deserialize(data: bytes) -> Any:
-    if bytes(data[:4]) != _MAGIC:
-        raise ValueError("not a repro-serialized payload (bad magic)")
-    flags = data[4]
-    body = data[5:]
+# ---------------------------------------------------------------------------
+# decoding
+# ---------------------------------------------------------------------------
+def _array_from_buffer(buf, name: str, shape) -> np.ndarray:
+    dtype = _resolve_dtype(name)
+    return np.frombuffer(buf, dtype=dtype).reshape(shape)
+
+
+def _decode_v2(flags: int, table, body, buffers) -> Any:
     if flags & _FLAG_ZSTD:
-        body = zstandard.ZstdDecompressor().decompress(body)
+        body = _require_zstd().ZstdDecompressor().decompress(bytes(body))
+    resolved: list[Any] = []
+    for (offset, stored_len, raw_len, bflags), seg in zip(table, buffers):
+        if bflags & _BUF_ZSTD:
+            raw = _require_zstd().ZstdDecompressor().decompress(
+                bytes(seg), max_output_size=raw_len)
+            resolved.append(raw)
+        else:
+            resolved.append(seg)
+
+    def hook(code: int, data: bytes):
+        if code == _EXT_NDBUF:
+            name, shape, index = msgpack.unpackb(data, raw=False)
+            return _array_from_buffer(resolved[index], name, shape)
+        return _ext_hook(code, data)
+
+    return msgpack.unpackb(body, ext_hook=hook, raw=False,
+                           strict_map_key=False)
+
+
+def _decode_v1(mv: memoryview) -> Any:
+    flags = mv[4]
+    body = mv[5:]
+    if flags & _FLAG_ZSTD:
+        body = _require_zstd().ZstdDecompressor().decompress(bytes(body))
     return msgpack.unpackb(body, ext_hook=_ext_hook, raw=False,
                            strict_map_key=False)
+
+
+def deserialize(data) -> Any:
+    """Decode a PSJ1/PSJ2 frame.
+
+    Accepts the contiguous wire image (``bytes``/``bytearray``/``memoryview``
+    — e.g. a connector ``get`` result) or a :class:`Frame`.  For PSJ2,
+    uncompressed array payloads come back as zero-copy views over the input
+    buffer (read-only iff the input is); callers that need writable arrays
+    copy explicitly.
+    """
+    if isinstance(data, Frame):
+        return _decode_v2(data._flags, data._table, data._body, data._buffers)
+    if not isinstance(data, (bytes, bytearray, memoryview)):
+        data = join_frame(data)  # generic segment sequences: one gather copy
+    mv = memoryview(data).cast("B")
+    magic = bytes(mv[:4])
+    if magic == _MAGIC_V1:
+        return _decode_v1(mv)
+    if magic != _MAGIC_V2:
+        raise ValueError("not a repro-serialized payload (bad magic)")
+    if mv.nbytes < _HEADER.size:
+        raise ValueError(
+            f"truncated PSJ2 frame: need {_HEADER.size} header bytes, "
+            f"got {mv.nbytes}")
+    _, flags, nbuf, body_len = _HEADER.unpack_from(mv, 0)
+    if mv.nbytes < _HEADER.size + _TABLE.size * nbuf:
+        raise ValueError(
+            f"truncated PSJ2 frame: table for {nbuf} buffers exceeds "
+            f"{mv.nbytes} bytes")
+    table = [_TABLE.unpack_from(mv, _HEADER.size + _TABLE.size * i)
+             for i in range(nbuf)]
+    body_off = _HEADER.size + _TABLE.size * nbuf
+    frame_end = max([body_off + body_len] +
+                    [off + stored for off, stored, _, _ in table])
+    if frame_end > mv.nbytes:
+        raise ValueError(
+            f"truncated PSJ2 frame: need {frame_end} bytes, got {mv.nbytes}")
+    body = mv[body_off:body_off + body_len]
+    buffers = [mv[off:off + stored] for off, stored, _, _ in table]
+    return _decode_v2(flags, table, body, buffers)

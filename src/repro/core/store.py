@@ -22,7 +22,7 @@ from typing import Any, Callable, Sequence
 from repro.core.connector import (Connector, Key, import_path,
                                   resolve_import_path)
 from repro.core.proxy import Proxy, get_factory, is_proxy
-from repro.core.serialize import deserialize, serialize
+from repro.core.serialize import deserialize, frame_nbytes, serialize
 
 _REGISTRY: dict[str, "Store"] = {}
 _REGISTRY_LOCK = threading.RLock()
@@ -251,8 +251,11 @@ def maybe_proxy(store: Store, obj: Any, threshold_bytes: int = 0) -> Any:
     """
     if is_proxy(obj):
         return obj
-    blob = serialize(obj)
-    if len(blob) < threshold_bytes:
+    # The store's *configured* serializer decides size and produces the
+    # stored blob — a custom serializer= must see the same bytes its
+    # deserializer= will get back, and we serialize exactly once.
+    blob = store._serialize(obj)
+    if frame_nbytes(blob) < threshold_bytes:
         return obj
     key = store.connector.put(blob)
     return store.proxy_from_key(key)

@@ -87,6 +87,6 @@ class Compressor:
 
     @staticmethod
     def payload_bytes(payload) -> int:
-        from repro.core import serialize
+        from repro.core import frame_nbytes, serialize
 
-        return len(serialize(payload))
+        return frame_nbytes(serialize(payload))

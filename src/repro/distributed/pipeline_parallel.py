@@ -15,7 +15,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+try:  # jax >= 0.5 exports shard_map at top level
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 
 
 def pipeline_apply(mesh: Mesh, stage_fn, stage_params, x,
@@ -59,8 +62,13 @@ def pipeline_apply(mesh: Mesh, stage_fn, stage_params, x,
         return out
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return shard_map(pp, mesh=mesh, in_specs=(pspec, P()), out_specs=P(),
-                     check_vma=False)(stage_params, x)
+    try:
+        wrapped = shard_map(pp, mesh=mesh, in_specs=(pspec, P()),
+                            out_specs=P(), check_vma=False)
+    except TypeError:  # jax 0.4.x spells the flag check_rep
+        wrapped = shard_map(pp, mesh=mesh, in_specs=(pspec, P()),
+                            out_specs=P(), check_rep=False)
+    return wrapped(stage_params, x)
 
 
 def _selftest() -> None:
@@ -68,8 +76,9 @@ def _selftest() -> None:
 
     assert os.environ.get("XLA_FLAGS", "").find("device_count") >= 0, \
         "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4,), ("stage",))
     key = jax.random.key(0)
     d = 16
     w = jax.random.normal(key, (4, d, d)) * 0.3  # one matrix per stage

@@ -17,7 +17,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from repro.core import Store, serialize
+from repro.core import Store, frame_nbytes, serialize
 from repro.core.proxy import extract, is_proxy
 from repro.core.store import maybe_proxy
 
@@ -45,11 +45,11 @@ class TaskServer:
         """Everything passing the server pays serialization + bandwidth —
         twice (into and out of the engine process), as in the hub-spoke
         Parsl/Colmena data path the paper measures (§5.2)."""
-        blob = serialize(obj)
+        nbytes = frame_nbytes(serialize(obj))
         with self._lock:
-            self.bytes_moved += len(blob)
+            self.bytes_moved += nbytes
         time.sleep(self.cfg.server_latency_s
-                   + 2 * len(blob) / self.cfg.server_bandwidth_bps)
+                   + 2 * nbytes / self.cfg.server_bandwidth_bps)
         return obj
 
     def submit(self, fn: Callable, arg: Any) -> None:

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 spells it TPUCompilerParams; >= 0.5 renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -1e30
 
 
@@ -100,7 +104,7 @@ def decode_attention(q, k_cache, v_cache, length, *, block_s=256,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(length, jnp.int32)[None], qg, k_cache, v_cache)

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 spells it TPUCompilerParams; >= 0.5 renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(x_ref, dta_ref, b_ref, c_ref, y_ref, state_sc, *, chunk):
     ci = pl.program_id(2)
@@ -95,7 +99,7 @@ def ssd_scan(x, dt, a_log, b, c, *, chunk=128, interpret=True):
                                lambda bi, hi, ci: (bi, ci, hi, 0)),
         out_shape=jax.ShapeDtypeStruct((bs, l, h, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xdt, dta, b, c)

@@ -88,9 +88,10 @@ class ProxyCheckpointManager:
             "save_s": None,
         }
         manifest["save_s"] = round(time.time() - t0, 3)
-        blob = serialize(manifest)
         tmp = self.dir / f".ckpt_{step:08d}.tmp"
-        tmp.write_bytes(blob)
+        with open(tmp, "wb") as f:
+            for seg in serialize(manifest):
+                f.write(seg)
         tmp.replace(self.dir / f"ckpt_{step:08d}.manifest")
         latest = self.dir / ".latest.tmp"
         latest.write_text(json.dumps({"step": int(step)}))

@@ -4,6 +4,8 @@ import sys
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see ONE
 # device; only launch/dryrun.py (a separate process) forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so the benchmark smoke tests can import the benchmarks package
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import pytest
 

@@ -1,0 +1,25 @@
+"""Smoke-run the paper-figure benchmarks at tiny sizes.
+
+The Fig 5/6 scripts exercise the serializer + every in-memory connector end
+to end; running them here means serializer/connector API drift breaks tier-1
+loudly instead of silently rotting the paper figures.
+"""
+import benchmarks.fig5_faas_rtt as fig5
+import benchmarks.fig6_inmemory as fig6
+from benchmarks.util import time_call
+
+
+def _fast_time_call(fn, *, reps=1, warmup=0):
+    return time_call(fn, reps=1, warmup=0)
+
+
+def test_fig6_smoke(monkeypatch):
+    monkeypatch.setattr(fig6, "SIZES", [10_000])
+    monkeypatch.setattr(fig6, "time_call", _fast_time_call)
+    fig6.run()
+
+
+def test_fig5_smoke(monkeypatch):
+    monkeypatch.setattr(fig5, "SIZES", [10_000])
+    monkeypatch.setattr(fig5, "time_call", _fast_time_call)
+    fig5.run()

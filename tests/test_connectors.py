@@ -3,7 +3,12 @@ import os
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional: property tests only run when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import MultiConnector, NoConnectorMatch, Policy
 from repro.core.connectors import (FileConnector, GlobusConnector,
@@ -118,22 +123,52 @@ def test_multiconnector_routing(tmp_path):
     assert clone.get(keys[1]) == b"x" * 5000
 
 
-@settings(max_examples=30, deadline=None)
-@given(size=st.integers(min_value=0, max_value=20_000),
-       constraints=st.sets(st.sampled_from(["local", "persistent"]),
-                           max_size=2))
-def test_property_multi_policy_invariant(tmp_path_factory, size, constraints):
-    """Whatever is stored is retrievable, and the chosen child satisfies
-    every constraint and the size bounds of its policy."""
-    tmp = tmp_path_factory.mktemp("multi")
-    policies = [Policy(max_size=1000, priority=5, tags=frozenset({"local"})),
-                Policy(priority=1, tags=frozenset({"local", "persistent"}))]
+def test_multiconnector_empty_raises():
+    """No children must be a loud ValueError, not an -O-strippable assert."""
+    with pytest.raises(ValueError, match="at least one"):
+        MultiConnector([])
+    with pytest.raises(ValueError, match="at least one"):
+        MultiConnector(None)
+    with pytest.raises(ValueError, match="at least one"):
+        MultiConnector()
+
+
+def test_multiconnector_routes_frames(tmp_path):
+    """Policy routing sees the frame's wire size, not its segment count."""
+    import numpy as np
+
+    from repro.core import deserialize, serialize
+
     mc = MultiConnector([
-        (LocalMemoryConnector(), policies[0]),
-        (FileConnector(str(tmp / "f")), policies[1]),
+        (LocalMemoryConnector(), Policy(max_size=1000, priority=10)),
+        (FileConnector(str(tmp_path / "f")), Policy(priority=0)),
     ])
-    blob = b"z" * size
-    key = mc.put(blob, constraints=sorted(constraints))
-    chosen = policies[key[1]]
-    assert chosen.accepts(len(blob), frozenset(constraints))
-    assert mc.get(key) == blob
+    big = np.random.default_rng(0).standard_normal(10_000).astype(np.float32)
+    key = mc.put(serialize(big))
+    assert key[1] == 1                       # 40 KB frame -> file child
+    np.testing.assert_array_equal(deserialize(mc.get(key)), big)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(size=st.integers(min_value=0, max_value=20_000),
+           constraints=st.sets(st.sampled_from(["local", "persistent"]),
+                               max_size=2))
+    def test_property_multi_policy_invariant(tmp_path_factory, size,
+                                             constraints):
+        """Whatever is stored is retrievable, and the chosen child satisfies
+        every constraint and the size bounds of its policy."""
+        tmp = tmp_path_factory.mktemp("multi")
+        policies = [Policy(max_size=1000, priority=5,
+                           tags=frozenset({"local"})),
+                    Policy(priority=1, tags=frozenset({"local",
+                                                       "persistent"}))]
+        mc = MultiConnector([
+            (LocalMemoryConnector(), policies[0]),
+            (FileConnector(str(tmp / "f")), policies[1]),
+        ])
+        blob = b"z" * size
+        key = mc.put(blob, constraints=sorted(constraints))
+        chosen = policies[key[1]]
+        assert chosen.accepts(len(blob), frozenset(constraints))
+        assert mc.get(key) == blob

@@ -3,7 +3,12 @@ import pickle
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional: property tests only run when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (Proxy, ProxyResolveError, extract, get_factory,
                         is_proxy, is_resolved, resolve)
@@ -120,19 +125,20 @@ def test_extract_resolve_helpers():
     assert is_proxy(p) and not is_proxy("hello")
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.one_of(
-    st.integers(min_value=-10**6, max_value=10**6),
-    st.floats(allow_nan=False, allow_infinity=False, width=32),
-    st.text(max_size=40),
-    st.lists(st.integers(), max_size=10),
-    st.dictionaries(st.text(max_size=5), st.integers(), max_size=5),
-))
-def test_property_proxy_equals_target(value):
-    p = Proxy(lambda: value)
-    assert p == value
-    assert isinstance(p, type(value))
-    if hasattr(value, "__len__"):
-        assert len(p) == len(value)
-    assert repr(p) == repr(value)
-    assert str(p) == str(value)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.one_of(
+        st.integers(min_value=-10**6, max_value=10**6),
+        st.floats(allow_nan=False, allow_infinity=False, width=32),
+        st.text(max_size=40),
+        st.lists(st.integers(), max_size=10),
+        st.dictionaries(st.text(max_size=5), st.integers(), max_size=5),
+    ))
+    def test_property_proxy_equals_target(value):
+        p = Proxy(lambda: value)
+        assert p == value
+        assert isinstance(p, type(value))
+        if hasattr(value, "__len__"):
+            assert len(p) == len(value)
+        assert repr(p) == repr(value)
+        assert str(p) == str(value)

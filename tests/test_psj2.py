@@ -1,0 +1,274 @@
+"""PSJ2 multi-buffer frame format: zero-copy, dtypes, compat, compression.
+
+The container may not have ``zstandard`` installed, so the compression
+pathways are exercised against a zlib-backed stand-in monkeypatched into the
+serializer's lazy-import slot — the same code paths run either way.
+"""
+import importlib
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import (Frame, Store, deserialize, frame_nbytes, join_frame,
+                        maybe_proxy, serialize, serialize_v1)
+from repro.core.connectors import LocalMemoryConnector
+
+S = importlib.import_module("repro.core.serialize")
+
+
+# ---------------------------------------------------------------------------
+# zero-copy guarantees
+# ---------------------------------------------------------------------------
+def test_serialize_is_zero_copy_for_large_contiguous_arrays():
+    x = np.random.default_rng(0).standard_normal(64 * 1024 // 4) \
+        .astype(np.float32)                       # 64 KiB, incompressible
+    f = serialize({"w": x})
+    # the payload segment aliases the array's own memory
+    assert any(np.shares_memory(np.frombuffer(seg, np.uint8), x)
+               for seg in f.segments if seg.nbytes == x.nbytes)
+    # frame-path round trip: the output views the input array
+    out = deserialize(f)["w"]
+    np.testing.assert_array_equal(out, x)
+    assert np.shares_memory(out, x)
+
+
+def test_deserialize_is_zero_copy_over_received_frame():
+    x = np.random.default_rng(1).standard_normal(100_000).astype(np.float32)
+    wire = bytes(serialize(x))                    # the "received" frame
+    out = deserialize(wire)
+    np.testing.assert_array_equal(out, x)
+    assert np.shares_memory(out, np.frombuffer(wire, np.uint8))
+    assert not out.flags.writeable                # views of bytes: read-only
+    # writable input -> writable zero-copy views
+    out2 = deserialize(memoryview(bytearray(wire)))
+    assert out2.flags.writeable
+    np.testing.assert_array_equal(out2, x)
+
+
+def test_buffers_are_64_byte_aligned():
+    f = serialize([np.zeros(1000, np.float32), np.ones(2000, np.float64)])
+    wire = bytes(f)
+    nbuf = S._HEADER.unpack_from(wire, 0)[2]
+    assert nbuf == 2
+    for i in range(nbuf):
+        offset = S._TABLE.unpack_from(wire, S._HEADER.size + 32 * i)[0]
+        assert offset % 64 == 0
+
+
+def test_small_arrays_ride_inline():
+    f = serialize(np.arange(8))                   # < 512 B: no OOB buffer
+    assert S._HEADER.unpack_from(bytes(f), 0)[2] == 0
+    out = deserialize(f)
+    np.testing.assert_array_equal(out, np.arange(8))
+    assert out.flags.writeable                    # inline arrays own memory
+
+
+# ---------------------------------------------------------------------------
+# round-trip matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype_name", ["bfloat16", "float8_e4m3fn",
+                                        "float8_e5m2"])
+@pytest.mark.parametrize("n", [16, 4096])         # inline and out-of-band
+def test_extension_dtypes(dtype_name, n):
+    import ml_dtypes
+
+    dtype = getattr(ml_dtypes, dtype_name)
+    x = np.linspace(0, 1, n).astype(dtype).reshape(4, -1)
+    for wire in (serialize(x), bytes(serialize(x)), serialize_v1(x)):
+        out = deserialize(wire)
+        assert str(out.dtype) == dtype_name and out.shape == x.shape
+        np.testing.assert_array_equal(out.astype(np.float32),
+                                      x.astype(np.float32))
+
+
+def test_non_contiguous_arrays():
+    base = np.arange(40_000, dtype=np.float32).reshape(200, 200)
+    views = [base[::2, ::3], base.T, base[5:190, 7:]]
+    for v in views:
+        assert not v.flags.c_contiguous
+        out = deserialize(bytes(serialize(v)))
+        np.testing.assert_array_equal(out, v)
+
+
+def test_fortran_order_and_zero_size():
+    f_ord = np.asfortranarray(np.arange(10_000, dtype=np.float64)
+                              .reshape(100, 100))
+    np.testing.assert_array_equal(deserialize(serialize(f_ord)), f_ord)
+    empty = np.zeros((0, 7), np.float32)
+    out = deserialize(bytes(serialize(empty)))
+    assert out.shape == (0, 7) and out.dtype == np.float32
+
+
+def test_proxies_nested_in_pytrees():
+    from functools import partial
+
+    from repro.core import Proxy, is_proxy, is_resolved
+
+    big = np.random.default_rng(2).standard_normal(50_000).astype(np.float32)
+    p = Proxy(partial(int, 41))
+    tree = {"a": [big, {"p": p}], "b": (p, "x")}
+    out = deserialize(bytes(serialize(tree)))
+    assert not is_resolved(p)                     # serializer never resolves
+    np.testing.assert_array_equal(out["a"][0], big)
+    assert is_proxy(out["a"][1]["p"])
+    assert out["a"][1]["p"] + 1 == 42             # resolves transparently
+    assert out["b"][1] == "x"
+
+
+def test_psj1_frames_still_deserialize():
+    tree = {"w": np.arange(10_000, dtype=np.float32).reshape(100, 100),
+            "meta": (1, "two", {3, 4})}
+    legacy = serialize_v1(tree)
+    assert legacy[:4] == b"PSJ1"
+    out = deserialize(legacy)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    assert out["meta"] == tree["meta"]
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError, match="magic"):
+        deserialize(b"NOPE" + b"\x00" * 40)
+
+
+# ---------------------------------------------------------------------------
+# compression: on / off / unavailable
+# ---------------------------------------------------------------------------
+class _FakeZstd:
+    """zlib-backed stand-in with the zstandard surface the serializer uses."""
+
+    class ZstdCompressor:
+        def __init__(self, level=3):
+            self.level = level
+
+        def compress(self, data):
+            return zlib.compress(bytes(data), 6)
+
+    class ZstdDecompressor:
+        def decompress(self, data, max_output_size=0):
+            return zlib.decompress(bytes(data))
+
+
+@pytest.fixture
+def fake_zstd(monkeypatch):
+    monkeypatch.setattr(S, "_zstd", _FakeZstd)
+    return _FakeZstd
+
+
+@pytest.fixture
+def no_zstd(monkeypatch):
+    monkeypatch.setattr(S, "_zstd", None)
+
+
+def test_per_buffer_compression(fake_zstd):
+    compressible = np.zeros(200_000, np.float32)
+    incompressible = np.random.default_rng(3).standard_normal(50_000) \
+        .astype(np.float32)
+    f = serialize({"z": compressible, "r": incompressible})
+    # zeros shrink, random floats are stored raw — per-buffer decisions
+    assert f.nbytes < compressible.nbytes + incompressible.nbytes
+    assert f.nbytes > incompressible.nbytes
+    bflags = {S._TABLE.unpack_from(bytes(f),
+                                   S._HEADER.size + 32 * i)[3]
+              for i in range(2)}
+    assert bflags == {0, S._BUF_ZSTD}
+    out = deserialize(bytes(f))
+    np.testing.assert_array_equal(out["z"], compressible)
+    np.testing.assert_array_equal(out["r"], incompressible)
+
+
+def test_compress_flag_forced_and_disabled(fake_zstd):
+    z = np.zeros(100_000, np.float32)
+    assert serialize(z, compress=True).nbytes < z.nbytes
+    assert serialize(z, compress=False).nbytes > z.nbytes
+    for flag in (True, False, None):
+        np.testing.assert_array_equal(
+            deserialize(bytes(serialize(z, compress=flag))), z)
+    # forcing compresses even sub-threshold buffers (auto mode skips them)
+    small = np.zeros(1024, np.float32)                # 4 KiB, compressible
+    assert serialize(small, compress=True).nbytes < \
+        serialize(small, compress=None).nbytes
+    np.testing.assert_array_equal(
+        deserialize(bytes(serialize(small, compress=True))), small)
+
+
+def test_truncated_frames_raise_value_error():
+    wire = bytes(serialize(np.zeros(100_000, np.float32)))
+    for cut in (5, 16, 30, len(wire) // 2):           # header/table/payload
+        with pytest.raises(ValueError, match="truncated"):
+            deserialize(wire[:cut])
+
+
+def test_zstd_absent_falls_back_to_uncompressed(no_zstd):
+    z = np.zeros(100_000, np.float32)
+    f = serialize(z, compress=True)               # asked, but unavailable
+    assert f.nbytes > z.nbytes                    # stored raw, no error
+    np.testing.assert_array_equal(deserialize(bytes(f)), z)
+    assert serialize_v1(z, compress=True)[4] & 1 == 0
+
+
+def test_decompress_without_zstd_raises_actionable_error(monkeypatch):
+    z = np.zeros(100_000, np.float32)
+    monkeypatch.setattr(S, "_zstd", _FakeZstd)
+    compressed_v2 = bytes(serialize(z, compress=True))
+    compressed_v1 = serialize_v1(z, compress=True)
+    monkeypatch.setattr(S, "_zstd", None)
+    for frame in (compressed_v2, compressed_v1):
+        with pytest.raises(RuntimeError, match="zstandard"):
+            deserialize(frame)
+
+
+# ---------------------------------------------------------------------------
+# store integration
+# ---------------------------------------------------------------------------
+def test_maybe_proxy_respects_custom_serializer():
+    """A Store with custom serializer/deserializer hooks must produce
+    proxies that resolve through those same hooks (bugfix)."""
+    import pickle
+
+    calls = {"ser": 0, "de": 0}
+
+    def ser(obj):
+        calls["ser"] += 1
+        return b"CUSTOM" + pickle.dumps(obj)
+
+    def de(blob):
+        calls["de"] += 1
+        return pickle.loads(join_frame(blob)[6:])
+
+    s = Store("psj2-custom", LocalMemoryConnector(), serializer=ser,
+              deserializer=de, register=True)
+    try:
+        big = list(range(10_000))
+        p = maybe_proxy(s, big, threshold_bytes=100)
+        assert calls["ser"] == 1                  # serialized exactly once
+        assert list(p) == big                     # resolves via custom hooks
+        assert calls["de"] == 1
+        small = maybe_proxy(s, [1], threshold_bytes=10_000)
+        assert small == [1]
+    finally:
+        s.close()
+
+
+def test_store_roundtrip_hands_out_views(tmp_path):
+    from repro.core.connectors import FileConnector
+
+    s = Store("psj2-views", FileConnector(str(tmp_path / "d")),
+              register=False)
+    x = np.random.default_rng(4).standard_normal(100_000).astype(np.float32)
+    key = s.put({"x": x})
+    out = s.get(key)["x"]
+    np.testing.assert_array_equal(out, x)
+    import jax.numpy as jnp
+
+    j = jnp.asarray(out)                          # zero host-side copies
+    np.testing.assert_array_equal(np.asarray(j), x)
+
+
+def test_frame_nbytes_helpers():
+    f = serialize(np.arange(65_536, dtype=np.float32))
+    assert frame_nbytes(f) == len(bytes(f)) == len(join_frame(f))
+    assert frame_nbytes(b"abc") == 3
+    assert frame_nbytes([memoryview(b"ab"), memoryview(b"cde")]) == 5
+    assert join_frame([memoryview(b"ab"), b"cde"]) == b"abcde"
+    assert isinstance(f, Frame)
