@@ -16,13 +16,14 @@ import os
 
 import numpy as np
 
-from benchmarks.util import emit, fmt_bytes, payload, time_call, tmpdir
+from benchmarks.util import emit, fmt_bytes, payload, record, time_call, tmpdir
 from repro.core import deserialize, serialize, serialize_v1
 from repro.core.connectors import (FileConnector, KVServerConnector,
                                    SharedMemoryConnector, SocketConnector)
 from repro.core.deploy import start_kvserver
 
 SIZES = [10_000, 1_000_000, 10_000_000, 100_000_000]
+BATCH_N, BATCH_SIZE = 32, 64 * 1024
 
 
 def run() -> None:
@@ -54,6 +55,38 @@ def run() -> None:
             mbps = nbytes * 2 / t / 1e6
             emit(f"fig6.{name}.{fmt_bytes(size)}", t * 1e6,
                  f"{mbps:.0f}MB/s")
+
+    # batched vs looped round trips on the KV-backed connectors: put_batch/
+    # get_batch collapse N round trips into one pipelined mput2/mget2
+    results: dict = {}
+    frames = [serialize(payload(BATCH_SIZE, seed=i)) for i in range(BATCH_N)]
+    label = f"{BATCH_N}x{fmt_bytes(BATCH_SIZE)}"
+    for name in ("socket", "kvserver"):
+        conn = conns[name]
+
+        def loop_rt(conn=conn):
+            keys = [conn.put(f) for f in frames]
+            for k in keys:
+                deserialize(conn.get(k))
+            for k in keys:
+                conn.evict(k)
+
+        def batch_rt(conn=conn):
+            keys = conn.put_batch(frames)
+            for blob in conn.get_batch(keys):
+                deserialize(blob)
+            conn.evict_batch(keys)
+
+        t_loop = time_call(loop_rt)
+        t_batch = time_call(batch_rt)
+        emit(f"fig6.{name}.loop.{label}", t_loop * 1e6)
+        emit(f"fig6.{name}.batch.{label}", t_batch * 1e6,
+             f"{t_loop / t_batch:.1f}x")
+        results[f"{name}_loop_{label}_ms"] = round(t_loop * 1e3, 2)
+        results[f"{name}_batch_{label}_ms"] = round(t_batch * 1e3, 2)
+        results[f"{name}_batch_speedup"] = round(t_loop / t_batch, 2)
+    record("fig6", results)
+
     for conn in conns.values():
         conn.close()
     kv.stop()

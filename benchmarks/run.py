@@ -1,14 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (benchmarks/util.emit) per row.
+Prints ``name,us_per_call,derived`` CSV (benchmarks/util.emit) per row and
+writes ``BENCH_<tag>.json`` next to the repo root for every figure run, so
+the perf trajectory is recorded PR over PR (rows + any structured results
+the figure stashed via ``benchmarks.util.record``).
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+from benchmarks import util
 
 MODULES = [
     ("fig5", "benchmarks.fig5_faas_rtt"),
@@ -20,6 +28,22 @@ MODULES = [
     ("fig10", "benchmarks.fig10_federated"),
     ("fig11", "benchmarks.fig11_steering"),
 ]
+
+_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _dump(tag: str, rows: list[str], elapsed: float) -> None:
+    out = {
+        "figure": tag,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "elapsed_s": round(elapsed, 2),
+        "rows": [dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+                 for r in rows],
+        "results": util.RESULTS.pop(tag, {}),
+    }
+    path = _ROOT / f"BENCH_{tag}.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}", flush=True)
 
 
 def main() -> None:
@@ -35,9 +59,12 @@ def main() -> None:
         if only and tag not in only:
             continue
         t0 = time.time()
+        n_rows = len(util.ROWS)
         try:
             __import__(module, fromlist=["run"]).run()
-            print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+            elapsed = time.time() - t0
+            _dump(tag, util.ROWS[n_rows:], elapsed)
+            print(f"# {tag} done in {elapsed:.1f}s", flush=True)
         except Exception:  # noqa: BLE001
             failures.append(tag)
             print(f"# {tag} FAILED:\n{traceback.format_exc()}",

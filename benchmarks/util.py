@@ -9,12 +9,19 @@ from typing import Callable
 import numpy as np
 
 ROWS: list[str] = []
+RESULTS: dict[str, dict] = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def record(tag: str, data: dict) -> None:
+    """Stash structured results for ``benchmarks.run`` to dump into
+    ``BENCH_<tag>.json`` (the per-PR perf trajectory record)."""
+    RESULTS.setdefault(tag, {}).update(data)
 
 
 def time_call(fn: Callable, *, reps: int = 3, warmup: int = 1) -> float:

@@ -86,6 +86,15 @@ class BaseConnector:
         return cls(**config)
 
 
+def group_indices(keys: Sequence[Key], field: int) -> dict[Any, list[int]]:
+    """Bucket key indices by one key field — the shared scatter/gather step
+    of batch ops that issue one exchange per owning node/endpoint/child."""
+    groups: dict[Any, list[int]] = {}
+    for i, k in enumerate(keys):
+        groups.setdefault(k[field], []).append(i)
+    return groups
+
+
 def import_path(cls: type) -> str:
     return f"{cls.__module__}:{cls.__qualname__}"
 

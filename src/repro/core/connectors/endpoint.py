@@ -16,9 +16,9 @@ import os
 import uuid as uuid_mod
 from typing import Any
 
-from repro.core.connector import BaseConnector, Key
-from repro.core.kv_tcp import KVClient
-from repro.core.serialize import join_frame
+from repro.core.connector import BaseConnector, Key, group_indices
+from repro.core.kv_tcp import MAX_FRAME, KVClient, _chain
+from repro.core.serialize import as_segments, frame_nbytes
 
 
 class EndpointConnector(BaseConnector):
@@ -31,38 +31,104 @@ class EndpointConnector(BaseConnector):
             raise RuntimeError(
                 f"no local PS-endpoint: pass address= or set ${env}")
         host, port = addr.rsplit(":", 1)
-        # the endpoint speaks the same framed protocol as kv_tcp
+        # the endpoint speaks the same seq-tagged pipelined protocol as
+        # kv_tcp, so any number of requests share the connection in flight
         self._client = KVClient(host, int(port))
         resp = self._client.request({"op": "uuid"})
         self.endpoint_uuid: str = resp["data"]
 
-    def put(self, blob) -> Key:
+    def _put_msg(self, blob) -> tuple[str, dict, list]:
+        # puts always target the local endpoint; the payload streams raw
+        # after the header (put2), so multi-segment frames are gather-
+        # written with no join or msgpack copy
+        nbytes = frame_nbytes(blob)
+        if nbytes > MAX_FRAME:
+            # fail before streaming gigabytes the endpoint will reject
+            raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
         object_id = uuid_mod.uuid4().hex
-        # the endpoint protocol embeds payloads in the msgpack frame (they
-        # may be forwarded over peer channels), so multi-segment frames pay
-        # one join copy here
-        resp = self._client.request({"op": "put", "object_id": object_id,
-                                     "data": join_frame(blob),
-                                     "endpoint_id": self.endpoint_uuid})
+        msg = {"op": "put2", "object_id": object_id, "nbytes": nbytes}
+        return object_id, msg, as_segments(blob)
+
+    def put(self, blob) -> Key:
+        object_id, msg, segments = self._put_msg(blob)
+        resp = self._client.request(msg, payload=segments)
         if not resp["ok"]:
             raise RuntimeError(resp.get("error"))
         return ("ep", object_id, self.endpoint_uuid)
 
-    def get(self, key: Key) -> bytes | None:
-        resp = self._client.request({"op": "get", "object_id": key[1],
-                                     "endpoint_id": key[2]})
+    def put_batch(self, blobs) -> list[Key]:
+        # ONE mput2 exchange: all frame segments stream back to back
+        ids = [uuid_mod.uuid4().hex for _ in blobs]
+        self._client.mput(ids, blobs)
+        return [("ep", i, self.endpoint_uuid) for i in ids]
+
+    @staticmethod
+    def _get_data(resp: dict):
         if not resp["ok"]:
             raise ConnectionError(resp.get("error"))
         return resp.get("data")
+
+    def get(self, key: Key):
+        # get2: the payload comes back out of band into a preallocated
+        # buffer (remote keys are forwarded over the peer channel first)
+        resp = self._client.request({"op": "get2", "object_id": key[1],
+                                     "endpoint_id": key[2]})
+        return self._get_data(resp)
+
+    def get_batch(self, keys) -> list:
+        # group by owning endpoint: ONE mget2 exchange per endpoint, the
+        # groups pipelined concurrently (remote groups are forwarded over
+        # the peer channel by our local endpoint)
+        out: list = [None] * len(keys)
+        futs = []
+        for ep_uuid, idxs in group_indices(keys, 2).items():
+            futs.append((idxs, self._client.submit(
+                {"op": "mget2", "object_ids": [keys[i][1] for i in idxs],
+                 "endpoint_id": ep_uuid})))
+        for idxs, fut in futs:
+            datas = self._get_data(fut.result(self._client.timeout))
+            for i, d in zip(idxs, datas):
+                out[i] = d
+        return out
+
+    def get_async(self, key: Key):
+        return _chain(self._client.submit({"op": "get2", "object_id": key[1],
+                                           "endpoint_id": key[2]}),
+                      self._get_data)
 
     def exists(self, key: Key) -> bool:
         resp = self._client.request({"op": "exists", "object_id": key[1],
                                      "endpoint_id": key[2]})
         return bool(resp.get("data"))
 
+    def exists_batch(self, keys) -> list[bool]:
+        # one mexists exchange per owning endpoint, pipelined
+        out = [False] * len(keys)
+        futs = []
+        for ep_uuid, idxs in group_indices(keys, 2).items():
+            futs.append((idxs, self._client.submit(
+                {"op": "mexists",
+                 "object_ids": [keys[i][1] for i in idxs],
+                 "endpoint_id": ep_uuid})))
+        for idxs, fut in futs:
+            flags = self._get_data(fut.result(self._client.timeout)) or []
+            for i, flag in zip(idxs, flags):
+                out[i] = bool(flag)
+        return out
+
     def evict(self, key: Key) -> None:
         self._client.request({"op": "evict", "object_id": key[1],
                               "endpoint_id": key[2]})
+
+    def evict_batch(self, keys) -> None:
+        futs = [self._client.submit(
+            {"op": "mevict", "object_ids": [keys[i][1] for i in idxs],
+             "endpoint_id": ep_uuid})
+            for ep_uuid, idxs in group_indices(keys, 2).items()]
+        for f in futs:
+            resp = f.result(self._client.timeout)
+            if not resp.get("ok"):
+                raise ConnectionError(resp.get("error"))
 
     def config(self) -> dict[str, Any]:
         # no address: consumers bind to THEIR local endpoint via env

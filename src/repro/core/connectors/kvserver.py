@@ -15,7 +15,6 @@ from typing import Any
 
 from repro.core.connector import BaseConnector, Key
 from repro.core.kv_tcp import KVClient
-from repro.core.serialize import join_frame
 
 
 class KVServerConnector(BaseConnector):
@@ -29,9 +28,10 @@ class KVServerConnector(BaseConnector):
         return ("kv", self.host, self.port, object_id)
 
     def put_batch(self, blobs) -> list[Key]:
+        # ONE mput2 exchange: every frame's segments stream raw after the
+        # header — Frames never touch msgpack, nothing is joined
         ids = [uuid.uuid4().hex for _ in blobs]
-        self._client.request({"op": "mput", "keys": ids,
-                              "blobs": [join_frame(b) for b in blobs]})
+        self._client.mput(ids, blobs)
         return [("kv", self.host, self.port, i) for i in ids]
 
     def get(self, key: Key):
@@ -40,15 +40,23 @@ class KVServerConnector(BaseConnector):
     def get_batch(self, keys) -> list[bytes | None]:
         if not keys:
             return []
-        resp = self._client.request({"op": "mget",
-                                     "keys": [k[3] for k in keys]})
-        return resp["data"]
+        # ONE mget2 exchange, received into one preallocated buffer
+        return self._client.mget([k[3] for k in keys])
 
     def exists(self, key: Key) -> bool:
         return self._client.exists(key[3])
 
+    def exists_batch(self, keys) -> list[bool]:
+        return self._client.mexists([k[3] for k in keys])  # one exchange
+
     def evict(self, key: Key) -> None:
         self._client.evict(key[3])
+
+    def evict_batch(self, keys) -> None:
+        self._client.mevict([k[3] for k in keys])  # one exchange
+
+    def stats(self) -> dict[str, Any]:
+        return self._client.stats()
 
     def config(self) -> dict[str, Any]:
         return {"host": self.host, "port": self.port}

@@ -14,9 +14,8 @@ import uuid
 from pathlib import Path
 from typing import Any
 
-from repro.core.connector import BaseConnector, Key
+from repro.core.connector import BaseConnector, Key, group_indices
 from repro.core.kv_tcp import KVClient, spawn_server
-from repro.core.serialize import join_frame
 
 
 class SocketConnector(BaseConnector):
@@ -63,9 +62,9 @@ class SocketConnector(BaseConnector):
         return ("sock", self.discovery_dir, self.node_id, object_id)
 
     def put_batch(self, blobs) -> list[Key]:
+        # ONE mput2 exchange: frame segments stream raw, no join copies
         keys = [uuid.uuid4().hex for _ in blobs]
-        self._client.request({"op": "mput", "keys": keys,
-                              "blobs": [join_frame(b) for b in blobs]})
+        self._client.mput(keys, blobs)
         return [("sock", self.discovery_dir, self.node_id, k) for k in keys]
 
     def get(self, key: Key):
@@ -74,24 +73,40 @@ class SocketConnector(BaseConnector):
     def get_batch(self, keys) -> list[bytes | None]:
         if not keys:
             return []
-        # group by node to amortize round trips
+        # one mget2 exchange per node, all nodes pipelined concurrently
         out: list[bytes | None] = [None] * len(keys)
-        by_node: dict[str, list[int]] = {}
-        for i, k in enumerate(keys):
-            by_node.setdefault(k[2], []).append(i)
-        for node, idxs in by_node.items():
+        futs = []
+        for node, idxs in group_indices(keys, 2).items():
             client = self._client_for(keys[idxs[0]])
-            resp = client.request({"op": "mget",
-                                   "keys": [keys[i][3] for i in idxs]})
-            for i, blob in zip(idxs, resp["data"]):
+            futs.append((idxs, client.mget_async(
+                [keys[i][3] for i in idxs]), client))
+        for idxs, fut, client in futs:
+            for i, blob in zip(idxs, fut.result(client.timeout)):
                 out[i] = blob
         return out
 
     def exists(self, key: Key) -> bool:
         return self._client_for(key).exists(key[3])
 
+    def exists_batch(self, keys) -> list[bool]:
+        out = [False] * len(keys)
+        for node, idxs in group_indices(keys, 2).items():
+            client = self._client_for(keys[idxs[0]])
+            flags = client.mexists([keys[i][3] for i in idxs])
+            for i, flag in zip(idxs, flags):
+                out[i] = flag
+        return out
+
     def evict(self, key: Key) -> None:
         self._client_for(key).evict(key[3])
+
+    def evict_batch(self, keys) -> None:
+        for node, idxs in group_indices(keys, 2).items():
+            client = self._client_for(keys[idxs[0]])
+            client.mevict([keys[i][3] for i in idxs])
+
+    def stats(self) -> dict:
+        return self._client.stats()
 
     def _client_for(self, key: Key) -> KVClient:
         if key[2] == self.node_id:

@@ -26,6 +26,8 @@ from pathlib import Path
 
 import msgpack
 
+from repro.core.kv_tcp import MAX_FRAME, STREAM_LIMIT
+
 _LEN = struct.Struct(">I")
 
 
@@ -103,7 +105,9 @@ class Endpoint:
         self.persist = Path(persist_dir) if persist_dir else None
         self.throttle_bps, self.throttle_rtt = throttle_bps, throttle_rtt
         self._data: dict[str, bytes] = {}
+        self._n_ops = 0
         self._peers: dict[str, PeerChannel] = {}
+        self._peer_dials: dict[str, "asyncio.Future[PeerChannel]"] = {}
         self._relay_writer: asyncio.StreamWriter | None = None
         self._relay_replies: dict[str, asyncio.Queue] = {}
         self._rid = 0
@@ -119,6 +123,7 @@ class Endpoint:
     # local store ops
     # ------------------------------------------------------------------
     def _local(self, req: dict) -> dict:
+        self._n_ops += 1
         op = req["op"]
         oid = req.get("object_id")
         if op == "put":
@@ -128,6 +133,18 @@ class Endpoint:
             return {"ok": True}
         if op == "get":
             return {"ok": True, "data": self._data.get(oid)}
+        if op == "mget":
+            return {"ok": True, "data": [self._data.get(o)
+                                         for o in req["object_ids"]]}
+        if op == "mevict":
+            for o in req["object_ids"]:
+                self._data.pop(o, None)
+                if self.persist:
+                    (self.persist / f"{o}.obj").unlink(missing_ok=True)
+            return {"ok": True}
+        if op == "mexists":
+            return {"ok": True, "data": [o in self._data
+                                         for o in req["object_ids"]]}
         if op == "exists":
             return {"ok": True, "data": oid in self._data}
         if op == "evict":
@@ -137,6 +154,7 @@ class Endpoint:
             return {"ok": True}
         if op == "stats":
             return {"ok": True, "data": {"n": len(self._data),
+                                         "n_ops": self._n_ops,
                                          "peers": list(self._peers)}}
         return {"ok": False, "error": f"bad op {op!r}"}
 
@@ -198,6 +216,17 @@ class Endpoint:
         chan = self._peers.get(target)
         if chan is not None and chan.alive:
             return chan
+        # concurrent requests to a cold peer share ONE dial — without this,
+        # racing _forward tasks would each open (and then leak) a channel
+        dial = self._peer_dials.get(target)
+        if dial is None:
+            dial = asyncio.ensure_future(self._dial_peer(target))
+            self._peer_dials[target] = dial
+            dial.add_done_callback(
+                lambda _t: self._peer_dials.pop(target, None))
+        return await dial
+
+    async def _dial_peer(self, target: str) -> PeerChannel:
         # offer/answer via relay (Fig 4 steps 1-4), then direct dial (step 5)
         reply = await self._relay_request({
             "type": "offer", "target": target,
@@ -243,47 +272,181 @@ class Endpoint:
     # ------------------------------------------------------------------
     # client API server
     # ------------------------------------------------------------------
+    # Clients are KVClient instances speaking the seq-tagged pipelined
+    # protocol of :mod:`repro.core.kv_tcp`: every request carries "seq",
+    # every response echoes it, and responses may be written out of order.
+    # Local ops are answered inline (they are synchronous dict accesses);
+    # peer-forwarded ops run on tasks so one WAN round trip never stalls
+    # the other requests pipelined on the same connection.
+
+    @staticmethod
+    async def _respond(writer: asyncio.StreamWriter, lock: asyncio.Lock,
+                       resp: dict, raw: tuple | None = None) -> None:
+        async with lock:
+            writer.write(_frame(resp))
+            if raw:
+                for blob in raw:
+                    writer.write(blob)
+            await writer.drain()
+
+    async def _forward(self, req: dict, writer: asyncio.StreamWriter,
+                       lock: asyncio.Lock, target: str,
+                       raw_reply: bool) -> None:
+        seq = req.get("seq")
+        try:
+            chan = await self._get_peer(target)
+            r = await chan.request({k: v for k, v in req.items()
+                                    if k not in ("endpoint_id", "seq")})
+            resp = {k: v for k, v in r.items()
+                    if k in ("ok", "data", "error")}
+        except Exception as e:  # noqa: BLE001 - the client must get a
+            # response for this seq; an escaping exception would kill the
+            # task silently and leave the request hanging client-side
+            resp = {"ok": False, "error": str(e)}
+        raw: tuple | None = None
+        if raw_reply and resp.get("ok"):
+            data = resp.pop("data", None)
+            if req.get("op") == "mget":        # forwarded batch: blob list
+                datas = data or []
+                resp["raws"] = [-1 if d is None else len(d) for d in datas]
+                raw = tuple(d for d in datas if d is not None)
+            else:
+                resp["raw"] = -1 if data is None else len(data)
+                raw = (data,) if data is not None else None
+        if seq is not None:
+            resp["seq"] = seq
+        try:
+            await self._respond(writer, lock, resp, raw)
+        except (ConnectionError, OSError):
+            pass
+
     async def _client_loop(self, reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
+        send_lock = asyncio.Lock()
+        tasks: set[asyncio.Task] = set()
+
+        def spawn(coro) -> None:
+            task = asyncio.create_task(coro)
+            tasks.add(task)
+            task.add_done_callback(tasks.discard)
+
         try:
             while True:
                 req = await _read(reader)
                 if req is None:
                     break
-                if req.get("op") == "shutdown":
-                    writer.write(_frame({"ok": True}))
-                    await writer.drain()
+                op = req.get("op")
+                seq = req.get("seq")
+                raw: tuple | None = None
+                if op == "shutdown":
+                    await self._respond(writer, send_lock,
+                                        {"ok": True, "seq": seq})
                     self._shutdown.set()
                     break
-                if req.get("op") == "uuid":
+                if op == "uuid":
                     resp = {"ok": True, "data": self.uuid}
+                elif op == "put2":
+                    # out-of-band payload, consumed here in stream order;
+                    # puts always target the local endpoint
+                    nbytes = int(req["nbytes"])
+                    if not 0 <= nbytes <= MAX_FRAME:
+                        # cannot resync without consuming the payload:
+                        # report the reason, then drop the connection
+                        await self._respond(writer, send_lock, {
+                            "ok": False, "seq": seq,
+                            "error": f"bad payload size: {nbytes}"})
+                        break
+                    try:
+                        data = (await reader.readexactly(nbytes)
+                                if nbytes else b"")
+                    except (asyncio.IncompleteReadError,
+                            ConnectionResetError):
+                        break
+                    oid = req.get("object_id") or req.get("key")
+                    resp = self._local({"op": "put", "object_id": oid,
+                                        "data": data})
+                elif op == "mput2":
+                    # a whole batch in one exchange: blobs arrive back to
+                    # back after the header (always local, like put2)
+                    sizes = [int(n) for n in req["nbytes"]]
+                    if sum(sizes) > MAX_FRAME or any(n < 0 for n in sizes):
+                        await self._respond(writer, send_lock, {
+                            "ok": False, "seq": seq,
+                            "error": f"bad payload sizes: {sum(sizes)}"})
+                        break
+                    try:
+                        payload = (await reader.readexactly(sum(sizes))
+                                   if sum(sizes) else b"")
+                    except (asyncio.IncompleteReadError,
+                            ConnectionResetError):
+                        break
+                    oids = req.get("object_ids") or req.get("keys")
+                    mv = memoryview(payload)
+                    off = 0
+                    if self.persist:
+                        for oid, n in zip(oids, sizes):
+                            self._local({"op": "put", "object_id": oid,
+                                         "data": bytes(mv[off:off + n])})
+                            off += n
+                    else:
+                        for oid, n in zip(oids, sizes):
+                            self._data[oid] = bytes(mv[off:off + n])
+                            off += n
+                        self._n_ops += len(oids)
+                    resp = {"ok": True}
+                elif op == "mget2":
+                    oids = req.get("object_ids") or req.get("keys")
+                    target = req.get("endpoint_id") or self.uuid
+                    if target != self.uuid:
+                        spawn(self._forward(
+                            dict(req, op="mget", object_ids=oids), writer,
+                            send_lock, target, raw_reply=True))
+                        continue
+                    datas = [self._data.get(o) for o in oids]
+                    self._n_ops += 1
+                    resp = {"ok": True,
+                            "raws": [-1 if d is None else len(d)
+                                     for d in datas]}
+                    raw = tuple(d for d in datas if d is not None)
+                elif op == "get2":
+                    oid = req.get("object_id") or req.get("key")
+                    target = req.get("endpoint_id") or self.uuid
+                    if target != self.uuid:
+                        spawn(self._forward(
+                            dict(req, op="get", object_id=oid), writer,
+                            send_lock, target, raw_reply=True))
+                        continue
+                    data = self._data.get(oid)
+                    self._n_ops += 1
+                    resp = {"ok": True,
+                            "raw": -1 if data is None else len(data)}
+                    raw = (data,) if data is not None else None
                 else:
                     target = req.get("endpoint_id") or self.uuid
-                    if target == self.uuid:
-                        resp = self._local(req)
-                    else:
-                        try:
-                            chan = await self._get_peer(target)
-                            r = await chan.request({k: v for k, v in req.items()
-                                                    if k != "endpoint_id"})
-                            resp = {k: v for k, v in r.items()
-                                    if k in ("ok", "data", "error")}
-                        except (ConnectionError, asyncio.TimeoutError) as e:
-                            resp = {"ok": False, "error": str(e)}
-                writer.write(_frame(resp))
-                await writer.drain()
+                    if target != self.uuid:
+                        spawn(self._forward(req, writer, send_lock, target,
+                                            raw_reply=False))
+                        continue
+                    resp = self._local(req)
+                if seq is not None:
+                    resp["seq"] = seq
+                await self._respond(writer, send_lock, resp, raw)
         finally:
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
             writer.close()
 
     # ------------------------------------------------------------------
     async def run(self, api_host: str, api_port: int,
                   ready_file: str | None) -> None:
         peer_server = await asyncio.start_server(self._peer_accept,
-                                                 "127.0.0.1", 0)
+                                                 "127.0.0.1", 0,
+                                                 limit=STREAM_LIMIT)
         self._peer_port = peer_server.sockets[0].getsockname()[1]
         await self._relay_connect()
         api_server = await asyncio.start_server(self._client_loop,
-                                                api_host, api_port)
+                                                api_host, api_port,
+                                                limit=STREAM_LIMIT)
         actual = api_server.sockets[0].getsockname()[1]
         if ready_file:
             tmp = Path(ready_file + ".tmp")

@@ -1,4 +1,4 @@
-"""Asyncio TCP key-value server + blocking client.
+"""Asyncio TCP key-value server + pipelined multiplexed blocking client.
 
 Plays two roles from the paper:
 
@@ -7,28 +7,59 @@ Plays two roles from the paper:
 * the Redis-style standalone hybrid store (§4.1.2) when started with
   ``--persist-dir`` (write-through to disk, reload on restart).
 
-Wire format: 4-byte big-endian length | msgpack map.
-Requests:  {"op": put|get|exists|evict|mput|mget|ping|stats|shutdown,
-            "key": str, "data": bytes, "keys": [...], "blobs": [...]}
-Responses: {"ok": bool, "data": ..., "error": str}
+Wire format
+===========
 
-Bulk ops carry the payload *out of band* so multi-segment frames never pay a
-join or msgpack copy:
+Every message is a frame: ``4-byte big-endian length | msgpack map``.  Some
+ops carry raw payload bytes *out of band*, immediately after the frame that
+announces them, so multi-segment PSJ2 frames never pay a join or msgpack
+copy.
 
-* ``put2``: header {"op": "put2", "key": k, "nbytes": n} followed by n raw
-  bytes on the stream — the client scatter-gathers frame segments straight
-  onto the socket (writev-style), the server reads them into one buffer.
-* ``get2``: response header {"ok": True, "raw": n} (-1 = missing) followed by
-  n raw bytes — the client receives into a preallocated buffer and returns a
+**Multiplexing.** Every request map carries a client-assigned ``"seq"``
+(monotonic per connection); every response echoes it.  Many requests from
+one client share a single connection in flight, and the server may complete
+them **out of order** (slow ops — disk persistence, ``sleep`` — are handled
+on background tasks / an executor while fast in-memory ops overtake them).
+The client's background reader thread matches responses to per-request
+``Future``s by ``seq``.  Out-of-band payload bytes are written atomically
+with their announcing frame (single writer lock on each side), so the byte
+stream remains parseable even when frames interleave.
+
+Requests (msgpack maps; ``seq`` omitted below for brevity):
+
+* ``{"op": put|get|exists|evict|mput|mget|ping|stats|sleep|shutdown, ...}``
+  — in-band ops; ``put``/``mput`` carry ``data``/``blobs`` inside the map.
+* ``put2``: ``{"op": "put2", "key": k, "nbytes": n}`` followed by ``n`` raw
+  bytes — the client gather-writes frame segments straight onto the socket
+  (``sendmsg``/writev-style), the server reads them into one buffer.
+* ``mput2``: ``{"op": "mput2", "keys": [...], "nbytes": [n0, n1, ...]}``
+  followed by ``sum(n_i)`` raw bytes (the blobs back to back) — a whole
+  batch in one exchange, gather-written with no per-blob copies.
+* ``get2``: response ``{"ok": True, "raw": n}`` (-1 = missing) followed by
+  ``n`` raw bytes — received into a preallocated buffer and surfaced as a
   writable memoryview, ready for zero-copy deserialization.
+* ``mget2``: ``{"op": "mget2", "keys": [...]}`` — response
+  ``{"ok": True, "raws": [n0, n1, ...]}`` (-1 = missing) followed by the
+  present blobs back to back; the client receives them into one
+  preallocated buffer and returns per-blob memoryview slices.
+* ``sleep``: ``{"op": "sleep", "s": seconds}`` — completes off the read
+  loop; exists so tests and benchmarks can observe out-of-order completion
+  deterministically.
 
-The server is a single asyncio loop (as the paper's PS-endpoints are) — the
-Fig 8 benchmark reproduces the resulting linear scaling with client count.
+Responses: ``{"ok": bool, "seq": int, "data": ..., "error": str}`` plus the
+``raw``/``raws`` out-of-band markers above.
+
+The server is a single asyncio loop (as the paper's PS-endpoints are), but
+per-request handling runs on tasks: persistence writes go through
+``run_in_executor`` so one persisting client never stalls the other
+connections, and batched clients stream requests back to back instead of
+paying one round trip each.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import itertools
 import os
 import socket
 import struct
@@ -36,12 +67,19 @@ import subprocess
 import sys
 import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from pathlib import Path
 
 import msgpack
 
 _LEN = struct.Struct(">I")
 MAX_FRAME = 1 << 31
+_IOV_MAX = 1024             # sendmsg segment cap per call (POSIX floor)
+# asyncio's default 64 KB StreamReader limit causes pause/resume flow-
+# control churn on every payload read and caps server ingest well below
+# loopback bandwidth; large reads need a large buffer ceiling
+STREAM_LIMIT = 8 * 1024 * 1024
 
 
 # ---------------------------------------------------------------------------
@@ -64,10 +102,33 @@ def write_frame_sync(sock: socket.socket, msg: dict) -> None:
     sock.sendall(_LEN.pack(len(body)) + body)
 
 
+def _byte_view(seg) -> memoryview:
+    mv = memoryview(seg)
+    if mv.format != "B" or mv.ndim != 1:
+        try:
+            mv = mv.cast("B")
+        except TypeError:        # non-contiguous exotic view: copy once
+            mv = memoryview(bytes(mv))
+    return mv
+
+
 def send_segments_sync(sock: socket.socket, segments) -> None:
-    """Gather-write raw payload segments (no user-space join)."""
-    for seg in segments:
-        sock.sendall(seg)
+    """Gather-write raw payload segments with ``sendmsg`` (no user-space
+    join): many small segments go out in single syscalls, ``_IOV_MAX`` at a
+    time, with partial sends resumed mid-segment."""
+    bufs = [v for v in (_byte_view(s) for s in segments) if v.nbytes]
+    while bufs:
+        try:
+            sent = sock.sendmsg(bufs[:_IOV_MAX])
+        except InterruptedError:
+            continue
+        while sent:
+            if bufs[0].nbytes <= sent:
+                sent -= bufs[0].nbytes
+                bufs.pop(0)
+            else:
+                bufs[0] = bufs[0][sent:]
+                sent = 0
 
 
 def read_frame_sync(sock: socket.socket) -> dict:
@@ -104,19 +165,39 @@ class KVServer:
         self._data: dict[str, bytes] = {}
         self._persist = Path(persist_dir) if persist_dir else None
         self._n_ops = 0
+        self._io_pool: ThreadPoolExecutor | None = None
         if self._persist:
             self._persist.mkdir(parents=True, exist_ok=True)
             for f in self._persist.glob("*.kv"):
                 self._data[f.stem] = f.read_bytes()
+            # disk writes happen here, never on the event loop: one
+            # persisting client must not stall every connected client
+            self._io_pool = ThreadPoolExecutor(
+                max_workers=2, thread_name_prefix="kv-persist")
         self._shutdown = asyncio.Event()
 
     # -- op handlers --------------------------------------------------------
     def _put(self, key: str, data: bytes) -> None:
+        """Synchronous put (memory + write-through disk); used by the legacy
+        in-band path and by tests driving ``handle`` directly."""
         self._data[key] = data
         if self._persist:
-            tmp = self._persist / f".{key}.tmp"
-            tmp.write_bytes(data)
-            tmp.replace(self._persist / f"{key}.kv")
+            self._persist_write(key, data)
+
+    def _persist_write(self, key: str, data: bytes) -> None:
+        tmp = self._persist / f".{key}.tmp"
+        tmp.write_bytes(data)
+        tmp.replace(self._persist / f"{key}.kv")
+
+    async def _put_async(self, key: str, data: bytes) -> None:
+        """Memory write now (so later requests on any connection see it),
+        disk write-through on the executor (so the loop never blocks);
+        responds only once the write is durable."""
+        self._data[key] = data
+        if self._persist:
+            loop = asyncio.get_running_loop()
+            await loop.run_in_executor(self._io_pool, self._persist_write,
+                                       key, data)
 
     def _evict(self, key: str) -> None:
         self._data.pop(key, None)
@@ -143,6 +224,12 @@ class KVServer:
             return {"ok": True}
         if op == "mget":
             return {"ok": True, "data": [self._data.get(k) for k in req["keys"]]}
+        if op == "mevict":
+            for k in req["keys"]:
+                self._evict(k)
+            return {"ok": True}
+        if op == "mexists":
+            return {"ok": True, "data": [k in self._data for k in req["keys"]]}
         if op == "ping":
             return {"ok": True, "data": "pong"}
         if op == "stats":
@@ -156,60 +243,140 @@ class KVServer:
             return {"ok": True}
         return {"ok": False, "error": f"unknown op {op!r}"}
 
+    # -- connection handling ------------------------------------------------
+    @staticmethod
+    async def _send(writer: asyncio.StreamWriter, lock: asyncio.Lock,
+                    resp: dict, raw: tuple | None = None) -> None:
+        """Write a response frame (+ optional raw payloads) atomically with
+        respect to other in-flight responses on this connection."""
+        body = msgpack.packb(resp, use_bin_type=True)
+        async with lock:
+            writer.write(_LEN.pack(len(body)) + body)
+            if raw:
+                for blob in raw:
+                    writer.write(blob)
+            await writer.drain()
+
+    async def _handle_one(self, req: dict, payload, writer, lock) -> None:
+        op = req.get("op")
+        seq = req.get("seq")
+        raw: tuple | None = None
+        try:
+            if op == "put2":
+                self._n_ops += 1
+                await self._put_async(req["key"], payload)
+                resp = {"ok": True}
+            elif op == "mput2":
+                self._n_ops += 1
+                mv = memoryview(payload)
+                off = 0
+                stores = []
+                for k, n in zip(req["keys"], req["nbytes"]):
+                    blob = bytes(mv[off:off + n])
+                    off += n
+                    self._data[k] = blob
+                    stores.append((k, blob))
+                if self._persist:
+                    loop = asyncio.get_running_loop()
+
+                    def _persist_all(items=stores):
+                        for k, b in items:
+                            self._persist_write(k, b)
+
+                    await loop.run_in_executor(self._io_pool, _persist_all)
+                resp = {"ok": True}
+            elif op == "get2":
+                self._n_ops += 1
+                data = self._data.get(req["key"])
+                resp = {"ok": True, "raw": -1 if data is None else len(data)}
+                if data is not None:
+                    raw = (data,)
+            elif op == "mget2":
+                self._n_ops += 1
+                datas = [self._data.get(k) for k in req["keys"]]
+                resp = {"ok": True,
+                        "raws": [-1 if d is None else len(d) for d in datas]}
+                raw = tuple(d for d in datas if d is not None)
+            elif op == "sleep":
+                await asyncio.sleep(float(req.get("s", 0.0)))
+                self._n_ops += 1
+                resp = {"ok": True}
+            elif op in ("put", "mput") and self._persist:
+                # legacy in-band puts also keep disk I/O off the loop
+                items = ([(req["key"], req["data"])] if op == "put"
+                         else list(zip(req["keys"], req["blobs"])))
+                self._n_ops += 1
+                for k, b in items:
+                    self._data[k] = b
+                loop = asyncio.get_running_loop()
+
+                def _persist_all(its=items):
+                    for k, b in its:
+                        self._persist_write(k, b)
+
+                await loop.run_in_executor(self._io_pool, _persist_all)
+                resp = {"ok": True}
+            else:
+                resp = self.handle(req)
+        except Exception as e:  # noqa: BLE001 - surface to client
+            resp = {"ok": False, "error": str(e)}
+            raw = None
+        if seq is not None:
+            resp["seq"] = seq
+        try:
+            await self._send(writer, lock, resp, raw)
+        except (ConnectionError, OSError):
+            pass
+
     async def client_loop(self, reader: asyncio.StreamReader,
                           writer: asyncio.StreamWriter) -> None:
+        send_lock = asyncio.Lock()
+        tasks: set[asyncio.Task] = set()
         try:
             while True:
                 req = await read_frame(reader)
                 if req is None:
                     break
                 op = req.get("op")
-                if op == "put2":
-                    # out-of-band payload: header first, then raw bytes
-                    nbytes = int(req["nbytes"])
-                    if nbytes > MAX_FRAME:
+                payload = None
+                if op in ("put2", "mput2"):
+                    # out-of-band payload: must be consumed here, in stream
+                    # order, before the next frame can be parsed
+                    sizes = ([int(req["nbytes"])] if op == "put2"
+                             else [int(n) for n in req["nbytes"]])
+                    total = sum(sizes)
+                    if total > MAX_FRAME or any(n < 0 for n in sizes):
                         # can't resync the stream without consuming the
                         # payload; report the reason, then drop the conn
-                        body = msgpack.packb(
-                            {"ok": False,
-                             "error": f"payload too large: {nbytes}"},
-                            use_bin_type=True)
-                        writer.write(_LEN.pack(len(body)) + body)
-                        await writer.drain()
+                        await self._send(writer, send_lock, {
+                            "ok": False, "seq": req.get("seq"),
+                            "error": f"payload too large: {total}"})
                         break
-                    data = await reader.readexactly(nbytes) if nbytes else b""
-                    self._n_ops += 1
-                    try:
-                        self._put(req["key"], data)
-                        resp = {"ok": True}
-                    except Exception as e:  # noqa: BLE001 - surface to client
-                        resp = {"ok": False, "error": str(e)}
-                elif op == "get2":
-                    self._n_ops += 1
-                    data = self._data.get(req["key"])
-                    resp = {"ok": True,
-                            "raw": -1 if data is None else len(data)}
-                    body = msgpack.packb(resp, use_bin_type=True)
-                    writer.write(_LEN.pack(len(body)) + body)
-                    if data is not None:
-                        writer.write(data)
-                    await writer.drain()
-                    continue
-                else:
-                    resp = self.handle(req)
-                body = msgpack.packb(resp, use_bin_type=True)
-                writer.write(_LEN.pack(len(body)) + body)
-                await writer.drain()
+                    payload = await reader.readexactly(total) if total else b""
                 if op == "shutdown":
+                    self._n_ops += 1
+                    self._shutdown.set()
+                    await self._send(writer, send_lock,
+                                     {"ok": True, "seq": req.get("seq")})
                     break
+                # tasks preserve submission order for their synchronous
+                # prefixes (dict reads/writes) but let slow ops (persist,
+                # sleep) complete out of order behind fast ones
+                task = asyncio.create_task(
+                    self._handle_one(req, payload, writer, send_lock))
+                tasks.add(task)
+                task.add_done_callback(tasks.discard)
         finally:
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
             writer.close()
 
 
 async def serve(host: str, port: int, persist_dir: str | None,
                 ready_file: str | None) -> None:
     kv = KVServer(persist_dir)
-    server = await asyncio.start_server(kv.client_loop, host, port)
+    server = await asyncio.start_server(kv.client_loop, host, port,
+                                        limit=STREAM_LIMIT)
     actual_port = server.sockets[0].getsockname()[1]
     if ready_file:
         tmp = Path(ready_file + ".tmp")
@@ -219,14 +386,15 @@ async def serve(host: str, port: int, persist_dir: str | None,
         await kv._shutdown.wait()
 
 
-def spawn_server(*, host: str = "127.0.0.1", persist_dir: str | None = None,
+def spawn_server(*, host: str = "127.0.0.1", port: int = 0,
+                 persist_dir: str | None = None,
                  ready_file: str, timeout: float = 20.0) -> tuple[str, int, int]:
     """Launch a KV server subprocess; block until it publishes its address.
 
     Returns (host, port, pid).
     """
     cmd = [sys.executable, "-m", "repro.core.kv_tcp", "--host", host,
-           "--port", "0", "--ready-file", ready_file]
+           "--port", str(port), "--ready-file", ready_file]
     if persist_dir:
         cmd += ["--persist-dir", persist_dir]
     env = dict(os.environ)
@@ -252,104 +420,279 @@ def spawn_server(*, host: str = "127.0.0.1", persist_dir: str | None = None,
 
 
 # ---------------------------------------------------------------------------
-# blocking client (thread-safe via lock; one socket per client)
+# pipelined client
 # ---------------------------------------------------------------------------
+class _Conn:
+    """One live connection: socket + pending futures + its reader thread."""
+
+    __slots__ = ("sock", "pending", "send_lock", "seq")
+
+    def __init__(self, sock: socket.socket) -> None:
+        self.sock = sock
+        self.pending: dict[int, Future] = {}
+        self.send_lock = threading.Lock()
+        self.seq = itertools.count(1)
+
+
+def _chain(fut: Future, fn) -> Future:
+    """Future that resolves to ``fn(fut.result())``."""
+    out: Future = Future()
+
+    def _done(f: Future) -> None:
+        try:
+            out.set_result(fn(f.result()))
+        except BaseException as e:  # noqa: BLE001 - propagate into future
+            out.set_exception(e)
+
+    fut.add_done_callback(_done)
+    return out
+
+
 class KVClient:
+    """Blocking client with a pipelined, multiplexed connection.
+
+    ``submit`` tags each request with a ``seq``, sends it without waiting,
+    and returns a ``Future``; a background reader thread completes futures
+    as (possibly out-of-order) responses arrive.  Any number of threads may
+    have requests in flight on the one socket — batched workloads pay ~1
+    round trip instead of N.  Sync methods (``put``/``get``/...) are thin
+    wrappers that submit and wait.
+
+    On connection loss every pending future fails with ``ConnectionError``
+    and the next request transparently reconnects.
+    """
+
     def __init__(self, host: str, port: int, timeout: float = 60.0) -> None:
         self.host, self.port, self.timeout = host, port, timeout
-        self._lock = threading.Lock()
-        self._sock: socket.socket | None = None
+        self._lock = threading.Lock()     # guards _conn lifecycle
+        self._conn: _Conn | None = None
+        self._closed = False
+        self.n_reconnects = 0
 
-    def _connect(self) -> socket.socket:
-        if self._sock is None:
+    # -- connection lifecycle ------------------------------------------------
+    def _connect_locked(self) -> _Conn:
+        if self._conn is None:
+            if self._closed:
+                raise ConnectionError("client is closed")
             s = socket.create_connection((self.host, self.port),
                                          timeout=self.timeout)
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self._sock = s
-        return self._sock
+            s.settimeout(None)  # the reader thread blocks until data/close
+            conn = _Conn(s)
+            t = threading.Thread(target=self._reader_loop, args=(conn,),
+                                 name=f"kv-reader-{self.host}:{self.port}",
+                                 daemon=True)
+            t.start()
+            self._conn = conn
+            self.n_reconnects += 1
+        return self._conn
 
-    def request(self, msg: dict, payload=None) -> dict:
-        """Send a framed request, optionally followed by raw payload segments.
+    def _drop(self, conn: _Conn, exc: BaseException | None = None) -> None:
+        """Tear down ``conn``: fail its pending futures, forget it if it is
+        still the live connection."""
+        with self._lock:
+            if self._conn is conn:
+                self._conn = None
+            pending = list(conn.pending.values())
+            conn.pending.clear()
+        try:
+            conn.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+        err = ConnectionError(f"kv connection lost: {exc}" if exc
+                              else "kv connection closed")
+        for fut in pending:
+            if not fut.done():
+                fut.set_exception(err)
 
-        If the response header carries ``raw`` (an out-of-band payload
-        length), the payload is received into a preallocated buffer and
-        returned as ``resp["data"]`` (a writable memoryview; None for -1).
+    # -- reader thread -------------------------------------------------------
+    def _reader_loop(self, conn: _Conn) -> None:
+        sock = conn.sock
+        try:
+            while True:
+                resp = read_frame_sync(sock)
+                nraw = resp.pop("raw", None)
+                if nraw is not None:
+                    if nraw < 0:
+                        resp["data"] = None
+                    else:
+                        buf = bytearray(nraw)
+                        _recv_exact_into(sock, memoryview(buf))
+                        resp["data"] = memoryview(buf)
+                raws = resp.pop("raws", None)
+                if raws is not None:
+                    # one buffer per blob (not one shared slab): a cached
+                    # zero-copy view of one object must not pin the whole
+                    # batch's bytes in memory
+                    out: list[memoryview | None] = []
+                    for n in raws:
+                        if n < 0:
+                            out.append(None)
+                        else:
+                            buf = bytearray(n)
+                            if n:
+                                _recv_exact_into(sock, memoryview(buf))
+                            out.append(memoryview(buf))
+                    resp["data"] = out
+                with self._lock:
+                    fut = conn.pending.pop(resp.get("seq"), None)
+                if fut is not None and not fut.done():
+                    fut.set_result(resp)
+        except BaseException as e:  # noqa: BLE001 - ANY reader death must
+            # fail the pending futures and drop the connection, or every
+            # later request on this client would hang to its timeout
+            self._drop(conn, e)
+
+    # -- request submission --------------------------------------------------
+    def submit(self, msg: dict, payload=None) -> Future:
+        """Pipelined send: returns a Future of the response map.
+
+        ``payload`` (optional) is a sequence of raw segments gather-written
+        immediately after the request frame (``put2``/``mput2``).
         """
         with self._lock:
-            for attempt in (0, 1):
-                try:
-                    sock = self._connect()
-                    write_frame_sync(sock, msg)
-                    if payload is not None:
-                        send_segments_sync(sock, payload)
-                    resp = read_frame_sync(sock)
-                    nraw = resp.pop("raw", None)
-                    if nraw is not None:
-                        if nraw < 0:
-                            resp["data"] = None
-                        else:
-                            buf = bytearray(nraw)
-                            _recv_exact_into(sock, memoryview(buf))
-                            resp["data"] = memoryview(buf)
-                    return resp
-                except (ConnectionError, OSError):
-                    self._drop()
-                    if attempt:
-                        raise
-            raise ConnectionError("unreachable")
+            conn = self._connect_locked()
+            msg["seq"] = seq = next(conn.seq)
+            fut: Future = Future()
+            fut._kv_conn, fut._kv_seq = conn, seq  # for timeout cleanup
+            conn.pending[seq] = fut
+        body = msgpack.packb(msg, use_bin_type=True)
+        segments = [_LEN.pack(len(body)) + body]
+        if payload is not None:
+            segments.extend(payload)
+        try:
+            with conn.send_lock:
+                send_segments_sync(conn.sock, segments)
+        except (ConnectionError, OSError) as e:
+            self._drop(conn, e)
+            raise ConnectionError(f"kv send failed: {e}") from e
+        return fut
 
-    def _drop(self) -> None:
-        if self._sock is not None:
+    def request(self, msg: dict, payload=None) -> dict:
+        """Send a framed request and wait for its response.
+
+        Retries once on a lost connection (ops are idempotent).  If the
+        response carried an out-of-band payload it is surfaced as
+        ``resp["data"]`` (a writable memoryview; None for missing).
+        """
+        for attempt in (0, 1):
+            fut = None
             try:
-                self._sock.close()
-            except OSError:
-                pass
-            self._sock = None
+                fut = self.submit(msg, payload)
+                return fut.result(self.timeout)
+            except ConnectionError:
+                if attempt:
+                    raise
+            except FuturesTimeout:
+                # unregister the abandoned request so the entry (and its
+                # eventual response buffer) can't pile up on a long-lived
+                # connection; a late response for the seq is then dropped
+                with self._lock:
+                    fut._kv_conn.pending.pop(fut._kv_seq, None)
+                raise
+        raise ConnectionError("unreachable")
 
-    def close(self) -> None:
-        with self._lock:
-            self._drop()
-
-    # convenience ops
+    # -- convenience ops -----------------------------------------------------
     def put(self, key: str, data) -> None:
         """Store ``data`` (bytes | Frame | segment sequence) under ``key``.
 
         Multi-segment frames are gather-written after the header — the
         client never joins them into one bytes object.
         """
+        resp = self.request(*self._put_msg(key, data))
+        if not resp["ok"]:
+            raise RuntimeError(resp.get("error"))
+
+    def put_async(self, key: str, data) -> Future:
+        """Pipelined put: returns ``Future[None]``; raises on failure."""
+        return _chain(self.submit(*self._put_msg(key, data)), _check_ok)
+
+    def _put_msg(self, key: str, data) -> tuple[dict, list]:
         from repro.core.serialize import as_segments, frame_nbytes
 
         nbytes = frame_nbytes(data)
         if nbytes > MAX_FRAME:
             # fail before streaming gigabytes the server will reject
             raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
-        resp = self.request({"op": "put2", "key": key, "nbytes": nbytes},
-                            payload=as_segments(data))
-        if not resp["ok"]:
-            raise RuntimeError(resp.get("error"))
+        return {"op": "put2", "key": key, "nbytes": nbytes}, as_segments(data)
 
     def get(self, key: str):
         """Return the payload as a writable memoryview, or None."""
-        resp = self.request({"op": "get2", "key": key})
-        return resp.get("data")
+        return self.request({"op": "get2", "key": key}).get("data")
+
+    def get_async(self, key: str) -> Future:
+        """Pipelined get: ``Future[memoryview | None]``."""
+        return _chain(self.submit({"op": "get2", "key": key}),
+                      lambda r: r.get("data"))
+
+    def mput(self, keys, blobs) -> None:
+        """Batch put in ONE exchange: raw segments streamed back to back."""
+        from repro.core.serialize import as_segments, frame_nbytes
+
+        sizes = [frame_nbytes(b) for b in blobs]
+        if sum(sizes) > MAX_FRAME:
+            raise ValueError(f"batch too large: {sum(sizes)} > {MAX_FRAME}")
+        segments = [seg for b in blobs for seg in as_segments(b)]
+        resp = self.request({"op": "mput2", "keys": list(keys),
+                             "nbytes": sizes}, payload=segments)
+        if not resp["ok"]:
+            raise RuntimeError(resp.get("error"))
+
+    def mget(self, keys) -> list:
+        """Batch get in ONE exchange; memoryview per present key, else None."""
+        return self.mget_async(keys).result(self.timeout)
+
+    def mget_async(self, keys) -> Future:
+        return _chain(self.submit({"op": "mget2", "keys": list(keys)}),
+                      lambda r: r.get("data"))
 
     def exists(self, key: str) -> bool:
         return bool(self.request({"op": "exists", "key": key}).get("data"))
 
+    def exists_async(self, key: str) -> Future:
+        return _chain(self.submit({"op": "exists", "key": key}),
+                      lambda r: bool(r.get("data")))
+
+    def mexists(self, keys) -> list[bool]:
+        resp = self.request({"op": "mexists", "keys": list(keys)})
+        return [bool(x) for x in resp.get("data") or []]
+
     def evict(self, key: str) -> None:
         self.request({"op": "evict", "key": key})
+
+    def mevict(self, keys) -> None:
+        self.request({"op": "mevict", "keys": list(keys)})
 
     def ping(self) -> bool:
         try:
             return self.request({"op": "ping"}).get("data") == "pong"
-        except (ConnectionError, OSError, TimeoutError):
+        except (ConnectionError, OSError, TimeoutError, FuturesTimeout):
             return False
+
+    def stats(self) -> dict:
+        return self.request({"op": "stats"}).get("data") or {}
 
     def shutdown_server(self) -> None:
         try:
             self.request({"op": "shutdown"})
         except (ConnectionError, OSError):
             pass
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            conn, self._conn = self._conn, None
+        if conn is not None:
+            self._drop(conn)
+
+
+def _check_ok(resp: dict) -> None:
+    if not resp.get("ok"):
+        raise RuntimeError(resp.get("error"))
 
 
 def main() -> None:

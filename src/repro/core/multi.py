@@ -12,7 +12,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
-from repro.core.connector import (BaseConnector, Connector, Key, import_path,
+from repro.core.connector import (BaseConnector, Connector, Key,
+                                  group_indices, import_path,
                                   resolve_import_path)
 from repro.core.serialize import frame_nbytes
 
@@ -101,6 +102,28 @@ class MultiConnector(BaseConnector):
         conn, sub = self._child(key)
         return conn.get(sub)
 
+    def _dispatch_batch(self, keys, method: str) -> list:
+        """Group keys by child and issue ONE batch op per child (each child
+        then collapses its group into a single pipelined exchange)."""
+        out: list = [None] * len(keys)
+        for idx, js in group_indices(keys, 1).items():
+            child = self._by_id[idx]
+            results = getattr(child, method)(
+                [tuple(keys[j][2:]) for j in js])
+            for j, r in zip(js, results or [None] * len(js)):
+                out[j] = r
+        return out
+
+    def get_batch(self, keys) -> list[bytes | None]:
+        return self._dispatch_batch(keys, "get_batch")
+
+    def exists_batch(self, keys) -> list[bool]:
+        return self._dispatch_batch(keys, "exists_batch")
+
+    def evict_batch(self, keys) -> None:
+        for idx, js in group_indices(keys, 1).items():
+            self._by_id[idx].evict_batch([tuple(keys[j][2:]) for j in js])
+
     def exists(self, key: Key) -> bool:
         conn, sub = self._child(key)
         return conn.exists(sub)
@@ -108,6 +131,14 @@ class MultiConnector(BaseConnector):
     def evict(self, key: Key) -> None:
         conn, sub = self._child(key)
         conn.evict(sub)
+
+    def stats(self) -> dict[str, Any]:
+        out: dict[str, Any] = {}
+        for i, (conn, _) in enumerate(self.children):
+            child_stats = getattr(conn, "stats", None)
+            if callable(child_stats):
+                out[f"{i}:{type(conn).__name__}"] = child_stats()
+        return out
 
     def config(self) -> dict[str, Any]:
         return {"_config": [

@@ -73,6 +73,10 @@ class _LRUCache:
         with self._lock:
             return key in self._data
 
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
 
 @dataclass
 class StoreConfig:
@@ -171,6 +175,42 @@ class Store:
         self.cache.put(key, obj)  # cache post-deserialization (paper §3.5)
         return obj
 
+    def get_batch(self, keys: Sequence[Key], default: Any = None) -> list[Any]:
+        """Fetch many objects in ONE batched connector exchange.
+
+        Cache hits are served locally; the misses go through
+        ``connector.get_batch`` (a single pipelined ``mget2`` on KV-backed
+        connectors) and are deserialized + cached like ``get``.
+        """
+        keys = [tuple(k) for k in keys]
+        out: list[Any] = [default] * len(keys)
+        miss_idx: list[int] = []
+        for i, k in enumerate(keys):
+            cached = self.cache.get(k, _MISS)
+            if cached is not _MISS:
+                out[i] = cached
+            else:
+                miss_idx.append(i)
+        if miss_idx:
+            blobs = self.connector.get_batch([keys[i] for i in miss_idx])
+            for i, blob in zip(miss_idx, blobs):
+                if blob is None:
+                    continue
+                obj = self._deserialize(blob)
+                self.cache.put(keys[i], obj)
+                out[i] = obj
+        return out
+
+    # -- future-returning async ops ---------------------------------------------
+    def put_async(self, obj: Any) -> Future:
+        """Serialize + store off-thread; ``Future[Key]``.  Many in-flight
+        puts share the connector's pipelined connection."""
+        return _pool().submit(self.put, obj)
+
+    def get_async(self, key: Key, default: Any = None) -> Future:
+        """Fetch + deserialize off-thread; ``Future[Any]``."""
+        return _pool().submit(self.get, key, default)
+
     def exists(self, key: Key) -> bool:
         return tuple(key) in self.cache or self.connector.exists(tuple(key))
 
@@ -191,6 +231,25 @@ class Store:
     def proxy_batch(self, objs: Sequence[Any], evict: bool = False) -> list[Proxy]:
         keys = self.put_batch(objs)  # single batch op (e.g. one Globus task)
         return [self.proxy_from_key(k, evict=evict) for k in keys]
+
+    # -- perf counters -----------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        """Perf counters: LRU cache hits/misses plus connector/server stats
+        where the connector exposes them (KV-backed connectors report the
+        server's object count / byte total / op count)."""
+        out: dict[str, Any] = {
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "cache_len": len(self.cache),
+            "cache_maxsize": self.cache.maxsize,
+        }
+        conn_stats = getattr(self.connector, "stats", None)
+        if callable(conn_stats):
+            try:
+                out["connector"] = conn_stats()
+            except (ConnectionError, OSError):  # server gone: counters only
+                out["connector"] = None
+        return out
 
     def close(self, *, close_connector: bool = True) -> None:
         unregister_store(self.name)
@@ -236,11 +295,52 @@ def get_or_create_store(config: StoreConfig) -> Store:
 # ---------------------------------------------------------------------------
 # proxy helpers
 # ---------------------------------------------------------------------------
-def resolve_async(proxy: Proxy) -> None:
-    """Begin resolving ``proxy`` in a background thread (paper §3.5)."""
-    factory = get_factory(proxy)
-    if isinstance(factory, StoreFactory):
-        factory.resolve_async()
+def _fetch_group(config: StoreConfig, factories: list[StoreFactory],
+                 futures: list[Future]) -> None:
+    """Resolve a same-store batch of factories with ONE connector exchange."""
+    try:
+        store = get_or_create_store(config)
+        objs = store.get_batch([f.key for f in factories])
+        for factory, fut, obj in zip(factories, futures, objs):
+            if fut.done():
+                continue
+            if obj is None and not store.exists(factory.key):
+                fut.set_exception(LookupError(
+                    f"key {factory.key} not found in store "
+                    f"{config.name!r}"))
+                continue
+            if factory.evict:
+                store.evict(factory.key)
+            fut.set_result(obj)
+    except BaseException as e:  # noqa: BLE001 - deliver into the futures
+        for fut in futures:
+            if not fut.done():
+                fut.set_exception(e)
+
+
+def resolve_async(proxy: "Proxy | Sequence[Proxy]") -> None:
+    """Begin resolving proxies in the background (paper §3.5).
+
+    Accepts one proxy or a sequence.  Batches are grouped by store, and
+    each group is fetched with a single ``Store.get_batch`` — on KV-backed
+    connectors that is ONE pipelined ``mget2`` round trip for the whole
+    batch, overlapped with the caller's compute.
+    """
+    proxies = [proxy] if is_proxy(proxy) else list(proxy)
+    groups: dict[str, list[StoreFactory]] = {}
+    for p in proxies:
+        factory = get_factory(p)
+        if isinstance(factory, StoreFactory) and factory._future is None:
+            groups.setdefault(factory.store_config.name, []).append(factory)
+    for factories in groups.values():
+        if len(factories) == 1:
+            factories[0].resolve_async()
+            continue
+        futures: list[Future] = [Future() for _ in factories]
+        for factory, fut in zip(factories, futures):
+            factory._future = fut
+        _pool().submit(_fetch_group, factories[0].store_config, factories,
+                       futures)
 
 
 def maybe_proxy(store: Store, obj: Any, threshold_bytes: int = 0) -> Any:

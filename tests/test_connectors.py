@@ -133,6 +133,49 @@ def test_multiconnector_empty_raises():
         MultiConnector()
 
 
+def test_put_batch_streams_frames_kvserver_and_socket(tmp_path):
+    """Regression: PSJ2 Frames through put_batch/get_batch on the KV-backed
+    connectors.  The old mput embedded blobs in msgpack, so a Frame either
+    crashed packb or silently forced a join copy; mput2 streams the raw
+    segments out of band."""
+    import numpy as np
+
+    from repro.core import deserialize, serialize
+
+    h = start_kvserver(str(tmp_path))
+    conns = [KVServerConnector(h.host, h.port),
+             SocketConnector(str(tmp_path / "disc"))]
+    arrays = [np.random.default_rng(i).standard_normal(3000) for i in range(5)]
+    try:
+        for conn in conns:
+            keys = conn.put_batch([serialize(a) for a in arrays])
+            blobs = conn.get_batch(keys)
+            for a, blob in zip(arrays, blobs):
+                np.testing.assert_array_equal(deserialize(blob), a)
+            assert conn.exists_batch(keys) == [True] * len(keys)
+            conn.evict_batch(keys)
+            assert conn.exists_batch(keys) == [False] * len(keys)
+    finally:
+        conns[1].shutdown_server()
+        h.stop()
+
+
+def test_multiconnector_batch_dispatch(tmp_path):
+    """get_batch/exists_batch/evict_batch route each key to its child and
+    issue one batch op per child."""
+    mc = MultiConnector([
+        (LocalMemoryConnector(), Policy(max_size=1000, priority=10)),
+        (FileConnector(str(tmp_path / "f")), Policy(priority=0)),
+    ])
+    blobs = [b"s1", b"x" * 5000, b"s2", b"y" * 5000]
+    keys = mc.put_batch(blobs)
+    assert [k[1] for k in keys] == [0, 1, 0, 1]
+    assert mc.get_batch(keys) == blobs
+    assert mc.exists_batch(keys) == [True] * 4
+    mc.evict_batch(keys)
+    assert mc.exists_batch(keys) == [False] * 4
+
+
 def test_multiconnector_routes_frames(tmp_path):
     """Policy routing sees the frame's wire size, not its segment count."""
     import numpy as np

@@ -43,6 +43,26 @@ def test_peer_forwarding(fabric):
     assert not ca.exists(key)
 
 
+def test_batch_ops_local_and_remote(fabric):
+    """put_batch is one mput2 exchange; get_batch groups keys by owning
+    endpoint — remote groups are forwarded over the peer channel."""
+    _, ep_a, ep_b = fabric
+    ca = EndpointConnector(address=ep_a.address)
+    cb = EndpointConnector(address=ep_b.address)
+    blobs = [bytes([i]) * (100 * i + 1) for i in range(5)]
+    keys_a = ca.put_batch(blobs)
+    assert ca.get_batch(keys_a) == blobs
+    # B resolves A's objects (one forwarded mget) plus one of its own
+    kb = cb.put(b"on-b")
+    mixed = list(keys_a) + [kb]
+    got = cb.get_batch(mixed)
+    assert got[:5] == blobs
+    assert got[5] == b"on-b"
+    assert cb.exists_batch(mixed) == [True] * 6
+    cb.evict_batch(mixed)
+    assert ca.exists_batch(mixed) == [False] * 6
+
+
 def test_unknown_endpoint_errors(fabric):
     _, ep_a, _ = fabric
     ca = EndpointConnector(address=ep_a.address)

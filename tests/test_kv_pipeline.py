@@ -1,0 +1,160 @@
+"""The pipelined multiplexed KV transport: seq-tagged futures, concurrent
+in-flight requests, out-of-order completion, batch ops, reconnect semantics."""
+import os
+import signal
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import deserialize, serialize
+from repro.core.kv_tcp import KVClient, spawn_server
+
+
+@pytest.fixture()
+def kv(tmp_path):
+    host, port, pid = spawn_server(ready_file=str(tmp_path / "kv.ready"))
+    client = KVClient(host, port)
+    yield client
+    client.shutdown_server()
+    client.close()
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        pass
+
+
+def test_concurrent_threads_one_client(kv):
+    """Many threads share ONE client/connection with requests in flight."""
+    n_threads, n_ops = 8, 25
+    errors: list[Exception] = []
+
+    def worker(tid: int) -> None:
+        try:
+            for i in range(n_ops):
+                key = f"t{tid}-{i}"
+                val = (f"{tid}:{i}".encode()) * (i + 1)
+                kv.put(key, val)
+                assert bytes(kv.get(key)) == val
+                assert kv.exists(key)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # one connection served everything
+    assert kv.n_reconnects == 1
+
+
+def test_pipelined_futures_and_out_of_order_completion(kv):
+    """A slow op must not block later ops on the same connection."""
+    slow = kv.submit({"op": "sleep", "s": 1.0})
+    t0 = time.perf_counter()
+    fast = kv.submit({"op": "ping"})
+    assert fast.result(5)["data"] == "pong"
+    assert time.perf_counter() - t0 < 0.5      # overtook the sleeping op
+    assert not slow.done()                     # still parked server-side
+    assert slow.result(5)["ok"]
+
+
+def test_many_in_flight_one_round_trip(kv):
+    """N pipelined puts then N pipelined gets, all submitted before any
+    wait — the futures all complete without per-op round trips."""
+    puts = [kv.put_async(f"k{i}", b"v%d" % i) for i in range(64)]
+    for f in puts:
+        f.result(10)
+    gets = [kv.get_async(f"k{i}") for i in range(64)]
+    assert [bytes(f.result(10)) for f in gets] == \
+        [b"v%d" % i for i in range(64)]
+
+
+def test_mput2_mget2_roundtrip(kv):
+    keys = [f"m{i}" for i in range(10)]
+    blobs = [os.urandom(i * 100) for i in range(10)]   # includes empty
+    kv.mput(keys, blobs)
+    got = kv.mget(keys + ["missing"])
+    assert [None if g is None else bytes(g) for g in got] == blobs + [None]
+    assert kv.mget([]) == []
+
+
+def test_mput2_streams_frames_zero_copy(kv):
+    """PSJ2 Frames go through mput2 as raw segments and come back intact."""
+    arrays = [np.random.default_rng(i).standard_normal(2000) for i in range(4)]
+    kv.mput([f"f{i}" for i in range(4)], [serialize(a) for a in arrays])
+    for i, blob in enumerate(kv.mget([f"f{i}" for i in range(4)])):
+        np.testing.assert_array_equal(deserialize(blob), arrays[i])
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_reconnect_with_pending_futures(tmp_path):
+    """Server death fails every pending future with ConnectionError; the
+    next request transparently reconnects once a server is back."""
+    port = _free_port()
+    host, port, pid = spawn_server(port=port,
+                                   ready_file=str(tmp_path / "kv1.ready"))
+    client = KVClient(host, port)
+    client.put("persists-not", b"x")
+    pending = [client.submit({"op": "sleep", "s": 30}) for _ in range(3)]
+    assert not any(f.done() for f in pending)
+    os.kill(pid, signal.SIGKILL)
+    for fut in pending:
+        with pytest.raises(ConnectionError):
+            fut.result(10)
+    # server comes back on the same address: client reconnects on demand
+    spawn_server(port=port, ready_file=str(tmp_path / "kv2.ready"))
+    assert client.ping()
+    client.put("after", b"reborn")
+    assert bytes(client.get("after")) == b"reborn"
+    assert client.n_reconnects >= 2
+    client.shutdown_server()
+    client.close()
+
+
+def test_closed_client_raises(kv):
+    kv.put("a", b"1")
+    kv.close()
+    with pytest.raises(ConnectionError):
+        kv.get("a")
+    # fixture teardown shutdown_server tolerates the closed client
+    kv.shutdown_server()
+
+
+def test_persistence_off_loop_does_not_stall_peers(tmp_path):
+    """With --persist-dir, a client streaming persisting puts must not
+    serialize a second client's reads behind its disk writes."""
+    host, port, _pid = spawn_server(ready_file=str(tmp_path / "kv.ready"),
+                                    persist_dir=str(tmp_path / "pd"))
+    writer = KVClient(host, port)
+    reader = KVClient(host, port)
+    writer.put("warm", b"w")
+    blob = os.urandom(200_000)
+    futs = [writer.put_async(f"big{i}", blob) for i in range(20)]
+    t0 = time.perf_counter()
+    assert reader.exists("warm")
+    read_latency = time.perf_counter() - t0
+    for f in futs:
+        f.result(30)
+    assert read_latency < 1.0
+    # write-through survived: respawn from the same dir
+    writer.shutdown_server()
+    h2, p2, _ = spawn_server(ready_file=str(tmp_path / "kv2.ready"),
+                             persist_dir=str(tmp_path / "pd"))
+    c2 = KVClient(h2, p2)
+    assert bytes(c2.get("big7")) == blob
+    c2.shutdown_server()
+    for c in (writer, reader, c2):
+        c.close()

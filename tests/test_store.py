@@ -88,6 +88,74 @@ def test_missing_key_raises_lookup(tmp_path):
         _ = len(p)
 
 
+def test_get_batch_mixes_cache_and_connector(tmp_path):
+    s = make_store(tmp_path)
+    objs = [{"i": i, "a": np.full(100, i)} for i in range(6)]
+    keys = [s.put(o) for o in objs]
+    warm = s.get(keys[2])                    # prime one cache entry
+    out = s.get_batch(keys + [("file", s.connector.store_dir, "nope")])
+    assert out[2] is warm                    # cache hit preserved identity
+    for i, o in enumerate(out[:6]):
+        assert o["i"] == i
+        np.testing.assert_array_equal(o["a"], np.full(100, i))
+    assert out[6] is None                    # missing key -> default
+    # a second batch is served fully from cache
+    hits_before = s.cache.hits
+    s.get_batch(keys)
+    assert s.cache.hits == hits_before + 6
+
+
+def test_store_async_put_get(tmp_path):
+    s = make_store(tmp_path)
+    futs = [s.put_async({"n": i}) for i in range(4)]
+    keys = [f.result(10) for f in futs]
+    gets = [s.get_async(k) for k in keys]
+    assert [g.result(10)["n"] for g in gets] == list(range(4))
+
+
+def test_resolve_async_batch_groups_by_store(tmp_path):
+    """resolve_async on a proxy batch pre-fetches every target with one
+    batched exchange per store; consumption touches warm futures only."""
+    s = make_store(tmp_path)
+    proxies = s.proxy_batch([{"v": i} for i in range(8)])
+    wire = pickle.loads(pickle.dumps(proxies))     # consumer-side copies
+    resolve_async(wire)
+    assert [p["v"] for p in wire] == list(range(8))
+
+
+def test_resolve_async_batch_missing_key_raises(tmp_path):
+    s = make_store(tmp_path)
+    good = s.proxy({"ok": 1})
+    bad = s.proxy_from_key(("file", s.connector.store_dir, "missing"))
+    resolve_async([good, bad])
+    assert good["ok"] == 1
+    from repro.core import ProxyResolveError
+
+    with pytest.raises(ProxyResolveError, match="not found"):
+        _ = len(bad)
+
+
+def test_store_stats(tmp_path):
+    from repro.core.connectors import KVServerConnector
+    from repro.core.deploy import start_kvserver
+
+    h = start_kvserver(str(tmp_path))
+    s = Store("stats-store", KVServerConnector(h.host, h.port))
+    try:
+        key = s.put({"x": 1})
+        s.get(key)          # miss (fills cache)
+        s.get(key)          # hit
+        stats = s.stats()
+        assert stats["cache_hits"] >= 1
+        assert stats["cache_misses"] >= 1
+        assert stats["cache_len"] == 1
+        assert stats["connector"]["n_objects"] == 1
+        assert stats["connector"]["n_ops"] >= 2
+    finally:
+        s.close()
+        h.stop()
+
+
 def test_maybe_proxy_threshold(tmp_path):
     s = make_store(tmp_path)
     small = maybe_proxy(s, [1, 2], threshold_bytes=10_000)
