@@ -1,0 +1,126 @@
+"""Fig 12 (this repo): object lifecycle — refcounted fan-out vs legacy evict.
+
+The follow-on ownership work (arXiv:2407.01764) motivates this figure: an
+ephemeral intermediate consumed by N workers.  With the paper's original
+fire-and-forget ``evict=True`` flag the FIRST consumer to resolve evicts the
+key and every other consumer raises ``LookupError``; with refcounted keys
+every consumer resolves and the key is evicted exactly once, after the last
+reference drops — no leaked keys, no errors.
+
+Rows:
+
+* ``fig12.legacy.N*``   — hand-built pre-ownership factories (no refcount,
+  resolved without transit so no reference is ever acquired): demonstrates
+  the defect — every consumer after the first fails.
+* ``fig12.refcount.N*`` — N sibling ``evict=True`` proxies, each pickled
+  (as communicated proxies are) and BOTH the local and the wire copy
+  resolved concurrently from a thread pool: 2N consumers, zero failures,
+  key evicted exactly once.
+* ``fig12.owned.N*``    — one ``OwnedProxy`` + ``clone`` per consumer,
+  released after use (the explicit-ownership variant of the same fan-out).
+* ``fig12.lease``       — keys under a TTL lease whose holders are gone:
+  time until the server's lazy expiry sweep reclaims all of them.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from benchmarks.util import emit, payload, record, time_call, tmpdir
+from repro.core import Store, clone, release, unregister_store
+from repro.core.connectors import KVServerConnector
+from repro.core.deploy import start_kvserver
+from repro.core.proxy import Proxy
+from repro.core.store import StoreFactory
+
+SIZE = 1_000_000
+FANOUTS = [4, 16]
+
+
+def _consume(p) -> int:
+    """Resolve one proxy; 1 on the legacy defect's LookupError."""
+    try:
+        assert p.nbytes > 0
+        return 0
+    except Exception:  # noqa: BLE001 - ProxyResolveError(LookupError)
+        return 1
+
+
+def run() -> None:
+    d = tmpdir("fig12")
+    kv = start_kvserver(d)
+    store = Store("fig12", KVServerConnector(kv.host, kv.port))
+    data = payload(SIZE)
+    results: dict = {}
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        for n in FANOUTS:
+            # -- legacy fire-and-forget evict: the defect ------------------
+            key = store.put(data)
+            legacy = [Proxy(StoreFactory(key=tuple(key),
+                                         store_config=store.config(),
+                                         evict=True)) for _ in range(n)]
+            failures = sum(_consume(p) for p in legacy)   # deterministic
+            emit(f"fig12.legacy.N{n}", 0.0, f"{failures}/{n} LookupErrors")
+            results[f"legacy_failures_N{n}"] = failures
+
+            # -- refcounted siblings: everyone resolves, key dies once -----
+            def refcounted(n=n):
+                key = store.put(data)
+                sibs = [store.proxy_from_key(key, evict=True)
+                        for _ in range(n)]
+                wire = [pickle.loads(pickle.dumps(p)) for p in sibs]
+                assert sum(pool.map(_consume, sibs + wire)) == 0
+                assert not store.exists(key)   # ...and cleaned up exactly
+
+            t = time_call(refcounted)
+            srv = store.stats()["connector"]
+            emit(f"fig12.refcount.N{n}", t * 1e6,
+                 f"{srv['n_objects']} leaked")
+            results[f"refcount_N{n}_ms"] = round(t * 1e3, 2)
+            results[f"refcount_N{n}_leaked"] = srv["n_objects"]
+
+            # -- explicit ownership: clone per consumer, release after use -
+            def owned(n=n):
+                owner = store.owned_proxy(data, ttl=60)
+
+                def consume_owned(c):
+                    w = pickle.loads(pickle.dumps(c))  # transit clones a ref
+                    assert w.nbytes > 0
+                    release(w)
+                    release(c)
+
+                list(pool.map(consume_owned,
+                              [clone(owner) for _ in range(n - 1)]))
+                release(owner)
+
+            t = time_call(owned)
+            emit(f"fig12.owned.N{n}", t * 1e6)
+            results[f"owned_N{n}_ms"] = round(t * 1e3, 2)
+
+    # -- lease reclamation: holders are gone, the server sweep cleans up ---
+    n_keys = 32
+    keys = store.put_batch([payload(10_000, seed=i) for i in range(n_keys)])
+    store.connector.incref_batch([tuple(k) for k in keys])
+    store.connector.touch_batch([tuple(k) for k in keys], 0.3)
+    t0 = time.perf_counter()
+    while store.stats()["connector"]["n_objects"] and \
+            time.perf_counter() - t0 < 10:
+        time.sleep(0.05)
+    reclaim_s = time.perf_counter() - t0
+    srv = store.stats()["connector"]
+    emit("fig12.lease", reclaim_s * 1e6,
+         f"{srv['n_expired']} expired, {srv['n_objects']} left")
+    results["lease_reclaim_s"] = round(reclaim_s, 2)
+    results["lease_expired"] = srv["n_expired"]
+    results["final_n_objects"] = srv["n_objects"]
+    record("fig12", results)
+
+    store.close()
+    unregister_store("fig12")
+    kv.stop()
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,7 @@ MODULES = [
     ("table2", "benchmarks.table2_defect"),
     ("fig10", "benchmarks.fig10_federated"),
     ("fig11", "benchmarks.fig11_steering"),
+    ("fig12", "benchmarks.fig12_ownership"),
 ]
 
 _ROOT = Path(__file__).resolve().parents[1]

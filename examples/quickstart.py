@@ -8,8 +8,8 @@ import tempfile
 
 import numpy as np
 
-from repro.core import (MultiConnector, Policy, Store, get_factory,
-                        is_resolved, resolve_async)
+from repro.core import (MultiConnector, Policy, Store, borrow, clone,
+                        get_factory, is_resolved, release, resolve_async)
 from repro.core.connectors import (FileConnector, LocalMemoryConnector,
                                    SharedMemoryConnector)
 
@@ -44,11 +44,28 @@ def main() -> None:
     _ = sum(range(10_000))     # ... compute happens here ...
     print("async-resolved sum:", my_function(p3))
 
-    # -- evict-on-resolve for ephemeral intermediates -------------------
+    # -- refcounted ephemeral intermediates -----------------------------
+    # each sibling (including pickled copies) holds one reference; the key
+    # is evicted after the LAST consumer resolves — never out from under
+    # a sibling that has not resolved yet
     p4 = store.proxy(payload, evict=True)
+    p5 = pickle.loads(pickle.dumps(p4))          # a second consumer
     key = get_factory(p4).key
     _ = my_function(p4)
-    print("evicted after first resolve?", not store.exists(key))
+    print("still alive for the sibling?", store.exists(key))
+    _ = my_function(p5)
+    print("evicted after the last resolve?", not store.exists(key))
+
+    # -- explicit ownership: OwnedProxy + borrow/clone ------------------
+    owned = store.owned_proxy(payload, ttl=60)   # lease bounds crash leaks
+    b = borrow(owned)                            # non-owning view
+    print("borrowed sum:", my_function(b))
+    del b
+    with clone(owned) as co_owner:               # a second owner
+        _ = my_function(co_owner)
+    release(owned)                               # last owner gone -> evicted
+    print("owned key evicted?",
+          not store.exists(get_factory(owned).key))
 
     # -- MultiConnector policy routing ----------------------------------
     multi = MultiConnector([

@@ -9,8 +9,9 @@ Public API mirrors the paper's usage (Listing 1):
     p = store.proxy(obj)          # lightweight, pickles to ~200 bytes
     consume(p)                    # resolves just-in-time, transparently
 """
-from repro.core.proxy import (Proxy, ProxyResolveError, extract, get_factory,
-                              is_proxy, is_resolved, resolve)
+from repro.core.proxy import (OwnedProxy, Proxy, ProxyResolveError, borrow,
+                              clone, extract, get_factory, into_owned,
+                              is_proxy, is_resolved, release, resolve)
 from repro.core.serialize import (Frame, as_segments, deserialize,
                                   frame_nbytes, join_frame, serialize,
                                   serialize_v1)
@@ -21,7 +22,8 @@ from repro.core.store import (Store, StoreConfig, StoreFactory, get_store,
 from repro.core.multi import MultiConnector, NoConnectorMatch, Policy
 
 __all__ = [
-    "Proxy", "ProxyResolveError", "extract", "get_factory", "is_proxy",
+    "Proxy", "OwnedProxy", "ProxyResolveError", "borrow", "clone",
+    "into_owned", "release", "extract", "get_factory", "is_proxy",
     "is_resolved", "resolve", "serialize", "serialize_v1", "deserialize",
     "Frame", "as_segments", "frame_nbytes", "join_frame", "BaseConnector",
     "Connector", "Key", "Store", "StoreConfig", "StoreFactory", "get_store",

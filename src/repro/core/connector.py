@@ -4,6 +4,17 @@ A Connector is a low-level interface to a *mediated channel*: it moves opaque
 byte payloads identified by keys.  Four primary operations — ``put``, ``get``,
 ``exists``, ``evict`` — plus batch variants and lifecycle hooks.
 
+Object-lifecycle extension (the ownership subsystem, following the proxy
+ownership patterns of arXiv:2407.01764): ``incref``/``decref``/``refcount``
+manage per-key reference counts (decref to zero evicts, exactly once) and
+``touch`` sets TTL leases bounding leaks from crashed reference holders.
+KV-backed connectors forward these to their server, where count mutations
+are atomic on the server's event loop — safe across processes and sites.
+:class:`BaseConnector` supplies a *process-local* fallback table so every
+connector supports the API; for purely local connectors (file, memory, shm)
+the counts protect same-process consumers only, which is documented
+behavior, not a bug: cross-process ownership needs a KV-backed channel.
+
 ``put`` accepts ``bytes | Frame | Sequence[memoryview]`` (see
 :mod:`repro.core.serialize`): scatter-gather-capable channels write the
 segments directly, others fall back to a single ``join_frame`` copy.  ``get``
@@ -20,9 +31,17 @@ process re-materialize its Store (paper §3.5's registry behavior).
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Any, Protocol, Sequence, runtime_checkable
 
 Key = tuple  # (str | int, ...)
+
+# process-local lifecycle tables for connectors without a server to hold
+# counts, keyed by CHANNEL identity (not connector instance): a connector
+# rebuilt from config in the same process must see the same counts
+_LIFETIME_TABLES: dict[tuple, dict] = {}
+_LIFETIME_LOCK = threading.Lock()
 
 
 @runtime_checkable
@@ -52,7 +71,7 @@ class Connector(Protocol):
 
 
 class BaseConnector:
-    """Shared batch defaults + context-manager plumbing."""
+    """Shared batch defaults, lifecycle fallback + context-manager plumbing."""
 
     def put_batch(self, blobs: Sequence[bytes]) -> list[Key]:
         return [self.put(b) for b in blobs]
@@ -67,8 +86,113 @@ class BaseConnector:
         for k in keys:
             self.evict(k)
 
-    def close(self) -> None:  # pragma: no cover - default no-op
-        pass
+    # -- lifecycle: refcounts + leases ---------------------------------------
+    # Process-local fallback (see module docstring).  KV-backed connectors
+    # override these with single-exchange server ops.
+    def _lifetime_scope(self):
+        """Hashable identity of the CHANNEL this connector talks to;
+        connectors reconstructible from config should override so rebuilt
+        instances share one count table (default: per-instance)."""
+        return id(self)
+
+    def _lifetime_state(self):
+        scope = (type(self).__name__, self._lifetime_scope())
+        with _LIFETIME_LOCK:
+            state = _LIFETIME_TABLES.get(scope)
+            if state is None:
+                state = _LIFETIME_TABLES[scope] = {
+                    "lock": threading.Lock(), "refs": {}, "leases": {},
+                }
+            return state
+
+    def _drop_lifetime_state(self) -> None:
+        """Forget this channel's fallback count table (call from close():
+        like the channel's data, counts don't outlive the channel)."""
+        scope = (type(self).__name__, self._lifetime_scope())
+        with _LIFETIME_LOCK:
+            _LIFETIME_TABLES.pop(scope, None)
+
+    def _forget_lifetime(self, key: Key) -> None:
+        """Drop fallback refs/leases for one explicitly evicted key, so
+        lifecycle state dies with the data (mirrors the server-side
+        ``_evict``).  No-op when this channel has no fallback table."""
+        scope = (type(self).__name__, self._lifetime_scope())
+        with _LIFETIME_LOCK:
+            state = _LIFETIME_TABLES.get(scope)
+        if state is None:
+            return
+        with state["lock"]:
+            state["refs"].pop(tuple(key), None)
+            state["leases"].pop(tuple(key), None)
+
+    def _sweep_local(self, state) -> None:
+        now = time.time()
+        expired = [k for k, t in state["leases"].items() if t <= now]
+        for k in expired:
+            state["leases"].pop(k, None)
+            state["refs"].pop(k, None)
+            self.evict(k)
+
+    def incref(self, key: Key, n: int = 1) -> int:
+        state = self._lifetime_state()
+        with state["lock"]:
+            self._sweep_local(state)
+            key = tuple(key)
+            count = state["refs"].get(key, 0) + n
+            state["refs"][key] = count
+            return count
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        state = self._lifetime_state()
+        with state["lock"]:
+            self._sweep_local(state)
+            key = tuple(key)
+            count = state["refs"].get(key)
+            if count is None:
+                # no entry HERE ≠ no references: this table is process-
+                # local, so the count usually lives with the creating
+                # process — never evict data other consumers may need
+                # (server-backed connectors, whose counts are
+                # authoritative, treat this case as the legacy hard evict)
+                return 0
+            count -= n
+            if count > 0:
+                state["refs"][key] = count
+                return count
+            state["refs"].pop(key, None)
+            state["leases"].pop(key, None)
+        self.evict(key)            # count hit zero: evict exactly once
+        return 0
+
+    def refcount(self, key: Key) -> int:
+        state = self._lifetime_state()
+        with state["lock"]:
+            self._sweep_local(state)
+            return state["refs"].get(tuple(key), 0)
+
+    def touch(self, key: Key, ttl: float | None) -> bool:
+        state = self._lifetime_state()
+        with state["lock"]:
+            self._sweep_local(state)
+            key = tuple(key)
+            if ttl is None or ttl <= 0:
+                state["leases"].pop(key, None)
+            else:
+                state["leases"][key] = time.time() + ttl
+        return self.exists(key)
+
+    def incref_batch(self, keys: Sequence[Key], n: int = 1) -> list[int]:
+        return [self.incref(k, n) for k in keys]
+
+    def decref_batch(self, keys: Sequence[Key], n: int = 1) -> list[int]:
+        return [self.decref(k, n) for k in keys]
+
+    def touch_batch(self, keys: Sequence[Key], ttl: float | None) -> None:
+        for k in keys:
+            self.touch(k, ttl)
+
+    def close(self) -> None:
+        self._drop_lifetime_state()
 
     def __enter__(self):
         return self

@@ -130,6 +130,51 @@ class EndpointConnector(BaseConnector):
             if not resp.get("ok"):
                 raise ConnectionError(resp.get("error"))
 
+    # -- lifecycle: counts live on the OWNING endpoint (peer-forwarded) ------
+    def _lifetime_op(self, op: str, key: Key, **extra):
+        resp = self._client.request({"op": op, "object_id": key[1],
+                                     "endpoint_id": key[2], **extra})
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
+        return resp.get("data")
+
+    def incref(self, key: Key, n: int = 1) -> int:
+        return int(self._lifetime_op("incref", key, n=n))
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        return int(self._lifetime_op("decref", key, n=n))
+
+    def refcount(self, key: Key) -> int:
+        return int(self._lifetime_op("refcount", key))
+
+    def touch(self, key: Key, ttl: float | None) -> bool:
+        return bool(self._lifetime_op("touch", key, ttl=ttl))
+
+    def _lifetime_batch(self, op: str, keys, **extra) -> list:
+        # one exchange per owning endpoint, pipelined concurrently
+        out: list = [0] * len(keys)
+        futs = []
+        for ep_uuid, idxs in group_indices(keys, 2).items():
+            futs.append((idxs, self._client.submit(
+                {"op": op, "object_ids": [keys[i][1] for i in idxs],
+                 "endpoint_id": ep_uuid, **extra})))
+        for idxs, fut in futs:
+            resp = fut.result(self._client.timeout)
+            if not resp.get("ok"):
+                raise ConnectionError(resp.get("error"))
+            for i, c in zip(idxs, resp.get("data") or [0] * len(idxs)):
+                out[i] = c
+        return out
+
+    def incref_batch(self, keys, n: int = 1) -> list[int]:
+        return [int(c) for c in self._lifetime_batch("mincref", keys, n=n)]
+
+    def decref_batch(self, keys, n: int = 1) -> list[int]:
+        return [int(c) for c in self._lifetime_batch("mdecref", keys, n=n)]
+
+    def touch_batch(self, keys, ttl: float | None) -> None:
+        self._lifetime_batch("mtouch", keys, ttl=ttl)
+
     def config(self) -> dict[str, Any]:
         # no address: consumers bind to THEIR local endpoint via env
         return {"env": self.env, "address": None if os.environ.get(self.env)

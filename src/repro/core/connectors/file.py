@@ -50,5 +50,8 @@ class FileConnector(BaseConnector):
     def evict(self, key: Key) -> None:
         self._path(key[2]).unlink(missing_ok=True)
 
+    def _lifetime_scope(self):
+        return self.store_dir      # reconnections share the count table
+
     def config(self) -> dict[str, Any]:
         return {"store_dir": self.store_dir}

@@ -50,6 +50,9 @@ class GlobusConnector(BaseConnector):
         self._tasks_dir = Path(next(iter(self.endpoint_map.values()))) / ".tasks"
         self._tasks_dir.mkdir(exist_ok=True)
 
+    def _lifetime_scope(self):
+        return tuple(sorted(self.endpoint_map.items()))
+
     # -- transfer-task bookkeeping -------------------------------------------
     def _submit_task(self, total_bytes: int) -> str:
         task_id = uuid_mod.uuid4().hex

@@ -55,6 +55,28 @@ class KVServerConnector(BaseConnector):
     def evict_batch(self, keys) -> None:
         self._client.mevict([k[3] for k in keys])  # one exchange
 
+    # -- lifecycle: server-side refcounts + leases (atomic on its loop) ------
+    def incref(self, key: Key, n: int = 1) -> int:
+        return self._client.incref(key[3], n)
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        return self._client.decref(key[3], n)
+
+    def refcount(self, key: Key) -> int:
+        return self._client.refcount(key[3])
+
+    def touch(self, key: Key, ttl: float | None) -> bool:
+        return self._client.touch(key[3], ttl)
+
+    def incref_batch(self, keys, n: int = 1) -> list[int]:
+        return self._client.mincref([k[3] for k in keys], n)  # one exchange
+
+    def decref_batch(self, keys, n: int = 1) -> list[int]:
+        return self._client.mdecref([k[3] for k in keys], n)
+
+    def touch_batch(self, keys, ttl: float | None) -> None:
+        self._client.mtouch([k[3] for k in keys], ttl)
+
     def stats(self) -> dict[str, Any]:
         return self._client.stats()
 

@@ -42,9 +42,13 @@ class LocalMemoryConnector(BaseConnector):
     def evict(self, key: Key) -> None:
         self._data.pop(tuple(key), None)
 
+    def _lifetime_scope(self):
+        return self.store_id       # reconnections share the count table
+
     def config(self) -> dict[str, Any]:
         return {"store_id": self.store_id}
 
     def close(self) -> None:
         with _LOCK:
             _STORES.pop(self.store_id, None)
+        self._drop_lifetime_state()

@@ -193,6 +193,9 @@ class SharedMemoryConnector(BaseConnector):
         with self._lock:
             self._owned.discard(object_id)
 
+    def _lifetime_scope(self):
+        return self.registry_dir   # reconnections share the count table
+
     def config(self) -> dict[str, Any]:
         return {"registry_dir": self.registry_dir}
 
@@ -205,3 +208,4 @@ class SharedMemoryConnector(BaseConnector):
             self._close_segment(seg)
         for object_id in owned:
             self._evict_entry(self._idx(object_id))
+        self._drop_lifetime_state()

@@ -105,6 +105,38 @@ class SocketConnector(BaseConnector):
             client = self._client_for(keys[idxs[0]])
             client.mevict([keys[i][3] for i in idxs])
 
+    # -- lifecycle: refcounts live on the owning node's server ---------------
+    def incref(self, key: Key, n: int = 1) -> int:
+        return self._client_for(key).incref(key[3], n)
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        return self._client_for(key).decref(key[3], n)
+
+    def refcount(self, key: Key) -> int:
+        return self._client_for(key).refcount(key[3])
+
+    def touch(self, key: Key, ttl: float | None) -> bool:
+        return self._client_for(key).touch(key[3], ttl)
+
+    def _lifetime_batch(self, keys, method: str, arg) -> list[int]:
+        out = [0] * len(keys)
+        for node, idxs in group_indices(keys, 2).items():
+            client = self._client_for(keys[idxs[0]])
+            counts = getattr(client, method)(
+                [keys[i][3] for i in idxs], arg)
+            for i, c in zip(idxs, counts or [0] * len(idxs)):
+                out[i] = c
+        return out
+
+    def incref_batch(self, keys, n: int = 1) -> list[int]:
+        return self._lifetime_batch(keys, "mincref", n)
+
+    def decref_batch(self, keys, n: int = 1) -> list[int]:
+        return self._lifetime_batch(keys, "mdecref", n)
+
+    def touch_batch(self, keys, ttl: float | None) -> None:
+        self._lifetime_batch(keys, "mtouch", ttl)
+
     def stats(self) -> dict:
         return self._client.stats()
 

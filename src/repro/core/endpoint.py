@@ -20,13 +20,12 @@ import argparse
 import asyncio
 import os
 import struct
-import time
 import uuid as uuid_mod
 from pathlib import Path
 
 import msgpack
 
-from repro.core.kv_tcp import MAX_FRAME, STREAM_LIMIT
+from repro.core.kv_tcp import MAX_FRAME, STREAM_LIMIT, LifetimeTable
 
 _LEN = struct.Struct(">I")
 
@@ -105,6 +104,7 @@ class Endpoint:
         self.persist = Path(persist_dir) if persist_dir else None
         self.throttle_bps, self.throttle_rtt = throttle_bps, throttle_rtt
         self._data: dict[str, bytes] = {}
+        self.lifetime = LifetimeTable(self._evict_object)
         self._n_ops = 0
         self._peers: dict[str, PeerChannel] = {}
         self._peer_dials: dict[str, "asyncio.Future[PeerChannel]"] = {}
@@ -122,8 +122,19 @@ class Endpoint:
     # ------------------------------------------------------------------
     # local store ops
     # ------------------------------------------------------------------
+    def _evict_object(self, oid: str) -> None:
+        self._data.pop(oid, None)
+        self.lifetime.drop(oid)
+        if self.persist:
+            (self.persist / f"{oid}.obj").unlink(missing_ok=True)
+
+    def _touch(self, oid: str, ttl) -> bool:
+        self.lifetime.touch(oid, ttl)
+        return oid in self._data
+
     def _local(self, req: dict) -> dict:
         self._n_ops += 1
+        self.lifetime.maybe_sweep()
         op = req["op"]
         oid = req.get("object_id")
         if op == "put":
@@ -138,9 +149,7 @@ class Endpoint:
                                          for o in req["object_ids"]]}
         if op == "mevict":
             for o in req["object_ids"]:
-                self._data.pop(o, None)
-                if self.persist:
-                    (self.persist / f"{o}.obj").unlink(missing_ok=True)
+                self._evict_object(o)
             return {"ok": True}
         if op == "mexists":
             return {"ok": True, "data": [o in self._data
@@ -148,13 +157,34 @@ class Endpoint:
         if op == "exists":
             return {"ok": True, "data": oid in self._data}
         if op == "evict":
-            self._data.pop(oid, None)
-            if self.persist:
-                (self.persist / f"{oid}.obj").unlink(missing_ok=True)
+            self._evict_object(oid)
             return {"ok": True}
+        if op == "incref":
+            return {"ok": True,
+                    "data": self.lifetime.incref(oid, req.get("n", 1))}
+        if op == "decref":
+            return {"ok": True,
+                    "data": self.lifetime.decref(oid, req.get("n", 1))}
+        if op == "mincref":
+            n = req.get("n", 1)
+            return {"ok": True, "data": [self.lifetime.incref(o, n)
+                                         for o in req["object_ids"]]}
+        if op == "mdecref":
+            n = req.get("n", 1)
+            return {"ok": True, "data": [self.lifetime.decref(o, n)
+                                         for o in req["object_ids"]]}
+        if op == "refcount":
+            return {"ok": True, "data": self.lifetime.refs.get(oid, 0)}
+        if op == "touch":
+            return {"ok": True, "data": self._touch(oid, req.get("ttl"))}
+        if op == "mtouch":
+            ttl = req.get("ttl")
+            return {"ok": True, "data": [self._touch(o, ttl)
+                                         for o in req["object_ids"]]}
         if op == "stats":
             return {"ok": True, "data": {"n": len(self._data),
                                          "n_ops": self._n_ops,
+                                         **self.lifetime.stats(),
                                          "peers": list(self._peers)}}
         return {"ok": False, "error": f"bad op {op!r}"}
 
@@ -452,8 +482,18 @@ class Endpoint:
             tmp = Path(ready_file + ".tmp")
             tmp.write_text(f"{api_host}:{actual}:{os.getpid()}:{self.uuid}")
             tmp.replace(ready_file)
-        async with peer_server, api_server:
-            await self._shutdown.wait()
+
+        async def _expiry_backstop() -> None:
+            while True:          # idle endpoints must still expire leases
+                await asyncio.sleep(LifetimeTable.SWEEP_INTERVAL)
+                self.lifetime.maybe_sweep()
+
+        sweeper = asyncio.create_task(_expiry_backstop())
+        try:
+            async with peer_server, api_server:
+                await self._shutdown.wait()
+        finally:
+            sweeper.cancel()
         # drop peer channels so remote ends re-establish later (paper: the
         # connection is re-established if lost for any reason)
         for chan in self._peers.values():

@@ -46,6 +46,32 @@ Requests (msgpack maps; ``seq`` omitted below for brevity):
   loop; exists so tests and benchmarks can observe out-of-order completion
   deterministically.
 
+**Lifecycle ops** (the ownership subsystem; see ``repro.core.store`` for the
+client-side OwnedProxy/borrow model built on top):
+
+* ``incref``: ``{"op": "incref", "key": k, "n": 1}`` — make ``k`` a
+  *refcounted* key and add ``n`` references; responds with the new count.
+* ``decref``: ``{"op": "decref", "key": k, "n": 1}`` — drop ``n``
+  references; when the count reaches zero the object is evicted (exactly
+  once — the count entry is removed atomically with the eviction).  A
+  decref on a key with NO count entry is the legacy fire-and-forget evict
+  (hard evict, count 0) so pre-ownership proxies keep their semantics.
+* ``refcount``: ``{"op": "refcount", "key": k}`` — current count (0 if
+  the key is not refcounted).
+* ``touch``: ``{"op": "touch", "key": k, "ttl": seconds}`` — set/refresh a
+  TTL lease: the key is evicted (and its references cleared) once ``ttl``
+  seconds pass without another touch, bounding leaks from crashed
+  reference holders.  ``ttl`` of None/<=0 clears the lease.
+* ``mincref``/``mdecref``/``mtouch``: batched variants over ``keys``
+  (one exchange for a whole proxy fan-out).
+
+Lease expiry is *lazy*: a time-gated sweep runs at the top of request
+handling (so even servers driven directly through ``handle`` expire keys)
+plus a periodic backstop task on the serving event loop.  All count/lease
+mutations happen in synchronous handler sections on the single event loop,
+so incref/decref/evict interleavings from any number of connections are
+atomic — this is what fixes the multi-consumer evict race.
+
 Responses: ``{"ok": bool, "seq": int, "data": ..., "error": str}`` plus the
 ``raw``/``raws`` out-of-band markers above.
 
@@ -158,11 +184,90 @@ def _recv_exact_into(sock: socket.socket, view: memoryview) -> None:
 
 
 # ---------------------------------------------------------------------------
+# lifecycle state machine (shared by KVServer and the PS-endpoint)
+# ---------------------------------------------------------------------------
+class LifetimeTable:
+    """Per-key reference counts + TTL leases with a lazy, time-gated expiry
+    sweep.  Mutations happen in the synchronous sections of a single-
+    threaded server loop, so incref/decref/evict interleavings from any
+    number of connections are atomic — the property that fixes the
+    multi-consumer evict race.
+
+    ``evict_fn`` performs the full eviction (data, persistence) and must
+    call :meth:`drop` so lifecycle state dies with the object.
+    """
+
+    SWEEP_INTERVAL = 0.25         # min seconds between lazy lease sweeps
+
+    def __init__(self, evict_fn) -> None:
+        self.refs: dict[str, int] = {}       # refcounted keys -> count
+        self.leases: dict[str, float] = {}   # key -> absolute expiry time
+        self.n_expired = 0
+        self._next_sweep = 0.0
+        self._evict_fn = evict_fn
+
+    def drop(self, key: str) -> None:
+        """Forget lifecycle state for an evicted key."""
+        self.refs.pop(key, None)
+        self.leases.pop(key, None)
+
+    def incref(self, key: str, n: int = 1) -> int:
+        count = self.refs.get(key, 0) + int(n)
+        self.refs[key] = count
+        return count
+
+    def decref(self, key: str, n: int = 1) -> int:
+        count = self.refs.get(key)
+        if count is None:
+            # legacy fire-and-forget: a decref on an unmanaged key is the
+            # old hard evict, so pre-ownership evict=True proxies still work
+            self._evict_fn(key)
+            return 0
+        count -= int(n)
+        if count > 0:
+            self.refs[key] = count
+            return count
+        self._evict_fn(key)       # exactly once: drop() runs with the data
+        return 0
+
+    def touch(self, key: str, ttl) -> None:
+        if ttl is None or float(ttl) <= 0:
+            self.leases.pop(key, None)
+        else:
+            self.leases[key] = time.time() + float(ttl)
+
+    def sweep(self, now: float | None = None) -> int:
+        """Evict every key whose lease has expired (refs cleared too: an
+        expired lease means the reference holders are presumed dead)."""
+        now = time.time() if now is None else now
+        self._next_sweep = now + self.SWEEP_INTERVAL
+        if not self.leases:
+            return 0
+        expired = [k for k, t in self.leases.items() if t <= now]
+        for k in expired:
+            self._evict_fn(k)
+        self.n_expired += len(expired)
+        return len(expired)
+
+    def maybe_sweep(self) -> None:
+        if self.leases and time.time() >= self._next_sweep:
+            self.sweep()
+
+    def stats(self) -> dict:
+        return {"n_refcounted": len(self.refs),
+                "n_leases": len(self.leases),
+                "n_expired": self.n_expired}
+
+
+# ---------------------------------------------------------------------------
 # server
 # ---------------------------------------------------------------------------
 class KVServer:
+    SWEEP_INTERVAL = LifetimeTable.SWEEP_INTERVAL
+
     def __init__(self, persist_dir: str | None = None) -> None:
         self._data: dict[str, bytes] = {}
+        self.lifetime = LifetimeTable(self._evict)
         self._persist = Path(persist_dir) if persist_dir else None
         self._n_ops = 0
         self._io_pool: ThreadPoolExecutor | None = None
@@ -201,11 +306,20 @@ class KVServer:
 
     def _evict(self, key: str) -> None:
         self._data.pop(key, None)
+        self.lifetime.drop(key)
         if self._persist:
             (self._persist / f"{key}.kv").unlink(missing_ok=True)
 
+    def _touch(self, key: str, ttl) -> bool:
+        self.lifetime.touch(key, ttl)
+        return key in self._data
+
+    def _maybe_sweep(self) -> None:
+        self.lifetime.maybe_sweep()
+
     def handle(self, req: dict) -> dict:
         self._n_ops += 1
+        self._maybe_sweep()
         op = req["op"]
         if op == "put":
             self._put(req["key"], req["data"])
@@ -230,6 +344,28 @@ class KVServer:
             return {"ok": True}
         if op == "mexists":
             return {"ok": True, "data": [k in self._data for k in req["keys"]]}
+        if op == "incref":
+            return {"ok": True, "data": self.lifetime.incref(req["key"],
+                                                             req.get("n", 1))}
+        if op == "decref":
+            return {"ok": True, "data": self.lifetime.decref(req["key"],
+                                                             req.get("n", 1))}
+        if op == "mincref":
+            n = req.get("n", 1)
+            return {"ok": True,
+                    "data": [self.lifetime.incref(k, n) for k in req["keys"]]}
+        if op == "mdecref":
+            n = req.get("n", 1)
+            return {"ok": True,
+                    "data": [self.lifetime.decref(k, n) for k in req["keys"]]}
+        if op == "refcount":
+            return {"ok": True, "data": self.lifetime.refs.get(req["key"], 0)}
+        if op == "touch":
+            return {"ok": True, "data": self._touch(req["key"], req.get("ttl"))}
+        if op == "mtouch":
+            ttl = req.get("ttl")
+            return {"ok": True,
+                    "data": [self._touch(k, ttl) for k in req["keys"]]}
         if op == "ping":
             return {"ok": True, "data": "pong"}
         if op == "stats":
@@ -237,6 +373,7 @@ class KVServer:
                 "n_objects": len(self._data),
                 "bytes": sum(len(v) for v in self._data.values()),
                 "n_ops": self._n_ops,
+                **self.lifetime.stats(),
             }}
         if op == "shutdown":
             self._shutdown.set()
@@ -261,6 +398,7 @@ class KVServer:
         op = req.get("op")
         seq = req.get("seq")
         raw: tuple | None = None
+        self._maybe_sweep()
         try:
             if op == "put2":
                 self._n_ops += 1
@@ -372,6 +510,14 @@ class KVServer:
             writer.close()
 
 
+async def _expiry_backstop(kv: KVServer) -> None:
+    """Periodic lease sweep: expires keys even on an idle server (the lazy
+    per-request sweep only runs while requests arrive)."""
+    while True:
+        await asyncio.sleep(KVServer.SWEEP_INTERVAL)
+        kv._maybe_sweep()
+
+
 async def serve(host: str, port: int, persist_dir: str | None,
                 ready_file: str | None) -> None:
     kv = KVServer(persist_dir)
@@ -382,8 +528,12 @@ async def serve(host: str, port: int, persist_dir: str | None,
         tmp = Path(ready_file + ".tmp")
         tmp.write_text(f"{host}:{actual_port}:{os.getpid()}")
         tmp.replace(ready_file)
-    async with server:
-        await kv._shutdown.wait()
+    sweeper = asyncio.create_task(_expiry_backstop(kv))
+    try:
+        async with server:
+            await kv._shutdown.wait()
+    finally:
+        sweeper.cancel()
 
 
 def spawn_server(*, host: str = "127.0.0.1", port: int = 0,
@@ -666,6 +816,41 @@ class KVClient:
 
     def mevict(self, keys) -> None:
         self.request({"op": "mevict", "keys": list(keys)})
+
+    # -- lifecycle: refcounts + leases ---------------------------------------
+    def _data_op(self, msg: dict):
+        resp = self.request(msg)
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return resp.get("data")
+
+    def incref(self, key: str, n: int = 1) -> int:
+        """Add ``n`` references to ``key``; returns the new count."""
+        return int(self._data_op({"op": "incref", "key": key, "n": n}))
+
+    def decref(self, key: str, n: int = 1) -> int:
+        """Drop ``n`` references; at zero the server evicts the key."""
+        return int(self._data_op({"op": "decref", "key": key, "n": n}))
+
+    def mincref(self, keys, n: int = 1) -> list[int]:
+        """Batch incref in ONE exchange; returns the new counts."""
+        return [int(c) for c in
+                self._data_op({"op": "mincref", "keys": list(keys), "n": n})]
+
+    def mdecref(self, keys, n: int = 1) -> list[int]:
+        return [int(c) for c in
+                self._data_op({"op": "mdecref", "keys": list(keys), "n": n})]
+
+    def refcount(self, key: str) -> int:
+        return int(self._data_op({"op": "refcount", "key": key}))
+
+    def touch(self, key: str, ttl: float | None) -> bool:
+        """Set/refresh (or clear, for ttl None/<=0) a TTL lease on ``key``;
+        returns whether the key currently exists."""
+        return bool(self._data_op({"op": "touch", "key": key, "ttl": ttl}))
+
+    def mtouch(self, keys, ttl: float | None) -> None:
+        self._data_op({"op": "mtouch", "keys": list(keys), "ttl": ttl})
 
     def ping(self) -> bool:
         try:

@@ -102,14 +102,14 @@ class MultiConnector(BaseConnector):
         conn, sub = self._child(key)
         return conn.get(sub)
 
-    def _dispatch_batch(self, keys, method: str) -> list:
+    def _dispatch_batch(self, keys, method: str, *args) -> list:
         """Group keys by child and issue ONE batch op per child (each child
         then collapses its group into a single pipelined exchange)."""
         out: list = [None] * len(keys)
         for idx, js in group_indices(keys, 1).items():
             child = self._by_id[idx]
             results = getattr(child, method)(
-                [tuple(keys[j][2:]) for j in js])
+                [tuple(keys[j][2:]) for j in js], *args)
             for j, r in zip(js, results or [None] * len(js)):
                 out[j] = r
         return out
@@ -131,6 +131,38 @@ class MultiConnector(BaseConnector):
     def evict(self, key: Key) -> None:
         conn, sub = self._child(key)
         conn.evict(sub)
+
+    # -- lifecycle: dispatch on the child that stored the object -------------
+    def _forget_lifetime(self, key: Key) -> None:
+        conn, sub = self._child(key)
+        forget = getattr(conn, "_forget_lifetime", None)
+        if forget is not None:
+            forget(sub)
+
+    def incref(self, key: Key, n: int = 1) -> int:
+        conn, sub = self._child(key)
+        return conn.incref(sub, n)
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        conn, sub = self._child(key)
+        return conn.decref(sub, n)
+
+    def refcount(self, key: Key) -> int:
+        conn, sub = self._child(key)
+        return conn.refcount(sub)
+
+    def touch(self, key: Key, ttl: float | None) -> bool:
+        conn, sub = self._child(key)
+        return conn.touch(sub, ttl)
+
+    def incref_batch(self, keys, n: int = 1) -> list[int]:
+        return self._dispatch_batch(keys, "incref_batch", n)
+
+    def decref_batch(self, keys, n: int = 1) -> list[int]:
+        return self._dispatch_batch(keys, "decref_batch", n)
+
+    def touch_batch(self, keys, ttl: float | None) -> None:
+        self._dispatch_batch(keys, "touch_batch", ttl)
 
     def stats(self) -> dict[str, Any]:
         out: dict[str, Any] = {}

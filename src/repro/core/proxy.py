@@ -20,10 +20,25 @@ implementation builds on).
 
 ``__class__`` is a property returning ``type(target)`` which is what makes
 ``isinstance`` transparent without metaclass games.
+
+Ownership (arXiv:2407.01764's proxy patterns)
+---------------------------------------------
+:class:`OwnedProxy` extends the transparent proxy with a *lifetime*: it holds
+one reference to its target's storage and drops it (``release``) when the
+proxy is garbage-collected, explicitly released, or exits its ``with`` block
+— when the last reference is dropped, the store evicts the object.  The
+module-level helpers :func:`clone` (a new co-owning reference),
+:func:`borrow` (a non-owning proxy that keeps its owner alive), and
+:func:`into_owned` (upgrade a plain/ephemeral proxy to an owning one)
+implement the ownership patterns on top of any factory exposing the small
+lifetime protocol (``release``/``peek``/``clone``/``into_owned``/
+``add_borrow``/``drop_borrow``/``detached`` — see
+:class:`repro.core.store.StoreFactory`).
 """
 from __future__ import annotations
 
 import operator
+import weakref
 from typing import Any, Callable, Generic, TypeVar
 
 T = TypeVar("T")
@@ -68,6 +83,25 @@ class Proxy(Generic[T]):
 
     def __reduce_ex__(self, protocol):
         return self.__reduce__()
+
+    # -- copying: a copy of a resolved proxy stays resolved ----------------
+    def __copy__(self):
+        new = Proxy(object.__getattribute__(self, "_proxy_factory"))
+        object.__setattr__(new, "_proxy_target",
+                           object.__getattribute__(self, "_proxy_target"))
+        return new
+
+    def __deepcopy__(self, memo):
+        import copy as _copy
+
+        target = object.__getattribute__(self, "_proxy_target")
+        if target is not _UNRESOLVED:
+            new_target = _copy.deepcopy(target, memo)
+            new = Proxy(_Resolved(new_target))
+            object.__setattr__(new, "_proxy_target", new_target)
+            return new
+        return Proxy(_copy.deepcopy(
+            object.__getattribute__(self, "_proxy_factory"), memo))
 
     # -- attribute protocol ------------------------------------------------
     def __getattr__(self, name: str) -> Any:
@@ -168,19 +202,6 @@ class Proxy(Generic[T]):
         return jnp.asarray(_do_resolve(self))
 
 
-def _forward_binary(name: str):
-    op = getattr(operator, name, None)
-
-    if op is not None:
-        def fwd(self, other, _op=op):
-            return _op(_do_resolve(self), _unwrap(other))
-    else:
-        def fwd(self, other, _name=f"__{name.strip('_')}__"):
-            return getattr(_do_resolve(self), _name)(_unwrap(other))
-
-    return fwd
-
-
 def _forward_rbinary(dunder: str):
     def fwd(self, other):
         target = _do_resolve(self)
@@ -200,7 +221,7 @@ def _forward_unary(dunder: str):
 
 
 def _unwrap(obj):
-    if type(obj) is Proxy:
+    if issubclass(type(obj), Proxy):   # real-type check; __class__ lies
         return _do_resolve(obj)
     return obj
 
@@ -244,6 +265,193 @@ for dunder in ("__neg__", "__pos__", "__abs__", "__invert__", "__round__",
 
 
 # ---------------------------------------------------------------------------
+# Ownership: OwnedProxy + borrow/clone/into_owned (arXiv:2407.01764 patterns)
+# ---------------------------------------------------------------------------
+
+class _Resolved:
+    """Trivial factory wrapping an already-materialized value (deepcopies of
+    resolved proxies; pickles the value itself, not a reference)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: Any) -> None:
+        self.value = value
+
+    def __call__(self) -> Any:
+        return self.value
+
+
+def _quiet_release(release_fn: Callable[[], Any]) -> None:
+    """GC-time release: the store/server may already be gone — a leaked
+    reference is bounded by its lease, so never raise out of a finalizer."""
+    try:
+        release_fn()
+    except Exception:  # noqa: BLE001 - GC context, lease is the backstop
+        pass
+
+
+class OwnedProxy(Proxy[T]):
+    """A transparent proxy that OWNS one reference to its target's storage.
+
+    The reference is dropped (store ``decref``; at zero the key is evicted)
+    when the proxy is garbage-collected, explicitly :func:`release`-d, or
+    exits its ``with`` block.  Unlike a plain ``evict=True`` proxy, resolving
+    an OwnedProxy does NOT consume the object: it stays available until the
+    last owner drops it.
+
+    Pickling an OwnedProxy acquires a reference for the communicated copy
+    (clone-on-pickle), so every deserialized consumer owns its own lifetime.
+    Note the caveat: unpickling one serialized blob N times yields N proxies
+    but only one acquired reference — for broadcast fan-out create one clone
+    (or sibling ``evict=True`` proxy) per consumer, and put a TTL lease on
+    the key as a crash backstop.
+
+    ``with owned as p:`` manages the *lifetime* (release on exit); it
+    deliberately shadows the transparent forwarding of ``__enter__`` to a
+    context-manager target.
+
+    GC-time release is best-effort and skipped at interpreter exit; TTL
+    leases (``Store.lease`` / ``owned_proxy(ttl=...)``) bound any leak.
+    """
+
+    __slots__ = ("_proxy_finalizer",)
+
+    def __init__(self, factory: Callable[[], T]) -> None:
+        super().__init__(factory)
+        release_fn = getattr(factory, "release", None)
+        fin = None
+        if release_fn is not None:
+            fin = weakref.finalize(self, _quiet_release, release_fn)
+            # do not decref over the network during interpreter teardown;
+            # the server-side lease handles refs the process dies holding
+            fin.atexit = False
+        object.__setattr__(self, "_proxy_finalizer", fin)
+
+    def __reduce__(self):
+        return (OwnedProxy,
+                (object.__getattribute__(self, "_proxy_factory"),))
+
+    def __copy__(self):
+        return clone(self)
+
+    def __deepcopy__(self, memo):
+        import copy as _copy
+
+        new = clone(self)
+        target = object.__getattribute__(self, "_proxy_target")
+        if target is not _UNRESOLVED:
+            # an independent target, not a shared view of the store cache
+            object.__setattr__(new, "_proxy_target",
+                               _copy.deepcopy(target, memo))
+        return new
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        release(self)
+        return False
+
+
+def release(proxy: Proxy) -> None:
+    """Drop an :class:`OwnedProxy`'s reference now (idempotent).
+
+    Raises ``RuntimeError`` if borrowed proxies created from it are still
+    alive.  After release the proxy must not be resolved or pickled.
+    """
+    # real-type check: isinstance() would consult __class__ and RESOLVE the
+    # proxy (consuming ephemeral references) just to answer the question
+    if not issubclass(type(proxy), OwnedProxy):
+        return
+    factory = object.__getattribute__(proxy, "_proxy_factory")
+    release_fn = getattr(factory, "release", None)
+    if release_fn is not None:
+        # call the factory directly — it checks borrows under its own lock
+        # and raises BEFORE the once-only finalizer is consumed, so a
+        # racing borrow can never permanently disarm the release
+        release_fn()
+    fin = object.__getattribute__(proxy, "_proxy_finalizer")
+    if fin is not None:
+        fin.detach()   # reference dropped: disarm the GC-time release
+
+
+class _Borrowed:
+    """Non-owning factory of a borrowed proxy.
+
+    Holds a STRONG reference to the owner proxy, so the owner cannot be
+    garbage-collected (and therefore cannot drop the last reference) while
+    any borrow is alive; explicit ``release`` of the owner raises instead.
+    Resolution never consumes a reference.  Pickling detaches: the
+    communicated copy becomes a plain non-owning factory, valid for as long
+    as some reference holder keeps the key alive.
+    """
+
+    __slots__ = ("owner", "factory")
+
+    def __init__(self, owner: Proxy, factory: Any) -> None:
+        self.owner = owner
+        self.factory = factory
+        factory.add_borrow()
+
+    def __call__(self) -> Any:
+        if is_resolved(self.owner):
+            return object.__getattribute__(self.owner, "_proxy_target")
+        return self.factory.peek()
+
+    def __del__(self) -> None:
+        try:
+            self.factory.drop_borrow()
+        except Exception:  # noqa: BLE001 - GC context
+            pass
+
+    def __reduce__(self):
+        return (_detached_factory, (self.factory.detached(),))
+
+
+def _detached_factory(factory: Any) -> Any:
+    return factory
+
+
+def borrow(proxy: Proxy) -> Proxy:
+    """A non-owning proxy to the same target; keeps ``proxy``'s owner alive
+    for the borrow's lifetime and never consumes a reference."""
+    factory = object.__getattribute__(proxy, "_proxy_factory")
+    if not (hasattr(factory, "peek") and hasattr(factory, "add_borrow")):
+        raise TypeError(
+            f"factory {type(factory).__name__} does not support borrowing")
+    return Proxy(_Borrowed(proxy, factory))
+
+
+def clone(proxy: Proxy) -> "OwnedProxy":
+    """A new co-owning :class:`OwnedProxy`: acquires one more reference, so
+    the target outlives whichever owner drops last."""
+    factory = object.__getattribute__(proxy, "_proxy_factory")
+    clone_fn = getattr(factory, "clone", None)
+    if clone_fn is None:
+        raise TypeError(
+            f"factory {type(factory).__name__} does not support cloning")
+    return OwnedProxy(clone_fn())
+
+
+def into_owned(proxy: Proxy) -> "OwnedProxy":
+    """Upgrade a plain or ``evict=True`` proxy into an :class:`OwnedProxy`.
+
+    An unconsumed ``evict=True`` proxy *moves* its pending reference into
+    the owner (the original proxy resolves without consuming afterwards); a
+    plain proxy acquires a fresh reference.
+    """
+    # real-type check — isinstance would resolve the proxy via __class__
+    if issubclass(type(proxy), OwnedProxy):
+        return proxy
+    factory = object.__getattribute__(proxy, "_proxy_factory")
+    fn = getattr(factory, "into_owned", None)
+    if fn is None:
+        raise TypeError(
+            f"factory {type(factory).__name__} does not support ownership")
+    return OwnedProxy(fn())
+
+
+# ---------------------------------------------------------------------------
 # Module-level utilities (mirroring proxystore.proxy's API)
 # ---------------------------------------------------------------------------
 
@@ -268,5 +476,6 @@ def get_factory(proxy: Proxy) -> Callable[[], Any]:
 
 
 def is_proxy(obj: Any) -> bool:
-    """True if ``obj`` is a Proxy instance (bypasses __class__ lie)."""
-    return type(obj) is Proxy
+    """True if ``obj`` is a Proxy (or OwnedProxy) — real-type check, immune
+    to the ``__class__`` lie."""
+    return Proxy in type(obj).__mro__

@@ -4,8 +4,14 @@
 * caches *after deserialization* (paper: "to avoid duplicate deserializations"),
 * ``proxy()`` / ``proxy_batch()`` produce transparent lazy proxies whose
   factories carry only ``(store config, key)``,
-* an ``evict`` flag on proxies evicts the object on first resolve (ephemeral
-  intermediates),
+* object lifetimes are *reference counted* (the ownership subsystem,
+  following arXiv:2407.01764): ``evict=True`` proxies are refcounted
+  ephemerals (each sibling holds a reference, dropped on resolve; the key
+  is evicted exactly once, after the LAST consumer — not on the first,
+  which used to break every other consumer), ``owned_proxy()`` returns an
+  :class:`~repro.core.OwnedProxy` whose reference is dropped on
+  GC/release/context-exit, and ``lease()`` puts TTL bounds on keys so
+  crashed reference holders can't leak them,
 * ``resolve_async`` overlaps proxy resolution with compute,
 * stores register globally by name: a proxy resolved on a process without the
   store re-materializes it from the factory's embedded config, and later
@@ -21,7 +27,7 @@ from typing import Any, Callable, Sequence
 
 from repro.core.connector import (Connector, Key, import_path,
                                   resolve_import_path)
-from repro.core.proxy import Proxy, get_factory, is_proxy
+from repro.core.proxy import OwnedProxy, Proxy, get_factory, is_proxy
 from repro.core.serialize import deserialize, frame_nbytes, serialize
 
 _REGISTRY: dict[str, "Store"] = {}
@@ -88,7 +94,16 @@ class StoreConfig:
     def build(self) -> "Store":
         cls = resolve_import_path(self.connector_path)
         connector = cls(**self.connector_config)
-        return Store(self.name, connector, cache_size=self.cache_size)
+        try:
+            return Store(self.name, connector, cache_size=self.cache_size)
+        except BaseException:
+            # we own this connector: a failed Store() (e.g. duplicate-name
+            # registration) must not leak its sockets/servers/segments
+            try:
+                connector.close()
+            except Exception:  # noqa: BLE001 - preserve the original error
+                pass
+            raise
 
 
 @dataclass
@@ -98,12 +113,35 @@ class StoreFactory:
     Self-contained (paper §3.3): includes everything needed to re-create the
     Store on any process.  Supports async pre-resolution via ``resolve_async``
     (the Future intentionally does not survive pickling).
+
+    Lifetime semantics (the ownership subsystem):
+
+    * ``evict=True`` — a *refcounted ephemeral*: the factory holds one
+      reference to the key (acquired by ``Store.proxy(..., evict=True)``)
+      and decrefs it after a successful resolve; the store evicts the key
+      only when the LAST sibling's reference is dropped.  Pickling an
+      unconsumed factory acquires a reference for the communicated sibling,
+      so any number of consumers across processes resolve safely — this
+      replaces the old fire-and-forget hard evict, whose first resolve
+      broke every other consumer.
+    * ``owned=True`` — the factory backs an :class:`~repro.core.OwnedProxy`:
+      the reference is dropped by ``release()`` (GC/context-manager/explicit)
+      rather than on resolve, and pickling clones a reference for the copy.
+    * neither — a plain proxy: no lifetime bookkeeping at all.
     """
 
     key: Key
     store_config: StoreConfig
     evict: bool = False
+    owned: bool = False
     _future: Future | None = field(default=None, repr=False, compare=False)
+    _spent: bool = field(default=False, repr=False, compare=False)
+    _borrows: int = field(default=0, repr=False, compare=False)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def _store(self) -> "Store":
+        return get_or_create_store(self.store_config)
 
     def __call__(self) -> Any:
         fut, self._future = self._future, None
@@ -111,15 +149,91 @@ class StoreFactory:
             return fut.result()
         return self._fetch()
 
-    def _fetch(self) -> Any:
-        store = get_or_create_store(self.store_config)
+    def peek(self) -> Any:
+        """Fetch the object WITHOUT consuming a reference (borrowed access)."""
+        store = self._store()
         obj = store.get(self.key)
         if obj is None and not store.exists(self.key):
             raise LookupError(
                 f"key {self.key} not found in store {self.store_config.name!r}")
-        if self.evict:
-            store.evict(self.key)
         return obj
+
+    def _fetch(self) -> Any:
+        obj = self.peek()
+        if self.evict and not self.owned:
+            self._spend()            # decref-on-resolve; evicts at zero
+        return obj
+
+    def _spend(self) -> None:
+        """Drop this factory's reference exactly once (thread-safe)."""
+        with self._lock:
+            if self._spent:
+                return
+            self._spent = True
+        try:
+            self._store().decref(self.key)
+        except (ConnectionError, OSError):
+            pass     # channel gone: the key's lease is the cleanup backstop
+
+    # -- the lifetime protocol consumed by proxy.OwnedProxy/borrow/clone ----
+    def release(self) -> None:
+        """Drop an owned reference (OwnedProxy finalizer / explicit)."""
+        with self._lock:
+            if self._spent:
+                return
+            if self._borrows > 0:
+                raise RuntimeError(
+                    f"{self._borrows} borrowed prox(ies) still alive")
+            self._spent = True
+        try:
+            self._store().decref(self.key)
+        except (ConnectionError, OSError):
+            pass
+
+    def active_borrows(self) -> int:
+        return self._borrows
+
+    def add_borrow(self) -> None:
+        with self._lock:
+            if self._spent:
+                raise RuntimeError("cannot borrow a released proxy")
+            self._borrows += 1
+
+    def drop_borrow(self) -> None:
+        with self._lock:
+            self._borrows = max(0, self._borrows - 1)
+
+    def clone(self) -> "StoreFactory":
+        """Acquire one more reference; a factory for a co-owning proxy."""
+        with self._lock:
+            if self._spent:
+                # incref-ing a key whose last reference may already have
+                # evicted it would create a phantom count on dead data
+                raise RuntimeError(
+                    "cannot clone a released or consumed proxy reference")
+            # incref under the lock: a racing release() cannot drop the
+            # last reference between the check and the acquisition
+            self._store().incref(self.key)
+        return StoreFactory(key=self.key, store_config=self.store_config,
+                            owned=True)
+
+    def into_owned(self) -> "StoreFactory":
+        """Owning factory for this key.  An unconsumed ``evict=True``
+        factory MOVES its pending reference (it will no longer decref on
+        resolve); a plain factory acquires a fresh reference; an already
+        consumed/released factory raises (its claim on the key is gone)."""
+        if self.evict and not self.owned:
+            with self._lock:
+                if not self._spent:
+                    self._spent = True   # steal the resolve-time reference
+                    return StoreFactory(key=self.key,
+                                        store_config=self.store_config,
+                                        owned=True)
+        return self.clone()
+
+    def detached(self) -> "StoreFactory":
+        """Plain non-owning factory for the same key (pickled borrows)."""
+        return StoreFactory(key=self.key, store_config=self.store_config)
 
     def resolve_async(self) -> None:
         if self._future is None:
@@ -128,7 +242,31 @@ class StoreFactory:
     def __getstate__(self):
         state = self.__dict__.copy()
         state["_future"] = None
+        state["_borrows"] = 0
+        state.pop("_lock", None)
+        # increfs happen under the lock so a racing release()/resolve
+        # cannot drop the last reference between the check and acquisition
+        with self._lock:
+            if self.owned:
+                if self._spent:
+                    raise RuntimeError("cannot pickle a released OwnedProxy")
+                # clone-on-pickle: the communicated copy owns its own ref
+                self._store().incref(self.key)
+            elif self.evict:
+                if self._spent:
+                    state["evict"] = False   # reference already consumed
+                else:
+                    # the communicated sibling carries its own reference,
+                    # so N consumers across processes all resolve and the
+                    # key dies exactly once, after the last of them
+                    self._store().incref(self.key)
+        state["_spent"] = False
         return state
+
+    def __setstate__(self, state):
+        state["_lock"] = threading.Lock()
+        state.setdefault("_future", None)
+        self.__dict__.update(state)
 
 
 class Store:
@@ -139,12 +277,15 @@ class Store:
                  register: bool = True) -> None:
         self.name = name
         self.connector = connector
+        # register FIRST: a duplicate name must fail before this instance
+        # builds any further state (and StoreConfig.build closes the
+        # connector it constructed when this raises)
+        if register:
+            register_store(self)
         self._serialize = serializer or serialize
         self._deserialize = deserializer or deserialize
         self.cache = _LRUCache(cache_size)
         self.cache_size = cache_size
-        if register:
-            register_store(self)
 
     # -- config round trip -----------------------------------------------------
     def config(self) -> StoreConfig:
@@ -212,25 +353,99 @@ class Store:
         return _pool().submit(self.get, key, default)
 
     def exists(self, key: Key) -> bool:
-        return tuple(key) in self.cache or self.connector.exists(tuple(key))
+        key = tuple(key)
+        if self.connector.exists(key):
+            return True
+        # the key is gone on the channel (evicted — possibly by another
+        # consumer's decref): drop any stale deserialization-cache entry so
+        # a local hit can't report a dead key as alive
+        self.cache.pop(key)
+        return False
 
     def evict(self, key: Key) -> None:
         key = tuple(key)
         self.cache.pop(key)
         self.connector.evict(key)
+        # explicit evict is an override: lifecycle state dies with the
+        # data (server-backed connectors do this in their _evict; local
+        # fallback tables need the nudge)
+        forget = getattr(self.connector, "_forget_lifetime", None)
+        if forget is not None:
+            forget(key)
+
+    # -- lifecycle: refcounts + leases -------------------------------------------
+    def incref(self, key: Key, n: int = 1) -> int:
+        """Add ``n`` references to ``key``; returns the new count."""
+        return int(self.connector.incref(tuple(key), n))
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        """Drop ``n`` references; the connector evicts the key (exactly
+        once) when the count reaches zero."""
+        key = tuple(key)
+        count = int(self.connector.decref(key, n))
+        if count <= 0:
+            self.cache.pop(key)
+        return count
+
+    def refcount(self, key: Key) -> int:
+        return int(self.connector.refcount(tuple(key)))
+
+    def lease(self, key: Key, ttl: float | None) -> bool:
+        """Set/refresh a TTL lease on ``key`` (``None``/<=0 clears it): the
+        channel evicts the key once the lease expires without a refresh,
+        bounding leaks from reference holders that died.  Returns whether
+        the key currently exists."""
+        return bool(self.connector.touch(tuple(key), ttl))
 
     # -- the proxy interface -----------------------------------------------------
-    def proxy(self, obj: Any, evict: bool = False) -> Proxy:
+    def proxy(self, obj: Any, evict: bool = False,
+              ttl: float | None = None) -> Proxy:
         key = self.put(obj)
-        return self.proxy_from_key(key, evict=evict)
+        return self.proxy_from_key(key, evict=evict, ttl=ttl)
 
-    def proxy_from_key(self, key: Key, evict: bool = False) -> Proxy:
-        return Proxy(StoreFactory(key=tuple(key), store_config=self.config(),
+    def proxy_from_key(self, key: Key, evict: bool = False,
+                       ttl: float | None = None) -> Proxy:
+        key = tuple(key)
+        if evict:
+            # refcounted ephemeral: this sibling holds one reference,
+            # dropped on resolve — the key dies after the LAST consumer
+            self.connector.incref(key)
+        if ttl is not None:
+            # lease backstop: a pickled-but-never-delivered sibling (or a
+            # consumer that dies before resolving) cannot leak the key
+            self.connector.touch(key, ttl)
+        return Proxy(StoreFactory(key=key, store_config=self.config(),
                                   evict=evict))
 
-    def proxy_batch(self, objs: Sequence[Any], evict: bool = False) -> list[Proxy]:
+    def proxy_batch(self, objs: Sequence[Any], evict: bool = False,
+                    ttl: float | None = None) -> list[Proxy]:
         keys = self.put_batch(objs)  # single batch op (e.g. one Globus task)
-        return [self.proxy_from_key(k, evict=evict) for k in keys]
+        if evict:
+            self.connector.incref_batch([tuple(k) for k in keys])  # one exchange
+        if ttl is not None:
+            self.connector.touch_batch([tuple(k) for k in keys], ttl)
+        if evict:
+            config = self.config()
+            return [Proxy(StoreFactory(key=tuple(k), store_config=config,
+                                       evict=True)) for k in keys]
+        return [self.proxy_from_key(k) for k in keys]
+
+    def owned_proxy(self, obj: Any, ttl: float | None = None) -> OwnedProxy:
+        """Proxy ``obj`` with an OWNED lifetime: the returned
+        :class:`OwnedProxy` holds one reference, dropped when it is
+        garbage-collected, released, or exits its ``with`` block — at zero
+        references the key is evicted.  ``ttl`` additionally puts a lease
+        on the key as a crash backstop."""
+        return self.owned_proxy_from_key(self.put(obj), ttl=ttl)
+
+    def owned_proxy_from_key(self, key: Key,
+                             ttl: float | None = None) -> OwnedProxy:
+        key = tuple(key)
+        self.connector.incref(key)
+        if ttl is not None:
+            self.connector.touch(key, ttl)
+        return OwnedProxy(StoreFactory(key=key, store_config=self.config(),
+                                       owned=True))
 
     # -- perf counters -----------------------------------------------------------
     def stats(self) -> dict[str, Any]:
@@ -309,8 +524,8 @@ def _fetch_group(config: StoreConfig, factories: list[StoreFactory],
                     f"key {factory.key} not found in store "
                     f"{config.name!r}"))
                 continue
-            if factory.evict:
-                store.evict(factory.key)
+            if factory.evict and not factory.owned:
+                factory._spend()     # drop this sibling's reference
             fut.set_result(obj)
     except BaseException as e:  # noqa: BLE001 - deliver into the futures
         for fut in futures:

@@ -10,6 +10,14 @@ paper).  Data movement is pluggable:
   receive a ~300-byte proxy and resolve just-in-time; updates return by
   proxy too.
 
+Round data uses the ownership subsystem (``Store.owned_proxy``): the round's
+weights are an :class:`~repro.core.OwnedProxy` — every worker submit clones a
+reference, each worker drops its reference after materializing the weights,
+and the aggregator drops its own at round end, so the key is evicted exactly
+once, after the LAST consumer (stragglers past the deadline still resolve
+safely instead of hitting the old evict race).  A TTL lease bounds leaks from
+workers that crash while holding references.
+
 Production FL features: update compression (int8/topk + error feedback),
 round deadlines with straggler dropping, worker failure injection +
 over-provisioning, elastic worker counts per round, heartbeats.
@@ -29,7 +37,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import Store
-from repro.core.proxy import extract, get_factory, is_proxy
+from repro.core.proxy import extract, is_proxy, release
 from repro.core.store import StoreConfig, get_or_create_store
 from repro.data.datasets import lm_batch
 from repro.distributed.compression import Compressor
@@ -61,8 +69,11 @@ def local_train_task(model_ref: Any, cfg: ArchConfig, fl_blob: bytes,
     if fl.fail_rate and random.random() < fl.fail_rate:
         raise RuntimeError(f"injected worker failure (seed {worker_seed})")
 
-    params = extract(model_ref) if is_proxy(model_ref) else model_ref
-    params = jax.tree.map(np.asarray, params)
+    if is_proxy(model_ref):
+        params = jax.tree.map(np.asarray, extract(model_ref))
+        release(model_ref)   # weights materialized: drop this worker's ref
+    else:
+        params = jax.tree.map(np.asarray, model_ref)
 
     from repro.models.model import build_model
 
@@ -86,7 +97,9 @@ def local_train_task(model_ref: Any, cfg: ArchConfig, fl_blob: bytes,
         update = Compressor(compression).compress(update)
     if store_cfg_blob is not None:
         store = get_or_create_store(pickle.loads(store_cfg_blob))
-        return store.proxy(update)   # lightweight reference back
+        # owned reference back: the aggregator releases it after averaging;
+        # the lease reaps the update if the aggregator dies first
+        return store.owned_proxy(update, ttl=4 * fl.deadline_s)
     return update
 
 
@@ -107,7 +120,11 @@ class FLOrchestrator:
     def _dispatch_model(self):
         if self.fl.transport == "proxy":
             assert self.store is not None
-            return self.store.proxy(self.params)   # ONE put per round
+            # ONE put per round; every worker submit clones a reference and
+            # the round's weights die after the LAST consumer drops it (the
+            # lease reaps them if workers crash holding references)
+            return self.store.owned_proxy(self.params,
+                                          ttl=4 * self.fl.deadline_s)
         return self.params                         # by value (cap applies)
 
     def run_round(self, rnd: int, n_workers: int | None = None) -> dict:
@@ -131,7 +148,7 @@ class FLOrchestrator:
                 result = fut.result()
                 if is_proxy(result):
                     payload = extract(result)
-                    self.store.evict(get_factory(result).key)
+                    release(result)   # drop the aggregator's reference
                 else:
                     payload = result
                 updates.append(Compressor.decompress(payload))
@@ -144,8 +161,8 @@ class FLOrchestrator:
             self.params = jax.tree.map(
                 lambda p, u: (p.astype(np.float32) + u).astype(p.dtype),
                 self.params, mean_update)
-        if is_proxy(model_ref):  # round over: evict the round's weights
-            self.store.evict(get_factory(model_ref).key)
+        if is_proxy(model_ref):  # round over: drop the aggregator's ref —
+            release(model_ref)   # eviction happens after the LAST worker's
         info = {"round": rnd, "workers": n, "ok": len(updates),
                 "failures": failures, "stragglers": stragglers,
                 "wall_s": time.time() - t0}

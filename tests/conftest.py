@@ -12,9 +12,12 @@ import pytest
 
 @pytest.fixture(autouse=True)
 def _clean_store_registry():
-    """Each test gets a fresh global Store registry."""
+    """Each test gets a fresh global Store registry + lifecycle tables."""
     yield
+    from repro.core import connector as conn_mod
     from repro.core import store as store_mod
 
     with store_mod._REGISTRY_LOCK:
         store_mod._REGISTRY.clear()
+    with conn_mod._LIFETIME_LOCK:
+        conn_mod._LIFETIME_TABLES.clear()

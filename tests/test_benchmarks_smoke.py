@@ -6,6 +6,7 @@ loudly instead of silently rotting the paper figures.
 """
 import benchmarks.fig5_faas_rtt as fig5
 import benchmarks.fig6_inmemory as fig6
+import benchmarks.fig12_ownership as fig12
 from benchmarks.util import time_call
 
 
@@ -23,3 +24,10 @@ def test_fig5_smoke(monkeypatch):
     monkeypatch.setattr(fig5, "SIZES", [10_000])
     monkeypatch.setattr(fig5, "time_call", _fast_time_call)
     fig5.run()
+
+
+def test_fig12_smoke(monkeypatch):
+    monkeypatch.setattr(fig12, "SIZE", 10_000)
+    monkeypatch.setattr(fig12, "FANOUTS", [3])
+    monkeypatch.setattr(fig12, "time_call", _fast_time_call)
+    fig12.run()

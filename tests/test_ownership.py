@@ -1,0 +1,494 @@
+"""Object lifecycle & ownership: refcounted keys, OwnedProxy/borrow
+semantics, TTL leases — and the multi-consumer evict race they fix."""
+import copy
+import gc
+import os
+import pickle
+import signal
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.core import (OwnedProxy, Store, borrow, clone, get_factory,
+                        into_owned, is_proxy, is_resolved, release,
+                        resolve_async, unregister_store)
+from repro.core.connectors import (FileConnector, KVServerConnector,
+                                   LocalMemoryConnector)
+from repro.core.kv_tcp import KVClient, KVServer, spawn_server
+from repro.core.multi import MultiConnector, Policy
+from repro.core.proxy import Proxy, ProxyResolveError
+from repro.core.store import StoreFactory
+
+
+# ---------------------------------------------------------------------------
+# server-level semantics (driving KVServer.handle directly)
+# ---------------------------------------------------------------------------
+def test_server_refcount_evicts_exactly_once():
+    kv = KVServer()
+    kv._put("k", b"x")
+    assert kv.handle({"op": "incref", "key": "k"})["data"] == 1
+    assert kv.handle({"op": "incref", "key": "k", "n": 2})["data"] == 3
+    assert kv.handle({"op": "refcount", "key": "k"})["data"] == 3
+    assert kv.handle({"op": "decref", "key": "k", "n": 2})["data"] == 1
+    assert "k" in kv._data
+    assert kv.handle({"op": "decref", "key": "k"})["data"] == 0
+    assert "k" not in kv._data and "k" not in kv.lifetime.refs
+    # further decrefs are harmless no-ops (nothing left to evict twice)
+    assert kv.handle({"op": "decref", "key": "k"})["data"] == 0
+
+
+def test_server_legacy_decref_without_incref_hard_evicts():
+    kv = KVServer()
+    kv._put("legacy", b"x")
+    assert kv.handle({"op": "decref", "key": "legacy"})["data"] == 0
+    assert "legacy" not in kv._data
+
+
+def test_server_batched_lifecycle_ops():
+    kv = KVServer()
+    for k in ("a", "b"):
+        kv._put(k, b"v")
+    assert kv.handle({"op": "mincref", "keys": ["a", "b"]})["data"] == [1, 1]
+    assert kv.handle({"op": "mdecref", "keys": ["a", "b"]})["data"] == [0, 0]
+    assert not kv._data
+
+
+def test_server_lease_expiry_lazy_sweep():
+    kv = KVServer()
+    kv._put("m", b"z")
+    kv.handle({"op": "incref", "key": "m"})
+    assert kv.handle({"op": "touch", "key": "m", "ttl": 0.05})["data"] is True
+    time.sleep(KVServer.SWEEP_INTERVAL + 0.1)
+    kv.handle({"op": "ping"})          # lazy sweep runs on any request
+    assert "m" not in kv._data and "m" not in kv.lifetime.refs
+    stats = kv.handle({"op": "stats"})["data"]
+    assert stats["n_expired"] == 1
+    assert stats["n_refcounted"] == 0 and stats["n_leases"] == 0
+
+
+def test_server_touch_refresh_and_clear():
+    kv = KVServer()
+    kv._put("k", b"v")
+    kv.handle({"op": "touch", "key": "k", "ttl": 30})
+    assert "k" in kv.lifetime.leases
+    kv.handle({"op": "touch", "key": "k", "ttl": None})   # clear the lease
+    assert "k" not in kv.lifetime.leases
+    assert kv.handle({"op": "touch", "key": "missing", "ttl": 1})["data"] \
+        is False
+
+
+# ---------------------------------------------------------------------------
+# wire protocol (live server)
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def kv(tmp_path):
+    host, port, pid = spawn_server(ready_file=str(tmp_path / "kv.ready"))
+    client = KVClient(host, port)
+    yield client
+    client.shutdown_server()
+    client.close()
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        pass
+
+
+def test_client_lifecycle_ops(kv):
+    kv.put("k", b"payload")
+    assert kv.incref("k") == 1
+    assert kv.incref("k", 2) == 3
+    assert kv.refcount("k") == 3
+    assert kv.decref("k", 3) == 0
+    assert not kv.exists("k")
+    kv.mput(["a", "b"], [b"1", b"2"])
+    assert kv.mincref(["a", "b"]) == [1, 1]
+    assert kv.mdecref(["a", "b"]) == [0, 0]
+    assert kv.mexists(["a", "b"]) == [False, False]
+
+
+def test_idle_server_expires_leases(kv):
+    """The periodic backstop sweeps even with no requests arriving."""
+    kv.put("leased", b"v")
+    assert kv.touch("leased", 0.2) is True
+    time.sleep(1.2)                    # idle: no ops during the lease
+    assert not kv.exists("leased")
+    assert kv.stats()["n_expired"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# the evict-race regression (ISSUE satellite 1 + acceptance criteria)
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def kv_store(tmp_path):
+    host, port, pid = spawn_server(ready_file=str(tmp_path / "kv.ready"))
+    store = Store("own-t", KVServerConnector(host, port))
+    yield store
+    store.connector._client.shutdown_server()
+    store.close()
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        pass
+
+
+def test_two_sibling_evict_proxies_both_resolve(kv_store):
+    """Regression: with fire-and-forget evict the second resolve raised
+    LookupError; refcounted siblings both resolve, key dies after the last."""
+    s = kv_store
+    key = s.put({"v": 1})
+    p1 = s.proxy_from_key(key, evict=True)
+    p2 = s.proxy_from_key(key, evict=True)
+    assert s.refcount(key) == 2
+    assert p1["v"] == 1
+    assert s.connector.exists(key), "first resolve must not evict"
+    assert p2["v"] == 1
+    assert not s.connector.exists(key), "last resolve evicts"
+
+
+def test_sibling_evict_proxies_across_pickling(kv_store):
+    s = kv_store
+    s.cache.maxsize = 0                   # force connector round trips
+    key = s.put([1, 2, 3])
+    p1 = s.proxy_from_key(key, evict=True)
+    wire = pickle.loads(pickle.dumps(p1))     # communicated sibling
+    assert s.refcount(key) == 2
+    assert wire[0] == 1
+    assert s.connector.exists(key)
+    assert p1[0] == 1
+    assert not s.connector.exists(key)
+
+
+def test_n_siblings_concurrent_threads_and_pickling(kv_store):
+    """Acceptance: N>=3 siblings to one refcounted key, resolved
+    concurrently across threads and across pickling — all succeed and the
+    key is evicted exactly once after the last decref (server count)."""
+    s = kv_store
+    s.cache.maxsize = 0
+    n = 4
+    key = s.put({"w": list(range(100))})
+    sibs = [s.proxy_from_key(key, evict=True) for _ in range(n)]
+    wire = [pickle.loads(pickle.dumps(p)) for p in sibs]
+    assert s.refcount(key) == 2 * n
+    barrier = threading.Barrier(8)
+
+    def consume(p):
+        barrier.wait(timeout=10)
+        return p["w"][5]
+
+    with ThreadPoolExecutor(max_workers=2 * n) as pool:
+        results = list(pool.map(consume, sibs + wire))
+    assert results == [5] * 2 * n         # every consumer resolved
+    assert s.refcount(key) == 0
+    srv = s.stats()["connector"]
+    assert srv["n_objects"] == 0, "key must be gone after the last decref"
+    assert srv["n_refcounted"] == 0, "no leaked refcount entries"
+    with pytest.raises(ProxyResolveError, match="not found"):
+        _ = s.proxy_from_key(key)["w"]    # and it is really gone
+
+
+def test_batch_evict_proxies_resolve_async_cleanup(kv_store):
+    """proxy_batch(evict=True) siblings through the grouped async resolve
+    path (_fetch_group) also decref instead of hard-evicting."""
+    s = kv_store
+    proxies = s.proxy_batch([{"i": i} for i in range(5)], evict=True)
+    wire = pickle.loads(pickle.dumps(proxies))
+    resolve_async(wire)
+    assert [p["i"] for p in wire] == list(range(5))
+    keys = [get_factory(p).key for p in proxies]
+    assert [s.refcount(k) for k in keys] == [1] * 5   # originals still hold
+    assert all(s.connector.exists(k) for k in keys)
+    assert [p["i"] for p in proxies] == list(range(5))
+    assert s.stats()["connector"]["n_objects"] == 0
+
+
+# ---------------------------------------------------------------------------
+# OwnedProxy / borrow / clone / into_owned
+# ---------------------------------------------------------------------------
+def test_owned_proxy_released_on_gc(kv_store):
+    s = kv_store
+    p = s.owned_proxy({"big": 1})
+    key = get_factory(p).key
+    assert p["big"] == 1
+    assert s.connector.exists(key), "resolving an OwnedProxy never consumes"
+    del p
+    gc.collect()
+    assert not s.connector.exists(key)
+
+
+def test_owned_proxy_context_manager_and_idempotent_release(kv_store):
+    s = kv_store
+    with s.owned_proxy("ctx") as p:
+        key = get_factory(p).key
+        assert p == "ctx"
+    assert not s.connector.exists(key)
+    release(p)                            # second release is a no-op
+
+
+def test_clone_is_a_co_owner(kv_store):
+    s = kv_store
+    p = s.owned_proxy([1])
+    key = get_factory(p).key
+    c = clone(p)
+    assert s.refcount(key) == 2
+    release(p)
+    assert s.connector.exists(key)
+    release(c)
+    assert not s.connector.exists(key)
+
+
+def test_pickling_owned_proxy_clones_a_reference(kv_store):
+    s = kv_store
+    p = s.owned_proxy("wire")
+    key = get_factory(p).key
+    wire = pickle.loads(pickle.dumps(p))
+    assert type(wire) is OwnedProxy
+    assert s.refcount(key) == 2
+    release(p)
+    assert wire == "wire"
+    assert s.connector.exists(key)
+    release(wire)
+    assert not s.connector.exists(key)
+
+
+def test_borrow_blocks_release_and_detaches_on_pickle(kv_store):
+    s = kv_store
+    owner = s.owned_proxy({"x": 9})
+    key = get_factory(owner).key
+    b = borrow(owner)
+    assert b["x"] == 9                    # borrowed access does not consume
+    assert s.refcount(key) == 1
+    with pytest.raises(RuntimeError, match="borrow"):
+        release(owner)
+    wire = pickle.loads(pickle.dumps(b))  # a communicated borrow detaches
+    assert wire["x"] == 9
+    del b
+    gc.collect()
+    release(owner)
+    assert not s.connector.exists(key)
+
+
+def test_into_owned_moves_the_ephemeral_reference(kv_store):
+    s = kv_store
+    key = s.put("mv")
+    e = s.proxy_from_key(key, evict=True)
+    o = into_owned(e)
+    assert type(o) is OwnedProxy
+    assert s.refcount(key) == 1           # moved, not duplicated
+    assert e == "mv"                      # original resolves w/o consuming
+    assert s.connector.exists(key)
+    release(o)
+    assert not s.connector.exists(key)
+
+
+def test_into_owned_on_plain_proxy_acquires(kv_store):
+    s = kv_store
+    p = s.proxy("plain")
+    key = get_factory(p).key
+    o = into_owned(p)
+    assert s.refcount(key) == 1
+    release(o)
+    assert not s.connector.exists(key)
+
+
+def test_store_lease_reaps_abandoned_key(kv_store):
+    s = kv_store
+    p = s.owned_proxy("leaky", ttl=0.2)
+    key = get_factory(p).key
+    assert s.refcount(key) == 1
+    time.sleep(1.2)                       # holder "crashed": never releases
+    assert not s.connector.exists(key)
+    assert s.stats()["connector"]["n_expired"] >= 1
+
+
+def test_is_proxy_and_transparency_of_owned_proxy(kv_store):
+    p = kv_store.owned_proxy([1, 2, 3])
+    assert is_proxy(p)
+    assert isinstance(p, list)            # __class__ transparency holds
+    assert len(p) == 3 and p + [4] == [1, 2, 3, 4]
+    release(p)
+
+
+# ---------------------------------------------------------------------------
+# local-fallback lifecycle (non-KV connectors) + MultiConnector dispatch
+# ---------------------------------------------------------------------------
+def test_local_fallback_refcount_file_connector(tmp_path):
+    s = Store("own-file", FileConnector(str(tmp_path / "f")))
+    key = s.put("v")
+    p1 = s.proxy_from_key(key, evict=True)
+    p2 = s.proxy_from_key(key, evict=True)
+    assert p1 == "v"
+    assert s.connector.exists(key)
+    assert p2 == "v"
+    assert not s.connector.exists(key)
+
+
+def test_local_fallback_decref_without_entry_never_evicts(tmp_path):
+    """A process-local table must not evict on decref of an unknown key —
+    the count may live with the creating process."""
+    conn = FileConnector(str(tmp_path / "f"))
+    key = conn.put(b"shared")
+    assert conn.decref(key) == 0
+    assert conn.exists(key), "data other processes may need must survive"
+
+
+def test_local_fallback_lease(tmp_path):
+    conn = LocalMemoryConnector()
+    key = conn.put(b"x")
+    conn.incref(key)
+    conn.touch(key, 0.05)
+    time.sleep(0.1)
+    assert conn.refcount(key) == 0        # lazy sweep on lifecycle ops
+    assert not conn.exists(key)
+
+
+def test_multi_connector_dispatches_lifecycle(tmp_path):
+    small = LocalMemoryConnector()
+    big = FileConnector(str(tmp_path / "big"))
+    multi = MultiConnector([(small, Policy(max_size=1000, priority=1)),
+                            (big, Policy())])
+    k_small = multi.put(b"s")
+    k_big = multi.put(b"b" * 10_000)
+    assert multi.incref_batch([k_small, k_big]) == [1, 1]
+    assert multi.refcount(k_small) == 1
+    assert multi.decref(k_small) == 0
+    assert not multi.exists(k_small)
+    assert multi.exists(k_big)
+    assert multi.decref_batch([k_big]) == [0]
+    assert not multi.exists(k_big)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: stale exists, registration leak, copy semantics
+# ---------------------------------------------------------------------------
+def test_exists_consults_connector_not_stale_cache(tmp_path):
+    """Satellite: a cached deserialization must not make exists() report
+    True for a key another consumer already evicted on the channel."""
+    s = Store("stale-t", FileConnector(str(tmp_path / "d")))
+    key = s.put({"x": 1})
+    assert s.get(key)["x"] == 1           # primes the local cache
+    # another consumer (same channel, different Store) evicts the key
+    other = FileConnector(str(tmp_path / "d"))
+    other.evict(key)
+    assert not s.exists(key)
+    assert tuple(key) not in s.cache      # stale entry dropped on miss
+
+
+def test_duplicate_store_config_build_closes_connector(monkeypatch):
+    """Satellite: StoreConfig.build() on a duplicate name must not leak the
+    connector it just constructed."""
+    closed = []
+    monkeypatch.setattr(LocalMemoryConnector, "close",
+                        lambda self: closed.append(self.store_id))
+    s = Store("dup-own", LocalMemoryConnector())
+    cfg = s.config()
+    with pytest.raises(ValueError, match="already registered"):
+        cfg.build()
+    assert len(closed) == 1, "freshly built connector must be closed"
+    unregister_store("dup-own")
+
+
+def test_copy_of_resolved_proxy_stays_resolved(tmp_path):
+    s = Store("copy-t", FileConnector(str(tmp_path / "c")))
+    p = s.proxy({"a": 1})
+    assert p["a"] == 1                    # resolve
+    cp = copy.copy(p)
+    assert is_resolved(cp) and cp["a"] == 1
+    dp = copy.deepcopy(p)
+    assert is_resolved(dp) and dp["a"] == 1
+    dp["a"] = 2                           # deep copy: independent target
+    assert p["a"] == 1
+
+
+def test_deepcopy_of_unresolved_evict_proxy_is_a_sibling(tmp_path):
+    s = Store("copy-e", FileConnector(str(tmp_path / "c")))
+    key = s.put("v")
+    p = s.proxy_from_key(key, evict=True)
+    dp = copy.deepcopy(p)                 # acquires its own reference
+    assert not is_resolved(dp)
+    assert s.connector.refcount(key) == 2
+    assert p == "v" and s.connector.exists(key)
+    assert dp == "v" and not s.connector.exists(key)
+
+
+def test_resolved_evict_proxy_pickles_as_plain(kv_store):
+    """A consumed ephemeral must not promise the wire copy a reference."""
+    s = kv_store
+    p = s.proxy("once", evict=True)
+    assert p == "once"                    # consumes the only reference
+    wire_factory = pickle.loads(pickle.dumps(get_factory(p)))
+    assert wire_factory.evict is False
+
+
+def test_released_owned_proxy_cannot_be_pickled(kv_store):
+    p = kv_store.owned_proxy("done")
+    release(p)
+    with pytest.raises(RuntimeError, match="released"):
+        pickle.dumps(p)
+
+
+def test_released_owned_proxy_cannot_be_cloned(kv_store):
+    """Cloning a released owner would put a phantom count on dead data."""
+    s = kv_store
+    p = s.owned_proxy("gone")
+    key = get_factory(p).key
+    release(p)
+    with pytest.raises(RuntimeError, match="released or consumed"):
+        clone(p)
+    assert s.refcount(key) == 0           # no phantom reference appeared
+
+
+def test_owned_proxy_deepcopy_is_independent(kv_store):
+    s = kv_store
+    p = s.owned_proxy({"a": 1})
+    key = get_factory(p).key
+    assert p["a"] == 1                    # resolve (populates the cache)
+    dp = copy.deepcopy(p)
+    assert s.refcount(key) == 2           # the deepcopy co-owns
+    dp["a"] = 2
+    assert p["a"] == 1, "deepcopy must not share the cached target"
+    release(p)
+    release(dp)
+    assert not s.connector.exists(key)
+
+
+def test_ephemeral_proxy_ttl_reaps_undelivered_sibling(kv_store):
+    """An evict=True proxy pickled but never delivered (e.g. a payload-cap
+    rejection after dumps) must not leak its key forever: the ttl lease is
+    the backstop."""
+    s = kv_store
+    p = s.proxy("capped", evict=True, ttl=0.2)
+    key = get_factory(p).key
+    _ = pickle.dumps(p)                   # incref'd blob that is never sent
+    assert s.refcount(key) == 2
+    time.sleep(1.2)
+    assert not s.connector.exists(key)
+    assert s.refcount(key) == 0
+
+
+def test_explicit_evict_clears_local_fallback_state(tmp_path):
+    """Satellite-of-review: store.evict() on a local connector must drop
+    refcount/lease state with the data, like the server-side _evict."""
+    s = Store("evict-own", FileConnector(str(tmp_path / "f")))
+    key = s.put("v")
+    s.proxy_from_key(key, evict=True, ttl=60)   # count 1 + lease
+    assert s.connector.refcount(key) == 1
+    s.evict(key)                                # explicit override
+    assert s.connector.refcount(key) == 0, "no live count on dead data"
+    assert not s.connector.exists(key)
+
+
+def test_failed_release_keeps_the_reference_armed(kv_store):
+    """A release() rejected because borrows are alive must leave the
+    reference droppable — a later release (or GC) still evicts."""
+    s = kv_store
+    owner = s.owned_proxy("armed")
+    key = get_factory(owner).key
+    b = borrow(owner)
+    with pytest.raises(RuntimeError):
+        release(owner)
+    del b
+    gc.collect()
+    release(owner)                        # the reference was NOT consumed
+    assert not s.connector.exists(key)

@@ -33,7 +33,9 @@ def test_end_to_end_proxy_lifecycle(tmp_path):
     wire = pickle.dumps(proxy)
     assert len(wire) < 2000
 
-    # "remote" consumer: fresh registry, resolves just-in-time, then evicts
+    # "remote" consumer: fresh registry, resolves just-in-time and drops
+    # its reference — the producer's sibling still holds one, so the key
+    # survives (the old fire-and-forget evict would have broken it here)
     unregister_store("system-store")
     p2 = pickle.loads(wire)
     assert not is_resolved(p2)
@@ -41,7 +43,11 @@ def test_end_to_end_proxy_lifecycle(tmp_path):
     key = get_factory(p2).key
     from repro.core import get_store
 
-    assert not get_store("system-store").exists(key)  # evict-on-resolve
+    assert get_store("system-store").exists(key)  # producer's ref remains
+    # the producer consumes its sibling too: LAST reference drops -> evicted
+    assert float(np.sum(proxy)) == pytest.approx(float(np.sum(data)),
+                                                 rel=1e-6)
+    assert not get_store("system-store").exists(key)  # refcount hit zero
 
 
 @pytest.mark.slow
