@@ -28,6 +28,7 @@ MODULES = [
     ("fig10", "benchmarks.fig10_federated"),
     ("fig11", "benchmarks.fig11_steering"),
     ("fig12", "benchmarks.fig12_ownership"),
+    ("fig13", "benchmarks.fig13_futures"),
 ]
 
 _ROOT = Path(__file__).resolve().parents[1]

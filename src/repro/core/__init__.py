@@ -15,8 +15,9 @@ from repro.core.proxy import (OwnedProxy, Proxy, ProxyResolveError, borrow,
 from repro.core.serialize import (Frame, as_segments, deserialize,
                                   frame_nbytes, join_frame, serialize,
                                   serialize_v1)
-from repro.core.connector import BaseConnector, Connector, Key
-from repro.core.store import (Store, StoreConfig, StoreFactory, get_store,
+from repro.core.connector import BaseConnector, Connector, Key, StreamItem
+from repro.core.store import (ProxyFuture, ProxyStream, Store, StoreConfig,
+                              StoreFactory, StreamProducer, get_store,
                               get_or_create_store, maybe_proxy,
                               register_store, resolve_async, unregister_store)
 from repro.core.multi import MultiConnector, NoConnectorMatch, Policy
@@ -26,7 +27,8 @@ __all__ = [
     "into_owned", "release", "extract", "get_factory", "is_proxy",
     "is_resolved", "resolve", "serialize", "serialize_v1", "deserialize",
     "Frame", "as_segments", "frame_nbytes", "join_frame", "BaseConnector",
-    "Connector", "Key", "Store", "StoreConfig", "StoreFactory", "get_store",
+    "Connector", "Key", "StreamItem", "Store", "StoreConfig", "StoreFactory",
+    "ProxyFuture", "ProxyStream", "StreamProducer", "get_store",
     "get_or_create_store", "maybe_proxy", "register_store", "resolve_async",
     "unregister_store", "MultiConnector", "NoConnectorMatch", "Policy",
 ]

@@ -21,6 +21,29 @@ segments directly, others fall back to a single ``join_frame`` copy.  ``get``
 may return any bytes-like object (``bytes`` or a zero-copy ``memoryview``,
 e.g. a mapped shared-memory segment) suitable for ``deserialize``.
 
+Futures + streams extension (communicate data BEFORE it exists, following
+the distributed-future and streaming proxy patterns of arXiv:2407.01764):
+
+* ``reserve()`` mints a key with no data behind it; ``put_to(key, blob)``
+  later lands the payload under that exact key.  A proxy carrying a
+  reserved key is valid before the data exists — its resolve blocks in
+  ``wait``.
+* ``wait(key, timeout)`` blocks until the key's payload exists and returns
+  it (``TimeoutError`` if no producer shows up).  KV-backed connectors
+  park inside the server (``wait`` op — zero polling, released by the
+  producer's ``put2`` even from another connection or a peered site);
+  :class:`BaseConnector` supplies a channel-scoped in-process fallback: a
+  condition variable notified by same-process producers via ``announce``,
+  with a short existence poll so cross-process file-backed producers are
+  also seen.
+* ``stream_append`` / ``stream_next`` / ``stream_fetch`` /
+  ``stream_close``: per-topic ordered streams with an end-of-stream
+  marker.  Items are refcount-integrated — consuming decrefs, so each
+  item is evicted exactly once after its consumer took it.  KV-backed
+  connectors forward to their server's stream ops (``s_append`` etc.);
+  the fallback keeps a channel-scoped topic table and stores items
+  through the connector's own ``put``.
+
 Keys are plain tuples of msgpack-serializable scalars so they can ride inside
 factories across process and site boundaries.
 
@@ -33,7 +56,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Protocol, Sequence, runtime_checkable
+from typing import Any, NamedTuple, Protocol, Sequence, runtime_checkable
 
 Key = tuple  # (str | int, ...)
 
@@ -42,6 +65,26 @@ Key = tuple  # (str | int, ...)
 # rebuilt from config in the same process must see the same counts
 _LIFETIME_TABLES: dict[tuple, dict] = {}
 _LIFETIME_LOCK = threading.Lock()
+
+# channel-scoped futures/stream state for connectors without a server:
+# condition variable (producer announce -> consumer wake) + topic tables
+_CHANNEL_TABLES: dict[tuple, dict] = {}
+_CHANNEL_LOCK = threading.Lock()
+
+_WAIT_POLL = 0.05   # fallback existence poll (cross-process producers)
+
+
+class StreamItem(NamedTuple):
+    """One consumed stream element.
+
+    ``end=True`` marks end-of-stream (``data`` is None); ``available`` is
+    the producer's appended count at serve time — the consumer uses it to
+    batch-prefetch the already-ready tail."""
+
+    seq: int
+    data: Any            # bytes-like | None
+    available: int
+    end: bool
 
 
 @runtime_checkable
@@ -126,7 +169,8 @@ class BaseConnector:
             state["leases"].pop(tuple(key), None)
 
     def _sweep_local(self, state) -> None:
-        now = time.time()
+        # monotonic: a wall-clock (NTP) step must not reap live leases
+        now = time.monotonic()
         expired = [k for k, t in state["leases"].items() if t <= now]
         for k in expired:
             state["leases"].pop(k, None)
@@ -178,7 +222,7 @@ class BaseConnector:
             if ttl is None or ttl <= 0:
                 state["leases"].pop(key, None)
             else:
-                state["leases"][key] = time.time() + ttl
+                state["leases"][key] = time.monotonic() + ttl
         return self.exists(key)
 
     def incref_batch(self, keys: Sequence[Key], n: int = 1) -> list[int]:
@@ -191,8 +235,139 @@ class BaseConnector:
         for k in keys:
             self.touch(k, ttl)
 
+    # -- futures: reserved keys + blocking wait ------------------------------
+    # Channel-scoped in-process fallback: a condition variable notified by
+    # same-process producers (``announce``), plus a short existence poll so
+    # producers on OTHER processes sharing the channel (e.g. a file store)
+    # are seen too.  KV-backed connectors override ``wait`` with the
+    # server-side parked op — no polling at all.
+    def _channel_state(self) -> dict:
+        scope = (type(self).__name__, self._lifetime_scope())
+        with _CHANNEL_LOCK:
+            state = _CHANNEL_TABLES.get(scope)
+            if state is None:
+                state = _CHANNEL_TABLES[scope] = {
+                    "cond": threading.Condition(), "streams": {},
+                }
+            return state
+
+    def _drop_channel_state(self) -> None:
+        scope = (type(self).__name__, self._lifetime_scope())
+        with _CHANNEL_LOCK:
+            _CHANNEL_TABLES.pop(scope, None)
+
+    def reserve(self) -> Key:
+        """Mint a key with no data behind it yet (``put_to`` lands the
+        payload later; consumers block in ``wait`` meanwhile)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support reserved keys")
+
+    def put_to(self, key: Key, blob) -> None:
+        """Store ``blob`` under a key minted by :meth:`reserve`."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support reserved keys")
+
+    def announce(self, key: Key) -> None:
+        """Wake same-process consumers blocked in the fallback ``wait``
+        (server-backed channels wake waiters server-side; their override
+        of ``wait`` makes this a harmless no-op)."""
+        state = self._channel_state()
+        with state["cond"]:
+            state["cond"].notify_all()
+
+    def wait(self, key: Key, timeout: float = 60.0):
+        """Block until ``key``'s payload exists; returns it.  Raises
+        ``TimeoutError`` if no producer lands the key in time."""
+        key = tuple(key)
+        deadline = time.monotonic() + float(timeout)
+        state = self._channel_state()
+        while True:
+            if self.exists(key):
+                blob = self.get(key)
+                if blob is not None:
+                    return blob
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(f"wait timed out on {key}")
+            with state["cond"]:
+                state["cond"].wait(min(remaining, _WAIT_POLL))
+
+    # -- streams: channel-scoped in-process fallback -------------------------
+    # Topic state lives with the channel; item data rides the connector's
+    # own put/get/evict, so any connector gets working same-process streams
+    # for free.  Refcount-integrated like the server path: append increfs
+    # the item once, consumption decrefs it (eviction at zero).
+    def _stream_state(self, topic: str) -> dict:
+        streams = self._channel_state()["streams"]
+        st = streams.get(topic)
+        if st is None:
+            st = streams[topic] = {"count": 0, "closed": False, "keys": []}
+        return st
+
+    def stream_append(self, topic: str, blob,
+                      ttl: float | None = None) -> int:
+        key = self.put(blob)
+        self.incref(key)                 # one ref: dropped by the consumer
+        if ttl is not None:
+            self.touch(key, ttl)         # abandoned-stream leak backstop
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            if st["closed"]:
+                self.decref(key)
+                raise RuntimeError(f"stream {topic!r} is closed")
+            seq = st["count"]
+            st["keys"].append(tuple(key))
+            st["count"] += 1
+            state["cond"].notify_all()
+        return seq
+
+    def stream_close(self, topic: str, location: str | None = None) -> None:
+        state = self._channel_state()
+        with state["cond"]:
+            self._stream_state(topic)["closed"] = True
+            state["cond"].notify_all()
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    location: str | None = None) -> StreamItem:
+        # ``location`` addresses the topic's owning site on location-
+        # addressed channels (PS-endpoints); local channels ignore it
+        """Block until item ``seq`` exists (consume it) or the stream
+        closes (``end=True``); ``TimeoutError`` if neither happens."""
+        deadline = time.monotonic() + float(timeout)
+        state = self._channel_state()
+        with state["cond"]:
+            while True:
+                st = self._stream_state(topic)
+                if st["count"] > seq:
+                    key, available = st["keys"][seq], st["count"]
+                    break
+                if st["closed"]:
+                    return StreamItem(seq, None, st["count"], True)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"stream {topic!r} item {seq} timed out")
+                state["cond"].wait(remaining)
+        blob = self.get(key)
+        self.decref(key)                 # consumed: refcount hits zero
+        return StreamItem(seq, blob, available, False)
+
+    def stream_fetch(self, topic: str, seqs: Sequence[int],
+                     location: str | None = None) -> list:
+        """Consume already-available items (the prefetch path; batched on
+        server-backed channels)."""
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            keys = [st["keys"][int(s)] for s in seqs]
+        blobs = self.get_batch(keys)
+        self.decref_batch(keys)
+        return blobs
+
     def close(self) -> None:
         self._drop_lifetime_state()
+        self._drop_channel_state()
 
     def __enter__(self):
         return self

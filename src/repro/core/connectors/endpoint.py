@@ -16,8 +16,8 @@ import os
 import uuid as uuid_mod
 from typing import Any
 
-from repro.core.connector import BaseConnector, Key, group_indices
-from repro.core.kv_tcp import MAX_FRAME, KVClient, _chain
+from repro.core.connector import BaseConnector, Key, StreamItem, group_indices
+from repro.core.kv_tcp import MAX_FRAME, KVClient, _chain, stream_item_key
 from repro.core.serialize import as_segments, frame_nbytes
 
 
@@ -129,6 +129,96 @@ class EndpointConnector(BaseConnector):
             resp = f.result(self._client.timeout)
             if not resp.get("ok"):
                 raise ConnectionError(resp.get("error"))
+
+    # -- futures: reserved keys; wait parks on the OWNING endpoint -----------
+    def reserve(self) -> Key:
+        return ("ep", uuid_mod.uuid4().hex, self.endpoint_uuid)
+
+    def put_to(self, key: Key, blob) -> None:
+        if key[2] != self.endpoint_uuid:
+            # puts are always local: producing into a key minted at another
+            # site would store bytes its consumers will never look for
+            raise ValueError(
+                f"put_to of key owned by endpoint {key[2]} via {self.endpoint_uuid}")
+        nbytes = frame_nbytes(blob)
+        if nbytes > MAX_FRAME:
+            raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
+        resp = self._client.request(
+            {"op": "put2", "object_id": key[1], "nbytes": nbytes},
+            payload=as_segments(blob))
+        if not resp["ok"]:
+            raise RuntimeError(resp.get("error"))
+
+    def wait(self, key: Key, timeout: float = 60.0):
+        """Parks on the key's OWNING endpoint — peer-forwarded when that is
+        not the local one, so a consumer at site B blocks until the
+        producer at site A lands the put."""
+        resp = self._client.request(
+            {"op": "wait", "object_id": key[1], "endpoint_id": key[2],
+             "timeout": timeout},
+            timeout=timeout + 60.0)
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
+        return resp.get("data")
+
+    # -- streams: topics live on the PRODUCER's endpoint ---------------------
+    def stream_append(self, topic: str, blob,
+                      ttl: float | None = None) -> int:
+        nbytes = frame_nbytes(blob)
+        if nbytes > MAX_FRAME:
+            raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
+        msg = {"op": "s_append", "topic": topic, "nbytes": nbytes}
+        if ttl is not None:
+            msg["ttl"] = ttl
+        # not idempotent: a reconnect-retry could append the item twice
+        resp = self._client.request(msg, payload=as_segments(blob),
+                                    retry=False)
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return int(resp["data"])
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    location: str | None = None) -> StreamItem:
+        """``location`` is the producing endpoint's uuid (default: local);
+        remote topics are peer-forwarded and park at the producer."""
+        # not retried: serving the item consumes it (decref/evict) on the
+        # owning endpoint, so a reconnect-retry would find it missing
+        resp = self._client.request(
+            {"op": "s_next", "topic": topic, "i": int(seq),
+             "timeout": timeout,
+             "endpoint_id": location or self.endpoint_uuid},
+            timeout=timeout + 60.0, retry=False)
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
+        return StreamItem(int(seq), resp.get("data"),
+                          int(resp.get("available", 0)),
+                          bool(resp.get("end")))
+
+    def stream_fetch(self, topic: str, seqs,
+                     location: str | None = None) -> list:
+        """Prefetch path: ONE forwarded mget for the blobs + ONE mdecref
+        marking them consumed on the owning endpoint."""
+        oids = [stream_item_key(topic, int(s)) for s in seqs]
+        if not oids:
+            return []
+        ep = location or self.endpoint_uuid
+        resp = self._client.request({"op": "mget2", "object_ids": oids,
+                                     "endpoint_id": ep})
+        blobs = self._get_data(resp)
+        self._client.request({"op": "mdecref", "object_ids": oids,
+                              "endpoint_id": ep})
+        return blobs
+
+    def stream_close(self, topic: str, location: str | None = None) -> None:
+        resp = self._client.request(
+            {"op": "s_close", "topic": topic,
+             "endpoint_id": location or self.endpoint_uuid})
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
 
     # -- lifecycle: counts live on the OWNING endpoint (peer-forwarded) ------
     def _lifetime_op(self, op: str, key: Key, **extra):

@@ -26,8 +26,7 @@ class FileConnector(BaseConnector):
     def _path(self, object_id: str) -> Path:
         return self._dir / f"{object_id}.obj"
 
-    def put(self, blob) -> Key:
-        object_id = uuid.uuid4().hex
+    def _write(self, object_id: str, blob) -> None:
         tmp = self._dir / f".{object_id}.tmp"
         with open(tmp, "wb") as f:
             for seg in as_segments(blob):  # writev-style, no join copy
@@ -35,7 +34,20 @@ class FileConnector(BaseConnector):
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._path(object_id))
+
+    def put(self, blob) -> Key:
+        object_id = uuid.uuid4().hex
+        self._write(object_id, blob)
         return ("file", self.store_dir, object_id)
+
+    # -- futures: pre-data keys (the atomic rename means a cross-process
+    # waiter polling exists() never observes a partial object) -------------
+    def reserve(self) -> Key:
+        return ("file", self.store_dir, uuid.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._write(key[2], blob)
+        self.announce(key)
 
     def get(self, key: Key) -> bytes | None:
         path = self._path(key[2])

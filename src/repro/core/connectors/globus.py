@@ -54,8 +54,9 @@ class GlobusConnector(BaseConnector):
         return tuple(sorted(self.endpoint_map.items()))
 
     # -- transfer-task bookkeeping -------------------------------------------
-    def _submit_task(self, total_bytes: int) -> str:
-        task_id = uuid_mod.uuid4().hex
+    def _submit_task(self, total_bytes: int,
+                     task_id: str | None = None) -> str:
+        task_id = task_id or uuid_mod.uuid4().hex
         duration = self.latency_s + total_bytes / (self.bandwidth_mbps * 1e6 / 8)
         failed = False
         if self.fail_rate > 0.0:
@@ -105,6 +106,18 @@ class GlobusConnector(BaseConnector):
             self._stage(oid, blob)
         task_id = self._submit_task(sum(frame_nbytes(b) for b in blobs))  # ONE task
         return [("globus", oid, task_id) for oid in ids]
+
+    # -- futures: pre-data keys.  The key pins a task id whose record does
+    # not exist until ``put_to`` files the transfer; ``exists`` (and so the
+    # fallback ``wait``) reports False until then, and afterwards waits out
+    # the simulated transfer like any proxy resolve.
+    def reserve(self) -> Key:
+        return ("globus", uuid_mod.uuid4().hex, uuid_mod.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._stage(key[1], blob)
+        self._submit_task(frame_nbytes(blob), task_id=key[2])
+        self.announce(key)
 
     def get(self, key: Key) -> bytes | None:
         self.wait_task(key[2])

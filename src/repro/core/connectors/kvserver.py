@@ -13,7 +13,7 @@ from __future__ import annotations
 import uuid
 from typing import Any
 
-from repro.core.connector import BaseConnector, Key
+from repro.core.connector import BaseConnector, Key, StreamItem
 from repro.core.kv_tcp import KVClient
 
 
@@ -54,6 +54,35 @@ class KVServerConnector(BaseConnector):
 
     def evict_batch(self, keys) -> None:
         self._client.mevict([k[3] for k in keys])  # one exchange
+
+    # -- futures: reserved keys + server-parked wait -------------------------
+    def reserve(self) -> Key:
+        return ("kv", self.host, self.port, uuid.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._client.put(key[3], blob)   # the put wakes parked waiters
+
+    def wait(self, key: Key, timeout: float = 60.0):
+        # parks INSIDE the server: released by the producer's put even from
+        # another connection/process, no polling
+        return self._client.wait(key[3], timeout)
+
+    # -- streams: server-side topics (one owning server per store) -----------
+    def stream_append(self, topic: str, blob,
+                      ttl: float | None = None) -> int:
+        return self._client.stream_append(topic, blob, ttl)
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    location: str | None = None) -> StreamItem:
+        it = self._client.stream_next(topic, seq, timeout)
+        return StreamItem(seq, it["data"], it["available"], it["end"])
+
+    def stream_fetch(self, topic: str, seqs,
+                     location: str | None = None) -> list:
+        return self._client.stream_fetch(topic, seqs)
+
+    def stream_close(self, topic: str, location: str | None = None) -> None:
+        self._client.stream_close(topic)
 
     # -- lifecycle: server-side refcounts + leases (atomic on its loop) ------
     def incref(self, key: Key, n: int = 1) -> int:

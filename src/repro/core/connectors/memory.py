@@ -33,6 +33,14 @@ class LocalMemoryConnector(BaseConnector):
         self._data[key] = join_frame(blob)
         return key
 
+    # -- futures: pre-data keys ---------------------------------------------
+    def reserve(self) -> Key:
+        return ("mem", self.store_id, uuid.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._data[tuple(key)] = join_frame(blob)
+        self.announce(key)
+
     def get(self, key: Key) -> bytes | None:
         return self._data.get(tuple(key))
 

@@ -130,8 +130,7 @@ class SharedMemoryConnector(BaseConnector):
             pass
 
     # -- Connector ops -------------------------------------------------------
-    def put(self, blob) -> Key:
-        object_id = uuid.uuid4().hex
+    def _put_object(self, object_id: str, blob) -> None:
         seg_name = f"psj_{object_id[:24]}"
         nbytes = frame_nbytes(blob)
         seg = _open_segment(seg_name, create=True, size=nbytes)
@@ -146,7 +145,20 @@ class SharedMemoryConnector(BaseConnector):
         tmp.replace(self._idx(object_id))
         with self._lock:
             self._owned.add(object_id)
+
+    def put(self, blob) -> Key:
+        object_id = uuid.uuid4().hex
+        self._put_object(object_id, blob)
         return ("shm", self.registry_dir, object_id)
+
+    # -- futures: pre-data keys (the index-sidecar rename is the commit
+    # point, so waiters never observe a half-written segment) --------------
+    def reserve(self) -> Key:
+        return ("shm", self.registry_dir, uuid.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._put_object(key[2], blob)
+        self.announce(key)
 
     def get(self, key: Key):
         object_id = key[2]

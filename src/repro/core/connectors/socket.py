@@ -14,7 +14,7 @@ import uuid
 from pathlib import Path
 from typing import Any
 
-from repro.core.connector import BaseConnector, Key, group_indices
+from repro.core.connector import BaseConnector, Key, StreamItem, group_indices
 from repro.core.kv_tcp import KVClient, spawn_server
 
 
@@ -104,6 +104,43 @@ class SocketConnector(BaseConnector):
         for node, idxs in group_indices(keys, 2).items():
             client = self._client_for(keys[idxs[0]])
             client.mevict([keys[i][3] for i in idxs])
+
+    # -- futures: reserved keys + server-parked wait -------------------------
+    def reserve(self) -> Key:
+        return ("sock", self.discovery_dir, self.node_id, uuid.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._client_for(key).put(key[3], blob)
+
+    def wait(self, key: Key, timeout: float = 60.0):
+        # parks inside the OWNING node's server (waiters released by the
+        # producer's put on any connection to that node)
+        return self._client_for(key).wait(key[3], timeout)
+
+    # -- streams: topics live on the PRODUCING node's server; a consumer on
+    # another node passes that node's id as ``location`` ---------------------
+    def _stream_client(self, location: str | None) -> KVClient:
+        if location is None or location == self.node_id:
+            return self._client
+        addr = Path(self.discovery_dir) / f"{location}.addr"
+        host, port, _pid = addr.read_text().split(":")
+        return KVClient(host, int(port))
+
+    def stream_append(self, topic: str, blob,
+                      ttl: float | None = None) -> int:
+        return self._client.stream_append(topic, blob, ttl)
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    location: str | None = None) -> StreamItem:
+        it = self._stream_client(location).stream_next(topic, seq, timeout)
+        return StreamItem(seq, it["data"], it["available"], it["end"])
+
+    def stream_fetch(self, topic: str, seqs,
+                     location: str | None = None) -> list:
+        return self._stream_client(location).stream_fetch(topic, seqs)
+
+    def stream_close(self, topic: str, location: str | None = None) -> None:
+        self._stream_client(location).stream_close(topic)
 
     # -- lifecycle: refcounts live on the owning node's server ---------------
     def incref(self, key: Key, n: int = 1) -> int:

@@ -25,7 +25,13 @@ from pathlib import Path
 
 import msgpack
 
-from repro.core.kv_tcp import MAX_FRAME, STREAM_LIMIT, LifetimeTable
+from repro.core.kv_tcp import (MAX_FRAME, STREAM_LIMIT, LifetimeTable,
+                               StreamTable, WaiterTable, stream_item_key)
+
+# ops that may PARK (futures wait / stream next): handled on tasks both on
+# the client API (so pipelined requests overtake them) and on the peer
+# channel (so a parked wait never stalls the peer's read loop)
+_PARKING_OPS = ("wait", "s_next")
 
 _LEN = struct.Struct(">I")
 
@@ -105,6 +111,8 @@ class Endpoint:
         self.throttle_bps, self.throttle_rtt = throttle_bps, throttle_rtt
         self._data: dict[str, bytes] = {}
         self.lifetime = LifetimeTable(self._evict_object)
+        self.waiters = WaiterTable()
+        self.streams = StreamTable()
         self._n_ops = 0
         self._peers: dict[str, PeerChannel] = {}
         self._peer_dials: dict[str, "asyncio.Future[PeerChannel]"] = {}
@@ -128,6 +136,12 @@ class Endpoint:
         if self.persist:
             (self.persist / f"{oid}.obj").unlink(missing_ok=True)
 
+    def _store_obj(self, oid: str, data: bytes) -> None:
+        """Every object write funnels through here so parked ``wait``-ers
+        (local clients AND peer-forwarded ones) are released on put."""
+        self._data[oid] = data
+        self.waiters.wake(oid)
+
     def _touch(self, oid: str, ttl) -> bool:
         self.lifetime.touch(oid, ttl)
         return oid in self._data
@@ -138,10 +152,25 @@ class Endpoint:
         op = req["op"]
         oid = req.get("object_id")
         if op == "put":
-            self._data[oid] = req["data"]
+            self._store_obj(oid, req["data"])
             if self.persist:
                 (self.persist / f"{oid}.obj").write_bytes(req["data"])
             return {"ok": True}
+        if op == "s_append":
+            # data first, count bump + consumer wake second (a consumer
+            # woken early would miss on its prefetch mget)
+            topic = req["topic"]
+            key = stream_item_key(topic, self.streams.next_seq(topic))
+            self._store_obj(key, req["data"])
+            self.lifetime.incref(key)
+            if req.get("ttl"):
+                self.lifetime.touch(key, req["ttl"])
+            return {"ok": True, "data": self.streams.committed(topic)}
+        if op == "s_close":
+            self.streams.close(req["topic"])
+            return {"ok": True}
+        if op == "s_stat":
+            return {"ok": True, "data": dict(self.streams.state(req["topic"]))}
         if op == "get":
             return {"ok": True, "data": self._data.get(oid)}
         if op == "mget":
@@ -185,8 +214,47 @@ class Endpoint:
             return {"ok": True, "data": {"n": len(self._data),
                                          "n_ops": self._n_ops,
                                          **self.lifetime.stats(),
+                                         **self.waiters.stats(),
+                                         **self.streams.stats(),
                                          "peers": list(self._peers)}}
         return {"ok": False, "error": f"bad op {op!r}"}
+
+    async def _local_async(self, req: dict) -> dict:
+        """Ops that may PARK until a producer acts: futures ``wait`` and
+        stream ``s_next``.  Runs on a task (client API) or a spawned
+        peer-request task, so parked waits complete out of order behind
+        faster ops.  Responses are in-band (``data`` bytes in the map) —
+        the caller converts to a raw reply for API clients."""
+        self._n_ops += 1
+        op = req["op"]
+        if op == "wait":
+            oid = req.get("object_id")
+            data = await self.waiters.wait_for(
+                oid, self._data.get, float(req.get("timeout", 60.0)))
+            if data is None:
+                return {"ok": False, "timeout": True,
+                        "error": f"wait timed out on {oid!r}"}
+            return {"ok": True, "data": data}
+        if op == "s_next":
+            topic, pos = req["topic"], int(req["i"])
+            st = await self.streams.wait_item(
+                topic, pos, float(req.get("timeout", 60.0)))
+            if st is None:
+                return {"ok": False, "timeout": True,
+                        "error": f"stream {topic!r} item {pos} timed out"}
+            if st["count"] > pos:
+                key = stream_item_key(topic, pos)
+                data = self._data.get(key)
+                out = {"ok": True, "data": data,
+                       "available": st["count"], "closed": st["closed"]}
+                if data is None:
+                    out["missing"] = True
+                elif req.get("consume", True):
+                    self.lifetime.decref(key)
+                return out
+            return {"ok": True, "data": None, "end": True,
+                    "available": st["count"], "closed": True}
+        return self._local(req)
 
     # ------------------------------------------------------------------
     # relay client
@@ -273,20 +341,45 @@ class Endpoint:
         asyncio.create_task(self._peer_read_loop(target, chan))
         return chan
 
+    async def _peer_request_task(self, msg: dict, chan: PeerChannel) -> None:
+        """One peer-forwarded PARKING op (wait/s_next): runs on its own
+        task so a wait parked for a producer never stalls the peer
+        channel's read loop (other requests keep flowing)."""
+        try:
+            resp = await self._local_async(msg)
+        except Exception as e:  # noqa: BLE001 - peer must get a response
+            resp = {"ok": False, "error": str(e)}
+        resp.update(rid=msg["rid"], kind="resp")
+        try:
+            await chan.send(resp)
+        except (ConnectionError, OSError):
+            pass
+
     async def _peer_read_loop(self, peer_uuid: str, chan: PeerChannel) -> None:
-        while True:
-            msg = await _read(chan.reader)
-            if msg is None:
-                chan.close()
-                if self._peers.get(peer_uuid) is chan:
-                    del self._peers[peer_uuid]
-                return
-            if msg.get("kind") == "req":
-                resp = self._local(msg)
-                resp.update(rid=msg["rid"], kind="resp")
-                await chan.send(resp)
-            elif msg.get("kind") == "resp":
-                chan.dispatch_response(msg)
+        tasks: set[asyncio.Task] = set()
+        try:
+            while True:
+                msg = await _read(chan.reader)
+                if msg is None:
+                    chan.close()
+                    if self._peers.get(peer_uuid) is chan:
+                        del self._peers[peer_uuid]
+                    return
+                if msg.get("kind") == "req":
+                    if msg.get("op") in _PARKING_OPS:
+                        task = asyncio.create_task(
+                            self._peer_request_task(msg, chan))
+                        tasks.add(task)
+                        task.add_done_callback(tasks.discard)
+                        continue
+                    resp = self._local(msg)
+                    resp.update(rid=msg["rid"], kind="resp")
+                    await chan.send(resp)
+                elif msg.get("kind") == "resp":
+                    chan.dispatch_response(msg)
+        finally:
+            for task in tasks:
+                task.cancel()
 
     async def _peer_accept(self, reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
@@ -319,16 +412,27 @@ class Endpoint:
                     writer.write(blob)
             await writer.drain()
 
+    # response fields relayed verbatim from a peer (futures/stream ops
+    # carry park-outcome metadata beyond the classic ok/data/error)
+    _RELAY_FIELDS = ("ok", "data", "error", "timeout", "end", "available",
+                     "closed", "missing")
+
     async def _forward(self, req: dict, writer: asyncio.StreamWriter,
                        lock: asyncio.Lock, target: str,
                        raw_reply: bool) -> None:
         seq = req.get("seq")
         try:
             chan = await self._get_peer(target)
+            peer_timeout = 120.0
+            if req.get("op") in _PARKING_OPS:
+                # the remote end parks up to the op's own timeout; give the
+                # channel round trip headroom beyond it
+                peer_timeout = float(req.get("timeout", 60.0)) + 30.0
             r = await chan.request({k: v for k, v in req.items()
-                                    if k not in ("endpoint_id", "seq")})
+                                    if k not in ("endpoint_id", "seq")},
+                                   timeout=peer_timeout)
             resp = {k: v for k, v in r.items()
-                    if k in ("ok", "data", "error")}
+                    if k in self._RELAY_FIELDS}
         except Exception as e:  # noqa: BLE001 - the client must get a
             # response for this seq; an escaping exception would kill the
             # task silently and leave the request hanging client-side
@@ -343,6 +447,27 @@ class Endpoint:
             else:
                 resp["raw"] = -1 if data is None else len(data)
                 raw = (data,) if data is not None else None
+        if seq is not None:
+            resp["seq"] = seq
+        try:
+            await self._respond(writer, lock, resp, raw)
+        except (ConnectionError, OSError):
+            pass
+
+    async def _local_parked(self, req: dict, writer: asyncio.StreamWriter,
+                            lock: asyncio.Lock) -> None:
+        """A local PARKING op from an API client: await it on this task
+        (pipelined requests overtake it) and answer get2-style (raw)."""
+        seq = req.get("seq")
+        try:
+            resp = await self._local_async(req)
+        except Exception as e:  # noqa: BLE001 - client must get a response
+            resp = {"ok": False, "error": str(e)}
+        raw: tuple | None = None
+        if resp.get("ok"):
+            data = resp.pop("data", None)
+            resp["raw"] = -1 if data is None else len(data)
+            raw = (data,) if data is not None else None
         if seq is not None:
             resp["seq"] = seq
         try:
@@ -420,10 +545,45 @@ class Endpoint:
                             off += n
                     else:
                         for oid, n in zip(oids, sizes):
-                            self._data[oid] = bytes(mv[off:off + n])
+                            self._store_obj(oid, bytes(mv[off:off + n]))
                             off += n
                         self._n_ops += len(oids)
                     resp = {"ok": True}
+                elif op == "s_append":
+                    # out-of-band item payload; appends always target the
+                    # local endpoint (the topic lives where it is produced)
+                    nbytes = int(req["nbytes"])
+                    if not 0 <= nbytes <= MAX_FRAME:
+                        await self._respond(writer, send_lock, {
+                            "ok": False, "seq": seq,
+                            "error": f"bad payload size: {nbytes}"})
+                        break
+                    try:
+                        data = (await reader.readexactly(nbytes)
+                                if nbytes else b"")
+                    except (asyncio.IncompleteReadError,
+                            ConnectionResetError):
+                        break
+                    try:
+                        resp = self._local({"op": "s_append",
+                                            "topic": req["topic"],
+                                            "data": data,
+                                            "ttl": req.get("ttl")})
+                    except Exception as e:  # noqa: BLE001 - e.g. a late
+                        # append to a closed stream: an error RESPONSE, not
+                        # a torn-down connection for every pipelined op
+                        resp = {"ok": False, "error": str(e)}
+                elif op in _PARKING_OPS:
+                    # wait / s_next park until a producer acts: always on a
+                    # task, local or forwarded, so pipelined requests on
+                    # this connection overtake them
+                    target = req.get("endpoint_id") or self.uuid
+                    if target != self.uuid:
+                        spawn(self._forward(req, writer, send_lock, target,
+                                            raw_reply=True))
+                    else:
+                        spawn(self._local_parked(req, writer, send_lock))
+                    continue
                 elif op == "mget2":
                     oids = req.get("object_ids") or req.get("keys")
                     target = req.get("endpoint_id") or self.uuid

@@ -70,7 +70,49 @@ handling (so even servers driven directly through ``handle`` expire keys)
 plus a periodic backstop task on the serving event loop.  All count/lease
 mutations happen in synchronous handler sections on the single event loop,
 so incref/decref/evict interleavings from any number of connections are
-atomic — this is what fixes the multi-consumer evict race.
+atomic — this is what fixes the multi-consumer evict race.  All lease and
+deadline arithmetic uses ``time.monotonic()``: TTLs are relative on the
+wire and a wall-clock (NTP) step can neither reap live leased keys nor
+stall the sweep.
+
+**Futures ops** (communicate data before it exists; see
+``repro.core.store`` for the ProxyFuture built on top):
+
+* ``wait``: ``{"op": "wait", "key": k, "timeout": s}`` — a ``get2`` that
+  *parks* until the key's ``put2`` (or any put) lands, then responds
+  exactly like ``get2`` (``raw`` + out-of-band bytes).  Parked waits
+  complete out of order like ``sleep`` does: later requests on the same
+  connection overtake them.  On timeout the response is
+  ``{"ok": False, "timeout": True, "error": ...}``.  Any number of waiters
+  (across connections) are released by one put.
+* ``mwait``: ``{"op": "mwait", "keys": [...], "timeout": s}`` — wait for
+  ALL keys under one shared deadline; responds like ``mget2`` (``raws`` +
+  blobs back to back, -1 for keys that never arrived, with
+  ``"timeout": True`` set if any are missing).
+
+**Stream ops** (per-topic append/consume with an end-of-stream marker):
+
+* ``s_append``: ``{"op": "s_append", "topic": t, "nbytes": n, "ttl": ...}``
+  followed by ``n`` raw bytes — stores the item under the derived key
+  ``stream_item_key(t, seq)`` with ONE reference (refcount-integrated:
+  consuming the item decrefs it, so consumed items are evicted exactly
+  once, like the ownership subsystem's ephemerals); responds with the
+  item's sequence number.  ``ttl`` optionally leases the item so an
+  abandoned stream cannot leak.
+* ``s_next``: ``{"op": "s_next", "topic": t, "i": i, "timeout": s}``
+  (the stream position rides as ``"i"`` — ``"seq"`` is the connection's
+  multiplexing tag) —
+  parks until item ``i`` exists or the stream closes; item responses are
+  ``get2``-style (``raw`` + bytes) and additionally carry ``"available"``
+  (total appended count — the client batch-prefetches the rest via plain
+  ``mget2``/``mdecref`` on derived keys) and ``"closed"``.  By default the
+  served item is decref'd server-side (consumed); pass ``"consume": False``
+  to peek.  Past the end of a closed stream the response is
+  ``{"ok": True, "raw": -1, "end": True}``.
+* ``s_close``: ``{"op": "s_close", "topic": t}`` — sets the end-of-stream
+  marker and releases every parked consumer.
+* ``s_stat``: ``{"op": "s_stat", "topic": t}`` — ``{"count", "closed"}``
+  without blocking.
 
 Responses: ``{"ok": bool, "seq": int, "data": ..., "error": str}`` plus the
 ``raw``/``raws`` out-of-band markers above.
@@ -231,15 +273,17 @@ class LifetimeTable:
         return 0
 
     def touch(self, key: str, ttl) -> None:
+        # monotonic, not wall-clock: TTLs are relative on the wire, and an
+        # NTP step must not reap live leased keys or stall the sweep
         if ttl is None or float(ttl) <= 0:
             self.leases.pop(key, None)
         else:
-            self.leases[key] = time.time() + float(ttl)
+            self.leases[key] = time.monotonic() + float(ttl)
 
     def sweep(self, now: float | None = None) -> int:
         """Evict every key whose lease has expired (refs cleared too: an
         expired lease means the reference holders are presumed dead)."""
-        now = time.time() if now is None else now
+        now = time.monotonic() if now is None else now
         self._next_sweep = now + self.SWEEP_INTERVAL
         if not self.leases:
             return 0
@@ -250,13 +294,144 @@ class LifetimeTable:
         return len(expired)
 
     def maybe_sweep(self) -> None:
-        if self.leases and time.time() >= self._next_sweep:
+        if self.leases and time.monotonic() >= self._next_sweep:
             self.sweep()
 
     def stats(self) -> dict:
         return {"n_refcounted": len(self.refs),
                 "n_leases": len(self.leases),
                 "n_expired": self.n_expired}
+
+
+# ---------------------------------------------------------------------------
+# futures + streams state machines (shared by KVServer and the PS-endpoint)
+# ---------------------------------------------------------------------------
+def stream_item_key(topic: str, seq: int) -> str:
+    """Derived storage key of stream item ``seq`` of ``topic`` — shared
+    between server and client so consumers can batch-prefetch ready items
+    with plain ``mget2``/``mdecref`` exchanges."""
+    return f"@s:{topic}:{seq}"
+
+
+class WaiterTable:
+    """key -> parked asyncio futures.  ``wake(key)`` (called wherever a put
+    lands) releases every waiter; each re-checks the data map, so a racing
+    evict simply re-parks the waiter until its deadline."""
+
+    def __init__(self) -> None:
+        self.waiters: dict[str, list[asyncio.Future]] = {}
+
+    def wake(self, key: str) -> None:
+        for fut in self.waiters.pop(key, ()):  # noqa: B020 - snapshot pop
+            if not fut.done():
+                fut.set_result(None)
+
+    async def wait_for(self, key: str, present_fn, timeout: float,
+                       deadline: float | None = None):
+        """Park until ``present_fn(key)`` returns non-None or the deadline
+        passes; returns the value or None on timeout."""
+        loop = asyncio.get_running_loop()
+        if deadline is None:
+            deadline = loop.time() + float(timeout)
+        while True:
+            value = present_fn(key)
+            if value is not None:
+                return value
+            remaining = deadline - loop.time()
+            if remaining <= 0:
+                return None
+            fut = loop.create_future()
+            self.waiters.setdefault(key, []).append(fut)
+            try:
+                await asyncio.wait_for(fut, remaining)
+            except asyncio.TimeoutError:
+                return present_fn(key)   # the put may have just raced the
+                # timeout: prefer delivering data over a spurious timeout
+            finally:
+                # timeout AND cancellation (dropped peer/connection) must
+                # both unpark, or dead waiter entries pile up forever
+                lst = self.waiters.get(key)
+                if lst and fut in lst:
+                    lst.remove(fut)
+                    if not lst:
+                        del self.waiters[key]
+
+    def stats(self) -> dict:
+        return {"n_waiters": sum(len(v) for v in self.waiters.values())}
+
+
+class StreamTable:
+    """Per-topic sequence numbers + end-of-stream markers + parked
+    consumers.  Item *data* rides the owning server's normal key space
+    under :func:`stream_item_key` with one reference per item, so consumed
+    items decref (and are evicted exactly once) like the ownership
+    subsystem's ephemerals.  All mutations happen in synchronous handler
+    sections on the server's single event loop."""
+
+    def __init__(self) -> None:
+        self.topics: dict[str, dict] = {}     # topic -> {count, closed}
+        self._waiters: dict[str, list[asyncio.Future]] = {}
+
+    def state(self, topic: str) -> dict:
+        return self.topics.setdefault(topic, {"count": 0, "closed": False})
+
+    def next_seq(self, topic: str) -> int:
+        """Sequence number the next append will get; raises when closed."""
+        st = self.state(topic)
+        if st["closed"]:
+            raise RuntimeError(f"stream {topic!r} is closed")
+        return st["count"]
+
+    def committed(self, topic: str) -> int:
+        """Mark the reserved item as stored and wake parked consumers;
+        call AFTER the item's data is in the data map (consumers woken
+        before the bytes land would miss on their prefetch mget)."""
+        st = self.state(topic)
+        seq = st["count"]
+        st["count"] += 1
+        self._wake(topic)
+        return seq
+
+    def close(self, topic: str) -> None:
+        self.state(topic)["closed"] = True
+        self._wake(topic)
+
+    def _wake(self, topic: str) -> None:
+        for fut in self._waiters.pop(topic, ()):
+            if not fut.done():
+                fut.set_result(None)
+
+    async def wait_item(self, topic: str, seq: int, timeout: float) -> dict | None:
+        """Park until item ``seq`` exists or the stream is closed; returns
+        the topic state, or None on timeout."""
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + float(timeout)
+        while True:
+            st = self.state(topic)
+            if st["count"] > seq or st["closed"]:
+                return st
+            remaining = deadline - loop.time()
+            if remaining <= 0:
+                return None
+            fut = loop.create_future()
+            self._waiters.setdefault(topic, []).append(fut)
+            try:
+                await asyncio.wait_for(fut, remaining)
+            except asyncio.TimeoutError:
+                st = self.state(topic)
+                return st if (st["count"] > seq or st["closed"]) else None
+            finally:
+                # remove on timeout AND cancellation (dropped consumer)
+                lst = self._waiters.get(topic)
+                if lst and fut in lst:
+                    lst.remove(fut)
+                    if not lst:
+                        del self._waiters[topic]
+
+    def stats(self) -> dict:
+        return {"n_topics": len(self.topics),
+                "n_stream_waiters": sum(len(v)
+                                        for v in self._waiters.values())}
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +443,8 @@ class KVServer:
     def __init__(self, persist_dir: str | None = None) -> None:
         self._data: dict[str, bytes] = {}
         self.lifetime = LifetimeTable(self._evict)
+        self.waiters = WaiterTable()
+        self.streams = StreamTable()
         self._persist = Path(persist_dir) if persist_dir else None
         self._n_ops = 0
         self._io_pool: ThreadPoolExecutor | None = None
@@ -282,10 +459,16 @@ class KVServer:
         self._shutdown = asyncio.Event()
 
     # -- op handlers --------------------------------------------------------
+    def _store_mem(self, key: str, data: bytes) -> None:
+        """EVERY memory write funnels through here so parked ``wait``-ers
+        are released no matter which put variant landed the key."""
+        self._data[key] = data
+        self.waiters.wake(key)
+
     def _put(self, key: str, data: bytes) -> None:
         """Synchronous put (memory + write-through disk); used by the legacy
         in-band path and by tests driving ``handle`` directly."""
-        self._data[key] = data
+        self._store_mem(key, data)
         if self._persist:
             self._persist_write(key, data)
 
@@ -298,7 +481,7 @@ class KVServer:
         """Memory write now (so later requests on any connection see it),
         disk write-through on the executor (so the loop never blocks);
         responds only once the write is durable."""
-        self._data[key] = data
+        self._store_mem(key, data)
         if self._persist:
             loop = asyncio.get_running_loop()
             await loop.run_in_executor(self._io_pool, self._persist_write,
@@ -374,6 +557,8 @@ class KVServer:
                 "bytes": sum(len(v) for v in self._data.values()),
                 "n_ops": self._n_ops,
                 **self.lifetime.stats(),
+                **self.waiters.stats(),
+                **self.streams.stats(),
             }}
         if op == "shutdown":
             self._shutdown.set()
@@ -412,7 +597,7 @@ class KVServer:
                 for k, n in zip(req["keys"], req["nbytes"]):
                     blob = bytes(mv[off:off + n])
                     off += n
-                    self._data[k] = blob
+                    self._store_mem(k, blob)
                     stores.append((k, blob))
                 if self._persist:
                     loop = asyncio.get_running_loop()
@@ -435,6 +620,78 @@ class KVServer:
                 resp = {"ok": True,
                         "raws": [-1 if d is None else len(d) for d in datas]}
                 raw = tuple(d for d in datas if d is not None)
+            elif op == "wait":
+                # a get2 that parks until the put lands; completes out of
+                # order behind faster ops, like sleep does
+                self._n_ops += 1
+                data = await self.waiters.wait_for(
+                    req["key"], self._data.get,
+                    float(req.get("timeout", 60.0)))
+                if data is None:
+                    resp = {"ok": False, "timeout": True,
+                            "error": f"wait timed out on {req['key']!r}"}
+                else:
+                    resp = {"ok": True, "raw": len(data)}
+                    raw = (data,)
+            elif op == "mwait":
+                self._n_ops += 1
+                loop = asyncio.get_running_loop()
+                deadline = loop.time() + float(req.get("timeout", 60.0))
+                datas = [await self.waiters.wait_for(
+                    k, self._data.get, 0.0, deadline=deadline)
+                    for k in req["keys"]]
+                resp = {"ok": True,
+                        "raws": [-1 if d is None else len(d) for d in datas]}
+                if any(d is None for d in datas):
+                    resp["timeout"] = True
+                raw = tuple(d for d in datas if d is not None)
+            elif op == "s_append":
+                # data first, count bump + consumer wake second: a consumer
+                # woken before the bytes land would miss on its prefetch
+                self._n_ops += 1
+                topic = req["topic"]
+                key = stream_item_key(topic, self.streams.next_seq(topic))
+                self._store_mem(key, payload)
+                self.lifetime.incref(key)        # one ref: the consumer
+                ttl = req.get("ttl")
+                if ttl:
+                    self.lifetime.touch(key, ttl)
+                resp = {"ok": True, "data": self.streams.committed(topic)}
+            elif op == "s_next":
+                self._n_ops += 1
+                # stream position rides as "i": "seq" is the connection's
+                # multiplexing tag (and the local holding it, echoed below)
+                topic, pos = req["topic"], int(req["i"])
+                st = await self.streams.wait_item(
+                    topic, pos, float(req.get("timeout", 60.0)))
+                if st is None:
+                    resp = {"ok": False, "timeout": True,
+                            "error": f"stream {topic!r} item {pos} "
+                                     f"timed out"}
+                elif st["count"] > pos:
+                    key = stream_item_key(topic, pos)
+                    data = self._data.get(key)
+                    resp = {"ok": True,
+                            "raw": -1 if data is None else len(data),
+                            "available": st["count"],
+                            "closed": st["closed"]}
+                    if data is None:     # already consumed by another reader
+                        resp["missing"] = True
+                    else:
+                        raw = (data,)
+                        if req.get("consume", True):
+                            self.lifetime.decref(key)
+                else:                    # closed before this item: end marker
+                    resp = {"ok": True, "raw": -1, "end": True,
+                            "available": st["count"], "closed": True}
+            elif op == "s_close":
+                self._n_ops += 1
+                self.streams.close(req["topic"])
+                resp = {"ok": True}
+            elif op == "s_stat":
+                self._n_ops += 1
+                st = self.streams.state(req["topic"])
+                resp = {"ok": True, "data": dict(st)}
             elif op == "sleep":
                 await asyncio.sleep(float(req.get("s", 0.0)))
                 self._n_ops += 1
@@ -445,7 +702,7 @@ class KVServer:
                          else list(zip(req["keys"], req["blobs"])))
                 self._n_ops += 1
                 for k, b in items:
-                    self._data[k] = b
+                    self._store_mem(k, b)
                 loop = asyncio.get_running_loop()
 
                 def _persist_all(its=items):
@@ -477,10 +734,10 @@ class KVServer:
                     break
                 op = req.get("op")
                 payload = None
-                if op in ("put2", "mput2"):
+                if op in ("put2", "mput2", "s_append"):
                     # out-of-band payload: must be consumed here, in stream
                     # order, before the next frame can be parsed
-                    sizes = ([int(req["nbytes"])] if op == "put2"
+                    sizes = ([int(req["nbytes"])] if op != "mput2"
                              else [int(n) for n in req["nbytes"]])
                     total = sum(sizes)
                     if total > MAX_FRAME or any(n < 0 for n in sizes):
@@ -556,9 +813,11 @@ def spawn_server(*, host: str = "127.0.0.1", port: int = 0,
     proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL,
                             stderr=subprocess.DEVNULL,
                             start_new_session=True)
-    deadline = time.time() + timeout
+    # monotonic: a wall-clock step during startup must not cut the
+    # connect-retry window short (or extend it unboundedly)
+    deadline = time.monotonic() + timeout
     path = Path(ready_file)
-    while time.time() < deadline:
+    while time.monotonic() < deadline:
         if path.exists():
             h, p, pid = path.read_text().split(":")
             return h, int(p), int(pid)
@@ -722,20 +981,26 @@ class KVClient:
             raise ConnectionError(f"kv send failed: {e}") from e
         return fut
 
-    def request(self, msg: dict, payload=None) -> dict:
+    def request(self, msg: dict, payload=None,
+                timeout: float | None = None, retry: bool = True) -> dict:
         """Send a framed request and wait for its response.
 
-        Retries once on a lost connection (ops are idempotent).  If the
-        response carried an out-of-band payload it is surfaced as
+        Retries once on a lost connection (most ops are idempotent; pass
+        ``retry=False`` for ones that are NOT, like ``s_append`` — a retry
+        after the server already committed would duplicate the effect).
+        If the response carried an out-of-band payload it is surfaced as
         ``resp["data"]`` (a writable memoryview; None for missing).
+        ``timeout`` overrides the client default for ops that park
+        server-side (``wait``/``mwait``/``s_next``) longer than it.
         """
         for attempt in (0, 1):
             fut = None
             try:
                 fut = self.submit(msg, payload)
-                return fut.result(self.timeout)
+                return fut.result(self.timeout if timeout is None
+                                  else timeout)
             except ConnectionError:
-                if attempt:
+                if attempt or not retry:
                     raise
             except FuturesTimeout:
                 # unregister the abandoned request so the entry (and its
@@ -799,6 +1064,101 @@ class KVClient:
     def mget_async(self, keys) -> Future:
         return _chain(self.submit({"op": "mget2", "keys": list(keys)}),
                       lambda r: r.get("data"))
+
+    # -- futures: block until a producer lands the key -----------------------
+    def wait(self, key: str, timeout: float = 60.0):
+        """A blocking ``get`` for data that may not exist yet: parks
+        server-side until the key's put lands, then returns the payload as
+        a writable memoryview.  Raises ``TimeoutError`` if no producer
+        shows up in ``timeout`` seconds."""
+        resp = self.request({"op": "wait", "key": key, "timeout": timeout},
+                            timeout=timeout + self.timeout)
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return resp.get("data")
+
+    def wait_async(self, key: str, timeout: float = 60.0) -> Future:
+        """Pipelined wait: ``Future[memoryview]`` (TimeoutError inside)."""
+        return _chain(self.submit({"op": "wait", "key": key,
+                                   "timeout": timeout}), _wait_data)
+
+    def mwait(self, keys, timeout: float = 60.0) -> list:
+        """Wait for ALL keys under one shared deadline, ONE exchange;
+        returns a memoryview per key.  Raises TimeoutError if any key
+        never arrived."""
+        resp = self.request({"op": "mwait", "keys": list(keys),
+                             "timeout": timeout},
+                            timeout=timeout + self.timeout)
+        if resp.get("timeout"):
+            missing = [k for k, d in zip(keys, resp.get("data") or [])
+                       if d is None]
+            raise TimeoutError(f"mwait timed out on {missing}")
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return resp.get("data")
+
+    # -- streams: per-topic append/consume -----------------------------------
+    def stream_append(self, topic: str, data, ttl: float | None = None) -> int:
+        """Append one item (bytes | Frame | segments) to ``topic``; returns
+        its sequence number.  The item is stored refcounted (one reference,
+        dropped when a consumer takes it)."""
+        from repro.core.serialize import as_segments, frame_nbytes
+
+        nbytes = frame_nbytes(data)
+        if nbytes > MAX_FRAME:
+            raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
+        msg = {"op": "s_append", "topic": topic, "nbytes": nbytes}
+        if ttl is not None:
+            msg["ttl"] = ttl
+        # never auto-retried: a reconnect-retry after the server committed
+        # would append the item twice under a second sequence number
+        resp = self.request(msg, payload=as_segments(data), retry=False)
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return int(resp["data"])
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    consume: bool = True) -> dict:
+        """Block until item ``seq`` exists (or the stream closes); returns
+        ``{"data": memoryview | None, "available": int, "end": bool}``.
+        ``end`` means the stream closed before ``seq``.  The served item is
+        consumed (decref'd server-side) unless ``consume=False``."""
+        # consume=True is not idempotent (the server decrefs/evicts the
+        # item when serving it): a reconnect-retry would find it missing
+        resp = self.request({"op": "s_next", "topic": topic, "i": int(seq),
+                             "timeout": timeout, "consume": consume},
+                            timeout=timeout + self.timeout,
+                            retry=not consume)
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return {"data": resp.get("data"),
+                "available": int(resp.get("available", 0)),
+                "end": bool(resp.get("end")),
+                "closed": bool(resp.get("closed")),
+                "missing": bool(resp.get("missing"))}
+
+    def stream_fetch(self, topic: str, seqs) -> list:
+        """Batch-consume already-available items: ONE ``mget2`` for the
+        blobs + ONE ``mdecref`` marking them consumed (refcount hits zero,
+        the server evicts them exactly once)."""
+        keys = [stream_item_key(topic, int(s)) for s in seqs]
+        if not keys:
+            return []
+        blobs = self.mget(keys)
+        self.mdecref(keys)
+        return blobs
+
+    def stream_close(self, topic: str) -> None:
+        """Set the end-of-stream marker; every parked consumer is
+        released (they observe ``end`` once past the last item)."""
+        self._data_op({"op": "s_close", "topic": topic})
+
+    def stream_stat(self, topic: str) -> dict:
+        return self._data_op({"op": "s_stat", "topic": topic})
 
     def exists(self, key: str) -> bool:
         return bool(self.request({"op": "exists", "key": key}).get("data"))
@@ -878,6 +1238,14 @@ class KVClient:
 def _check_ok(resp: dict) -> None:
     if not resp.get("ok"):
         raise RuntimeError(resp.get("error"))
+
+
+def _wait_data(resp: dict):
+    if resp.get("timeout"):
+        raise TimeoutError(resp.get("error"))
+    if not resp.get("ok"):
+        raise RuntimeError(resp.get("error"))
+    return resp.get("data")
 
 
 def main() -> None:

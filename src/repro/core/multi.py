@@ -132,6 +132,47 @@ class MultiConnector(BaseConnector):
         conn, sub = self._child(key)
         conn.evict(sub)
 
+    # -- futures + streams ---------------------------------------------------
+    # Reserved keys are routed with size 0 (payload size is unknown before
+    # the data exists — a policy that rejects small objects won't host
+    # futures); wait/put_to then dispatch on the child the key records.
+    # Stream ops go to the same deterministically-routed child on every
+    # process rebuilt from this config, so producers and consumers meet.
+    def _future_child(self) -> tuple[int, Connector]:
+        return self._route(0, frozenset())
+
+    def reserve(self) -> Key:
+        idx, conn = self._future_child()
+        return ("multi", idx) + tuple(conn.reserve())
+
+    def put_to(self, key: Key, blob) -> None:
+        conn, sub = self._child(key)
+        conn.put_to(sub, blob)
+
+    def announce(self, key: Key) -> None:
+        conn, sub = self._child(key)
+        conn.announce(sub)
+
+    def wait(self, key: Key, timeout: float = 60.0):
+        conn, sub = self._child(key)
+        return conn.wait(sub, timeout)
+
+    def stream_append(self, topic: str, blob,
+                      ttl: float | None = None) -> int:
+        return self._future_child()[1].stream_append(topic, blob, ttl)
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    location: str | None = None):
+        return self._future_child()[1].stream_next(topic, seq, timeout,
+                                                   location)
+
+    def stream_fetch(self, topic: str, seqs,
+                     location: str | None = None) -> list:
+        return self._future_child()[1].stream_fetch(topic, seqs, location)
+
+    def stream_close(self, topic: str, location: str | None = None) -> None:
+        self._future_child()[1].stream_close(topic, location)
+
     # -- lifecycle: dispatch on the child that stored the object -------------
     def _forget_lifetime(self, key: Key) -> None:
         conn, sub = self._child(key)

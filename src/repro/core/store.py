@@ -19,11 +19,13 @@
 """
 from __future__ import annotations
 
+import pickle
 import threading
+import uuid as uuid_mod
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 from repro.core.connector import (Connector, Key, import_path,
                                   resolve_import_path)
@@ -84,6 +86,32 @@ class _LRUCache:
             return len(self._data)
 
 
+class _RaisedException:
+    """Stored in place of a result by :meth:`ProxyFuture.set_exception` (or
+    a stream producer's ``append_exception``): every consumer that resolves
+    the key re-raises the producer's pickled error instead of receiving a
+    value.  The exception is pickled eagerly so a producer-side object that
+    cannot transit degrades to a described RuntimeError, not a late
+    serializer crash in some consumer."""
+
+    __slots__ = ("blob", "text")
+
+    def __init__(self, exc: BaseException) -> None:
+        self.text = f"{type(exc).__name__}: {exc}"
+        try:
+            self.blob = pickle.dumps(exc)
+        except Exception:  # noqa: BLE001 - unpicklable producer error
+            self.blob = None
+
+    def unwrap(self) -> BaseException:
+        if self.blob is not None:
+            try:
+                return pickle.loads(self.blob)
+            except Exception:  # noqa: BLE001 - consumer missing the class
+                pass
+        return RuntimeError(f"remote producer failed: {self.text}")
+
+
 @dataclass
 class StoreConfig:
     name: str
@@ -128,12 +156,18 @@ class StoreFactory:
       the reference is dropped by ``release()`` (GC/context-manager/explicit)
       rather than on resolve, and pickling clones a reference for the copy.
     * neither — a plain proxy: no lifetime bookkeeping at all.
+
+    ``wait_timeout`` marks a *pre-data* factory (minted by
+    :meth:`Store.future` before the object exists): resolution blocks in
+    the connector's ``wait`` until the producer lands the payload — the
+    distributed-future pattern of arXiv:2407.01764.
     """
 
     key: Key
     store_config: StoreConfig
     evict: bool = False
     owned: bool = False
+    wait_timeout: float | None = None
     _future: Future | None = field(default=None, repr=False, compare=False)
     _spent: bool = field(default=False, repr=False, compare=False)
     _borrows: int = field(default=0, repr=False, compare=False)
@@ -152,6 +186,10 @@ class StoreFactory:
     def peek(self) -> Any:
         """Fetch the object WITHOUT consuming a reference (borrowed access)."""
         store = self._store()
+        if self.wait_timeout is not None:
+            # pre-data proxy: park until the producer lands the payload
+            # (or re-raise the producer's pickled exception)
+            return store.wait_get(self.key, self.wait_timeout)
         obj = store.get(self.key)
         if obj is None and not store.exists(self.key):
             raise LookupError(
@@ -266,6 +304,7 @@ class StoreFactory:
     def __setstate__(self, state):
         state["_lock"] = threading.Lock()
         state.setdefault("_future", None)
+        state.setdefault("wait_timeout", None)
         self.__dict__.update(state)
 
 
@@ -308,24 +347,40 @@ class Store:
         key = tuple(key)
         cached = self.cache.get(key, _MISS)
         if cached is not _MISS:
+            if isinstance(cached, _RaisedException):
+                raise cached.unwrap()   # a failed future's key: re-raise
             return cached
         blob = self.connector.get(key)
         if blob is None:
             return default
         obj = self._deserialize(blob)
         self.cache.put(key, obj)  # cache post-deserialization (paper §3.5)
+        if isinstance(obj, _RaisedException):
+            raise obj.unwrap()
         return obj
 
-    def get_batch(self, keys: Sequence[Key], default: Any = None) -> list[Any]:
+    def get_batch(self, keys: Sequence[Key], default: Any = None, *,
+                  strict: bool = False,
+                  _raise_failures: bool = True) -> list[Any]:
         """Fetch many objects in ONE batched connector exchange.
 
         Cache hits are served locally; the misses go through
         ``connector.get_batch`` (a single pipelined ``mget2`` on KV-backed
         connectors) and are deserialized + cached like ``get``.
+
+        ``strict=True`` applies the same miss check as the scalar proxy
+        path (``peek``): keys the channel no longer holds raise
+        ``LookupError`` (ONE batched exists exchange for all unresolved
+        keys) instead of being silently filled with ``default``.
+
+        A key holding a failed future's pickled error re-raises it like
+        ``get``/``wait_get`` do (``_raise_failures=False`` is the internal
+        group-resolve path, which delivers each error to its own proxy).
         """
         keys = [tuple(k) for k in keys]
         out: list[Any] = [default] * len(keys)
         miss_idx: list[int] = []
+        unresolved: list[int] = []
         for i, k in enumerate(keys):
             cached = self.cache.get(k, _MISS)
             if cached is not _MISS:
@@ -336,11 +391,78 @@ class Store:
             blobs = self.connector.get_batch([keys[i] for i in miss_idx])
             for i, blob in zip(miss_idx, blobs):
                 if blob is None:
+                    unresolved.append(i)
                     continue
                 obj = self._deserialize(blob)
                 self.cache.put(keys[i], obj)
                 out[i] = obj
+        if _raise_failures:
+            for obj in out:
+                if isinstance(obj, _RaisedException):
+                    raise obj.unwrap()
+        if strict and unresolved:
+            flags = self.connector.exists_batch(
+                [keys[i] for i in unresolved])
+            missing = [keys[i] for i, ok in zip(unresolved, flags) if not ok]
+            for k in missing:
+                self.cache.pop(k)   # a dead key must not stale-serve later
+            if missing:
+                raise LookupError(
+                    f"keys not found in store {self.name!r}: {missing}")
         return out
+
+    # -- futures: communicate data before it exists -------------------------
+    def put_to(self, key: Key, obj: Any) -> None:
+        """Serialize + store under a key minted by ``connector.reserve()``
+        (the produce side of a :class:`ProxyFuture`)."""
+        self.connector.put_to(tuple(key), self._serialize(obj))
+
+    def wait_get(self, key: Key, timeout: float = 60.0) -> Any:
+        """Blocking get for data that may not exist yet: parks in the
+        connector's ``wait`` until a producer lands the key (TimeoutError
+        otherwise).  A payload stored by ``set_exception`` re-raises the
+        producer's error."""
+        key = tuple(key)
+        obj = self.cache.get(key, _MISS)
+        if obj is _MISS:
+            blob = self.connector.wait(key, timeout)
+            obj = self._deserialize(blob)
+            self.cache.put(key, obj)   # every waiter sees the same outcome
+        if isinstance(obj, _RaisedException):
+            raise obj.unwrap()
+        return obj
+
+    def future(self, *, timeout: float = 60.0,
+               ttl: float | None = None) -> "ProxyFuture":
+        """Mint a :class:`ProxyFuture`: a key with no data behind it whose
+        ``.proxy()`` is a valid pre-data proxy (consumers may be dispatched
+        — even to other processes/sites — before the object exists; their
+        resolve parks in ``wait``).  ``set_result`` publishes the object;
+        ``set_exception`` propagates the producer's pickled error to every
+        waiter.  ``ttl`` leases the eventual payload as a leak backstop."""
+        return ProxyFuture(self, self.connector.reserve(),
+                           timeout=timeout, ttl=ttl)
+
+    # -- streams: ordered per-topic pipelines --------------------------------
+    def stream_producer(self, topic: str | None = None, *,
+                        ttl: float | None = None) -> "StreamProducer":
+        """Producer handle for an ordered stream of objects.  Items are
+        appended as they are produced (no barrier) and stored refcounted —
+        each is evicted exactly once after its consumer takes it.  ``ttl``
+        leases items against abandoned streams."""
+        return StreamProducer(self, topic or f"s-{uuid_mod.uuid4().hex}",
+                              ttl=ttl)
+
+    def stream_consumer(self, topic: str, *, timeout: float = 60.0,
+                        prefetch: int = 8,
+                        location: str | None = None) -> "ProxyStream":
+        """Iterator over a topic's items in order: blocks for the next item
+        (released by the producer's append, ends at ``close``), then
+        batch-prefetches the already-ready tail in ONE ``mget2``-style
+        exchange.  ``location`` addresses the producing site on
+        location-addressed channels (PS-endpoints)."""
+        return ProxyStream(self, topic, timeout=timeout, prefetch=prefetch,
+                           location=location)
 
     # -- future-returning async ops ---------------------------------------------
     def put_async(self, obj: Any) -> Future:
@@ -479,6 +601,170 @@ _MISS = object()
 
 
 # ---------------------------------------------------------------------------
+# futures + streams (arXiv:2407.01764 patterns two and three)
+# ---------------------------------------------------------------------------
+class ProxyFuture:
+    """A slot for an object that does not exist yet.
+
+    ``proxy()`` returns a valid *pre-data* :class:`Proxy` — small, picklable,
+    dispatchable to consumers anywhere — whose resolve parks in the
+    channel's ``wait`` until the producer calls :meth:`set_result` (or
+    re-raises the pickled error from :meth:`set_exception`).  This is what
+    lets a producer communicate data *unilaterally*: consumers are in
+    flight before the object is computed, and the transfer overlaps the
+    producer's remaining work.
+    """
+
+    def __init__(self, store: Store, key: Key, *, timeout: float = 60.0,
+                 ttl: float | None = None) -> None:
+        self._store = store
+        self.key = tuple(key)
+        self.timeout = timeout
+        self.ttl = ttl
+        self._completed = False
+        self._lock = threading.Lock()
+
+    def proxy(self, timeout: float | None = None) -> Proxy:
+        """A pre-data proxy of the eventual object (resolve blocks up to
+        ``timeout`` — default: this future's — in the channel's wait)."""
+        return Proxy(StoreFactory(
+            key=self.key, store_config=self._store.config(),
+            wait_timeout=self.timeout if timeout is None else timeout))
+
+    def _complete(self, payload: Any) -> None:
+        with self._lock:
+            if self._completed:
+                raise RuntimeError(f"future {self.key} is already set")
+            self._completed = True
+        # waiter wakeup belongs to put_to: server-backed channels wake
+        # parked waiters when the put lands, fallback put_to announces
+        self._store.put_to(self.key, payload)
+        if self.ttl is not None:
+            self._store.connector.touch(self.key, self.ttl)
+
+    def set_result(self, obj: Any) -> None:
+        """Publish the object: every parked consumer resolves."""
+        self._complete(obj)
+
+    def set_exception(self, exc: BaseException) -> None:
+        """Publish a failure: every parked consumer (and any later one)
+        re-raises the pickled error."""
+        self._complete(_RaisedException(exc))
+
+    def done(self) -> bool:
+        return self._completed or self._store.exists(self.key)
+
+    def result(self, timeout: float | None = None) -> Any:
+        """Consume locally: block until produced (TimeoutError otherwise)."""
+        return self._store.wait_get(
+            self.key, self.timeout if timeout is None else timeout)
+
+
+class StreamProducer:
+    """Producer side of an ordered stream of objects (pattern three of
+    arXiv:2407.01764): append as you produce, close when done.  Consumers
+    (:class:`ProxyStream`) overlap with production — no barrier-put.
+
+    Usable as a context manager: the stream closes on exit, so consumers
+    observe end-of-stream instead of timing out.
+    """
+
+    def __init__(self, store: Store, topic: str,
+                 ttl: float | None = None) -> None:
+        self._store = store
+        self.topic = topic
+        self.ttl = ttl
+
+    def append(self, obj: Any) -> int:
+        """Serialize + append one item; returns its sequence number."""
+        return self._store.connector.stream_append(
+            self.topic, self._store._serialize(obj), self.ttl)
+
+    def append_exception(self, exc: BaseException) -> int:
+        """Append a failure marker: the consumer re-raises it in order."""
+        return self.append(_RaisedException(exc))
+
+    def close(self) -> None:
+        self._store.connector.stream_close(self.topic)
+
+    @property
+    def location(self) -> str | None:
+        """Producing site id for location-addressed channels (the value a
+        remote consumer passes as ``stream_consumer(location=...)``)."""
+        return getattr(self._store.connector, "endpoint_uuid", None)
+
+    def __enter__(self) -> "StreamProducer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class ProxyStream:
+    """Consumer side: an iterator yielding a topic's objects in order.
+
+    ``__next__`` parks in the channel's ``s_next`` until the next item is
+    appended (StopIteration once the producer closes past it); when the
+    producer is ahead, the already-appended tail is prefetched in ONE
+    batched exchange (``mget2`` + ``mdecref`` on KV-backed channels) so a
+    fast consumer pays one round trip per *batch*, not per item.  Items
+    are consumed exactly once: taking one drops its single reference and
+    the channel evicts it.
+    """
+
+    def __init__(self, store: Store, topic: str, *, timeout: float = 60.0,
+                 prefetch: int = 8, location: str | None = None) -> None:
+        self._store = store
+        self.topic = topic
+        self.timeout = timeout
+        self.prefetch = max(0, int(prefetch))
+        self.location = location
+        self._cursor = 0          # next sequence number to take
+        self._buffer: list[tuple[int, Any]] = []   # prefetched (seq, blob);
+        # materialized on pop so producer exceptions surface in order
+
+    def _materialize(self, blob, seq: int) -> Any:
+        if blob is None:
+            raise LookupError(
+                f"stream {self.topic!r} item {seq} is gone (already "
+                f"consumed or expired)")
+        obj = self._store._deserialize(blob)
+        if isinstance(obj, _RaisedException):
+            raise obj.unwrap()
+        return obj
+
+    def pending(self) -> int:
+        """Prefetched items not yet taken.  These were already CONSUMED on
+        the channel (their references dropped) — a consumer abandoning the
+        stream on a deadline should drain them first, or they are lost."""
+        return len(self._buffer)
+
+    def __iter__(self) -> Iterator[Any]:
+        return self
+
+    def __next__(self) -> Any:
+        if self._buffer:
+            seq, blob = self._buffer.pop(0)
+            return self._materialize(blob, seq)
+        item = self._store.connector.stream_next(
+            self.topic, self._cursor, self.timeout, self.location)
+        if item.end:
+            raise StopIteration
+        seq = self._cursor
+        self._cursor += 1
+        ready = item.available - self._cursor
+        if ready > 0 and self.prefetch:
+            take = min(ready, self.prefetch)
+            seqs = list(range(self._cursor, self._cursor + take))
+            blobs = self._store.connector.stream_fetch(
+                self.topic, seqs, self.location)
+            self._buffer.extend(zip(seqs, blobs))
+            self._cursor += take
+        return self._materialize(item.data, seq)
+
+
+# ---------------------------------------------------------------------------
 # global registry (paper §3.5)
 # ---------------------------------------------------------------------------
 def register_store(store: Store) -> None:
@@ -512,17 +798,40 @@ def get_or_create_store(config: StoreConfig) -> Store:
 # ---------------------------------------------------------------------------
 def _fetch_group(config: StoreConfig, factories: list[StoreFactory],
                  futures: list[Future]) -> None:
-    """Resolve a same-store batch of factories with ONE connector exchange."""
+    """Resolve a same-store batch of factories with ONE connector exchange.
+
+    Misses get the same loud treatment as the scalar path's ``peek``:
+    unresolved keys go through ONE batched exists check, and each proxy of
+    a key the channel no longer holds fails with ``LookupError`` (only
+    those proxies — siblings of *other* keys in the batch still resolve).
+    The ``_MISS`` sentinel keeps a legitimately-stored ``None`` value
+    distinct from an evicted key.
+    """
     try:
         store = get_or_create_store(config)
-        objs = store.get_batch([f.key for f in factories])
-        for factory, fut, obj in zip(factories, futures, objs):
+        keys = [f.key for f in factories]
+        objs = store.get_batch(keys, default=_MISS, _raise_failures=False)
+        miss = [i for i, o in enumerate(objs) if o is _MISS]
+        flags = (store.connector.exists_batch([keys[i] for i in miss])
+                 if miss else [])
+        exists_now = {i: bool(ok) for i, ok in zip(miss, flags)}
+        for i, (factory, fut, obj) in enumerate(
+                zip(factories, futures, objs)):
             if fut.done():
                 continue
-            if obj is None and not store.exists(factory.key):
-                fut.set_exception(LookupError(
-                    f"key {factory.key} not found in store "
-                    f"{config.name!r}"))
+            if obj is _MISS:
+                if not exists_now.get(i):
+                    store.cache.pop(factory.key)   # no stale-serving later
+                    fut.set_exception(LookupError(
+                        f"key {factory.key} not found in store "
+                        f"{config.name!r}"))
+                    continue
+                obj = None   # exists but unreadable this instant: mirror
+                # the scalar path, which also returns None here
+            if isinstance(obj, _RaisedException):
+                # a failed future's key: ONLY this key's proxies get the
+                # producer's error; siblings of other keys still resolve
+                fut.set_exception(obj.unwrap())
                 continue
             if factory.evict and not factory.owned:
                 factory._spend()     # drop this sibling's reference
@@ -545,8 +854,16 @@ def resolve_async(proxy: "Proxy | Sequence[Proxy]") -> None:
     groups: dict[str, list[StoreFactory]] = {}
     for p in proxies:
         factory = get_factory(p)
-        if isinstance(factory, StoreFactory) and factory._future is None:
-            groups.setdefault(factory.store_config.name, []).append(factory)
+        if not (isinstance(factory, StoreFactory)
+                and factory._future is None):
+            continue
+        if factory.wait_timeout is not None:
+            # pre-data future proxy: it must PARK in wait, not ride the
+            # batch mget (whose miss check would raise LookupError for a
+            # key the producer simply hasn't landed yet)
+            factory.resolve_async()
+            continue
+        groups.setdefault(factory.store_config.name, []).append(factory)
     for factories in groups.values():
         if len(factories) == 1:
             factories[0].resolve_async()

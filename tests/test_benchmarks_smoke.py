@@ -7,6 +7,7 @@ loudly instead of silently rotting the paper figures.
 import benchmarks.fig5_faas_rtt as fig5
 import benchmarks.fig6_inmemory as fig6
 import benchmarks.fig12_ownership as fig12
+import benchmarks.fig13_futures as fig13
 from benchmarks.util import time_call
 
 
@@ -31,3 +32,11 @@ def test_fig12_smoke(monkeypatch):
     monkeypatch.setattr(fig12, "FANOUTS", [3])
     monkeypatch.setattr(fig12, "time_call", _fast_time_call)
     fig12.run()
+
+
+def test_fig13_smoke(monkeypatch):
+    monkeypatch.setattr(fig13, "N_CHUNKS", 4)
+    monkeypatch.setattr(fig13, "CHUNK_BYTES", 10_000)
+    monkeypatch.setattr(fig13, "T_PRODUCE", 0.01)
+    monkeypatch.setattr(fig13, "T_CONSUME", 0.01)
+    fig13.run()   # asserts producer/consumer overlap beats the baseline

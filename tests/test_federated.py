@@ -57,6 +57,27 @@ def test_fl_round_learns(executor, tmp_path):
 
 
 @pytest.mark.slow
+def test_fl_pipelined_futures_and_streams(executor, tmp_path):
+    """pipeline=True: next-round weights are pre-data futures (workers
+    park in wait) and updates come back as a stream, not a barrier-put."""
+    from repro.core.connectors import KVServerConnector
+    from repro.core.deploy import start_kvserver
+
+    kv = start_kvserver(str(tmp_path))
+    try:
+        store = Store("fl-pipe", KVServerConnector(kv.host, kv.port))
+        fl = FLConfig(rounds=2, workers_per_round=2, local_steps=3,
+                      transport="proxy", pipeline=True, deadline_s=120)
+        orch = FLOrchestrator(TINY, fl, executor, store)
+        res = orch.run()
+        assert all(r["ok"] == 2 for r in res["rounds"])
+        assert res["losses"][-1] < res["losses"][0]
+        store.close()
+    finally:
+        kv.stop()
+
+
+@pytest.mark.slow
 def test_fl_elastic_and_compression(executor, tmp_path):
     store = Store("fl-e", FileConnector(str(tmp_path / "fl")))
     fl = FLConfig(rounds=2, workers_per_round=2, local_steps=2,

@@ -1,0 +1,496 @@
+"""Futures & streaming: communicate data before it exists.
+
+Wire layer (wait/mwait parked ops, stream ops with refcount integration),
+Store layer (ProxyFuture pre-data proxies, set_exception fan-out,
+StreamProducer/ProxyStream), the PS-endpoint peer-forwarded wait path, and
+the batch-resolve miss-check regression.
+"""
+import os
+import pickle
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.core import (ProxyResolveError, Store, get_factory, resolve_async,
+                        unregister_store)
+from repro.core.connectors import (EndpointConnector, FileConnector,
+                                   KVServerConnector, LocalMemoryConnector)
+from repro.core.deploy import start_endpoint, start_relay
+from repro.core.kv_tcp import KVClient, spawn_server, stream_item_key
+
+
+# ---------------------------------------------------------------------------
+# wire layer
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def kv(tmp_path):
+    host, port, pid = spawn_server(ready_file=str(tmp_path / "kv.ready"))
+    client = KVClient(host, port)
+    yield client
+    client.shutdown_server()
+    client.close()
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        pass
+
+
+def test_wait_released_by_other_connection(kv):
+    """A consumer blocked in ``wait`` is released by a producer on a
+    DIFFERENT connection (the acceptance-criteria scenario)."""
+    producer = KVClient(kv.host, kv.port)
+    got = {}
+
+    def consume():
+        got["v"] = bytes(kv.wait("not-yet", timeout=15))
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.2)
+    assert not got                      # still parked
+    producer.put("not-yet", b"now-it-exists")
+    t.join(10)
+    assert got["v"] == b"now-it-exists"
+    producer.close()
+
+
+def test_wait_timeout(kv):
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):
+        kv.wait("never-produced", timeout=0.3)
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_wait_does_not_block_pipelined_ops(kv):
+    """A parked wait completes out of order: later requests on the same
+    connection overtake it (like ``sleep`` does)."""
+    parked = kv.wait_async("parked-key", timeout=10)
+    t0 = time.perf_counter()
+    assert kv.ping()
+    assert time.perf_counter() - t0 < 0.5
+    assert not parked.done()
+    kv.put("parked-key", b"x")
+    assert bytes(parked.result(10)) == b"x"
+
+
+def test_mwait_all_keys_one_exchange(kv):
+    fut = kv.submit({"op": "mwait", "keys": ["ma", "mb"], "timeout": 10})
+    kv.put("ma", b"A")
+    kv.put("mb", b"B")
+    resp = fut.result(15)
+    assert [bytes(x) for x in resp["data"]] == [b"A", b"B"]
+
+
+def test_mwait_timeout_lists_missing(kv):
+    kv.put("present", b"p")
+    with pytest.raises(TimeoutError):
+        kv.mwait(["present", "absent"], timeout=0.3)
+
+
+def test_stream_eos_and_refcount_interaction(kv):
+    """Consumed items decref to zero and are evicted exactly once; close
+    marks end-of-stream for every consumer position past the last item."""
+    assert kv.stream_append("t", b"i0") == 0
+    assert kv.stream_append("t", b"i1") == 1
+    key0, key1 = stream_item_key("t", 0), stream_item_key("t", 1)
+    assert kv.refcount(key0) == 1       # one reference: the consumer's
+    it = kv.stream_next("t", 0, timeout=5)
+    assert bytes(it["data"]) == b"i0" and it["available"] == 2
+    assert not kv.exists(key0)          # consumed -> evicted exactly once
+    assert kv.refcount(key0) == 0
+    # batch prefetch path consumes too (mget2 + mdecref)
+    assert [bytes(b) for b in kv.stream_fetch("t", [1])] == [b"i1"]
+    assert not kv.exists(key1)
+    kv.stream_close("t")
+    assert kv.stream_next("t", 2, timeout=5)["end"]
+    # append after close is rejected
+    with pytest.raises(RuntimeError):
+        kv.stream_append("t", b"late")
+
+
+def test_stream_next_blocks_until_append(kv):
+    res = {}
+
+    def consume():
+        res["it"] = kv.stream_next("s2", 0, timeout=10)
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.2)
+    assert "it" not in res
+    kv.stream_append("s2", b"first")
+    t.join(10)
+    assert bytes(res["it"]["data"]) == b"first"
+
+
+def test_stream_item_lease_reaps_abandoned_items(kv):
+    kv.stream_append("leaky", b"x", ttl=0.3)
+    key = stream_item_key("leaky", 0)
+    assert kv.exists(key)
+    deadline = time.monotonic() + 10
+    while kv.exists(key) and time.monotonic() < deadline:
+        time.sleep(0.1)
+    assert not kv.exists(key)           # reaped, holders presumed dead
+
+
+# ---------------------------------------------------------------------------
+# Store layer: ProxyFuture
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def kv_store(kv):
+    store = Store("fut-t", KVServerConnector(kv.host, kv.port))
+    yield store
+    store.close()
+
+
+def test_proxy_future_pre_data_proxy(kv_store):
+    """The future's proxy is a valid pre-data proxy: picklable and
+    dispatchable before the object exists; resolve parks until
+    set_result."""
+    fut = kv_store.future(timeout=15)
+    wire = pickle.dumps(fut.proxy())    # communicated before data exists
+    results = {}
+
+    def consume():
+        results["v"] = pickle.loads(wire)["answer"]
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.2)
+    assert not results
+    fut.set_result({"answer": 42})
+    t.join(10)
+    assert results["v"] == 42
+    assert fut.done()
+    assert fut.result(5)["answer"] == 42
+
+
+def test_proxy_future_set_exception_fans_out(kv_store):
+    """set_exception propagates the producer's pickled error to EVERY
+    blocked consumer (and to late resolvers)."""
+    fut = kv_store.future(timeout=15)
+    proxies = [fut.proxy() for _ in range(3)]
+    errs = {}
+
+    def consume(tag, p):
+        try:
+            _ = p + 1
+        except ProxyResolveError as e:
+            errs[tag] = e.__cause__
+
+    threads = [threading.Thread(target=consume, args=(i, p))
+               for i, p in enumerate(proxies[:2])]
+    for t in threads:
+        t.start()
+    time.sleep(0.2)
+    fut.set_exception(ValueError("producer exploded"))
+    for t in threads:
+        t.join(10)
+    consume(2, proxies[2])              # late consumer: same outcome
+    assert len(errs) == 3
+    assert all(isinstance(e, ValueError) and "exploded" in str(e)
+               for e in errs.values())
+
+
+def test_proxy_future_timeout_and_double_set(kv_store):
+    fut = kv_store.future(timeout=0.3)
+    with pytest.raises(ProxyResolveError) as ei:
+        _ = fut.proxy() + 1
+    assert isinstance(ei.value.__cause__, TimeoutError)
+    fut.set_result(1)
+    with pytest.raises(RuntimeError):
+        fut.set_result(2)               # a future is set exactly once
+
+
+def test_future_fallback_connectors():
+    """Local connectors get the condition-variable fallback wait."""
+    store = Store("fut-mem", LocalMemoryConnector())
+    try:
+        fut = store.future(timeout=10)
+        p = fut.proxy()
+        got = {}
+
+        def consume():
+            got["v"] = p["x"]
+
+        t = threading.Thread(target=consume)
+        t.start()
+        time.sleep(0.15)
+        assert not got
+        fut.set_result({"x": 7})
+        t.join(5)
+        assert got["v"] == 7
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# Store layer: streams
+# ---------------------------------------------------------------------------
+def test_stream_producer_consumer_overlap(kv_store):
+    """Consumer iterates items in order while the producer is still
+    appending; close yields StopIteration; stream items are consumed
+    exactly once (no objects leaked on the server)."""
+    before = kv_store.stats()["connector"]["n_objects"]
+
+    def produce():
+        with kv_store.stream_producer("updates", ttl=30) as prod:
+            for i in range(9):
+                prod.append({"i": i})
+                time.sleep(0.01)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    seen = [obj["i"] for obj in
+            kv_store.stream_consumer("updates", timeout=10, prefetch=3)]
+    t.join(10)
+    assert seen == list(range(9))
+    assert kv_store.stats()["connector"]["n_objects"] == before
+
+
+def test_stream_producer_exception_in_order(kv_store):
+    with kv_store.stream_producer("failing") as prod:
+        prod.append("ok-item")
+        prod.append_exception(RuntimeError("worker died"))
+    stream = kv_store.stream_consumer("failing", timeout=10)
+    assert next(stream) == "ok-item"
+    with pytest.raises(RuntimeError, match="worker died"):
+        next(stream)
+    with pytest.raises(StopIteration):
+        next(stream)
+
+
+def test_stream_fallback_memory_connector():
+    store = Store("stream-mem", LocalMemoryConnector())
+    try:
+        with store.stream_producer("s") as prod:
+            for i in range(5):
+                prod.append(i * 10)
+        assert list(store.stream_consumer("s", timeout=5)) == \
+            [0, 10, 20, 30, 40]
+    finally:
+        store.close()
+
+
+def test_socket_stream_across_nodes(tmp_path):
+    """A consumer on node B reads node A's topic via location (the topic
+    lives on the producing node's server)."""
+    from repro.core.connectors import SocketConnector
+
+    ca = SocketConnector(str(tmp_path / "disc"), node_id="nodeA")
+    cb = SocketConnector(str(tmp_path / "disc"), node_id="nodeB")
+    try:
+        ca.stream_append("xnode", b"from-A")
+        ca.stream_close("xnode")
+        it = cb.stream_next("xnode", 0, timeout=5, location="nodeA")
+        assert bytes(it.data) == b"from-A"
+        assert cb.stream_next("xnode", 1, timeout=5, location="nodeA").end
+    finally:
+        for c in (ca, cb):
+            c.shutdown_server()
+            c.close()
+
+
+def test_fl_pipeline_rejects_in_process_stream_connector(tmp_path):
+    """pipeline=True must fail loudly on a connector whose streams are
+    process-local (FaaS workers are separate processes)."""
+    from repro.configs import ARCHS
+    from repro.federated.faas import CloudModel, FaasExecutor
+    from repro.federated.fl import FLConfig, FLOrchestrator
+
+    tiny = ARCHS["phi4-mini-3.8b"].reduced().replace(
+        n_layers=1, d_model=32, d_ff=64, vocab=64, dtype="float32")
+    store = Store("fl-bad-pipe", FileConnector(str(tmp_path / "fl")))
+    ex = FaasExecutor(n_workers=1, cloud=CloudModel(latency_s=0.0))
+    try:
+        orch = FLOrchestrator(
+            tiny, FLConfig(rounds=1, workers_per_round=1,
+                           transport="proxy", pipeline=True), ex, store)
+        with pytest.raises(ValueError, match="server-backed"):
+            orch.run()
+    finally:
+        ex.shutdown()
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# PS-endpoint: peer-forwarded wait + located streams
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fabric(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("fut-fabric"))
+    relay = start_relay(d)
+    ep_a = start_endpoint(d, relay.address, name="a")
+    ep_b = start_endpoint(d, relay.address, name="b")
+    yield relay, ep_a, ep_b
+    for h in (ep_a, ep_b, relay):
+        h.stop()
+
+
+def test_wait_across_peer_forwarding(fabric):
+    """A consumer at endpoint B blocks in ``wait`` on a key its peer (A)
+    will produce; the put at A releases it over the peer channel (the
+    acceptance-criteria endpoint scenario)."""
+    _, ep_a, ep_b = fabric
+    ca = EndpointConnector(address=ep_a.address)
+    cb = EndpointConnector(address=ep_b.address)
+    key = ca.reserve()
+    got = {}
+
+    def consume():
+        got["v"] = bytes(cb.wait(key, timeout=20))
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.3)
+    assert not got                      # parked at A, via B
+    ca.put_to(key, b"produced-at-A")
+    t.join(15)
+    assert got.get("v") == b"produced-at-A"
+    ca.close()
+    cb.close()
+
+
+def test_endpoint_wait_timeout_and_local(fabric):
+    _, ep_a, _ = fabric
+    ca = EndpointConnector(address=ep_a.address)
+    with pytest.raises(TimeoutError):
+        ca.wait(ca.reserve(), timeout=0.3)
+    key = ca.reserve()
+    ca.put_to(key, b"local")
+    assert bytes(ca.wait(key, timeout=5)) == b"local"
+    ca.close()
+
+
+def test_endpoint_stream_across_peers(fabric):
+    """Producer streams at A; a consumer at B iterates via the topic's
+    location (peer-forwarded s_next + forwarded batch fetch)."""
+    _, ep_a, ep_b = fabric
+    sa = Store("fut-ep-a", EndpointConnector(address=ep_a.address))
+    sb = Store("fut-ep-b", EndpointConnector(address=ep_b.address))
+    try:
+        prod = sa.stream_producer("xsite")
+        loc = prod.location
+        assert loc == sa.connector.endpoint_uuid
+
+        def produce():
+            for i in range(6):
+                prod.append({"i": i})
+                time.sleep(0.01)
+            prod.close()
+
+        t = threading.Thread(target=produce)
+        t.start()
+        seen = [o["i"] for o in
+                sb.stream_consumer("xsite", timeout=15, location=loc)]
+        t.join(10)
+        assert seen == list(range(6))
+    finally:
+        sa.close()
+        sb.close()
+        unregister_store("fut-ep-a")
+        unregister_store("fut-ep-b")
+
+
+def test_cross_process_future_via_pickled_proxy(kv):
+    """A pre-data proxy re-materializes its store from config (fresh
+    registry = another 'process') and still parks/resolves."""
+    store = Store("xproc-fut", KVServerConnector(kv.host, kv.port))
+    fut = store.future(timeout=15)
+    wire = pickle.dumps(fut.proxy())
+    key = fut.key
+    store.close()                       # forget the producing store
+    consumer_store = Store("xproc-fut",
+                           KVServerConnector(kv.host, kv.port))
+    got = {}
+
+    def consume():
+        got["v"] = pickle.loads(wire)["late"]
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.2)
+    from repro.core import serialize
+
+    KVClient(kv.host, kv.port).put(key[3], serialize({"late": True}))
+    t.join(10)
+    assert got["v"] is True
+    consumer_store.close()
+
+
+# ---------------------------------------------------------------------------
+# batch-resolve miss check (regression: silent default=None fill)
+# ---------------------------------------------------------------------------
+def test_batch_resolved_sibling_of_evicted_key_raises():
+    """Batch resolution must fail loudly (LookupError) for proxies of an
+    over-evicted key — same as the scalar path's peek() — while proxies of
+    OTHER keys in the batch still resolve."""
+    store = Store("batch-miss", LocalMemoryConnector(), cache_size=0)
+    try:
+        alive = store.proxy({"ok": 1})
+        dead1 = store.proxy({"gone": 1})
+        dead2 = store.proxy({"gone": 1})
+        store.evict(get_factory(dead1).key)
+        store.evict(get_factory(dead2).key)
+        resolve_async([alive, dead1, dead2])
+        assert alive["ok"] == 1         # sibling of another key: fine
+        for p in (dead1, dead2):
+            with pytest.raises(ProxyResolveError) as ei:
+                _ = p["gone"]
+            assert isinstance(ei.value.__cause__, LookupError)
+    finally:
+        store.close()
+
+
+def test_get_batch_strict_raises_like_scalar():
+    store = Store("strict-batch", LocalMemoryConnector(), cache_size=0)
+    try:
+        k1 = store.put({"a": 1})
+        k2 = store.put({"b": 2})
+        store.evict(k2)
+        # non-strict keeps the documented default-fill contract
+        assert store.get_batch([k1, k2]) == [{"a": 1}, None]
+        with pytest.raises(LookupError):
+            store.get_batch([k1, k2], strict=True)
+    finally:
+        store.close()
+
+
+def test_resolve_async_batch_with_pre_data_future(kv_store):
+    """A pre-data future proxy in a resolve_async batch must PARK in wait
+    (not be mistaken for an evicted key by the group miss check)."""
+    fut = kv_store.future(timeout=15)
+    pre = fut.proxy()
+    plain = kv_store.proxy({"x": 1})
+    resolve_async([pre, plain])
+    assert plain["x"] == 1
+    time.sleep(0.2)
+    fut.set_result({"y": 2})
+    assert pre["y"] == 2
+
+
+def test_failed_future_key_raises_through_every_read_path(kv_store):
+    """set_exception's stored error re-raises via get, get_batch, and a
+    plain (non-wait) proxy of the key — not just via wait_get."""
+    fut = kv_store.future(timeout=10)
+    fut.set_exception(ValueError("boom"))
+    with pytest.raises(ValueError, match="boom"):
+        kv_store.get(fut.key)
+    with pytest.raises(ValueError, match="boom"):
+        kv_store.get_batch([fut.key])
+    with pytest.raises(ProxyResolveError) as ei:
+        _ = kv_store.proxy_from_key(fut.key)["x"]
+    assert isinstance(ei.value.__cause__, ValueError)
+
+
+def test_get_batch_stored_none_is_not_a_miss():
+    """A legitimately-stored None must survive strict mode (the _MISS
+    sentinel keeps it distinct from an evicted key)."""
+    store = Store("none-batch", LocalMemoryConnector(), cache_size=0)
+    try:
+        k = store.put(None)
+        assert store.get_batch([k], strict=True) == [None]
+    finally:
+        store.close()
