@@ -1,0 +1,107 @@
+"""CI perf-regression smoke gate over the fig6 micro tier.
+
+Runs ``benchmarks.fig6_inmemory.run(micro=True)`` (two sizes, every
+connector, a few seconds) and compares the shm / kvserver throughput rows
+against the committed ``BENCH_fig6.json`` baseline: the gate **fails**
+when a gated row's ``mb_per_s`` drops more than ``PERF_GATE_TOLERANCE``
+(default 30%) below baseline.  The other connectors are reported but not
+gated — file and socket numbers swing with runner disk/network weather;
+shm and kvserver are the data plane this repo owns.
+
+Opt-outs for slow or shared runners:
+
+* ``PERF_GATE_SKIP=1``      — skip entirely (exit 0).
+* ``PERF_GATE_TOLERANCE=.5`` — widen the allowed drop.
+
+Baseline rows predating the numeric schema (string ``us_per_call``, no
+``mb_per_s``) are skipped with a note rather than failed, so the gate is
+safe to enable before the first regenerated baseline lands.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+GATED_PREFIXES = ("fig6.shm.", "fig6.kvserver.")
+_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _baseline_rows() -> dict[str, dict]:
+    path = _ROOT / "BENCH_fig6.json"
+    if not path.exists():
+        return {}
+    rows = json.loads(path.read_text()).get("rows", [])
+    return {r.get("name"): r for r in rows if isinstance(r, dict)}
+
+
+def main() -> int:
+    if os.environ.get("PERF_GATE_SKIP"):
+        print("perf gate: skipped (PERF_GATE_SKIP set)")
+        return 0
+    tolerance = float(os.environ.get("PERF_GATE_TOLERANCE", "0.30"))
+    baseline = _baseline_rows()
+    if not baseline:
+        print("perf gate: no BENCH_fig6.json baseline; nothing to compare")
+        return 0
+
+    from benchmarks import util
+    from benchmarks.fig6_inmemory import run
+
+    def _measure() -> dict[str, float]:
+        n0 = len(util.ROWS)
+        run(micro=True)
+        return {r["name"]: r["mb_per_s"] for r in util.ROWS[n0:]
+                if r.get("mb_per_s") is not None}
+
+    current = _measure()
+    # one retry on failure, keeping the better reading per row: a noisy-
+    # neighbor burst during a ~5 s micro run must not fail the gate
+    if _evaluate(current, baseline, tolerance, verbose=False):
+        print("perf gate: regression readings; retrying once "
+              "(best-of-two per row)...")
+        for name, mbps in _measure().items():
+            current[name] = max(current.get(name, 0.0), mbps)
+    failures = _evaluate(current, baseline, tolerance)
+    if not failures:
+        print("perf gate: ok")
+        return 0
+    print("\nperf gate FAILED:\n  " + "\n  ".join(failures))
+    print("(slow runner? opt out with PERF_GATE_SKIP=1 or widen "
+          "PERF_GATE_TOLERANCE)")
+    return 1
+
+
+def _evaluate(current: dict[str, float], baseline: dict[str, dict],
+              tolerance: float, *, verbose: bool = True) -> list[str]:
+    failures: list[str] = []
+    for name, mbps in sorted(current.items()):
+        base = baseline.get(name)
+        gated = name.startswith(GATED_PREFIXES)
+        if base is None:
+            if verbose:
+                print(f"  {name}: {mbps:.0f} MB/s (no baseline row)")
+            continue
+        base_mbps = base.get("mb_per_s")
+        if not isinstance(base_mbps, (int, float)):
+            if verbose:
+                print(f"  {name}: {mbps:.0f} MB/s (baseline predates "
+                      f"numeric schema; skipped)")
+            continue
+        floor = (1.0 - tolerance) * base_mbps
+        status = "ok" if mbps >= floor else ("FAIL" if gated else "warn")
+        if verbose:
+            print(f"  {name}: {mbps:.0f} MB/s vs baseline {base_mbps:.0f} "
+                  f"(floor {floor:.0f}) [{status}]")
+        if status == "FAIL":
+            failures.append(
+                f"{name}: {mbps:.0f} MB/s < {floor:.0f} MB/s "
+                f"({tolerance:.0%} below baseline {base_mbps:.0f})")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

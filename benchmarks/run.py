@@ -34,13 +34,12 @@ MODULES = [
 _ROOT = Path(__file__).resolve().parents[1]
 
 
-def _dump(tag: str, rows: list[str], elapsed: float) -> None:
+def _dump(tag: str, rows: list[dict], elapsed: float) -> None:
     out = {
         "figure": tag,
         "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "elapsed_s": round(elapsed, 2),
-        "rows": [dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
-                 for r in rows],
+        "rows": rows,   # structured dicts: numeric us_per_call / mb_per_s
         "results": util.RESULTS.pop(tag, {}),
     }
     path = _ROOT / f"BENCH_{tag}.json"

@@ -8,14 +8,25 @@ from typing import Callable
 
 import numpy as np
 
-ROWS: list[str] = []
+ROWS: list[dict] = []
 RESULTS: dict[str, dict] = {}
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    row = f"{name},{us_per_call:.1f},{derived}"
+def emit(name: str, us_per_call: float, derived: str = "",
+         mb_per_s: float | None = None) -> None:
+    """Record one benchmark row.
+
+    Rows are structured (numeric ``us_per_call`` and optional numeric
+    ``mb_per_s`` — never strings like ``"202MB/s"``) so the CI perf gate
+    and trend plots can parse ``BENCH_*.json`` without re-lexing; ``derived``
+    stays free-form for human context.  The CSV print is unchanged.
+    """
+    row: dict = {"name": name, "us_per_call": round(float(us_per_call), 1),
+                 "derived": derived}
+    if mb_per_s is not None:
+        row["mb_per_s"] = round(float(mb_per_s), 1)
     ROWS.append(row)
-    print(row, flush=True)
+    print(f"{name},{row['us_per_call']},{derived}", flush=True)
 
 
 def record(tag: str, data: dict) -> None:
@@ -24,15 +35,23 @@ def record(tag: str, data: dict) -> None:
     RESULTS.setdefault(tag, {}).update(data)
 
 
-def time_call(fn: Callable, *, reps: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds per call."""
+def time_call(fn: Callable, *, reps: int = 3, warmup: int = 1,
+              inner: int = 1) -> float:
+    """Median wall seconds per call.
+
+    ``inner`` > 1 times a back-to-back loop of calls per rep and divides:
+    this container's scheduler adds multi-ms spikes to individual calls,
+    so amortizing a few calls per sample estimates steady-state per-call
+    cost far more stably than single-shot medians.
+    """
     for _ in range(warmup):
         fn()
     times = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
+        for _ in range(inner):
+            fn()
+        times.append((time.perf_counter() - t0) / inner)
     return statistics.median(times)
 
 

@@ -12,9 +12,10 @@ Public API mirrors the paper's usage (Listing 1):
 from repro.core.proxy import (OwnedProxy, Proxy, ProxyResolveError, borrow,
                               clone, extract, get_factory, into_owned,
                               is_proxy, is_resolved, release, resolve)
-from repro.core.serialize import (Frame, as_segments, deserialize,
-                                  frame_nbytes, join_frame, serialize,
-                                  serialize_v1)
+from repro.core.arena import Arena, ArenaPool
+from repro.core.serialize import (Frame, as_segments, copy_segments_into,
+                                  deserialize, frame_nbytes, join_frame,
+                                  serialize, serialize_v1)
 from repro.core.connector import BaseConnector, Connector, Key, StreamItem
 from repro.core.store import (ProxyFuture, ProxyStream, Store, StoreConfig,
                               StoreFactory, StreamProducer, get_store,
@@ -26,7 +27,8 @@ __all__ = [
     "Proxy", "OwnedProxy", "ProxyResolveError", "borrow", "clone",
     "into_owned", "release", "extract", "get_factory", "is_proxy",
     "is_resolved", "resolve", "serialize", "serialize_v1", "deserialize",
-    "Frame", "as_segments", "frame_nbytes", "join_frame", "BaseConnector",
+    "Arena", "ArenaPool", "Frame", "as_segments", "copy_segments_into",
+    "frame_nbytes", "join_frame", "BaseConnector",
     "Connector", "Key", "StreamItem", "Store", "StoreConfig", "StoreFactory",
     "ProxyFuture", "ProxyStream", "StreamProducer", "get_store",
     "get_or_create_store", "maybe_proxy", "register_store", "resolve_async",

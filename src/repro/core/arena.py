@@ -1,0 +1,561 @@
+"""Slab-arena shared-memory data plane (the §4.1.3 intra-node fast path).
+
+The original shm connector paid five syscalls and two filesystem ops per
+object: every ``put`` created a fresh POSIX segment (``shm_open`` +
+``ftruncate`` + ``mmap``) and published it through a JSON sidecar write +
+rename; every ``get`` re-opened and re-mapped the segment.  That made a
+10 KB put cost milliseconds when the serializer costs microseconds — the
+opposite of the paper's claim that proxies make intra-node object passing
+cost what the hardware costs.
+
+This module replaces that design with a small number of large, pre-created
+shared-memory **arenas**:
+
+* each arena is one POSIX segment holding a fixed header, a slot table and
+  a slab data region;
+* allocation is a **single-writer slab allocator**: only the arena's owner
+  process allocates (size-classed power-of-two chunks, per-class free
+  lists, bump-pointer carving), so no cross-process lock exists on the hot
+  path;
+* publication is an **atomic header store**: the producer memcpys the
+  payload into its slot, fills the slot entry, and flips the slot's state
+  byte to COMMITTED last — that one byte is the publication point
+  (replacing the sidecar write + rename entirely);
+* consumers address objects by ``(arena, slot, generation)`` embedded in
+  the key, so a ``get`` is: one cached ``mmap`` attach per *arena* (not
+  per object), one slot-entry read, one zero-copy ``memoryview`` slice;
+* cross-process eviction is an atomic state store too: a non-owner flips
+  the slot to FREE_REQUESTED and the owner lazily reclaims the chunk on
+  its next allocation pressure (generation bump keeps stale keys dead);
+* arena exhaustion grows the pool: a fresh arena is created, and objects
+  larger than half an arena get a dedicated overflow arena sized to fit.
+
+Memory-ordering note: the commit protocol relies on the payload and slot
+fields being visible before the state byte flips.  CPython byte stores
+into a shared mapping are plain stores; on x86-64 (TSO) stores from one
+thread are observed in order, and the interpreter's own synchronization
+inserts barriers far more often than once per put.  The consumer-side
+check order (state, then generation, then bounds) mirrors this.
+
+Consumer view lifetime rule: a memoryview returned by :meth:`Arena.read`
+aliases the shared mapping.  It stays *valid* (the mapping is kept alive
+even past ``close`` while views are exported) but its *contents* are only
+stable until the slot is evicted — after that the owner may recycle the
+chunk.  Pin objects with the refcount/lease API if consumers outlive the
+producer's eviction decisions.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import struct
+import threading
+import uuid
+from multiprocessing import shared_memory
+from pathlib import Path
+from typing import Any, Iterator
+
+from repro.core.serialize import copy_segments_into
+
+# -- slot states (one byte; the publication point) --------------------------
+# The state byte has exactly ONE writer — the arena's owner.  Non-owner
+# eviction goes through the generation-tagged ``freq`` (free-request) field
+# instead: stomping the state byte from another process could race the
+# owner recycling the slot and kill an unrelated new object, while a stale
+# gen-tagged request simply never matches.
+FREE = 0            # unused / reclaimed
+WRITING = 1         # allocated, payload being written (never readable)
+COMMITTED = 2       # published: readable by any process
+
+_MAGIC = b"PSAR"
+_VERSION = 1
+
+# header: magic | version u16 | nslots u32 | arena size u64 | data_off u64
+#         | owner pid u32 | slots_used u32 (high-water mark for id scans)
+_HEADER = struct.Struct("<4sHIQQII")
+_HEADER_SPAN = 64                     # header region is padded to 64 B
+
+# slot entry: state u8 | klass u8 | pad u16 | gen u32
+#             | freq u32 (generation whose free a non-owner requested)
+#             | size u64 | offset u64
+#             | id 16s (uuid bytes for reserved-key lookup; zero otherwise)
+_SLOT = struct.Struct("<BBHIIQQ16s")
+SLOT_SIZE = _SLOT.size                # 44 B
+_FREQ_OFF = 8                         # byte offset of freq within an entry
+_NO_FREQ = 0xFFFFFFFF                 # freq value matching no generation
+
+_ALIGN = 64                           # data chunks are 64-byte aligned
+_MIN_KLASS = 10                       # smallest chunk: 1 KiB
+DEFAULT_ARENA_SIZE = 64 * 1024 * 1024
+DEFAULT_NSLOTS = 2048
+
+NO_ID = b"\x00" * 16
+
+_HAS_TRACK = "track" in inspect.signature(
+    shared_memory.SharedMemory.__init__).parameters
+
+
+def _open_segment(name: str, *, create: bool = False,
+                  size: int = 0) -> shared_memory.SharedMemory:
+    """Open/create a segment WITHOUT resource-tracker registration —
+    arena lifetime is explicit (owner close / registry sweep)."""
+    kwargs: dict[str, Any] = {"track": False} if _HAS_TRACK else {}
+    if create:
+        seg = shared_memory.SharedMemory(name=name, create=True,
+                                         size=max(1, size), **kwargs)
+    else:
+        seg = shared_memory.SharedMemory(name=name, **kwargs)
+    if not _HAS_TRACK:
+        try:
+            from multiprocessing import resource_tracker
+
+            resource_tracker.unregister(seg._name, "shared_memory")
+        except Exception:  # pragma: no cover - tracker internals vary
+            pass
+    return seg
+
+
+def _unlink_segment(seg: shared_memory.SharedMemory) -> None:
+    """Unlink, balancing tracker bookkeeping on Python < 3.13."""
+    if not _HAS_TRACK:
+        try:
+            from multiprocessing import resource_tracker
+
+            resource_tracker.register(seg._name, "shared_memory")
+        except Exception:  # pragma: no cover
+            pass
+    seg.unlink()
+
+
+def close_mapping(seg: shared_memory.SharedMemory) -> None:
+    """Close a mapping, tolerating exported zero-copy views: the fd drops
+    now, the mmap stays referenced by the views and is unmapped by the GC
+    with the last of them."""
+    try:
+        seg.close()
+    except BufferError:
+        try:
+            if seg._fd >= 0:
+                os.close(seg._fd)
+                seg._fd = -1
+            seg._mmap = None
+            seg._buf = None
+        except Exception:  # pragma: no cover - stdlib internals shift
+            pass
+
+
+def size_class(nbytes: int) -> int:
+    """Power-of-two size class index (chunk size ``1 << klass``)."""
+    klass = max(nbytes - 1, 1).bit_length()
+    return max(klass, _MIN_KLASS)
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+class Arena:
+    """One mapped arena segment.
+
+    Exactly one process — the creator — may allocate (``owner=True``); any
+    process may attach, read committed slots and request frees.  All the
+    allocator's bookkeeping (free lists, bump pointer, free slot stack)
+    lives in the owner's private memory: the shared header only carries
+    what readers need.
+    """
+
+    def __init__(self, name: str, *, create: bool = False,
+                 size: int = DEFAULT_ARENA_SIZE,
+                 nslots: int = DEFAULT_NSLOTS) -> None:
+        self.name = name
+        self.owner = create
+        if create:
+            data_off = -(-(_HEADER_SPAN + nslots * SLOT_SIZE) // _ALIGN) \
+                * _ALIGN
+            total = data_off + size
+            self.seg = _open_segment(name, create=True, size=total)
+            self.nslots = nslots
+            self.data_off = data_off
+            self.size = total
+            _HEADER.pack_into(self.seg.buf, 0, _MAGIC, _VERSION, nslots,
+                              total, data_off, os.getpid(), 0)
+            # owner-only allocator state
+            self._bump = data_off
+            self._free_chunks: dict[int, list[int]] = {}
+            self._free_slots: list[int] = []
+            self._next_slot = 0
+        else:
+            self.seg = _open_segment(name)
+            try:
+                magic, version, nslots, total, data_off, _pid, _used = \
+                    _HEADER.unpack_from(self.seg.buf, 0)
+            except struct.error:
+                magic = None
+            if magic != _MAGIC:
+                close_mapping(self.seg)
+                raise ValueError(f"{name} is not a PSAR arena")
+            self.nslots = nslots
+            self.data_off = data_off
+            self.size = total
+
+    # -- shared-header helpers ----------------------------------------------
+    def _slot_off(self, slot: int) -> int:
+        return _HEADER_SPAN + slot * SLOT_SIZE
+
+    def _entry(self, slot: int) -> tuple:
+        return _SLOT.unpack_from(self.seg.buf, self._slot_off(slot))
+
+    def _write_entry(self, slot: int, state: int, klass: int, gen: int,
+                     size: int, offset: int, idbytes: bytes,
+                     freq: int = _NO_FREQ) -> None:
+        _SLOT.pack_into(self.seg.buf, self._slot_off(slot), state, klass, 0,
+                        gen, freq, size, offset, idbytes)
+
+    def _set_state(self, slot: int, state: int) -> None:
+        self.seg.buf[self._slot_off(slot)] = state  # one atomic byte store
+
+    @property
+    def owner_pid(self) -> int:
+        return _HEADER.unpack_from(self.seg.buf, 0)[5]
+
+    @property
+    def slots_used(self) -> int:
+        return _HEADER.unpack_from(self.seg.buf, 0)[6]
+
+    def _publish_slots_used(self, n: int) -> None:
+        struct.pack_into("<I", self.seg.buf, _HEADER.size - 4, n)
+
+    # -- owner: allocation / commit / reclaim --------------------------------
+    def alloc(self, nbytes: int, idbytes: bytes = NO_ID) -> int | None:
+        """Reserve a chunk + slot for ``nbytes``; returns the slot index or
+        None when this arena cannot fit it.  The slot is WRITING (invisible
+        to readers) until :meth:`commit`."""
+        assert self.owner, "only the creating process allocates"
+        klass = size_class(nbytes)
+        chunk = 1 << klass
+        if chunk > self.size - self.data_off:
+            return None
+        free = self._free_chunks.get(klass)
+        if free:
+            offset = free.pop()
+        elif self._bump + chunk <= self.size:
+            offset = self._bump
+            self._bump += chunk
+        else:
+            self.reclaim()
+            free = self._free_chunks.get(klass)
+            if not free:
+                return None
+            offset = free.pop()
+        slot = self._take_slot()
+        if slot is None:
+            self._free_chunks.setdefault(klass, []).append(offset)
+            return None
+        gen = self._entry(slot)[3]
+        self._write_entry(slot, WRITING, klass, gen, nbytes, offset, idbytes)
+        return slot
+
+    def _take_slot(self) -> int | None:
+        if self._free_slots:
+            return self._free_slots.pop()
+        if self._next_slot < self.nslots:
+            slot = self._next_slot
+            self._next_slot += 1
+            self._publish_slots_used(self._next_slot)
+            return slot
+        self.reclaim()
+        return self._free_slots.pop() if self._free_slots else None
+
+    def slot_view(self, slot: int) -> memoryview:
+        """Writable view of the slot's payload span (producer memcpy
+        target)."""
+        _st, _k, _pad, _gen, _freq, size, offset, _id = self._entry(slot)
+        return self.seg.buf[offset:offset + size]
+
+    def commit(self, slot: int) -> int:
+        """Flip the slot to COMMITTED (the publication point); returns the
+        slot's generation, which the key must carry."""
+        gen = self._entry(slot)[3]
+        self._set_state(slot, COMMITTED)
+        return gen
+
+    def free(self, slot: int, gen: int | None = None) -> bool:
+        """Owner-side reclaim: generation bump kills stale keys, chunk goes
+        back on its class free list."""
+        assert self.owner
+        state, klass, _pad, cur_gen, _freq, _size, offset, _id = \
+            self._entry(slot)
+        if state == FREE or (gen is not None and gen != cur_gen):
+            return False
+        next_gen = (cur_gen + 1) & 0xFFFFFFFF
+        if next_gen == _NO_FREQ:          # never collide with the sentinel
+            next_gen = 0
+        self._write_entry(slot, FREE, 0, next_gen, 0, 0, NO_ID)
+        self._free_chunks.setdefault(klass, []).append(offset)
+        self._free_slots.append(slot)
+        return True
+
+    def reclaim(self) -> int:
+        """Sweep slots with a matching free request (non-owner evictions)
+        back onto the free lists.  Called lazily, under allocation
+        pressure."""
+        n = 0
+        for slot in range(self._next_slot):
+            state, _k, _pad, gen, freq = self._entry(slot)[:5]
+            if state == COMMITTED and freq == gen:
+                if self.free(slot):
+                    n += 1
+        return n
+
+    # -- any process: read / existence / eviction ----------------------------
+    def read(self, slot: int, gen: int) -> memoryview | None:
+        """Zero-copy view of a committed slot's payload, or None when the
+        slot was never committed, evicted, freed-on-request, or recycled
+        (generation mismatch)."""
+        if not 0 <= slot < self.nslots:
+            return None
+        state, _k, _pad, cur_gen, freq, size, offset, _id = self._entry(slot)
+        if state != COMMITTED or cur_gen != gen or freq == gen:
+            return None
+        if offset + size > self.size:
+            return None
+        return self.seg.buf[offset:offset + size]
+
+    def committed(self, slot: int, gen: int) -> bool:
+        if not 0 <= slot < self.nslots:
+            return False
+        state, _k, _pad, cur_gen, freq = self._entry(slot)[:5]
+        return state == COMMITTED and cur_gen == gen and freq != gen
+
+    def request_free(self, slot: int, gen: int) -> None:
+        """Non-owner eviction: publish a free request TAGGED with the
+        generation being evicted (never touching the owner-only state
+        byte).  If the owner recycled the slot concurrently, the stale tag
+        matches nothing and the new object is untouched — the worst
+        concurrent interleaving delays an eviction, never corrupts one."""
+        if not 0 <= slot < self.nslots:
+            return
+        state, _k, _pad, cur_gen = self._entry(slot)[:4]
+        if state == COMMITTED and cur_gen == gen:
+            struct.pack_into("<I", self.seg.buf,
+                             self._slot_off(slot) + _FREQ_OFF, gen)
+
+    def find_id(self, idbytes: bytes) -> tuple[int, int] | None:
+        """Locate a committed slot by its embedded id (the reserved-key
+        redirect path); returns (slot, gen) or None.  Scans only up to the
+        arena's high-water mark."""
+        for slot in range(min(self.slots_used, self.nslots)):
+            state, _k, _pad, gen, freq, _size, _off, sid = self._entry(slot)
+            if state == COMMITTED and freq != gen and sid == idbytes:
+                return slot, gen
+        return None
+
+    def live_slots(self) -> Iterator[tuple[int, int, int]]:
+        """Yield (slot, gen, size) for every committed slot."""
+        for slot in range(min(self.slots_used, self.nslots)):
+            state, _k, _pad, gen, freq, size, _off, _id = self._entry(slot)
+            if state == COMMITTED and freq != gen:
+                yield slot, gen, size
+
+    def close(self) -> None:
+        close_mapping(self.seg)
+
+    def unlink(self) -> None:
+        try:
+            _unlink_segment(self.seg)
+        except FileNotFoundError:
+            pass
+
+
+class ArenaPool:
+    """The owner-side pool a producer allocates from, plus the consumer-side
+    attach cache, over one *registry directory*.
+
+    The registry dir holds one tiny marker file per arena
+    (``<segment>.arena`` containing the owner pid) written once at arena
+    creation — the only filesystem traffic of the data plane.  Consumers
+    list it to discover arenas created by other processes.
+    """
+
+    def __init__(self, registry_dir: str,
+                 arena_size: int = DEFAULT_ARENA_SIZE,
+                 nslots: int = DEFAULT_NSLOTS) -> None:
+        self._dir = Path(registry_dir)
+        self._dir.mkdir(parents=True, exist_ok=True)
+        self.arena_size = int(arena_size)
+        self.nslots = int(nslots)
+        self._lock = threading.RLock()
+        self._owned: list[Arena] = []          # allocation order
+        self._attached: dict[str, Arena | None] = {}  # name -> arena/dead
+
+    # -- arena lifecycle -----------------------------------------------------
+    def _marker(self, name: str) -> Path:
+        return self._dir / f"{name}.arena"
+
+    def _create_arena(self, size: int, nslots: int) -> Arena:
+        name = f"psja_{uuid.uuid4().hex[:16]}"
+        arena = Arena(name, create=True, size=size, nslots=nslots)
+        self._marker(name).write_text(str(os.getpid()))
+        self._owned.append(arena)
+        self._attached[name] = arena
+        return arena
+
+    def attach(self, name: str) -> Arena | None:
+        """Consumer-side cached attach (one mmap per arena, ever)."""
+        with self._lock:
+            arena = self._attached.get(name, _ABSENT)
+            if arena is not _ABSENT:
+                return arena
+            try:
+                arena = Arena(name)
+            except (FileNotFoundError, ValueError):
+                arena = None
+            self._attached[name] = arena
+            return arena
+
+    def discover(self) -> list[str]:
+        """Arena names published in the registry dir (any process)."""
+        return [p.name[:-len(".arena")] for p in self._dir.glob("*.arena")]
+
+    # -- the data-plane hot path ---------------------------------------------
+    def put(self, segments, nbytes: int,
+            idbytes: bytes = NO_ID) -> tuple[str, int, int]:
+        """Allocate a slot, scatter ``segments`` into it, commit.  Returns
+        ``(arena_name, slot, gen)``.  One memcpy per segment + one atomic
+        state store — no syscalls once the arena exists."""
+        # only the allocator bookkeeping needs the pool lock; the memcpy
+        # + commit run outside it (a WRITING slot has exactly one writer),
+        # so concurrent threads' payload copies overlap
+        with self._lock:
+            arena, slot = self._alloc(nbytes, idbytes)
+        copy_segments_into(segments, arena.slot_view(slot))
+        gen = arena.commit(slot)
+        return arena.name, slot, gen
+
+    def _alloc(self, nbytes: int, idbytes: bytes) -> tuple[Arena, int]:
+        for arena in self._owned:
+            slot = arena.alloc(nbytes, idbytes)
+            if slot is not None:
+                return arena, slot
+        # second pass: reclaim consumer-side frees, then retry
+        for arena in self._owned:
+            if arena.reclaim():
+                slot = arena.alloc(nbytes, idbytes)
+                if slot is not None:
+                    return arena, slot
+        # grow: oversized objects get a dedicated overflow arena; everything
+        # else gets a fresh standard arena
+        chunk = 1 << size_class(nbytes)
+        if chunk > self.arena_size // 2:
+            arena = self._create_arena(chunk, nslots=8)
+        else:
+            arena = self._create_arena(self.arena_size, self.nslots)
+        slot = arena.alloc(nbytes, idbytes)
+        if slot is None:  # pragma: no cover - fresh arena always fits
+            raise MemoryError(f"cannot place {nbytes} byte object")
+        return arena, slot
+
+    def free(self, name: str, slot: int, gen: int) -> None:
+        """Evict: owner frees in place, non-owner requests the free."""
+        with self._lock:
+            arena = self.attach(name)
+            if arena is None:
+                return
+            if arena.owner:
+                arena.free(slot, gen)
+            else:
+                arena.request_free(slot, gen)
+
+    def find_id(self, idbytes: bytes) -> tuple[str, int, int] | None:
+        """Reserved-key redirect: locate ``idbytes`` across every
+        discoverable arena; returns (arena_name, slot, gen) or None."""
+        with self._lock:
+            names = set(self._attached) | set(self.discover())
+            for name in names:
+                arena = self.attach(name)
+                if arena is None:
+                    continue
+                hit = arena.find_id(idbytes)
+                if hit is not None:
+                    return name, hit[0], hit[1]
+        return None
+
+    # -- registry hygiene ----------------------------------------------------
+    def sweep(self, *, clear: bool = False) -> int:
+        """Registry-dir startup scan.
+
+        Always: drop ``.{id}.tmp`` sidecar orphans (a pre-arena producer
+        that crashed between write and rename) and markers whose segment no
+        longer exists.  With ``clear=True`` additionally unlink arenas whose
+        owner process is dead (nothing will reclaim them) — and with it,
+        legacy ``*.json`` sidecars + their segments from the pre-arena
+        layout, so a restarted registry dir cannot leak segments.
+        """
+        n = 0
+        for tmp in self._dir.glob(".*.tmp"):
+            tmp.unlink(missing_ok=True)
+            n += 1
+        for marker in self._dir.glob("*.arena"):
+            name = marker.name[:-len(".arena")]
+            try:
+                arena = Arena(name)
+            except (FileNotFoundError, ValueError):
+                marker.unlink(missing_ok=True)
+                n += 1
+                continue
+            try:
+                if clear and not _pid_alive(arena.owner_pid):
+                    arena.unlink()
+                    marker.unlink(missing_ok=True)
+                    n += 1
+            finally:
+                if self._attached.get(name) is not arena:
+                    arena.close()
+        if clear:
+            for sidecar in self._dir.glob("*.json"):
+                try:
+                    import json
+
+                    seg_name = json.loads(sidecar.read_text()).get("segment")
+                    if seg_name:
+                        seg = _open_segment(seg_name)
+                        close_mapping(seg)
+                        _unlink_segment(seg)
+                except (FileNotFoundError, ValueError, KeyError):
+                    pass
+                sidecar.unlink(missing_ok=True)
+                n += 1
+        return n
+
+    def stats(self) -> dict[str, Any]:
+        with self._lock:
+            return {
+                "n_owned_arenas": len(self._owned),
+                "n_attached_arenas": sum(
+                    1 for a in self._attached.values() if a is not None),
+                "owned_bytes": sum(a.size for a in self._owned),
+            }
+
+    def close(self) -> None:
+        """Unlink owned arenas (+ markers), detach consumer mappings."""
+        with self._lock:
+            owned, self._owned = self._owned, []
+            attached, self._attached = self._attached, {}
+        for arena in owned:
+            self._marker(arena.name).unlink(missing_ok=True)
+            arena.close()
+            arena.unlink()
+        for arena in attached.values():
+            if arena is not None and not arena.owner:
+                arena.close()
+
+
+_ABSENT = object()

@@ -19,7 +19,11 @@ behavior, not a bug: cross-process ownership needs a KV-backed channel.
 :mod:`repro.core.serialize`): scatter-gather-capable channels write the
 segments directly, others fall back to a single ``join_frame`` copy.  ``get``
 may return any bytes-like object (``bytes`` or a zero-copy ``memoryview``,
-e.g. a mapped shared-memory segment) suitable for ``deserialize``.
+e.g. a slice of a mapped shared-memory arena) suitable for ``deserialize``.
+Mapped views stay *valid* until the connector closes, but their *contents*
+are only stable until the key is evicted — consumers that hold
+deserialized zero-copy arrays across an eviction must pin the key with a
+reference (see the lifecycle extension below) or copy.
 
 Futures + streams extension (communicate data BEFORE it exists, following
 the distributed-future and streaming proxy patterns of arXiv:2407.01764):
@@ -115,6 +119,13 @@ class Connector(Protocol):
 
 class BaseConnector:
     """Shared batch defaults, lifecycle fallback + context-manager plumbing."""
+
+    # True when ``get`` returns views of memory the CHANNEL still owns and
+    # may recycle after the key's eviction (the shm arena).  The Store's
+    # lifecycle-bound resolves materialize (deep-copy) such results before
+    # dropping their reference; connectors whose gets return fresh/immutable
+    # buffers (file, kv, memory) keep zero-copy semantics all the way.
+    borrows_get = False
 
     def put_batch(self, blobs: Sequence[bytes]) -> list[Key]:
         return [self.put(b) for b in blobs]
@@ -350,6 +361,10 @@ class BaseConnector:
                         f"stream {topic!r} item {seq} timed out")
                 state["cond"].wait(remaining)
         blob = self.get(key)
+        if blob is not None and self.borrows_get:
+            # the decref below is the item's LAST reference: detach the
+            # payload before the channel may recycle its backing memory
+            blob = bytes(memoryview(blob))
         self.decref(key)                 # consumed: refcount hits zero
         return StreamItem(seq, blob, available, False)
 
@@ -362,6 +377,9 @@ class BaseConnector:
             st = self._stream_state(topic)
             keys = [st["keys"][int(s)] for s in seqs]
         blobs = self.get_batch(keys)
+        if self.borrows_get:
+            blobs = [bytes(memoryview(b)) if b is not None else None
+                     for b in blobs]
         self.decref_batch(keys)
         return blobs
 

@@ -1,223 +1,156 @@
-"""SharedMemoryConnector — zero-copy intra-node channel (§4.1.3 role).
+"""SharedMemoryConnector — slab-arena zero-copy intra-node channel (§4.1.3).
 
 Plays the role of the paper's Margo/UCX RDMA-backed distributed memory for
-node-local producers/consumers: objects live in named POSIX shared-memory
-segments.  ``put`` writes frame segments straight into the mapping (no join
-copy) and ``get`` returns a *mapped memoryview* of the segment — the consumer
-deserializes zero-copy out of shared memory; no socket, no ``bytes()`` copy.
+node-local producers/consumers.  Objects live in a small number of large
+pre-created shared-memory **arenas** (see :mod:`repro.core.arena`): ``put``
+is one slab allocation + one memcpy per frame segment + one atomic
+commit-byte store; ``get`` is a cached arena attach + a slot-entry read +
+a zero-copy ``memoryview`` slice the consumer deserializes straight out of
+shared memory.  No per-object segments, no filesystem sidecars, no
+syscalls on the steady-state hot path.
 
-Hardware adaptation note (DESIGN.md §2): no RDMA NIC exists in this container;
-POSIX shm is the intra-node analog of memory-to-memory transfer.  Cross-node
-traffic falls to SocketConnector/KVServerConnector, as the paper's ZMQ
-fallback does.
+Key layout: ``("shm", registry_dir, object_id)`` where ``object_id`` is
+``"{arena}.{slot}.{gen}"`` — the slot header in the arena IS the object
+directory, and the generation makes keys of recycled slots read as
+missing instead of aliasing new data.  Reserved keys (futures) are
+``"r{uuid}"``: ``put_to`` embeds the uuid in the slot entry and consumers
+resolve it by scanning the arenas' slot tables (the rare pre-data path;
+the hot path never scans).
+
+Mapped-view lifetime: views returned by ``get`` stay *valid* until the
+consumer's connector closes (and survive even that while exported), but
+their *contents* are only stable until the object is evicted — after
+which the owner may recycle the chunk.  Use refcounts/leases to pin
+objects consumers are still reading.
+
+Hardware adaptation note (DESIGN.md §2): no RDMA NIC exists in this
+container; POSIX shm is the intra-node analog of memory-to-memory
+transfer.  Cross-node traffic falls to SocketConnector/KVServerConnector,
+as the paper's ZMQ fallback does.
 """
 from __future__ import annotations
 
 import atexit
-import inspect
-import json
-import threading
 import uuid
-from collections import OrderedDict
-from multiprocessing import shared_memory
-from pathlib import Path
 from typing import Any
 
+from repro.core.arena import (DEFAULT_ARENA_SIZE, DEFAULT_NSLOTS, ArenaPool,
+                              NO_ID)
 from repro.core.connector import BaseConnector, Key
 from repro.core.serialize import as_segments, frame_nbytes
 
-# Ownership is explicit (the on-disk index + close()), so segments should
-# NEVER be handed to multiprocessing's resource tracker.  Python >= 3.13 has
-# track=False; earlier versions get an explicit unregister after attach.
-_HAS_TRACK = "track" in inspect.signature(
-    shared_memory.SharedMemory.__init__).parameters
-
-
-def _open_segment(name: str, *, create: bool = False,
-                  size: int = 0) -> shared_memory.SharedMemory:
-    kwargs: dict[str, Any] = {"track": False} if _HAS_TRACK else {}
-    if create:
-        seg = shared_memory.SharedMemory(name=name, create=True,
-                                         size=max(1, size), **kwargs)
-    else:
-        seg = shared_memory.SharedMemory(name=name, **kwargs)
-    if not _HAS_TRACK:
-        try:
-            from multiprocessing import resource_tracker
-
-            resource_tracker.unregister(seg._name, "shared_memory")
-        except Exception:  # pragma: no cover - tracker internals vary
-            pass
-    return seg
-
-
-def _unlink_segment(seg: shared_memory.SharedMemory) -> None:
-    """Unlink, balancing the tracker bookkeeping on Python < 3.13 (unlink
-    sends an unregister; we already unregistered at open)."""
-    if not _HAS_TRACK:
-        try:
-            from multiprocessing import resource_tracker
-
-            resource_tracker.register(seg._name, "shared_memory")
-        except Exception:  # pragma: no cover
-            pass
-    seg.unlink()
+_RESERVED = "r"     # reserved-key object_id prefix (no "." — arena ids have 3)
 
 
 class SharedMemoryConnector(BaseConnector):
-    """Named-segment shm store with an on-disk index for discovery.
+    """Arena-backed shm store.
 
     ``registry_dir`` is a small shared directory (tmpfs is fine) holding one
-    JSON sidecar per object: {"segment": name, "size": n}.  Data never touches
-    the file system — only 60-byte index entries do.
-
-    ``get`` keeps the attached segment mapped (so the returned view stays
-    valid) until ``evict``/``close``; a mapping whose views are still exported
-    at close time is left for the GC rather than invalidated underfoot.
+    marker file per *arena* (written once at arena creation) — per-object
+    traffic never touches the filesystem.  ``arena_size``/``nslots`` size
+    the slabs this process creates as a producer; consumers attach whatever
+    the registry advertises regardless of their own settings.
     """
 
-    # mapped-reader cache bound: each entry holds 2 fds + one mapping, so
-    # cap it and LRU-close (views still exported survive via _close_segment)
-    MAX_OPEN_SEGMENTS = 64
+    # gets return views of arena memory the owner may recycle post-evict:
+    # lifecycle-bound Store resolves materialize before dropping their ref
+    borrows_get = True
 
-    def __init__(self, registry_dir: str, clear: bool = False) -> None:
+    def __init__(self, registry_dir: str, clear: bool = False,
+                 arena_size: int = DEFAULT_ARENA_SIZE,
+                 nslots: int = DEFAULT_NSLOTS) -> None:
         self.registry_dir = str(registry_dir)
-        self._dir = Path(registry_dir)
-        self._dir.mkdir(parents=True, exist_ok=True)
-        self._owned: set[str] = set()
-        self._open: OrderedDict[
-            str, tuple[shared_memory.SharedMemory, int]] = OrderedDict()
-        self._lock = threading.Lock()
-        if clear:
-            for f in self._dir.glob("*.json"):
-                self._evict_entry(f)
+        self.arena_size = int(arena_size)
+        self.nslots = int(nslots)
+        self._pool = ArenaPool(self.registry_dir, self.arena_size,
+                               self.nslots)
+        # orphan sweep: tmp sidecars + dead markers always; with clear=True
+        # also dead-owner arenas and legacy per-object segments
+        self._pool.sweep(clear=clear)
+        # reserved-id -> located object_id (the scan runs once per id)
+        self._resolved: dict[str, str] = {}
         atexit.register(self.close)
 
-    # -- helpers ------------------------------------------------------------
-    def _idx(self, object_id: str) -> Path:
-        return self._dir / f"{object_id}.json"
+    # -- id plumbing ---------------------------------------------------------
+    @staticmethod
+    def _encode(arena: str, slot: int, gen: int) -> str:
+        return f"{arena}.{slot}.{gen}"
 
-    def _close_segment(self, seg: shared_memory.SharedMemory) -> None:
+    def _locate(self, object_id: str) -> tuple[str, int, int] | None:
+        """Resolve an object_id to (arena, slot, gen); reserved ids go
+        through the slot-table scan (cached after the first hit)."""
+        if object_id.startswith(_RESERVED):
+            hit = self._resolved.get(object_id)
+            if hit is None:
+                found = self._pool.find_id(
+                    bytes.fromhex(object_id[len(_RESERVED):]))
+                if found is None:
+                    return None
+                hit = self._encode(*found)
+                self._resolved[object_id] = hit
+            object_id = hit
         try:
-            seg.close()
-        except BufferError:
-            # A consumer still holds a zero-copy view: the mapping must stay
-            # alive until that view dies.  Drop the fd now and detach the
-            # wrapper from the mmap (the exported views keep it referenced;
-            # GC unmaps with the last view) so __del__ doesn't re-raise.
-            try:
-                import os
-
-                if seg._fd >= 0:
-                    os.close(seg._fd)
-                    seg._fd = -1
-                seg._mmap = None
-                seg._buf = None
-            except Exception:  # pragma: no cover - stdlib internals shift
-                pass
-
-    def _evict_entry(self, idx_path: Path) -> None:
-        try:
-            meta = json.loads(idx_path.read_text())
-        except (FileNotFoundError, json.JSONDecodeError):
-            return
-        idx_path.unlink(missing_ok=True)
-        try:
-            seg = _open_segment(meta["segment"])
-            self._close_segment(seg)
-            _unlink_segment(seg)
-        except FileNotFoundError:
-            pass
+            arena, slot, gen = object_id.rsplit(".", 2)
+            return arena, int(slot), int(gen)
+        except ValueError:
+            return None
 
     # -- Connector ops -------------------------------------------------------
-    def _put_object(self, object_id: str, blob) -> None:
-        seg_name = f"psj_{object_id[:24]}"
-        nbytes = frame_nbytes(blob)
-        seg = _open_segment(seg_name, create=True, size=nbytes)
-        pos = 0
-        for s in as_segments(blob):  # scatter directly into the mapping
-            mv = memoryview(s).cast("B")
-            seg.buf[pos:pos + mv.nbytes] = mv
-            pos += mv.nbytes
-        seg.close()
-        tmp = self._dir / f".{object_id}.tmp"
-        tmp.write_text(json.dumps({"segment": seg_name, "size": nbytes}))
-        tmp.replace(self._idx(object_id))
-        with self._lock:
-            self._owned.add(object_id)
-
     def put(self, blob) -> Key:
-        object_id = uuid.uuid4().hex
-        self._put_object(object_id, blob)
-        return ("shm", self.registry_dir, object_id)
+        loc = self._pool.put(as_segments(blob), frame_nbytes(blob))
+        return ("shm", self.registry_dir, self._encode(*loc))
 
-    # -- futures: pre-data keys (the index-sidecar rename is the commit
-    # point, so waiters never observe a half-written segment) --------------
+    # -- futures: pre-data keys (the slot's commit byte is the publication
+    # point, so waiters never observe a half-written payload) ---------------
     def reserve(self) -> Key:
-        return ("shm", self.registry_dir, uuid.uuid4().hex)
+        return ("shm", self.registry_dir, _RESERVED + uuid.uuid4().hex)
 
     def put_to(self, key: Key, blob) -> None:
-        self._put_object(key[2], blob)
+        object_id = key[2]
+        idbytes = (bytes.fromhex(object_id[len(_RESERVED):])
+                   if object_id.startswith(_RESERVED) else NO_ID)
+        loc = self._pool.put(as_segments(blob), frame_nbytes(blob), idbytes)
+        if idbytes != NO_ID:
+            self._resolved[object_id] = self._encode(*loc)
         self.announce(key)
 
     def get(self, key: Key):
-        object_id = key[2]
-        with self._lock:
-            cached = self._open.get(object_id)
-            if cached is not None:
-                self._open.move_to_end(object_id)
-                seg, size = cached
-                return seg.buf[:size]
-        try:
-            meta = json.loads(self._idx(object_id).read_text())
-        except (FileNotFoundError, json.JSONDecodeError):
+        loc = self._locate(key[2])
+        if loc is None:
             return None
-        try:
-            seg = _open_segment(meta["segment"])
-        except FileNotFoundError:
+        arena = self._pool.attach(loc[0])
+        if arena is None:
             return None
-        stale = []
-        with self._lock:
-            raced = self._open.get(object_id)
-            if raced is not None:            # lost a concurrent first-get
-                stale.append(seg)
-                seg = raced[0]
-            else:
-                self._open[object_id] = (seg, meta["size"])
-                self._open.move_to_end(object_id)
-                while len(self._open) > self.MAX_OPEN_SEGMENTS:
-                    _, (old, _sz) = self._open.popitem(last=False)
-                    stale.append(old)
-        for s in stale:
-            self._close_segment(s)
-        return seg.buf[:meta["size"]]
+        return arena.read(loc[1], loc[2])
 
     def exists(self, key: Key) -> bool:
-        return self._idx(key[2]).exists()
+        loc = self._locate(key[2])
+        if loc is None:
+            return False
+        arena = self._pool.attach(loc[0])
+        return arena is not None and arena.committed(loc[1], loc[2])
 
     def evict(self, key: Key) -> None:
-        object_id = key[2]
-        with self._lock:
-            cached = self._open.pop(object_id, None)
-        if cached is not None:
-            self._close_segment(cached[0])
-        self._evict_entry(self._idx(object_id))
-        with self._lock:
-            self._owned.discard(object_id)
+        loc = self._locate(key[2])
+        if loc is None:
+            return
+        self._pool.free(*loc)
+        if key[2].startswith(_RESERVED):
+            self._resolved.pop(key[2], None)
 
     def _lifetime_scope(self):
         return self.registry_dir   # reconnections share the count table
 
     def config(self) -> dict[str, Any]:
-        return {"registry_dir": self.registry_dir}
+        return {"registry_dir": self.registry_dir,
+                "arena_size": self.arena_size, "nslots": self.nslots}
+
+    def stats(self) -> dict[str, Any]:
+        return self._pool.stats()
 
     def close(self) -> None:
-        """Unmap reader segments and unlink segments created by this process."""
-        with self._lock:
-            open_segs, self._open = self._open, {}
-            owned, self._owned = self._owned, set()
-        for seg, _ in open_segs.values():
-            self._close_segment(seg)
-        for object_id in owned:
-            self._evict_entry(self._idx(object_id))
+        """Unlink arenas created by this process, detach attached ones.
+        Mappings with exported zero-copy views stay alive for the GC."""
+        self._pool.close()
+        self._resolved.clear()
         self._drop_lifetime_state()

@@ -122,6 +122,17 @@ per-request handling runs on tasks: persistence writes go through
 ``run_in_executor`` so one persisting client never stalls the other
 connections, and batched clients stream requests back to back instead of
 paying one round trip each.
+
+**Copy-free ingest.** The server speaks :class:`KVIngestProtocol`, an
+``asyncio.BufferedProtocol``: announced out-of-band payloads are
+``recv_into``'d directly into their *final* buffer (the exact bytearray
+the data map will hold), so a ``put2`` pays exactly one kernel→user copy —
+no StreamReader staging buffer, no ``bytes()`` re-copy.  ``mput2`` stores
+per-key *views* sliced from the one received batch buffer, and ``get2``/
+``mget2`` responses gather-write those stored buffers without joining.
+The pipelined client mirrors this: responses' raw payloads are received
+into preallocated per-blob buffers (``recv_into``) surfaced as writable
+memoryviews, ready for zero-copy deserialization.
 """
 from __future__ import annotations
 
@@ -138,6 +149,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FuturesTimeout
 from pathlib import Path
+from typing import Any
 
 import msgpack
 
@@ -148,6 +160,7 @@ _IOV_MAX = 1024             # sendmsg segment cap per call (POSIX floor)
 # control churn on every payload read and caps server ingest well below
 # loopback bandwidth; large reads need a large buffer ceiling
 STREAM_LIMIT = 8 * 1024 * 1024
+_SOCKBUF = 4 * 1024 * 1024  # kernel socket buffers for MB-scale payloads
 
 
 # ---------------------------------------------------------------------------
@@ -170,21 +183,53 @@ def write_frame_sync(sock: socket.socket, msg: dict) -> None:
     sock.sendall(_LEN.pack(len(body)) + body)
 
 
-def _byte_view(seg) -> memoryview:
+def _byte_view(seg) -> memoryview | None:
+    """Flat byte view of ``seg`` WITHOUT copying, or None when the view is
+    non-contiguous (the caller gathers those once, never per segment)."""
     mv = memoryview(seg)
     if mv.format != "B" or mv.ndim != 1:
         try:
             mv = mv.cast("B")
-        except TypeError:        # non-contiguous exotic view: copy once
-            mv = memoryview(bytes(mv))
+        except TypeError:        # non-contiguous exotic view
+            return None
     return mv
+
+
+def _gather_views(segments) -> list[memoryview]:
+    """Normalize segments to flat byte views.  Contiguous views pass
+    through zero-copy; runs of non-contiguous ones are gathered into ONE
+    buffer per run (a single copy total — never a copy per segment)."""
+    out: list[memoryview] = []
+    pending: list[memoryview] = []   # consecutive non-contiguous views
+
+    def flush() -> None:
+        if pending:
+            # tobytes() is the one unavoidable gather of a scattered view;
+            # a single view ships it directly, a run joins into one iovec
+            parts = [p.tobytes() for p in pending]
+            out.append(memoryview(parts[0] if len(parts) == 1
+                                  else b"".join(parts)))
+            pending.clear()
+
+    for s in segments:
+        v = _byte_view(s)
+        if v is None:
+            mv = memoryview(s)
+            if mv.nbytes:
+                pending.append(mv)
+        else:
+            flush()
+            if v.nbytes:
+                out.append(v)
+    flush()
+    return out
 
 
 def send_segments_sync(sock: socket.socket, segments) -> None:
     """Gather-write raw payload segments with ``sendmsg`` (no user-space
     join): many small segments go out in single syscalls, ``_IOV_MAX`` at a
     time, with partial sends resumed mid-segment."""
-    bufs = [v for v in (_byte_view(s) for s in segments) if v.nbytes]
+    bufs = _gather_views(segments)
     while bufs:
         try:
             sent = sock.sendmsg(bufs[:_IOV_MAX])
@@ -223,6 +268,59 @@ def _recv_exact_into(sock: socket.socket, view: memoryview) -> None:
         if not n:
             raise ConnectionError("peer closed connection")
         view = view[n:]
+
+
+class _BufferedSock:
+    """Buffered reads over a blocking socket for the client's reader
+    thread: small frames coalesce into one ``recv_into`` per TCP burst
+    instead of two ``recv`` syscalls per frame, while announced payloads
+    drain the buffered prefix and then ``recv_into`` their final buffer
+    directly — the client-side mirror of :class:`KVIngestProtocol`."""
+
+    __slots__ = ("sock", "buf", "r", "w")
+
+    def __init__(self, sock: socket.socket, size: int = 256 * 1024) -> None:
+        self.sock = sock
+        self.buf = bytearray(size)
+        self.r = 0
+        self.w = 0
+
+    def _fill(self) -> None:
+        if self.r == self.w:
+            self.r = self.w = 0
+        elif self.w == len(self.buf):
+            live = self.buf[self.r:self.w]   # compact (slice copies: safe)
+            self.buf[:len(live)] = live
+            self.r, self.w = 0, len(live)
+        n = self.sock.recv_into(memoryview(self.buf)[self.w:])
+        if not n:
+            raise ConnectionError("peer closed connection")
+        self.w += n
+
+    def read_view(self, n: int) -> memoryview:
+        """A view of the next ``n`` bytes (valid until the next call)."""
+        if n > len(self.buf):               # oversized frame: grow once
+            new = bytearray(n)
+            new[:self.w - self.r] = self.buf[self.r:self.w]
+            self.w -= self.r
+            self.r = 0
+            self.buf = new
+        while self.w - self.r < n:
+            self._fill()
+        v = memoryview(self.buf)[self.r:self.r + n]
+        self.r += n
+        return v
+
+    def readinto(self, view: memoryview) -> None:
+        """Fill ``view`` exactly: buffered prefix first, then straight
+        ``recv_into`` the destination (no staging copy for the bulk)."""
+        take = min(view.nbytes, self.w - self.r)
+        if take:
+            view[:take] = memoryview(self.buf)[self.r:self.r + take]
+            self.r += take
+            view = view[take:]
+        if view.nbytes:
+            _recv_exact_into(self.sock, view)
 
 
 # ---------------------------------------------------------------------------
@@ -441,7 +539,9 @@ class KVServer:
     SWEEP_INTERVAL = LifetimeTable.SWEEP_INTERVAL
 
     def __init__(self, persist_dir: str | None = None) -> None:
-        self._data: dict[str, bytes] = {}
+        # values are bytes-like: put2/s_append land the received bytearray
+        # itself, mput2 lands sliced views of the one batch buffer
+        self._data: dict[str, Any] = {}
         self.lifetime = LifetimeTable(self._evict)
         self.waiters = WaiterTable()
         self.streams = StreamTable()
@@ -579,34 +679,39 @@ class KVServer:
                     writer.write(blob)
             await writer.drain()
 
-    async def _handle_one(self, req: dict, payload, writer, lock) -> None:
+    # ops with await points (parked, timed, or executor-bound) — these can
+    # never take the inline fast path
+    _ASYNC_OPS = frozenset({"wait", "mwait", "s_next", "sleep", "shutdown"})
+
+    def try_sync(self, req: dict, payload) -> tuple[dict, tuple | None] | None:
+        """Handle a request with NO await points synchronously; returns
+        ``(resp, raw_payloads)`` or None when the op must run on a task
+        (parked/slow ops, persistence write-through).  This is the inline
+        fast path: the protocol answers these straight from the read
+        callback — no task spawn, no drain round."""
         op = req.get("op")
-        seq = req.get("seq")
-        raw: tuple | None = None
+        if op in self._ASYNC_OPS:
+            return None
+        if self._persist and op in ("put", "mput", "put2", "mput2"):
+            return None          # disk write-through rides the executor
         self._maybe_sweep()
+        raw: tuple | None = None
         try:
             if op == "put2":
                 self._n_ops += 1
-                await self._put_async(req["key"], payload)
+                self._store_mem(req["key"], payload)
                 resp = {"ok": True}
             elif op == "mput2":
                 self._n_ops += 1
+                # sliced views, not bytes() copies: each key's value aliases
+                # its span of the one received batch buffer.  The batch
+                # buffer stays pinned while ANY of its keys is live — the
+                # price of a zero-copy ingest, bounded by the batch size.
                 mv = memoryview(payload)
                 off = 0
-                stores = []
                 for k, n in zip(req["keys"], req["nbytes"]):
-                    blob = bytes(mv[off:off + n])
+                    self._store_mem(k, mv[off:off + n])
                     off += n
-                    self._store_mem(k, blob)
-                    stores.append((k, blob))
-                if self._persist:
-                    loop = asyncio.get_running_loop()
-
-                    def _persist_all(items=stores):
-                        for k, b in items:
-                            self._persist_write(k, b)
-
-                    await loop.run_in_executor(self._io_pool, _persist_all)
                 resp = {"ok": True}
             elif op == "get2":
                 self._n_ops += 1
@@ -620,6 +725,75 @@ class KVServer:
                 resp = {"ok": True,
                         "raws": [-1 if d is None else len(d) for d in datas]}
                 raw = tuple(d for d in datas if d is not None)
+            elif op == "s_append":
+                # data first, count bump + consumer wake second: a consumer
+                # woken before the bytes land would miss on its prefetch.
+                # (Stream items are ephemerals — never persisted.)
+                self._n_ops += 1
+                topic = req["topic"]
+                key = stream_item_key(topic, self.streams.next_seq(topic))
+                self._store_mem(key, payload)
+                self.lifetime.incref(key)        # one ref: the consumer
+                ttl = req.get("ttl")
+                if ttl:
+                    self.lifetime.touch(key, ttl)
+                resp = {"ok": True, "data": self.streams.committed(topic)}
+            elif op == "s_close":
+                self._n_ops += 1
+                self.streams.close(req["topic"])
+                resp = {"ok": True}
+            elif op == "s_stat":
+                self._n_ops += 1
+                resp = {"ok": True,
+                        "data": dict(self.streams.state(req["topic"]))}
+            else:
+                resp = self.handle(req)
+        except Exception as e:  # noqa: BLE001 - surface to client
+            resp, raw = {"ok": False, "error": str(e)}, None
+        return resp, raw
+
+    async def _handle_one(self, req: dict, payload, writer, lock) -> None:
+        op = req.get("op")
+        seq = req.get("seq")
+        raw: tuple | None = None
+        sync = self.try_sync(req, payload)
+        if sync is not None:
+            # an op with no await points, running on a task anyway (an
+            # earlier async op on this connection is still in flight, so
+            # the inline path was skipped to preserve submission order)
+            resp, raw = sync
+            if seq is not None:
+                resp["seq"] = seq
+            try:
+                await self._send(writer, lock, resp, raw)
+            except (ConnectionError, OSError):
+                pass
+            return
+        self._maybe_sweep()
+        try:
+            if op == "put2":
+                self._n_ops += 1
+                await self._put_async(req["key"], payload)
+                resp = {"ok": True}
+            elif op == "mput2":
+                self._n_ops += 1
+                mv = memoryview(payload)
+                off = 0
+                stores = []
+                for k, n in zip(req["keys"], req["nbytes"]):
+                    blob = mv[off:off + n]
+                    off += n
+                    self._store_mem(k, blob)
+                    stores.append((k, blob))
+                if self._persist:
+                    loop = asyncio.get_running_loop()
+
+                    def _persist_all(items=stores):
+                        for k, b in items:
+                            self._persist_write(k, b)
+
+                    await loop.run_in_executor(self._io_pool, _persist_all)
+                resp = {"ok": True}
             elif op == "wait":
                 # a get2 that parks until the put lands; completes out of
                 # order behind faster ops, like sleep does
@@ -645,18 +819,6 @@ class KVServer:
                 if any(d is None for d in datas):
                     resp["timeout"] = True
                 raw = tuple(d for d in datas if d is not None)
-            elif op == "s_append":
-                # data first, count bump + consumer wake second: a consumer
-                # woken before the bytes land would miss on its prefetch
-                self._n_ops += 1
-                topic = req["topic"]
-                key = stream_item_key(topic, self.streams.next_seq(topic))
-                self._store_mem(key, payload)
-                self.lifetime.incref(key)        # one ref: the consumer
-                ttl = req.get("ttl")
-                if ttl:
-                    self.lifetime.touch(key, ttl)
-                resp = {"ok": True, "data": self.streams.committed(topic)}
             elif op == "s_next":
                 self._n_ops += 1
                 # stream position rides as "i": "seq" is the connection's
@@ -684,14 +846,6 @@ class KVServer:
                 else:                    # closed before this item: end marker
                     resp = {"ok": True, "raw": -1, "end": True,
                             "available": st["count"], "closed": True}
-            elif op == "s_close":
-                self._n_ops += 1
-                self.streams.close(req["topic"])
-                resp = {"ok": True}
-            elif op == "s_stat":
-                self._n_ops += 1
-                st = self.streams.state(req["topic"])
-                resp = {"ok": True, "data": dict(st)}
             elif op == "sleep":
                 await asyncio.sleep(float(req.get("s", 0.0)))
                 self._n_ops += 1
@@ -723,48 +877,284 @@ class KVServer:
         except (ConnectionError, OSError):
             pass
 
-    async def client_loop(self, reader: asyncio.StreamReader,
-                          writer: asyncio.StreamWriter) -> None:
-        send_lock = asyncio.Lock()
-        tasks: set[asyncio.Task] = set()
+class _TransportWriter:
+    """StreamWriter-shaped shim over a raw transport (``write``/``drain``/
+    ``close``) for :class:`KVIngestProtocol`, with drain back-pressure
+    driven by the protocol's pause/resume callbacks."""
+
+    __slots__ = ("_transport", "_paused", "_waiters", "_exc")
+
+    def __init__(self, transport: asyncio.Transport) -> None:
+        self._transport = transport
+        self._paused = False
+        self._waiters: list[asyncio.Future] = []
+        self._exc: BaseException | None = None
+
+    def write(self, data) -> None:
+        self._transport.write(data)
+
+    def close(self) -> None:
+        self._transport.close()
+
+    async def drain(self) -> None:
+        if self._exc is not None:
+            raise ConnectionResetError("connection lost") from self._exc
+        if self._transport.is_closing():
+            raise ConnectionResetError("connection closing")
+        if self._paused:
+            fut = asyncio.get_running_loop().create_future()
+            self._waiters.append(fut)
+            await fut
+
+    def _pause(self) -> None:
+        self._paused = True
+
+    def _resume(self) -> None:
+        self._paused = False
+        for fut in self._waiters:
+            if not fut.done():
+                fut.set_result(None)
+        self._waiters.clear()
+
+    def _connection_lost(self, exc: BaseException | None) -> None:
+        self._exc = exc or ConnectionResetError("connection lost")
+        for fut in self._waiters:
+            if not fut.done():
+                fut.set_exception(ConnectionResetError("connection lost"))
+        self._waiters.clear()
+
+
+class KVIngestProtocol(asyncio.BufferedProtocol):
+    """Copy-free server ingest (one connection).
+
+    A buffered protocol so the transport ``recv_into``s directly into OUR
+    buffers: small frame traffic lands in a reusable scratch buffer, and an
+    announced out-of-band payload (``put2``/``mput2``/``s_append``) is
+    received straight into its **final** bytearray — the exact object the
+    data map will reference — so the whole ingest path is one kernel→user
+    copy with no StreamReader staging buffer and no ``bytes()`` re-copy.
+
+    Requests dispatch onto tasks exactly like the old reader loop did:
+    submission order is preserved for their synchronous prefixes, slow ops
+    (persist, sleep, parked waits) complete out of order behind fast ones.
+    """
+
+    _SCRATCH = 256 * 1024
+
+    def __init__(self, kv: KVServer) -> None:
+        self.kv = kv
+        self._scratch = bytearray(self._SCRATCH)
+        self._rpos = 0               # parse cursor into scratch
+        self._wpos = 0               # received-bytes high-water in scratch
+        self._frame_len: int | None = None
+        self._payload: bytearray | None = None   # in-flight OOB target
+        self._payload_fill = 0
+        self._payload_req: dict | None = None
+        self._writer: _TransportWriter | None = None
+        self._lock = asyncio.Lock()
+        self._tasks: set[asyncio.Task] = set()
+        self._dead = False           # unrecoverable stream: stop parsing
+
+    # -- transport callbacks -------------------------------------------------
+    def connection_made(self, transport) -> None:
+        sock = transport.get_extra_info("socket")
+        if sock is not None:
+            try:
+                # responses are header-then-payload write pairs: Nagle
+                # holding the second half for the client's ACK would add a
+                # delayed-ACK round to every get
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                # MB-scale payloads: bigger kernel buffers mean fewer
+                # epoll_wait/recv_into rounds per transfer
+                sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, _SOCKBUF)
+                sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, _SOCKBUF)
+            except OSError:  # pragma: no cover - non-TCP transports
+                pass
+        self._writer = _TransportWriter(transport)
+
+    def connection_lost(self, exc) -> None:
+        if self._writer is not None:
+            self._writer._connection_lost(exc)
+
+    def eof_received(self) -> bool:
+        return False                 # close the transport
+
+    def pause_writing(self) -> None:
+        # the peer is slow draining responses: stop reading too, so the
+        # inline fast path (which writes without awaiting drain) cannot
+        # grow the transport buffer unboundedly
+        self._writer._pause()
         try:
-            while True:
-                req = await read_frame(reader)
-                if req is None:
+            self._writer._transport.pause_reading()
+        except (RuntimeError, AttributeError):  # pragma: no cover
+            pass
+
+    def resume_writing(self) -> None:
+        self._writer._resume()
+        try:
+            self._writer._transport.resume_reading()
+        except (RuntimeError, AttributeError):  # pragma: no cover
+            pass
+
+    def get_buffer(self, sizehint: int) -> memoryview:
+        if self._payload is not None:
+            # recv_into the payload's FINAL buffer — no staging copy
+            return memoryview(self._payload)[self._payload_fill:]
+        if self._wpos == len(self._scratch):
+            self._make_room(1)
+        return memoryview(self._scratch)[self._wpos:]
+
+    def buffer_updated(self, nbytes: int) -> None:
+        if self._dead:
+            # stream is beyond resync (e.g. an unconsumed payload follows
+            # a rejected announcement): drop everything until the close
+            # lands — the bytes must NOT be parsed as frames
+            return
+        if self._payload is not None:
+            self._payload_fill += nbytes
+            if self._payload_fill >= len(self._payload):
+                req, payload = self._payload_req, self._payload
+                self._payload = self._payload_req = None
+                self._dispatch(req, payload)
+            return
+        self._wpos += nbytes
+        self._parse()
+
+    # -- scratch management --------------------------------------------------
+    def _make_room(self, need: int) -> None:
+        """Guarantee ``need`` contiguous writable bytes after ``_wpos``.
+        Never resizes in place (the transport may still hold an exported
+        view of the old buffer): compaction slides within it, growth swaps
+        in a fresh bytearray."""
+        live = self._wpos - self._rpos
+        if self._rpos and len(self._scratch) - live >= need:
+            self._scratch[:live] = self._scratch[self._rpos:self._wpos]
+            self._rpos, self._wpos = 0, live
+        if len(self._scratch) - self._wpos < need:
+            new = bytearray(max(len(self._scratch) * 2,
+                                self._wpos - self._rpos + need))
+            new[:self._wpos - self._rpos] = \
+                self._scratch[self._rpos:self._wpos]
+            self._wpos -= self._rpos
+            self._rpos = 0
+            self._scratch = new
+
+    # -- frame parsing -------------------------------------------------------
+    def _parse(self) -> None:
+        while True:
+            avail = self._wpos - self._rpos
+            if self._frame_len is None:
+                if avail < 4:
                     break
-                op = req.get("op")
-                payload = None
-                if op in ("put2", "mput2", "s_append"):
-                    # out-of-band payload: must be consumed here, in stream
-                    # order, before the next frame can be parsed
-                    sizes = ([int(req["nbytes"])] if op != "mput2"
-                             else [int(n) for n in req["nbytes"]])
-                    total = sum(sizes)
-                    if total > MAX_FRAME or any(n < 0 for n in sizes):
-                        # can't resync the stream without consuming the
-                        # payload; report the reason, then drop the conn
-                        await self._send(writer, send_lock, {
-                            "ok": False, "seq": req.get("seq"),
-                            "error": f"payload too large: {total}"})
-                        break
-                    payload = await reader.readexactly(total) if total else b""
-                if op == "shutdown":
-                    self._n_ops += 1
-                    self._shutdown.set()
-                    await self._send(writer, send_lock,
-                                     {"ok": True, "seq": req.get("seq")})
+                (length,) = _LEN.unpack_from(self._scratch, self._rpos)
+                if length > MAX_FRAME:
+                    self._dead = True
+                    self._writer.close()
+                    return
+                self._rpos += 4
+                self._frame_len = length
+                continue
+            if avail < self._frame_len:
+                self._make_room(self._frame_len - avail)
+                break
+            body = memoryview(self._scratch)[
+                self._rpos:self._rpos + self._frame_len]
+            try:
+                req = msgpack.unpackb(body, raw=False, strict_map_key=False)
+            finally:
+                body.release()       # scratch must stay swappable
+            self._rpos += self._frame_len
+            self._frame_len = None
+            op = req.get("op")
+            if op in ("put2", "mput2", "s_append"):
+                sizes = ([int(req["nbytes"])] if op != "mput2"
+                         else [int(n) for n in req["nbytes"]])
+                total = sum(sizes)
+                if total > MAX_FRAME or any(n < 0 for n in sizes):
+                    # can't resync the stream without consuming the
+                    # payload; report the reason, then drop the conn
+                    self._reject(req, f"payload too large: {total}")
+                    return
+                payload = bytearray(total)
+                take = min(total, self._wpos - self._rpos)
+                if take:
+                    src = memoryview(self._scratch)
+                    payload[:take] = src[self._rpos:self._rpos + take]
+                    src.release()
+                    self._rpos += take
+                if take < total:     # the rest recv_intos straight in
+                    self._payload = payload
+                    self._payload_fill = take
+                    self._payload_req = req
                     break
-                # tasks preserve submission order for their synchronous
-                # prefixes (dict reads/writes) but let slow ops (persist,
-                # sleep) complete out of order behind fast ones
-                task = asyncio.create_task(
-                    self._handle_one(req, payload, writer, send_lock))
-                tasks.add(task)
-                task.add_done_callback(tasks.discard)
-        finally:
-            if tasks:
-                await asyncio.gather(*tasks, return_exceptions=True)
-            writer.close()
+                self._dispatch(req, payload)
+                continue
+            self._dispatch(req, None)
+        if self._rpos == self._wpos:
+            self._rpos = self._wpos = 0
+
+    # -- request dispatch ----------------------------------------------------
+    def _spawn(self, coro) -> None:
+        task = asyncio.ensure_future(coro)
+        self._tasks.add(task)
+        task.add_done_callback(self._tasks.discard)
+
+    def _reject(self, req: dict, error: str) -> None:
+        # the announced payload was never consumed, so the stream cannot
+        # be resynced: stop parsing NOW or the payload bytes would be
+        # interpreted as frames (and could decode into real ops)
+        self._dead = True
+
+        async def _send_and_close() -> None:
+            try:
+                await self.kv._send(self._writer, self._lock, {
+                    "ok": False, "seq": req.get("seq"), "error": error})
+            finally:
+                self._writer.close()
+
+        self._spawn(_send_and_close())
+
+    def _dispatch(self, req: dict, payload) -> None:
+        if req.get("op") == "shutdown":
+            self.kv._n_ops += 1
+            self.kv._shutdown.set()
+
+            async def _ack_and_close() -> None:
+                try:
+                    await self.kv._send(self._writer, self._lock,
+                                        {"ok": True, "seq": req.get("seq")})
+                finally:
+                    self._writer.close()
+
+            self._spawn(_ack_and_close())
+            return
+        # inline fast path: ops with no await points are answered straight
+        # from the read callback — no task spawn, no drain round.  Writes
+        # here cannot tear a task's locked response: _send's write pairs
+        # have no await between them, and this runs on the same loop.
+        # Only taken while NO task is in flight on this connection — an
+        # earlier request still on a task (e.g. a persisted put2) must
+        # land its memory write before a later read is answered, or the
+        # submission-order guarantee breaks.
+        if not self._tasks:
+            sync = self.kv.try_sync(req, payload)
+            if sync is not None:
+                resp, raw = sync
+                seq = req.get("seq")
+                if seq is not None:
+                    resp["seq"] = seq
+                body = msgpack.packb(resp, use_bin_type=True)
+                w = self._writer
+                w.write(_LEN.pack(len(body)) + body)
+                if raw:
+                    for blob in raw:
+                        w.write(blob)
+                return
+        # tasks preserve submission order for their synchronous prefixes
+        # (dict reads/writes) but let slow ops (persist, sleep, parked
+        # waits) complete out of order behind fast ones
+        self._spawn(self.kv._handle_one(req, payload, self._writer,
+                                        self._lock))
 
 
 async def _expiry_backstop(kv: KVServer) -> None:
@@ -778,8 +1168,9 @@ async def _expiry_backstop(kv: KVServer) -> None:
 async def serve(host: str, port: int, persist_dir: str | None,
                 ready_file: str | None) -> None:
     kv = KVServer(persist_dir)
-    server = await asyncio.start_server(kv.client_loop, host, port,
-                                        limit=STREAM_LIMIT)
+    loop = asyncio.get_running_loop()
+    server = await loop.create_server(lambda: KVIngestProtocol(kv),
+                                      host, port)
     actual_port = server.sockets[0].getsockname()[1]
     if ready_file:
         tmp = Path(ready_file + ".tmp")
@@ -886,6 +1277,11 @@ class KVClient:
             s = socket.create_connection((self.host, self.port),
                                          timeout=self.timeout)
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            try:
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, _SOCKBUF)
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, _SOCKBUF)
+            except OSError:  # pragma: no cover
+                pass
             s.settimeout(None)  # the reader thread blocks until data/close
             conn = _Conn(s)
             t = threading.Thread(target=self._reader_loop, args=(conn,),
@@ -920,17 +1316,19 @@ class KVClient:
 
     # -- reader thread -------------------------------------------------------
     def _reader_loop(self, conn: _Conn) -> None:
-        sock = conn.sock
+        bsock = _BufferedSock(conn.sock)
         try:
             while True:
-                resp = read_frame_sync(sock)
+                (length,) = _LEN.unpack(bsock.read_view(4))
+                resp = msgpack.unpackb(bsock.read_view(length), raw=False,
+                                       strict_map_key=False)
                 nraw = resp.pop("raw", None)
                 if nraw is not None:
                     if nraw < 0:
                         resp["data"] = None
                     else:
                         buf = bytearray(nraw)
-                        _recv_exact_into(sock, memoryview(buf))
+                        bsock.readinto(memoryview(buf))
                         resp["data"] = memoryview(buf)
                 raws = resp.pop("raws", None)
                 if raws is not None:
@@ -944,7 +1342,7 @@ class KVClient:
                         else:
                             buf = bytearray(n)
                             if n:
-                                _recv_exact_into(sock, memoryview(buf))
+                                bsock.readinto(memoryview(buf))
                             out.append(memoryview(buf))
                     resp["data"] = out
                 with self._lock:

@@ -65,6 +65,13 @@ class MultiConnector(BaseConnector):
         # stable ids for key dispatch
         self._by_id = {i: conn for i, (conn, _) in enumerate(self.children)}
 
+    @property
+    def borrows_get(self) -> bool:
+        """Borrowed-memory gets if ANY child borrows (routing is per-key,
+        so a caller that must detach results has to assume the worst)."""
+        return any(getattr(conn, "borrows_get", False)
+                   for conn, _ in self.children)
+
     def _route(self, size: int, constraints: frozenset) -> tuple[int, Connector]:
         best: tuple[int, int, Connector] | None = None
         for i, (conn, policy) in enumerate(self.children):

@@ -137,6 +137,12 @@ class Frame:
     def to_bytes(self) -> bytes:
         return bytes(self)
 
+    def write_into(self, view: memoryview) -> int:
+        """Scatter the wire image into a caller-provided buffer (e.g. an
+        arena slot or a reserved socket buffer): one memcpy per segment,
+        no intermediate join.  Returns the byte count written."""
+        return copy_segments_into(self.segments, view)
+
 
 def as_segments(blob) -> list:
     """Normalize ``bytes | Frame | Sequence[memoryview]`` to a segment list."""
@@ -161,6 +167,49 @@ def join_frame(blob) -> bytes:
     if isinstance(blob, bytes):
         return blob
     return b"".join(as_segments(blob))
+
+
+def materialize(obj: Any):
+    """Recursively copy zero-copy array views (and memoryviews) so the
+    result OWNS its memory.
+
+    ``deserialize`` returns arrays aliasing the input buffer; when that
+    buffer is *borrowed* shared memory (an arena slot), dropping the last
+    reference to the key lets the owner recycle the chunk underneath the
+    arrays.  Call this before the reference drop (the Store's ephemeral /
+    owned resolve paths do) to detach the result from the channel.
+    Arrays that already own their data pass through untouched.
+    """
+    if isinstance(obj, np.ndarray):
+        if obj.base is None and obj.flags.owndata:
+            return obj
+        return obj.copy()
+    if isinstance(obj, memoryview):
+        return bytes(obj)
+    if isinstance(obj, dict):
+        return {k: materialize(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [materialize(v) for v in obj]
+    if isinstance(obj, tuple):
+        return tuple(materialize(v) for v in obj)
+    if isinstance(obj, (set, frozenset)):
+        return type(obj)(materialize(v) for v in obj)
+    return obj
+
+
+def copy_segments_into(blob, view: memoryview) -> int:
+    """Scatter ``bytes | Frame | Sequence[memoryview]`` into ``view``:
+    one memcpy per segment straight into the destination (an arena slot, a
+    pre-registered I/O buffer), never an intermediate join.  Returns the
+    byte count written."""
+    pos = 0
+    for s in as_segments(blob):
+        mv = memoryview(s)
+        if mv.format != "B" or mv.ndim != 1:
+            mv = mv.cast("B")
+        view[pos:pos + mv.nbytes] = mv
+        pos += mv.nbytes
+    return pos
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,8 @@ from typing import Any, Callable, Iterator, Sequence
 from repro.core.connector import (Connector, Key, import_path,
                                   resolve_import_path)
 from repro.core.proxy import OwnedProxy, Proxy, get_factory, is_proxy
-from repro.core.serialize import deserialize, frame_nbytes, serialize
+from repro.core.serialize import (deserialize, frame_nbytes, materialize,
+                                  serialize)
 
 _REGISTRY: dict[str, "Store"] = {}
 _REGISTRY_LOCK = threading.RLock()
@@ -198,6 +199,11 @@ class StoreFactory:
 
     def _fetch(self) -> Any:
         obj = self.peek()
+        if self.evict or self.owned:
+            # this resolve's reference may be the key's LAST: on channels
+            # whose gets return borrowed memory (shm arenas), detach the
+            # object before the backing chunk can be recycled under it
+            obj = self._store()._own_result(self.key, obj)
         if self.evict and not self.owned:
             self._spend()            # decref-on-resolve; evicts at zero
         return obj
@@ -358,6 +364,20 @@ class Store:
         if isinstance(obj, _RaisedException):
             raise obj.unwrap()
         return obj
+
+    def _own_result(self, key: Key, obj: Any) -> Any:
+        """Detach ``obj`` from borrowed channel memory (deep-copying array
+        views) and refresh the cache so every later hit serves the owned
+        copy.  No-op (zero-copy preserved) on channels whose gets return
+        fresh or immutable buffers."""
+        if not getattr(self.connector, "borrows_get", False):
+            return obj
+        owned = materialize(obj)
+        if owned is not None:
+            # never cache None: an exists-but-unreadable-this-instant miss
+            # must not poison later resolves of the (live) key
+            self.cache.put(tuple(key), owned)
+        return owned
 
     def get_batch(self, keys: Sequence[Key], default: Any = None, *,
                   strict: bool = False,
@@ -833,6 +853,10 @@ def _fetch_group(config: StoreConfig, factories: list[StoreFactory],
                 # producer's error; siblings of other keys still resolve
                 fut.set_exception(obj.unwrap())
                 continue
+            if factory.evict or factory.owned:
+                # mirror the scalar path: detach from borrowed channel
+                # memory before this sibling's reference is dropped
+                obj = store._own_result(factory.key, obj)
             if factory.evict and not factory.owned:
                 factory._spend()     # drop this sibling's reference
             fut.set_result(obj)

@@ -18,10 +18,12 @@ import pickle
 import queue as queue_mod
 import threading
 import time
+from multiprocessing import connection as mp_connection
 from typing import Any, Callable
 
 from repro.core import Store, get_factory, resolve_async
 from repro.core.proxy import Proxy, extract, is_resolved
+from repro.core.serialize import materialize
 from repro.core.store import StoreConfig, StoreFactory, get_or_create_store
 
 # mp 'spawn' keeps producers free of the parent's JAX/XLA state
@@ -54,9 +56,14 @@ class ProxyDataPipeline:
         self.deadline_s = deadline_s
         self.prefetch = prefetch
         self.next_index = start_index
-        # bounded queue = producer backpressure: at most ~prefetch batches
-        # (plus one in-flight per producer) live in the store at a time
-        self._queue = _CTX.Queue(maxsize=max(prefetch, 1) + n_producers)
+        # ONE bounded queue PER producer (backpressure: at most ~prefetch
+        # batches in flight each).  Per-producer queues are the crash
+        # isolation the redundancy guarantee rests on: a producer killed
+        # mid-enqueue can leave its own queue's shared write-lock held
+        # forever, and with a single shared queue that deadlock would take
+        # every *surviving* producer down with it — exactly the straggler
+        # scenario redundancy exists to absorb.
+        self._queues: list = []
         self._pending: dict[int, Proxy] = {}
         self._fallbacks = 0
         self._duplicates = 0
@@ -71,19 +78,54 @@ class ProxyDataPipeline:
                 idxs = list(range(start_index + w, horizon, n_producers))
                 delay = straggler_delay_s if (r == 0 and w == 0 and
                                               straggler_delay_s) else 0.0
+                q = _CTX.Queue(maxsize=max(prefetch, 1) + 1)
                 p = _CTX.Process(
                     target=_producer_main,
-                    args=(cfg_blob, fn_blob, self._queue, idxs, r, delay),
+                    args=(cfg_blob, fn_blob, q, idxs, r, delay),
                     daemon=True)
                 p.start()
+                self._queues.append(q)
                 self._procs.append(p)
 
     # ------------------------------------------------------------------
+    def _take_one(self, timeout: float | None) -> tuple | None:
+        """Pull one (idx, rank, blob) across the producer queues: non-
+        blocking round-robin sweeps, then a blocking multi-pipe wait on
+        every queue's reader until data or the deadline.  A queue whose
+        producer died mid-write may yield garbage — it is skipped, never
+        trusted to block."""
+        # monotonic: a wall-clock (NTP) step must neither stall the drain
+        # nor truncate it to an instant-empty poll.  None means block
+        # until data (the Queue.get(timeout=None) contract this replaced).
+        deadline = time.monotonic() + \
+            (float("inf") if timeout is None else timeout)
+        while True:
+            for q in self._queues:
+                try:
+                    return q.get_nowait()
+                except queue_mod.Empty:
+                    continue
+                except (EOFError, OSError, pickle.UnpicklingError):
+                    continue     # crashed producer's queue: ignore
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return None
+            try:
+                # kernel-blocking wait across every producer pipe: wakes
+                # exactly on data (the parent's writer ends keep the pipes
+                # from spurious EOF-readiness)
+                mp_connection.wait(
+                    [q._reader for q in self._queues],
+                    timeout=None if remaining == float("inf")
+                    else remaining)
+            except OSError:      # a torn-down queue: fall back to a nap
+                time.sleep(min(remaining, 0.005))
+
     def _drain(self, timeout: float | None) -> None:
-        try:
-            idx, rank, blob = self._queue.get(timeout=timeout)
-        except queue_mod.Empty:
+        item = self._take_one(timeout)
+        if item is None:
             return
+        idx, rank, blob = item
         proxy = pickle.loads(blob)
         if idx in self._pending or idx < self.next_index:
             self._duplicates += 1
@@ -97,9 +139,9 @@ class ProxyDataPipeline:
 
     def __next__(self) -> Any:
         idx = self.next_index
-        deadline = time.time() + self.deadline_s
+        deadline = time.monotonic() + self.deadline_s
         while idx not in self._pending:
-            remaining = deadline - time.time()
+            remaining = deadline - time.monotonic()
             if remaining <= 0:
                 self._fallbacks += 1  # straggler: produce inline
                 self._pending[idx] = Proxy(lambda i=idx: self.make_batch(i))
@@ -113,6 +155,11 @@ class ProxyDataPipeline:
         batch = extract(proxy)
         factory = get_factory(proxy)
         if isinstance(factory, StoreFactory):  # consumed once -> evict
+            if getattr(self.store.connector, "borrows_get", False):
+                # shm-arena gets are views the producer recycles post-
+                # evict: detach the batch before dropping the key, or the
+                # next produced batch could overwrite this one mid-step
+                batch = materialize(batch)
             self.store.evict(factory.key)
         return batch
 

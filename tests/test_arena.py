@@ -1,0 +1,357 @@
+"""Slab-arena data plane tests: allocator mechanics, multi-process
+put/get stress over one registry dir, exhaustion -> overflow growth,
+evict-while-a-view-is-exported, and refcount/lease integration on slots."""
+import multiprocessing as mp
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import deserialize, serialize
+from repro.core.arena import FREE, Arena, size_class
+from repro.core.connectors.shm import SharedMemoryConnector
+
+
+# ---------------------------------------------------------------------------
+# allocator mechanics
+# ---------------------------------------------------------------------------
+def test_size_classes():
+    assert size_class(1) == 10               # floor: 1 KiB chunks
+    assert size_class(1024) == 10
+    assert size_class(1025) == 11
+    assert size_class(10_000) == 14          # 16 KiB chunk
+    assert 1 << size_class(10_000) >= 10_000
+
+
+def test_arena_alloc_commit_read_free(tmp_path):
+    a = Arena("psja_test_alloc", create=True, size=1 << 20, nslots=32)
+    try:
+        slot = a.alloc(5)
+        assert a.read(slot, 0) is None       # WRITING: invisible
+        a.slot_view(slot)[:] = b"hello"
+        gen = a.commit(slot)
+        assert bytes(a.read(slot, gen)) == b"hello"
+        assert a.read(slot, gen + 1) is None  # wrong generation
+        assert a.free(slot, gen)
+        assert a.read(slot, gen) is None      # freed
+        # slot + chunk are recycled under a NEW generation
+        slot2 = a.alloc(5)
+        a.slot_view(slot2)[:] = b"world"
+        gen2 = a.commit(slot2)
+        assert slot2 == slot and gen2 == gen + 1
+        assert bytes(a.read(slot2, gen2)) == b"world"
+        assert a.read(slot, gen) is None      # stale key stays dead
+    finally:
+        a.close()
+        a.unlink()
+
+
+def test_request_free_reclaimed_lazily():
+    a = Arena("psja_test_reqfree", create=True, size=1 << 20, nslots=8)
+    try:
+        slot = a.alloc(100)
+        a.slot_view(slot)[:3] = b"abc"
+        gen = a.commit(slot)
+        a.request_free(slot, gen)            # what a non-owner eviction does
+        assert a.read(slot, gen) is None
+        assert a.reclaim() == 1
+        assert a._entry(slot)[0] == FREE
+    finally:
+        a.close()
+        a.unlink()
+
+
+def test_connector_roundtrip_and_key_shape(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        key = conn.put(b"payload")
+        assert key[0] == "shm"
+        arena, slot, gen = key[2].rsplit(".", 2)
+        assert arena.startswith("psja_")
+        assert conn.get(key) == b"payload"
+        conn.evict(key)
+        assert conn.get(key) is None and not conn.exists(key)
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# exhaustion -> growth (fresh arena / dedicated overflow arena)
+# ---------------------------------------------------------------------------
+def test_arena_exhaustion_grows_new_arena(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"),
+                                 arena_size=256 * 1024, nslots=16)
+    try:
+        blobs = [os.urandom(60 * 1024) for _ in range(12)]  # ~12x64K chunks
+        keys = [conn.put(b) for b in blobs]
+        assert conn._pool.stats()["n_owned_arenas"] >= 2
+        for k, b in zip(keys, blobs):
+            assert bytes(conn.get(k)) == b
+    finally:
+        conn.close()
+
+
+def test_oversized_object_gets_overflow_arena(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"),
+                                 arena_size=128 * 1024, nslots=16)
+    try:
+        big = os.urandom(1 << 20)            # 8x the arena size
+        key = conn.put(big)
+        assert bytes(conn.get(key)) == big
+        assert conn._pool.stats()["n_owned_arenas"] >= 1
+        conn.evict(key)
+        assert not conn.exists(key)
+    finally:
+        conn.close()
+
+
+def test_slot_reuse_bounds_arena_count(tmp_path):
+    """put/evict churn must recycle chunks, not grow the pool."""
+    conn = SharedMemoryConnector(str(tmp_path / "shm"),
+                                 arena_size=256 * 1024, nslots=8)
+    try:
+        for i in range(200):
+            k = conn.put(os.urandom(30 * 1024))
+            assert conn.exists(k)
+            conn.evict(k)
+        assert conn._pool.stats()["n_owned_arenas"] == 1
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# zero-copy views: eviction + close while exported
+# ---------------------------------------------------------------------------
+def test_evict_while_view_exported(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        arr = np.arange(4096, dtype=np.float32)
+        key = conn.put(serialize(arr))
+        view = conn.get(key)
+        out = deserialize(view)              # zero-copy array over the view
+        np.testing.assert_array_equal(out, arr)
+        conn.evict(key)                      # while the view is exported
+        assert not conn.exists(key)
+        assert conn.get(key) is None
+        assert view.nbytes > 0               # view stays VALID (no crash)...
+    finally:
+        conn.close()                         # ...even through close()
+
+
+def test_ephemeral_resolve_owns_its_memory(tmp_path):
+    """Regression (review): an evict=True proxy's resolve drops the key's
+    last reference — the arena chunk is then recycled by the very next
+    put.  The Store must detach (deep-copy) shm-borrowed results before
+    the drop, or the resolved array silently mutates."""
+    from repro.core import Store
+    from repro.core.store import unregister_store
+
+    store = Store("arena-ephemeral", SharedMemoryConnector(
+        str(tmp_path / "shm")))
+    try:
+        arr = np.full(4096, 7, dtype=np.int64)
+        p = store.proxy(arr, evict=True)
+        resolved = np.asarray(+p)            # touch -> resolve + decref
+        np.testing.assert_array_equal(resolved, arr)
+        for i in range(8):                   # churn: recycle the chunk
+            store.connector.put(serialize(np.full(4096, 9, dtype=np.int64)))
+        np.testing.assert_array_equal(resolved, arr)   # still 7s, not 9s
+    finally:
+        store.close()
+        unregister_store("arena-ephemeral")
+
+
+def test_owned_proxy_release_keeps_resolved_data(tmp_path):
+    """Same property through the OwnedProxy release path."""
+    from repro.core import Store, extract, release
+    from repro.core.store import unregister_store
+
+    store = Store("arena-owned", SharedMemoryConnector(str(tmp_path / "shm")))
+    try:
+        arr = np.full(2048, 3, dtype=np.int64)
+        p = store.owned_proxy(arr)
+        resolved = np.asarray(extract(p))
+        release(p)                           # last ref: slot freed
+        store.connector.put(serialize(np.full(2048, 5, dtype=np.int64)))
+        np.testing.assert_array_equal(resolved, arr)
+    finally:
+        store.close()
+        unregister_store("arena-owned")
+
+
+def test_view_contents_stable_until_evict(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        key = conn.put(b"A" * 1000)
+        view = conn.get(key)
+        assert bytes(view[:4]) == b"AAAA"
+        # a second put must not touch the live slot
+        conn.put(b"B" * 1000)
+        assert bytes(view[:4]) == b"AAAA"
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# refcount / lease integration on slab slots
+# ---------------------------------------------------------------------------
+def test_refcount_on_slots(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        key = conn.put(b"shared-object")
+        conn.incref(key, 2)
+        assert conn.decref(key) == 1
+        assert conn.exists(key)              # one reference left
+        assert conn.decref(key) == 0         # last ref: slot freed
+        assert not conn.exists(key)
+        assert conn.get(key) is None
+    finally:
+        conn.close()
+
+
+def test_lease_expiry_frees_slot(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        key = conn.put(b"leased")
+        conn.incref(key)
+        assert conn.touch(key, 0.05)         # 50 ms lease
+        time.sleep(0.12)
+        # the fallback table sweeps on the next lifecycle op
+        assert conn.refcount(key) == 0
+        assert not conn.exists(key)
+    finally:
+        conn.close()
+
+
+def test_reserved_key_future_path(tmp_path):
+    conn = SharedMemoryConnector(str(tmp_path / "shm"))
+    try:
+        key = conn.reserve()
+        assert not conn.exists(key)
+        assert conn.get(key) is None
+        conn.put_to(key, b"late data")
+        assert conn.exists(key)
+        assert bytes(conn.get(key)) == b"late data"
+        # a second connector (fresh process analog) resolves the same
+        # reserved id via the slot-table scan
+        other = SharedMemoryConnector(**conn.config())
+        try:
+            assert bytes(other.get(key)) == b"late data"
+        finally:
+            other._pool._owned.clear()       # reader: never unlink
+            other.close()
+        conn.evict(key)
+        assert not conn.exists(key)
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# orphan sweep (satellite: crashed-producer hygiene)
+# ---------------------------------------------------------------------------
+def test_startup_scan_drops_tmp_orphans_and_dead_markers(tmp_path):
+    reg = tmp_path / "shm"
+    reg.mkdir()
+    (reg / ".deadbeef.tmp").write_text("{}")           # crashed mid-publish
+    (reg / "psja_gone00000000.arena").write_text("1")  # segment never existed
+    conn = SharedMemoryConnector(str(reg))
+    try:
+        assert not (reg / ".deadbeef.tmp").exists()
+        assert not (reg / "psja_gone00000000.arena").exists()
+    finally:
+        conn.close()
+
+
+def test_clear_sweeps_dead_owner_arenas(tmp_path):
+    reg = str(tmp_path / "shm")
+    ctx = mp.get_context("spawn")
+    proc = ctx.Process(target=_producer_that_dies, args=(reg,))
+    proc.start()
+    proc.join(30)
+    assert proc.exitcode == 0
+    # the dead producer's arena + marker are still there (no cleanup ran)
+    conn = SharedMemoryConnector(reg, clear=True)
+    try:
+        import glob
+
+        assert glob.glob(os.path.join(reg, "*.arena")) == []
+        # legacy sidecars are cleared too
+        assert glob.glob(os.path.join(reg, "*.json")) == []
+    finally:
+        conn.close()
+
+
+def _producer_that_dies(reg: str) -> None:
+    conn = SharedMemoryConnector(reg)
+    conn.put(b"leaked unless swept")
+    # simulate a crash: neither close() nor atexit runs for the pool
+    import atexit
+
+    atexit.unregister(conn.close)
+    conn._pool._owned.clear()
+
+
+# ---------------------------------------------------------------------------
+# multi-process stress: N producers x M consumers over one registry dir
+# ---------------------------------------------------------------------------
+def _stress_producer(reg: str, seed: int, n_items: int, q) -> None:
+    conn = SharedMemoryConnector(reg, arena_size=4 * 1024 * 1024, nslots=256)
+    rng = np.random.default_rng(seed)
+    try:
+        for i in range(n_items):
+            size = int(rng.integers(1, 64)) * 1024
+            arr = rng.standard_normal(size // 8)
+            key = conn.put(serialize(arr))
+            q.put((key, float(arr.sum())))
+        q.put(None)                          # this producer is done
+        time.sleep(1.5)   # keep arenas alive while consumers drain
+    finally:
+        conn.close()
+
+
+def _stress_consumer(reg: str, q, done_q, n_producers: int) -> None:
+    conn = SharedMemoryConnector(reg)
+    try:
+        n_done = 0
+        n_ok = 0
+        while n_done < n_producers:
+            item = q.get(timeout=30)
+            if item is None:
+                n_done += 1
+                continue
+            key, checksum = item
+            arr = deserialize(conn.get(key))
+            assert abs(float(np.asarray(arr).sum()) - checksum) < 1e-6
+            n_ok += 1
+        done_q.put(n_ok)
+    finally:
+        conn._pool._owned.clear()            # reader: never unlink
+        conn.close()
+
+
+def test_multiprocess_producers_consumers(tmp_path):
+    reg = str(tmp_path / "shm")
+    ctx = mp.get_context("spawn")
+    q: mp.Queue = ctx.Queue()
+    done_q: mp.Queue = ctx.Queue()
+    n_items = 25
+    producers = [ctx.Process(target=_stress_producer,
+                             args=(reg, 100 + i, n_items, q))
+                 for i in range(2)]
+    consumer = ctx.Process(target=_stress_consumer,
+                           args=(reg, q, done_q, len(producers)))
+    for p in producers:
+        p.start()
+    consumer.start()
+    try:
+        n_ok = done_q.get(timeout=60)
+        assert n_ok == n_items * len(producers)
+    finally:
+        for p in producers:
+            p.join(30)
+        consumer.join(30)
+        for p in [*producers, consumer]:
+            if p.is_alive():  # pragma: no cover - hung worker
+                p.terminate()
+                pytest.fail("stress worker hung")

@@ -11,7 +11,7 @@ import benchmarks.fig13_futures as fig13
 from benchmarks.util import time_call
 
 
-def _fast_time_call(fn, *, reps=1, warmup=0):
+def _fast_time_call(fn, **_kw):
     return time_call(fn, reps=1, warmup=0)
 
 

@@ -133,6 +133,26 @@ def test_closed_client_raises(kv):
     kv.shutdown_server()
 
 
+def test_persisted_put_then_get_ordering(tmp_path):
+    """Regression (review): with --persist-dir, put2 runs on a task while
+    reads can take the server's inline fast path — a pipelined get right
+    behind a put_async must still observe the put (submission order on
+    one connection), not answer from the read callback before the put's
+    memory write lands."""
+    host, port, _pid = spawn_server(ready_file=str(tmp_path / "kv.ready"),
+                                    persist_dir=str(tmp_path / "pd"))
+    c = KVClient(host, port)
+    misses = 0
+    for i in range(50):
+        c.put_async(f"k{i}", f"v{i}".encode())
+        got = c.get(f"k{i}")                 # pipelined right behind
+        if got is None or bytes(got) != f"v{i}".encode():
+            misses += 1
+    assert misses == 0
+    c.shutdown_server()
+    c.close()
+
+
 def test_persistence_off_loop_does_not_stall_peers(tmp_path):
     """With --persist-dir, a client streaming persisting puts must not
     serialize a second client's reads behind its disk writes."""
