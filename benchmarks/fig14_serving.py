@@ -1,0 +1,297 @@
+"""Fig 14 (this repo): proxy-native serving vs the classic pickle plane.
+
+Two comparisons over the same tiny decoder (identical compute; only the
+data plane and the scheduler differ):
+
+* ``fig14.pickle_socket.bN`` vs ``fig14.proxy_stream.bN`` — request/response
+  throughput at batch N.  Each request carries a context-features blob
+  (the data-plane payload serving systems actually ship — retrieval
+  context, patch embeddings, speculative prefixes).  The baseline hauls
+  every request through ``pickle.dumps`` → socket → ``pickle.loads``
+  (full copies at each hop) into a static lockstep batcher; the
+  proxy-native path appends ``evict=True`` proxies to a ``ProxyStream``
+  that feeds :meth:`ServeEngine.serve_stream` — payload bytes land in the
+  shm arena once and the engine resolves them in place.
+
+* ``fig14.static.p99`` vs ``fig14.continuous.p99`` — tail latency under
+  MIXED ``max_new_tokens``.  The lockstep batcher holds every row hostage
+  to its batch's longest request (and queues whole batches sequentially);
+  continuous batching retires rows at their own length and admits queued
+  requests into the freed slots.
+
+Also recorded: ``fig14.weights.*`` — one-worker weight delivery, pickle
+round-trip copy vs borrowed-proxy resolve into zero-copy arena views.
+
+The run writes ``BENCH_serve.json`` (registered as tag ``serve`` in
+``benchmarks.run``); ``perf_gate`` gates ``fig14.proxy_stream.b8``'s
+``req_per_s`` against the committed baseline.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.util import emit, fmt_bytes, record, tmpdir
+from repro.configs import ARCHS
+from repro.core import Store
+from repro.core.connectors import SharedMemoryConnector
+from repro.core.proxy import extract, get_factory, is_proxy
+from repro.serve.engine import Request, ServeEngine, _ListSource
+
+PLEN = 32
+NEW_TOKENS = 8
+CTX_BYTES = 16 << 20         # per-request context-features payload
+MAX_BATCH = 8
+MIX_REQS = 16                # part B: mixed-length tail-latency run
+MIX_SHORT, MIX_LONG = 4, 24
+
+
+def _cfg():
+    return ARCHS["qwen2.5-14b"].reduced().replace(dtype="float32",
+                                                  n_layers=2)
+
+
+def _payloads(n: int, ctx_bytes: int, mnt: int = NEW_TOKENS) -> list[dict]:
+    rng = np.random.default_rng(42)
+    ctx = rng.standard_normal(max(ctx_bytes // 4, 1)).astype(np.float32)
+    # distinct array per request — a shared object would let pickle's memo
+    # serialize the payload once and undercount the baseline's copies
+    return [{"prompt": list(map(int, rng.integers(1, 512, size=PLEN))),
+             "max_new_tokens": mnt, "temperature": 0.0,
+             "req_id": f"req-{i}", "context": ctx + np.float32(i)}
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# baseline: pickle over a socket into a static lockstep batcher
+# ---------------------------------------------------------------------------
+def _send_frame(sock, obj) -> None:
+    buf = pickle.dumps(obj)
+    sock.sendall(struct.pack("<Q", len(buf)) + buf)
+
+
+def _recv_frame(sock):
+    n = struct.unpack("<Q", _recv_exact(sock, 8))[0]
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    chunks = []
+    while n:
+        c = sock.recv(min(n, 1 << 20))
+        if not c:
+            raise ConnectionError("peer closed")
+        chunks.append(c)
+        n -= len(c)
+    return b"".join(chunks)
+
+
+def _pickle_server(sock, engine: ServeEngine) -> None:
+    while True:
+        batch = _recv_frame(sock)
+        if batch is None:
+            return
+        reqs = [Request(prompt=d["prompt"],
+                        max_new_tokens=d["max_new_tokens"],
+                        temperature=d["temperature"]) for d in batch]
+        outs = []
+        for s in range(0, len(reqs), engine.max_batch):
+            outs.extend(engine.generate(
+                reqs[s:s + engine.max_batch])["outputs"])
+        _send_frame(sock, outs)
+
+
+def run_pickle(engine: ServeEngine, payloads: list[dict]) -> float:
+    client, server = socket.socketpair()
+    t = threading.Thread(target=_pickle_server, args=(server, engine))
+    t.start()
+    t0 = time.perf_counter()
+    _send_frame(client, payloads)
+    outs = _recv_frame(client)
+    dt = time.perf_counter() - t0
+    _send_frame(client, None)
+    t.join()
+    client.close(), server.close()
+    assert len(outs) == len(payloads)
+    return dt
+
+
+# ---------------------------------------------------------------------------
+# proxy-native: evict-proxies on a ProxyStream into the continuous engine
+# ---------------------------------------------------------------------------
+def run_proxy(engine: ServeEngine, store: Store,
+              payloads: list[dict], topic: str) -> float:
+    t0 = time.perf_counter()
+
+    def feed() -> None:
+        # requests ride as plain leased proxies: the engine resolves them
+        # to in-place arena views (no receive copy); the lease reclaims
+        # the slot afterwards.  Responses go back evict=True (ephemeral).
+        prod = store.stream_producer(f"{topic}-req")
+        for d in payloads:
+            prod.append(store.proxy(d, ttl=120.0))
+        prod.close()
+
+    t = threading.Thread(target=feed)
+    t.start()
+    engine.serve_stream(store, f"{topic}-req", f"{topic}-res",
+                        data_store=store, timeout=30.0)
+    t.join()
+    n = 0
+    for item in store.stream_consumer(f"{topic}-res", timeout=10.0):
+        if is_proxy(item):
+            item = extract(item)
+        assert item["tokens"], f"empty completion: {item}"
+        n += 1
+    dt = time.perf_counter() - t0
+    assert n == len(payloads)
+    return dt
+
+
+# ---------------------------------------------------------------------------
+# part B: tail latency, lockstep vs continuous, mixed max_new_tokens
+# ---------------------------------------------------------------------------
+def _mixed_reqs() -> list[Request]:
+    rng = np.random.default_rng(7)
+    return [Request(prompt=list(map(int, rng.integers(1, 512, size=PLEN))),
+                    max_new_tokens=MIX_LONG if i % 2 else MIX_SHORT,
+                    req_id=f"mix-{i}")
+            for i in range(MIX_REQS)]
+
+
+def run_static_tail(engine: ServeEngine) -> list[float]:
+    reqs = _mixed_reqs()
+    lats: list[float] = []
+    t0 = time.perf_counter()
+    for s in range(0, len(reqs), engine.max_batch):
+        chunk = reqs[s:s + engine.max_batch]
+        engine.generate(chunk)
+        done = time.perf_counter() - t0       # whole batch lands together
+        lats.extend([done] * len(chunk))
+    return lats
+
+
+def run_continuous_tail(engine: ServeEngine) -> list[float]:
+    reqs = _mixed_reqs()
+    lats: list[float] = []
+    t0 = time.perf_counter()
+    engine._run_continuous(_ListSource(reqs),
+                           lambda c: lats.append(time.perf_counter() - t0))
+    return lats
+
+
+def _p99(lats: list[float]) -> float:
+    return float(np.percentile(np.asarray(lats), 99))
+
+
+# ---------------------------------------------------------------------------
+def run(micro: bool = False) -> None:
+    cfg = _cfg()
+    engine = ServeEngine(cfg, max_batch=MAX_BATCH,
+                         max_context=PLEN + MIX_LONG + 8, block_tokens=32)
+    static = ServeEngine(cfg, params=engine.params, max_batch=MAX_BATCH)
+    static._continuous = False
+
+    reg = tmpdir("fig14")
+    store = Store("fig14-serve", SharedMemoryConnector(reg))
+
+    # jit warmup for every timed shape (prefill/decode/insert traces)
+    warm = [Request(prompt=[1] * PLEN, max_new_tokens=2)
+            for _ in range(MAX_BATCH)]
+    engine.generate(warm)
+    for b in ((MAX_BATCH,) if micro else (2, MAX_BATCH)):
+        static.generate([Request(prompt=[1] * PLEN,
+                                 max_new_tokens=NEW_TOKENS)] * b)
+
+    # -- part A: request/response throughput -------------------------------
+    ctx_bytes = CTX_BYTES // 4 if micro else CTX_BYTES
+    batches = (8,) if micro else (2, 8, 16)
+    # untimed priming round: grows the arena slabs / socket buffers once so
+    # the timed rounds measure steady-state serving, not cold mmap faults
+    run_id = f"{time.monotonic_ns():x}"    # stream topics are single-use
+    prime = _payloads(max(batches), ctx_bytes)
+    run_pickle(static, prime)
+    run_proxy(engine, store, prime, f"{run_id}-prime")
+    for n in batches:
+        payloads = _payloads(n, ctx_bytes)
+        dt_p = min(run_pickle(static, payloads) for _ in range(2))
+        dt_x = min(run_proxy(engine, store, payloads, f"{run_id}-b{n}-{i}")
+                   for i in range(2))
+        emit(f"fig14.pickle_socket.b{n}", dt_p / n * 1e6,
+             f"{n} reqs x {fmt_bytes(ctx_bytes)} ctx, static lockstep",
+             req_per_s=n / dt_p)
+        emit(f"fig14.proxy_stream.b{n}", dt_x / n * 1e6,
+             f"{n} reqs x {fmt_bytes(ctx_bytes)} ctx, continuous",
+             req_per_s=n / dt_x)
+        record("serve", {f"req_per_s.b{n}": {
+            "pickle_socket": round(n / dt_p, 2),
+            "proxy_stream": round(n / dt_x, 2),
+            "speedup": round(dt_p / dt_x, 2)}})
+
+    if micro:
+        store.close()
+        engine.close()
+        return
+
+    # -- part B: p99 latency under mixed max_new_tokens ---------------------
+    # warm the static decode width for the mixed batch, then time both
+    static.generate([Request(prompt=[1] * PLEN, max_new_tokens=MIX_LONG),
+                     Request(prompt=[1] * PLEN, max_new_tokens=MIX_SHORT)]
+                    * (MAX_BATCH // 2))
+    run_continuous_tail(engine)                   # untimed warm round
+    lat_s = min((run_static_tail(static) for _ in range(2)), key=_p99)
+    lat_c = min((run_continuous_tail(engine) for _ in range(2)), key=_p99)
+    emit("fig14.static.p99", _p99(lat_s) * 1e6,
+         f"{MIX_REQS} reqs, max_new_tokens {MIX_SHORT}/{MIX_LONG} mixed")
+    emit("fig14.continuous.p99", _p99(lat_c) * 1e6,
+         f"{MIX_REQS} reqs, max_new_tokens {MIX_SHORT}/{MIX_LONG} mixed")
+    record("serve", {"p99_s": {
+        "static": round(_p99(lat_s), 4),
+        "continuous": round(_p99(lat_c), 4),
+        "speedup": round(_p99(lat_s) / _p99(lat_c), 2)},
+        "mean_s": {"static": round(float(np.mean(lat_s)), 4),
+                   "continuous": round(float(np.mean(lat_c)), 4)}})
+
+    # -- weight delivery: pickle round trip vs borrowed-proxy resolve -------
+    host = {k: np.asarray(v) for k, v in
+            enumerate_leaves(engine.params)}
+    nbytes = sum(a.nbytes for a in host.values())
+    t0 = time.perf_counter()
+    blob = pickle.dumps(host)
+    _ = pickle.loads(blob)
+    dt_p = time.perf_counter() - t0
+    owned = engine.publish_weights(store, ttl=120.0)
+    key = get_factory(owned).key
+    store.cache.pop(key)          # a fresh worker has no warm cache
+    t0 = time.perf_counter()
+    view_tree = store.get(key)    # zero-copy arena views
+    dt_x = time.perf_counter() - t0
+    assert view_tree is not None
+    emit("fig14.weights.pickle", dt_p * 1e6,
+         f"{fmt_bytes(nbytes)} params, dumps+loads (full copies)",
+         mb_per_s=nbytes / dt_p / 1e6)
+    emit("fig14.weights.proxy", dt_x * 1e6,
+         f"{fmt_bytes(nbytes)} params, shm views",
+         mb_per_s=nbytes / dt_x / 1e6)
+    record("serve", {"weights": {
+        "nbytes": nbytes,
+        "pickle_s": round(dt_p, 5), "proxy_s": round(dt_x, 5)}})
+
+    store.close()
+    engine.close()
+
+
+def enumerate_leaves(tree):
+    import jax
+
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [(jax.tree_util.keystr(p), v) for p, v in leaves]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,4 +1,4 @@
-"""CI perf-regression smoke gate over the fig6 micro tier.
+"""CI perf-regression smoke gate over the fig6 micro tier + serving.
 
 Runs ``benchmarks.fig6_inmemory.run(micro=True)`` (two sizes, every
 connector, a few seconds) and compares the shm / kvserver throughput rows
@@ -7,6 +7,13 @@ when a gated row's ``mb_per_s`` drops more than ``PERF_GATE_TOLERANCE``
 (default 30%) below baseline.  The other connectors are reported but not
 gated — file and socket numbers swing with runner disk/network weather;
 shm and kvserver are the data plane this repo owns.
+
+When a committed ``BENCH_serve.json`` baseline exists, the gate also runs
+``benchmarks.fig14_serving.run(micro=True)`` (one proxy-stream round at
+batch 8) and applies the same tolerance to the ``fig14.proxy_stream.b8``
+row's ``req_per_s`` — the serving engine's end-to-end throughput.  Skip
+just this half with ``PERF_GATE_SKIP_SERVE=1`` (it JIT-compiles the tiny
+model, ~20 s on a cold runner).
 
 Opt-outs for slow or shared runners:
 
@@ -27,11 +34,12 @@ import sys
 from pathlib import Path
 
 GATED_PREFIXES = ("fig6.shm.", "fig6.kvserver.")
+SERVE_GATED_ROW = "fig14.proxy_stream.b8"
 _ROOT = Path(__file__).resolve().parents[1]
 
 
-def _baseline_rows() -> dict[str, dict]:
-    path = _ROOT / "BENCH_fig6.json"
+def _baseline_rows(bench: str = "fig6") -> dict[str, dict]:
+    path = _ROOT / f"BENCH_{bench}.json"
     if not path.exists():
         return {}
     rows = json.loads(path.read_text()).get("rows", [])
@@ -66,6 +74,7 @@ def main() -> int:
         for name, mbps in _measure().items():
             current[name] = max(current.get(name, 0.0), mbps)
     failures = _evaluate(current, baseline, tolerance)
+    failures += _gate_serve(tolerance)
     if not failures:
         print("perf gate: ok")
         return 0
@@ -73,6 +82,41 @@ def main() -> int:
     print("(slow runner? opt out with PERF_GATE_SKIP=1 or widen "
           "PERF_GATE_TOLERANCE)")
     return 1
+
+
+def _gate_serve(tolerance: float) -> list[str]:
+    """Serve-throughput row: req/s of the batch-8 proxy-stream round vs
+    the committed BENCH_serve.json baseline."""
+    if os.environ.get("PERF_GATE_SKIP_SERVE"):
+        print("perf gate: serve half skipped (PERF_GATE_SKIP_SERVE set)")
+        return []
+    base = _baseline_rows("serve").get(SERVE_GATED_ROW, {})
+    base_rps = base.get("req_per_s")
+    if not isinstance(base_rps, (int, float)):
+        print("perf gate: no BENCH_serve.json req_per_s baseline; "
+              "serving not gated")
+        return []
+
+    from benchmarks import util
+    from benchmarks.fig14_serving import run
+
+    def _measure() -> float:
+        n0 = len(util.ROWS)
+        run(micro=True)
+        rows = {r["name"]: r for r in util.ROWS[n0:]}
+        return float(rows[SERVE_GATED_ROW].get("req_per_s", 0.0))
+
+    rps = _measure()
+    floor = (1.0 - tolerance) * base_rps
+    if rps < floor:            # one retry, best-of-two (noisy neighbors)
+        rps = max(rps, _measure())
+    status = "ok" if rps >= floor else "FAIL"
+    print(f"  {SERVE_GATED_ROW}: {rps:.1f} req/s vs baseline "
+          f"{base_rps:.1f} (floor {floor:.1f}) [{status}]")
+    if status == "FAIL":
+        return [f"{SERVE_GATED_ROW}: {rps:.1f} req/s < {floor:.1f} req/s "
+                f"({tolerance:.0%} below baseline {base_rps:.1f})"]
+    return []
 
 
 def _evaluate(current: dict[str, float], baseline: dict[str, dict],

@@ -29,6 +29,7 @@ MODULES = [
     ("fig11", "benchmarks.fig11_steering"),
     ("fig12", "benchmarks.fig12_ownership"),
     ("fig13", "benchmarks.fig13_futures"),
+    ("serve", "benchmarks.fig14_serving"),
 ]
 
 _ROOT = Path(__file__).resolve().parents[1]

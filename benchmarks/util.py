@@ -13,18 +13,22 @@ RESULTS: dict[str, dict] = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = "",
-         mb_per_s: float | None = None) -> None:
+         mb_per_s: float | None = None,
+         req_per_s: float | None = None) -> None:
     """Record one benchmark row.
 
     Rows are structured (numeric ``us_per_call`` and optional numeric
-    ``mb_per_s`` — never strings like ``"202MB/s"``) so the CI perf gate
-    and trend plots can parse ``BENCH_*.json`` without re-lexing; ``derived``
-    stays free-form for human context.  The CSV print is unchanged.
+    ``mb_per_s`` / ``req_per_s`` — never strings like ``"202MB/s"``) so the
+    CI perf gate and trend plots can parse ``BENCH_*.json`` without
+    re-lexing; ``derived`` stays free-form for human context.  The CSV
+    print is unchanged.
     """
     row: dict = {"name": name, "us_per_call": round(float(us_per_call), 1),
                  "derived": derived}
     if mb_per_s is not None:
         row["mb_per_s"] = round(float(mb_per_s), 1)
+    if req_per_s is not None:
+        row["req_per_s"] = round(float(req_per_s), 2)
     ROWS.append(row)
     print(f"{name},{row['us_per_call']},{derived}", flush=True)
 

@@ -463,6 +463,32 @@ class ArenaPool:
             raise MemoryError(f"cannot place {nbytes} byte object")
         return arena, slot
 
+    # -- block-granular reservation (the KV-paging producer path) ------------
+    def reserve_direct(self, nbytes: int, idbytes: bytes = NO_ID,
+                       ) -> tuple[tuple[str, int, int], memoryview]:
+        """Allocate a WRITING slot and hand back its writable payload view.
+
+        Producers whose payload is computed straight into channel memory
+        (KV-cache blocks, pre-sized tensors) fill the view in place —
+        zero staging copies — then publish with :meth:`commit_direct`.
+        Returns ``((arena_name, slot, gen), view)``; the generation is
+        already final (``commit`` only flips the state byte), so the
+        caller may mint the object's key before committing.
+        """
+        with self._lock:
+            arena, slot = self._alloc(nbytes, idbytes)
+        gen = arena._entry(slot)[3]
+        return (arena.name, slot, gen), arena.slot_view(slot)
+
+    def commit_direct(self, name: str, slot: int) -> int:
+        """Publish a slot reserved via :meth:`reserve_direct` (the atomic
+        state-byte store); returns the slot's generation."""
+        with self._lock:
+            arena = self._attached.get(name)
+        if arena is None or not arena.owner:
+            raise ValueError(f"cannot commit into non-owned arena {name!r}")
+        return arena.commit(slot)
+
     def free(self, name: str, slot: int, gen: int) -> None:
         """Evict: owner frees in place, non-owner requests the free."""
         with self._lock:

@@ -236,6 +236,19 @@ class BaseConnector:
                 state["leases"][key] = time.monotonic() + ttl
         return self.exists(key)
 
+    def sweep_leases(self) -> int:
+        """Expire overdue fallback leases NOW (evicting their keys);
+        returns the number reclaimed.  Normally expiry rides every
+        lifecycle op lazily — this is the explicit pressure-time hook
+        (e.g. a KV-block pool over budget reclaiming blocks whose holder
+        crashed).  Server-backed connectors, whose servers expire leases
+        themselves, inherit this as a local no-op."""
+        state = self._lifetime_state()
+        with state["lock"]:
+            before = len(state["leases"])
+            self._sweep_local(state)
+            return before - len(state["leases"])
+
     def incref_batch(self, keys: Sequence[Key], n: int = 1) -> list[int]:
         return [self.incref(k, n) for k in keys]
 
@@ -245,6 +258,20 @@ class BaseConnector:
     def touch_batch(self, keys: Sequence[Key], ttl: float | None) -> None:
         for k in keys:
             self.touch(k, ttl)
+
+    # -- block reservation (arena-backed channels only) ----------------------
+    # True when the channel can hand out writable in-place payload views
+    # (``reserve_block``/``commit_block``); consumers without it fall back
+    # to ordinary serialized puts.
+    supports_blocks = False
+
+    def reserve_block(self, nbytes: int):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support block reservation")
+
+    def commit_block(self, key: Key) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support block reservation")
 
     # -- futures: reserved keys + blocking wait ------------------------------
     # Channel-scoped in-process fallback: a condition variable notified by

@@ -123,6 +123,23 @@ class SharedMemoryConnector(BaseConnector):
             return None
         return arena.read(loc[1], loc[2])
 
+    # -- block-granular reservation (KV-cache paging) ------------------------
+    # A ``put`` whose payload the caller writes in place: reserve hands out
+    # the slot's writable view, the producer fills it (e.g. via
+    # ``np.frombuffer``), commit_block flips the publication byte.  Zero
+    # staging copies between the compute and the shared mapping.
+    supports_blocks = True
+
+    def reserve_block(self, nbytes: int) -> tuple[Key, memoryview]:
+        loc, view = self._pool.reserve_direct(nbytes)
+        return ("shm", self.registry_dir, self._encode(*loc)), view
+
+    def commit_block(self, key: Key) -> None:
+        loc = self._locate(key[2])
+        if loc is None:
+            raise KeyError(f"not an arena key: {key}")
+        self._pool.commit_direct(loc[0], loc[1])
+
     def exists(self, key: Key) -> bool:
         loc = self._locate(key[2])
         if loc is None:

@@ -431,6 +431,40 @@ class Store:
                     f"keys not found in store {self.name!r}: {missing}")
         return out
 
+    # -- block-granular reservation (KV-cache paging data plane) -------------
+    def reserve_block(self, nbytes: int, *,
+                      ttl: float | None = None) -> tuple[Key, memoryview]:
+        """Reserve ``nbytes`` of channel memory and return ``(key, view)``:
+        the caller writes the payload straight into ``view`` (no serializer,
+        no staging copy) and publishes with :meth:`commit_block`.  ``ttl``
+        puts a lease on the key as a crashed-producer backstop.  Only
+        channels with ``supports_blocks`` (the shm arena) implement this.
+        """
+        key, view = self.connector.reserve_block(nbytes)
+        key = tuple(key)
+        if ttl is not None:
+            self.connector.touch(key, ttl)
+        return key, view
+
+    def commit_block(self, key: Key) -> None:
+        """Publish a reserved block (atomic commit-byte store)."""
+        self.connector.commit_block(tuple(key))
+
+    def block_view(self, key: Key):
+        """Raw bytes-like payload of ``key`` — NO deserialization and NO
+        caching: the path for fixed-layout blocks the caller reinterprets
+        itself (``np.frombuffer``).  Returns None when the key is gone.
+        Contents of a returned view are only stable while the key is
+        pinned (refcount/lease)."""
+        return self.connector.get(tuple(key))
+
+    def sweep_leases(self) -> int:
+        """Expire overdue leases now; returns the number of keys
+        reclaimed.  The explicit memory-pressure hook (lazy expiry already
+        rides every lifecycle op)."""
+        sweep = getattr(self.connector, "sweep_leases", None)
+        return int(sweep()) if callable(sweep) else 0
+
     # -- futures: communicate data before it exists -------------------------
     def put_to(self, key: Key, obj: Any) -> None:
         """Serialize + store under a key minted by ``connector.reserve()``

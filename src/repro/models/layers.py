@@ -140,7 +140,9 @@ def decode_attention(q, k_cache, v_cache, length, cfg):
     """Single-position attention against a (possibly ring) KV cache.
 
     q: (B, 1, H, HD); caches: (B, S_cache, KV, HD); ``length`` = number of
-    valid entries (scalar).  Softmax in fp32; masked beyond ``length``.
+    valid entries — a scalar (lockstep batch) or a ``(B,)`` vector
+    (continuous batching: each row's cache is left-aligned and valid up to
+    its own length).  Softmax in fp32; masked beyond ``length``.
     """
     b, _, h, hd = q.shape
     kv = k_cache.shape[2]
@@ -149,8 +151,13 @@ def decode_attention(q, k_cache, v_cache, length, cfg):
     qg = q.reshape(b, kv, g, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(k_cache.shape[1]) < length
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        valid = jnp.arange(k_cache.shape[1]) < length          # (S,)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+    else:
+        valid = jnp.arange(k_cache.shape[1])[None, :] < length[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)       # (B, S)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
     return o.reshape(b, 1, h, hd)

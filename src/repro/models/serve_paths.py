@@ -8,11 +8,20 @@ Cache layouts (leading L dim so layer scans carry them):
 
 Ring-buffer semantics for sliding windows: slot = pos % W; validity by
 count, not order (softmax is order-invariant; RoPE is baked in at write).
+
+:class:`KVBlockPool` (bottom of this module) is the serving engine's paged
+KV storage: a request's prefilled/decoded KV lives in fixed-size *blocks*
+backed by refcounted arena slots with TTL leases, so cache memory is
+request-lifetime-managed by the same ownership machinery as every other
+object on the proxy data plane.
 """
 from __future__ import annotations
 
+from typing import Any, NamedTuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.sharding import shard_as
 from repro.models import layers as L
@@ -82,20 +91,30 @@ def decoder_prefill(params, batch, cfg):
 
 
 def decoder_decode_step(params, cache, token, pos, cfg):
-    """token: (B, 1) int32; pos: scalar int32 (next position index)."""
+    """token: (B, 1) int32; pos: next-position index — a scalar int32
+    (lockstep batch: every row at the same position) or a ``(B,)`` vector
+    (continuous batching: per-row positions; each row's KV is left-aligned
+    in its cache row and the new entry scatters to ``pos[b]``)."""
     bsz = token.shape[0]
     x = params["tok"]["emb"][token]
-    positions = pos[None] if pos.ndim == 0 else pos
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else pos[None]
     w = cache["k"].shape[2]
     slot = pos % w if cfg.sliding_window else pos
     length = jnp.minimum(pos + 1, w)
+    rows = jnp.arange(bsz)
 
     def body(x, p_kv):
         p, kc, vc = p_kv
         h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
         q, k, v = L.attn_qkv(p["attn"], h, cfg, positions)
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        if per_row:
+            kc = kc.at[rows, slot].set(k[:, 0])
+            vc = vc.at[rows, slot].set(v[:, 0])
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
         o = L.decode_attention(q, kc, vc, length, cfg)
         x = x + o.reshape(bsz, 1, -1) @ p["attn"]["wo"]
         h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -282,3 +301,168 @@ def hybrid_decode_step(params, cache, token, pos, cfg):
     cache = {"ssm": jax.tree.map(lambda *a: jnp.stack(a), *new_ssm),
              "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}}
     return logits.astype(jnp.float32), cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV-cache storage (the serving engine's block-granular data plane)
+# ---------------------------------------------------------------------------
+class KVPoolExhausted(RuntimeError):
+    """The pool's byte budget cannot fit another block even after expiring
+    overdue leases — callers defer admission until completions free blocks."""
+
+
+class KVBlock(NamedTuple):
+    """One stored KV block: ``key`` pins an arena slot (or a serialized
+    object on channels without block reservation) holding a
+    ``(2, L, ntok, KV, HD)`` slab — K stacked over V."""
+
+    key: tuple
+    ntok: int
+    nbytes: int
+
+
+class KVBlockPool:
+    """Refcounted, leased, arena-backed KV-cache block storage.
+
+    Replaces grow-by-concatenate caches with fixed-size *pages*: a
+    request's KV occupies ``ceil(tokens / block_tokens)`` blocks, each one
+    Store object whose lifetime is the ownership subsystem's —
+
+    * ``put_block`` holds ONE reference per block (the owning request) and
+      puts a TTL lease on it: when the request completes, :meth:`release`
+      decrefs and the channel evicts the slot; when the request's worker
+      crashes without releasing, the lease expires and the next pool under
+      pressure (or an explicit ``sweep``) reclaims the slot;
+    * on channels with ``supports_blocks`` (the shm arena) the block is
+      written straight into the reserved slot view — no serializer and no
+      staging copy; other channels fall back to an ordinary serialized put;
+    * ``budget_bytes`` bounds the pool: an over-budget ``put_block``
+      expires overdue leases first and raises :class:`KVPoolExhausted` if
+      still full — the engine's admission control defers the request.
+    """
+
+    def __init__(self, store, cfg, *, block_tokens: int = 16,
+                 budget_bytes: int | None = 64 << 20,
+                 lease_ttl: float | None = 60.0) -> None:
+        from repro.core.serialize import _resolve_dtype
+
+        self.store = store
+        self.block_tokens = int(block_tokens)
+        self.budget_bytes = budget_bytes
+        self.lease_ttl = lease_ttl
+        self.n_layers = cfg.n_layers
+        self.n_kv_heads = cfg.n_kv_heads
+        self.head_dim = cfg.hd
+        self.dtype = _resolve_dtype(cfg.dtype)
+        self._direct = getattr(store.connector, "supports_blocks", False)
+        self._blocks: dict[tuple, KVBlock] = {}   # key -> tracked block
+
+    # -- write path ----------------------------------------------------------
+    def put_block(self, k, v) -> KVBlock:
+        """Store one block. ``k``/``v``: (L, t, KV, HD) host arrays with
+        t <= block_tokens."""
+        k = np.ascontiguousarray(k)
+        v = np.ascontiguousarray(v)
+        ntok = k.shape[1]
+        nbytes = k.nbytes + v.nbytes
+        self._ensure_budget(nbytes)
+        if self._direct:
+            key, view = self.store.reserve_block(nbytes)
+            flat = np.frombuffer(view, self.dtype)
+            flat[:k.size] = k.ravel()
+            flat[k.size:k.size + v.size] = v.ravel()
+            self.store.commit_block(key)
+        else:
+            key = self.store.put(np.stack([k, v]))
+        self.store.incref(key)               # the owning request's reference
+        if self.lease_ttl:
+            self.store.lease(key, self.lease_ttl)   # crashed-owner backstop
+        blk = KVBlock(tuple(key), ntok, nbytes)
+        self._blocks[blk.key] = blk
+        return blk
+
+    def put_prefill(self, k, v) -> list[KVBlock]:
+        """Page a prefilled cache — ``k``/``v``: (L, plen, KV, HD) — into
+        block_tokens-sized blocks."""
+        t = k.shape[1]
+        return [self.put_block(k[:, s:s + self.block_tokens],
+                               v[:, s:s + self.block_tokens])
+                for s in range(0, t, self.block_tokens)]
+
+    # -- read path -----------------------------------------------------------
+    def read_block(self, blk: KVBlock):
+        """(k, v) arrays of one block — zero-copy views of the arena slot
+        on block-capable channels (stable while the block's key is pinned)."""
+        if self._direct:
+            raw = self.store.block_view(blk.key)
+            if raw is None:
+                raise LookupError(f"KV block {blk.key} is gone "
+                                  f"(evicted or lease-expired)")
+            arr = np.frombuffer(raw, self.dtype).reshape(
+                2, self.n_layers, blk.ntok, self.n_kv_heads, self.head_dim)
+        else:
+            obj = self.store.get(blk.key)
+            if obj is None:
+                raise LookupError(f"KV block {blk.key} is gone "
+                                  f"(evicted or lease-expired)")
+            arr = obj
+        return arr[0], arr[1]
+
+    def gather(self, blocks: list[KVBlock]):
+        """Assemble a request's blocks into dense (L, T, KV, HD) k/v
+        arrays (the admission path: blocks -> a working-cache row)."""
+        ks, vs = zip(*(self.read_block(b) for b in blocks))
+        return (np.concatenate(ks, axis=1) if len(ks) > 1 else ks[0],
+                np.concatenate(vs, axis=1) if len(vs) > 1 else vs[0])
+
+    # -- lifetime ------------------------------------------------------------
+    def release(self, blocks: list[KVBlock]) -> None:
+        """Drop the owning references (request completion): each block's
+        refcount hits zero and the channel evicts/frees its slot."""
+        for blk in blocks:
+            self._blocks.pop(blk.key, None)
+            self.store.decref(blk.key)
+
+    def touch(self, blocks: list[KVBlock]) -> None:
+        """Refresh the leases of a live request's blocks (the heartbeat a
+        long-running generation sends so its pages outlive lease_ttl)."""
+        if self.lease_ttl:
+            for blk in blocks:
+                self.store.lease(blk.key, self.lease_ttl)
+
+    def sweep(self) -> int:
+        """Expire overdue leases now (reclaiming crashed owners' blocks);
+        returns the number of keys reclaimed."""
+        n = self.store.sweep_leases()
+        if n:
+            self._prune()
+        return n
+
+    # -- accounting ----------------------------------------------------------
+    def _prune(self) -> None:
+        dead = [key for key in self._blocks if not self.store.exists(key)]
+        for key in dead:
+            self._blocks.pop(key, None)
+
+    def bytes_in_use(self) -> int:
+        return sum(b.nbytes for b in self._blocks.values())
+
+    def _ensure_budget(self, nbytes: int) -> None:
+        if self.budget_bytes is None:
+            return
+        if self.bytes_in_use() + nbytes <= self.budget_bytes:
+            return
+        self.sweep()                    # reclaim crashed owners' blocks
+        self._prune()
+        used = self.bytes_in_use()
+        if used + nbytes > self.budget_bytes:
+            raise KVPoolExhausted(
+                f"KV pool over budget: {used} + {nbytes} > "
+                f"{self.budget_bytes} bytes ({len(self._blocks)} blocks)")
+
+    def stats(self) -> dict[str, Any]:
+        return {"n_blocks": len(self._blocks),
+                "bytes_in_use": self.bytes_in_use(),
+                "budget_bytes": self.budget_bytes,
+                "block_tokens": self.block_tokens,
+                "direct": self._direct}

@@ -139,13 +139,26 @@ class ProxyCheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         man = self._manifest(step)
 
+        # one batched resolve for every selected leaf (whole + chunk
+        # proxies alike): grouped by store into a single get_batch per
+        # store instead of one round trip per leaf
+        from repro.core.proxy import extract
+        from repro.core.store import resolve_async
+
+        wanted: list = []
+        for i, entry in enumerate(man["entries"]):
+            if leaf_filter is not None and not leaf_filter(i):
+                continue
+            wanted.extend([entry["proxy"]] if entry["kind"] == "whole"
+                          else entry["proxies"])
+        if wanted:
+            resolve_async(wanted)
+
         def materialize(i, entry):
             if leaf_filter is not None and not leaf_filter(i):
                 return entry["proxy"] if entry["kind"] == "whole" \
                     else entry["proxies"]
             if entry["kind"] == "whole":
-                from repro.core.proxy import extract
-
                 return extract(entry["proxy"])
             return np.concatenate([np.asarray(p) for p in entry["proxies"]],
                                   axis=0)
