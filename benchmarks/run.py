@@ -30,6 +30,7 @@ MODULES = [
     ("fig12", "benchmarks.fig12_ownership"),
     ("fig13", "benchmarks.fig13_futures"),
     ("serve", "benchmarks.fig14_serving"),
+    ("fabric", "benchmarks.fig15_fabric"),
 ]
 
 _ROOT = Path(__file__).resolve().parents[1]

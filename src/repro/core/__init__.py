@@ -22,6 +22,8 @@ from repro.core.store import (ProxyFuture, ProxyStream, Store, StoreConfig,
                               get_or_create_store, maybe_proxy,
                               register_store, resolve_async, unregister_store)
 from repro.core.multi import MultiConnector, NoConnectorMatch, Policy
+from repro.core.fabric import (FabricPipeline, HashRing, ShardHealth,
+                               ShardedConnector)
 
 __all__ = [
     "Proxy", "OwnedProxy", "ProxyResolveError", "borrow", "clone",
@@ -33,4 +35,5 @@ __all__ = [
     "ProxyFuture", "ProxyStream", "StreamProducer", "get_store",
     "get_or_create_store", "maybe_proxy", "register_store", "resolve_async",
     "unregister_store", "MultiConnector", "NoConnectorMatch", "Policy",
+    "FabricPipeline", "HashRing", "ShardHealth", "ShardedConnector",
 ]

@@ -19,6 +19,7 @@ from repro.core.connectors.socket import SocketConnector
 from repro.core.connectors.kvserver import KVServerConnector
 from repro.core.connectors.globus import GlobusConnector
 from repro.core.connectors.endpoint import EndpointConnector
+from repro.core.fabric import ShardedConnector
 
 __all__ = [
     "LocalMemoryConnector",
@@ -28,4 +29,5 @@ __all__ = [
     "KVServerConnector",
     "GlobusConnector",
     "EndpointConnector",
+    "ShardedConnector",
 ]

@@ -107,7 +107,11 @@ class KVServerConnector(BaseConnector):
         self._client.mtouch([k[3] for k in keys], ttl)
 
     def stats(self) -> dict[str, Any]:
-        return self._client.stats()
+        st = self._client.stats()
+        # client-side resilience counters ride along with the server's
+        st["n_reconnects"] = self._client.n_reconnects
+        st["n_retries"] = self._client.n_retries
+        return st
 
     def config(self) -> dict[str, Any]:
         return {"host": self.host, "port": self.port}

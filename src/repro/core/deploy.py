@@ -88,10 +88,17 @@ def start_endpoint(workdir: str, relay_address: str, *, name: str = "ep",
 
 
 def start_kvserver(workdir: str, *, name: str = "kv",
-                   persist_dir: str | None = None) -> ProcHandle:
+                   persist_dir: str | None = None,
+                   uds: bool = False) -> ProcHandle:
+    """Spawn one KV server.  ``uds=True`` binds a Unix-domain socket under
+    ``workdir`` instead of loopback TCP — the fast same-host transport the
+    sharded fabric uses (host is then ``unix:/path``, port 0)."""
     ready = str(Path(workdir) / f"{name}.ready")
-    args = ["--host", "127.0.0.1", "--port", "0"]
+    listen = f"unix:{Path(workdir) / (name + '.sock')}" if uds else "127.0.0.1"
+    args = ["--host", listen, "--port", "0"]
     if persist_dir:
         args += ["--persist-dir", persist_dir]
-    proc, (host, port, _pid) = _spawn("repro.core.kv_tcp", args, ready)
+    proc, fields = _spawn("repro.core.kv_tcp", args, ready)
+    # re-join + rsplit: a unix:/path host itself contains ':'
+    host, port, _pid = ":".join(fields).rsplit(":", 2)
     return ProcHandle(proc=proc, host=host, port=int(port))

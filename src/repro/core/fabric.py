@@ -1,0 +1,951 @@
+"""Sharded KV fabric: N ``KVServer`` shards behaving as ONE store.
+
+``ShardedConnector`` presents the full :class:`~repro.core.connector.
+Connector` protocol (put/get/batches/refcounts/leases/futures/streams)
+over a consistent-hash ring of KV shards (ROADMAP item 1 — the paper's
+single mediated channel, scaled out):
+
+* **Routing** — keys hash onto a ring of ~``vnodes`` virtual nodes per
+  shard (:class:`HashRing`); an object's *owners* are the first
+  ``replication`` distinct shards clockwise from its hash.  Keys are
+  location-free ``("fkv", object_id)`` tuples: any process rebuilding the
+  connector from ``config()`` maps a key to its owners via the ring, so
+  proxies resolve anywhere without embedding a server address.
+
+* **Replicated puts** — a put is submitted to every owner *pipelined*
+  (the frames for all replicas are on the wire before any ack is
+  awaited).  The default async chain acks as soon as the first owner
+  commits and drains the replica futures in the background
+  (:meth:`ShardedConnector.flush_replicas` barriers them);
+  ``quorum=True`` waits for every reachable owner synchronously.  Either
+  way a put succeeds iff **at least one** owner acked — with
+  ``replication=2`` the fabric therefore tolerates any single shard
+  death without losing a committed put.
+
+* **Read failover** — a read tries owners in ring order; a dead or
+  timed-out shard is marked *suspect* (:class:`ShardHealth`, the
+  ``HeartbeatMonitor`` shape: half-open probes with monotonic backoff,
+  ``alive()``/``dead()`` views) and the read falls over to the next
+  replica.  Idempotent ops additionally retry through each
+  ``KVClient``'s transparent-reconnect path, governed by
+  :class:`~repro.distributed.fault_tolerance.RetryPolicy`.
+
+* **Live rebalancing** — :meth:`add_shard` / :meth:`remove_shard`
+  migrate only the ring-adjacent slot ranges that change hands, in three
+  phases: (1) bulk-copy missing replicas shard→shard with ``mget2`` /
+  ``mput2`` batch streaming, no lock held; (2) briefly block puts, copy
+  the delta journal, swap the ring; (3) prune keys from shards that no
+  longer own them.  Refcounts and leases migrate with their keys
+  (``keyspace`` op → ``incref(n)`` + ``touch(remaining)``), so ownership
+  semantics survive shard membership changes.
+
+**Limitations** (documented, not bugs): streams live on their topic's
+primary shard only (stream items are consumed exactly-once, which does
+not compose with passive replicas), and a key is readable-while-absent
+on a lagging async replica — readers fall through a miss to the other
+owners before declaring None.
+
+Fault injection for all of the above lives in
+:mod:`repro.distributed.chaos`; `benchmarks/fig15_fabric.py` measures
+aggregate throughput vs shard count and kill-a-shard recovery time.
+"""
+from __future__ import annotations
+
+import bisect
+import logging
+import threading
+import time
+import uuid
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FuturesTimeout
+from concurrent.futures import wait as futures_wait
+from hashlib import blake2b
+from typing import Any, Sequence
+
+from repro.core.connector import BaseConnector, Key, StreamItem
+from repro.core.kv_tcp import KVClient, is_uds
+from repro.distributed.fault_tolerance import RetryPolicy
+
+log = logging.getLogger(__name__)
+
+_CONN_ERRORS = (ConnectionError, FuturesTimeout, OSError)
+
+
+def _hash(s: str) -> int:
+    return int.from_bytes(blake2b(s.encode(), digest_size=8).digest(), "big")
+
+
+def _canon(addr) -> str:
+    """Canonical shard id: ``host:port`` for TCP, the ``unix:/path``
+    address verbatim for Unix-domain shards."""
+    if isinstance(addr, (tuple, list)):
+        host, port = addr
+        return host if is_uds(host) else f"{host}:{int(port)}"
+    return str(addr)
+
+
+def _split(sid: str) -> tuple[str, int]:
+    if is_uds(sid):
+        return sid, 0
+    host, _, port = sid.rpartition(":")
+    return host, int(port)
+
+
+class HashRing:
+    """Immutable consistent-hash ring with virtual nodes.
+
+    Membership changes produce a NEW ring (``plus``/``minus``) with a
+    bumped ``version`` — readers snapshot one reference and never see a
+    half-updated ring; only the slot ranges adjacent to the changed
+    shard map differently between versions.
+    """
+
+    __slots__ = ("shards", "vnodes", "version", "_hashes", "_sids")
+
+    def __init__(self, shards: Sequence, vnodes: int = 64,
+                 version: int = 0) -> None:
+        self.shards = tuple(dict.fromkeys(_canon(s) for s in shards))
+        if not self.shards:
+            raise ValueError("HashRing needs at least one shard")
+        self.vnodes = int(vnodes)
+        self.version = int(version)
+        pts = sorted((_hash(f"{sid}#{v}"), sid)
+                     for sid in self.shards for v in range(self.vnodes))
+        self._hashes = [h for h, _ in pts]
+        self._sids = [s for _, s in pts]
+
+    def plus(self, sid: str) -> "HashRing":
+        return HashRing(self.shards + (_canon(sid),), self.vnodes,
+                        self.version + 1)
+
+    def minus(self, sid: str) -> "HashRing":
+        rest = tuple(s for s in self.shards if s != _canon(sid))
+        return HashRing(rest, self.vnodes, self.version + 1)
+
+    def owners(self, key: str, n: int = 1) -> list[str]:
+        """First ``n`` distinct shards clockwise from ``key``'s hash —
+        owners[0] is the primary, the rest are its replicas."""
+        n = min(n, len(self.shards))
+        npts = len(self._hashes)
+        i = bisect.bisect(self._hashes, _hash(key)) % npts
+        out: list[str] = []
+        for j in range(npts):
+            sid = self._sids[(i + j) % npts]
+            if sid not in out:
+                out.append(sid)
+                if len(out) == n:
+                    break
+        return out
+
+    def primary(self, key: str) -> str:
+        return self.owners(key, 1)[0]
+
+
+class ShardHealth:
+    """Suspect-tracking in the ``HeartbeatMonitor`` shape (``alive()`` /
+    ``dead()``), plus a half-open probe circuit: a suspect shard is
+    skipped by reads/writes until its monotonic backoff elapses, at which
+    point ONE attempt is let through (``usable()`` returns True and
+    pushes the next probe out); success (``mark_ok``) closes the circuit.
+    Monotonic clock only — a wall-clock step can't mass-un-suspect."""
+
+    def __init__(self, probe_base_s: float = 0.25,
+                 probe_max_s: float = 4.0) -> None:
+        self.probe_base_s = float(probe_base_s)
+        self.probe_max_s = float(probe_max_s)
+        self._lock = threading.Lock()
+        self._state: dict[str, dict] = {}
+
+    def mark_suspect(self, sid: str) -> None:
+        now = time.monotonic()
+        with self._lock:
+            st = self._state.setdefault(
+                sid, {"since": now, "backoff": self.probe_base_s})
+            st["next_probe"] = now + st["backoff"]
+
+    def mark_ok(self, sid: str) -> None:
+        with self._lock:
+            self._state.pop(sid, None)
+
+    forget = mark_ok
+
+    def usable(self, sid: str) -> bool:
+        with self._lock:
+            st = self._state.get(sid)
+            if st is None:
+                return True
+            now = time.monotonic()
+            if now >= st["next_probe"]:        # half-open: one probe
+                st["backoff"] = min(st["backoff"] * 2, self.probe_max_s)
+                st["next_probe"] = now + st["backoff"]
+                return True
+            return False
+
+    def suspects(self) -> list[str]:
+        with self._lock:
+            return sorted(self._state)
+
+    def alive(self, known: Sequence[str]) -> dict[str, dict]:
+        with self._lock:
+            return {sid: {} for sid in known if sid not in self._state}
+
+    def dead(self, known: Sequence[str]) -> list[str]:
+        alive = self.alive(known)
+        return [s for s in known if s not in alive]
+
+
+class ShardedConnector(BaseConnector):
+    """Connector over a consistent-hash ring of KV shards (module doc).
+
+    ``shards`` — addresses: ``"host:port"``, ``(host, port)``, or
+    ``"unix:/path"``.  ``replication`` — owners per key (primary +
+    R-1 ring successors).  ``quorum`` — synchronous replica acks on put.
+    ``op_timeout`` — per-exchange client timeout (this bounds how long a
+    black-holed shard can stall one failover hop).
+    """
+
+    def __init__(self, shards: Sequence, replication: int = 2,
+                 quorum: bool = False, op_timeout: float = 10.0,
+                 vnodes: int = 64,
+                 retry_policy: RetryPolicy | None = None) -> None:
+        self.replication = max(1, int(replication))
+        self.quorum = bool(quorum)
+        self.op_timeout = float(op_timeout)
+        self.vnodes = int(vnodes)
+        self.retry_policy = retry_policy or RetryPolicy(
+            max_attempts=2, base_delay_s=0.05, max_delay_s=0.5)
+        self._ring = HashRing(shards, vnodes=self.vnodes)
+        self._ring_lock = threading.Lock()     # ring swap + put journal
+        self._admin_lock = threading.Lock()    # one rebalance at a time
+        self._journal: set[str] | None = None  # puts issued mid-rebalance
+        self._clients: dict[str, KVClient] = {}
+        self._clients_lock = threading.Lock()
+        self._health = ShardHealth()
+        self._repl_lock = threading.Lock()
+        self._repl_futs: set[Future] = set()
+        self.n_failovers = 0       # reads served off the first-choice owner
+        self.n_repl_errors = 0     # background replica writes that failed
+
+    # -- shard plumbing ------------------------------------------------------
+    def _client(self, sid: str) -> KVClient:
+        with self._clients_lock:
+            c = self._clients.get(sid)
+            if c is None:
+                host, port = _split(sid)
+                c = self._clients[sid] = KVClient(
+                    host, port, timeout=self.op_timeout,
+                    retry_policy=self.retry_policy)
+            return c
+
+    def _suspect(self, sid: str) -> None:
+        if sid not in self._health.suspects():
+            log.warning("fabric: shard %s suspect", sid)
+        self._health.mark_suspect(sid)
+
+    def _owners(self, oid: str, ring: HashRing | None = None) -> list[str]:
+        return (ring or self._ring).owners(oid, self.replication)
+
+    def _ordered(self, owners: list[str]) -> list[str]:
+        """Usable owners first (ring order preserved), suspects last —
+        a read only pays a suspect's connect attempt as a final resort."""
+        up = [s for s in owners if self._health.usable(s)]
+        return up + [s for s in owners if s not in up]
+
+    def _journal_add(self, oids) -> HashRing:
+        """Record in-flight put ids while a rebalance is copying (so its
+        delta phase re-replicates them under the new ring); returns the
+        ring snapshot the put should route by."""
+        with self._ring_lock:
+            if self._journal is not None:
+                self._journal.update(oids)
+            return self._ring
+
+    def _track_replica(self, sid: str, fut: Future) -> None:
+        with self._repl_lock:
+            self._repl_futs.add(fut)
+
+        def _done(f: Future, sid=sid) -> None:
+            with self._repl_lock:
+                self._repl_futs.discard(f)
+            if f.cancelled() or f.exception() is not None:
+                self.n_repl_errors += 1
+                self._suspect(sid)
+
+        fut.add_done_callback(_done)
+
+    def flush_replicas(self, timeout: float = 30.0) -> None:
+        """Barrier the async replication tail (quorum mode has none)."""
+        with self._repl_lock:
+            futs = list(self._repl_futs)
+        if futs:
+            futures_wait(futs, timeout=timeout)
+
+    # -- puts: replicate to all owners, pipelined ----------------------------
+    def put(self, blob) -> Key:
+        oid = uuid.uuid4().hex
+        self._put_object(oid, blob)
+        return ("fkv", oid)
+
+    def _put_object(self, oid: str, blob) -> None:
+        ring = self._journal_add((oid,))
+        owners = self._owners(oid, ring)
+        targets = [s for s in owners if self._health.usable(s)] or owners
+        futs: list[tuple[str, Future]] = []
+        for sid in targets:            # all submits before any wait
+            try:
+                futs.append((sid, self._client(sid).put_async(oid, blob)))
+            except _CONN_ERRORS:
+                self._suspect(sid)
+        if not futs:
+            raise ConnectionError(f"fabric: no shard accepted put {oid} "
+                                  f"(owners {owners})")
+        if self.quorum:
+            acks = 0
+            for sid, f in futs:
+                try:
+                    f.result(self.op_timeout)
+                    self._health.mark_ok(sid)
+                    acks += 1
+                except _CONN_ERRORS:
+                    self._suspect(sid)
+            if not acks:
+                raise ConnectionError(f"fabric: put {oid} got no ack")
+        else:
+            # async chain: first ack commits; the rest drain in background
+            acked = False
+            for i, (sid, f) in enumerate(futs):
+                if acked:
+                    self._track_replica(sid, f)
+                    continue
+                try:
+                    f.result(self.op_timeout)
+                    self._health.mark_ok(sid)
+                    acked = True
+                except _CONN_ERRORS:
+                    self._suspect(sid)
+            if not acked:
+                raise ConnectionError(f"fabric: put {oid} got no ack")
+
+    def put_batch(self, blobs: Sequence) -> list[Key]:
+        if not blobs:
+            return []
+        oids = [uuid.uuid4().hex for _ in blobs]
+        ring = self._journal_add(oids)
+        # one mput2 per shard covering every key it owns (primary or
+        # replica); all batches are in flight before any ack is awaited
+        shard_items: dict[str, list[int]] = {}
+        targets_per_key: list[list[str]] = []
+        for i, oid in enumerate(oids):
+            owners = self._owners(oid, ring)
+            targets = ([s for s in owners if self._health.usable(s)]
+                       or owners)
+            targets_per_key.append(targets)
+            for sid in targets:
+                shard_items.setdefault(sid, []).append(i)
+        futs: dict[str, Future] = {}
+        for sid, idxs in shard_items.items():
+            try:
+                futs[sid] = self._client(sid).mput_async(
+                    [oids[i] for i in idxs], [blobs[i] for i in idxs])
+            except _CONN_ERRORS:
+                self._suspect(sid)
+        acked: set[str] = set()
+        for sid, f in futs.items():
+            try:
+                f.result(self.op_timeout)
+                self._health.mark_ok(sid)
+                acked.add(sid)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+        for i, targets in enumerate(targets_per_key):
+            if not any(s in acked for s in targets):
+                raise ConnectionError(
+                    f"fabric: batch put lost key {oids[i]} "
+                    f"(no owner ack among {targets})")
+        return [("fkv", oid) for oid in oids]
+
+    # -- reads: failover through the replica chain ---------------------------
+    def get(self, key: Key):
+        return self._get_object(key[1])
+
+    def _get_object(self, oid: str):
+        owners = self._owners(oid)
+        failed_over = False
+        for sid in self._ordered(owners):
+            try:
+                data = self._client(sid).get(oid)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+                failed_over = True
+                continue
+            self._health.mark_ok(sid)
+            if data is not None:
+                if failed_over or sid != owners[0]:
+                    self.n_failovers += 1
+                return data
+            # miss on this owner (async replication lag or true absence):
+            # fall through to the other replicas before declaring None
+            failed_over = True
+        return None
+
+    def get_batch(self, keys: Sequence[Key]) -> list:
+        if not keys:
+            return []
+        oids = [k[1] for k in keys]
+        out: list = [None] * len(keys)
+        groups: dict[str, list[int]] = {}
+        for i, oid in enumerate(oids):
+            owners = self._owners(oid)
+            pref = next((s for s in owners if self._health.usable(s)),
+                        owners[0])
+            if pref != owners[0]:
+                self.n_failovers += 1      # served off the ring primary
+            groups.setdefault(pref, []).append(i)
+        futs = []
+        for sid, idxs in groups.items():
+            try:
+                futs.append(
+                    (sid, idxs,
+                     self._client(sid).mget_async([oids[i] for i in idxs])))
+            except _CONN_ERRORS:
+                self._suspect(sid)
+                futs.append((sid, idxs, None))
+        slow: list[int] = []       # per-key failover path
+        for sid, idxs, f in futs:
+            if f is None:
+                slow.extend(idxs)
+                continue
+            try:
+                blobs = f.result(self.op_timeout)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+                slow.extend(idxs)
+                continue
+            self._health.mark_ok(sid)
+            for i, b in zip(idxs, blobs):
+                if b is None:
+                    slow.append(i)
+                else:
+                    out[i] = b
+        for i in slow:
+            out[i] = self._get_object(oids[i])
+        return out
+
+    def exists(self, key: Key) -> bool:
+        oid = key[1]
+        for sid in self._ordered(self._owners(oid)):
+            try:
+                if self._client(sid).exists(oid):
+                    self._health.mark_ok(sid)
+                    return True
+                self._health.mark_ok(sid)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+        return False
+
+    def exists_batch(self, keys: Sequence[Key]) -> list[bool]:
+        return [self.exists(k) for k in keys]
+
+    # -- evict + lifecycle: fan out to every owner ---------------------------
+    def _fanout(self, oid: str, op) -> list:
+        """Apply ``op(client, oid)`` on every owner; returns the successful
+        results (≥1 required — a mutation must land somewhere)."""
+        results, errors = [], []
+        for sid in self._owners(oid):
+            try:
+                results.append(op(self._client(sid), oid))
+                self._health.mark_ok(sid)
+            except _CONN_ERRORS as e:
+                self._suspect(sid)
+                errors.append((sid, e))
+        if not results and errors:
+            raise ConnectionError(
+                f"fabric: op failed on every owner of {oid}: {errors[-1]}")
+        return results
+
+    def evict(self, key: Key) -> None:
+        self._fanout(key[1], lambda c, o: c.evict(o))
+
+    def evict_batch(self, keys: Sequence[Key]) -> None:
+        groups: dict[str, list[str]] = {}
+        for k in keys:
+            for sid in self._owners(k[1]):
+                groups.setdefault(sid, []).append(k[1])
+        for sid, oids in groups.items():
+            try:
+                self._client(sid).mevict(oids)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+
+    def incref(self, key: Key, n: int = 1) -> int:
+        return max(self._fanout(key[1], lambda c, o: c.incref(o, n)))
+
+    def decref(self, key: Key, n: int = 1) -> int:
+        # each owner decrefs (and hard-evicts at zero) independently —
+        # counts replicate with puts/rebalances, so owners agree
+        return max(self._fanout(key[1], lambda c, o: c.decref(o, n)))
+
+    def refcount(self, key: Key) -> int:
+        oid = key[1]
+        for sid in self._ordered(self._owners(oid)):
+            try:
+                n = self._client(sid).refcount(oid)
+                self._health.mark_ok(sid)
+                return n
+            except _CONN_ERRORS:
+                self._suspect(sid)
+        raise ConnectionError(f"fabric: refcount({oid}) unreachable")
+
+    def touch(self, key: Key, ttl: float | None) -> bool:
+        return any(self._fanout(key[1], lambda c, o: c.touch(o, ttl)))
+
+    def _lifecycle_batch(self, keys: Sequence[Key], method: str,
+                         *args) -> list:
+        """Group keys by owner, ONE batched exchange per shard; per-key
+        result is the max across its owners."""
+        oids = [k[1] for k in keys]
+        groups: dict[str, list[int]] = {}
+        for i, oid in enumerate(oids):
+            for sid in self._owners(oid):
+                groups.setdefault(sid, []).append(i)
+        out: list = [0] * len(keys)
+        ok_any = [False] * len(keys)
+        for sid, idxs in groups.items():
+            try:
+                res = getattr(self._client(sid), method)(
+                    [oids[i] for i in idxs], *args)
+                self._health.mark_ok(sid)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+                continue
+            for i, r in zip(idxs, res or [None] * len(idxs)):
+                ok_any[i] = True
+                if r is not None and r > out[i]:
+                    out[i] = r
+        if not all(ok_any):
+            raise ConnectionError("fabric: lifecycle batch lost keys "
+                                  "(no reachable owner)")
+        return out
+
+    def incref_batch(self, keys: Sequence[Key], n: int = 1) -> list[int]:
+        return self._lifecycle_batch(keys, "mincref", n)
+
+    def decref_batch(self, keys: Sequence[Key], n: int = 1) -> list[int]:
+        return self._lifecycle_batch(keys, "mdecref", n)
+
+    def touch_batch(self, keys: Sequence[Key], ttl: float | None) -> None:
+        oids = [k[1] for k in keys]
+        groups: dict[str, list[str]] = {}
+        for oid in oids:
+            for sid in self._owners(oid):
+                groups.setdefault(sid, []).append(oid)
+        for sid, shard_oids in groups.items():
+            try:
+                self._client(sid).mtouch(shard_oids, ttl)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+
+    # -- futures: reserved keys + parked wait with failover ------------------
+    def reserve(self) -> Key:
+        return ("fkv", uuid.uuid4().hex)
+
+    def put_to(self, key: Key, blob) -> None:
+        self._put_object(key[1], blob)   # the put wakes parked waiters
+
+    def wait(self, key: Key, timeout: float = 60.0):
+        """Parks inside the key's primary shard; a shard death mid-wait
+        fails over to the next replica with the remaining timeout."""
+        oid = key[1]
+        deadline = time.monotonic() + float(timeout)
+        last: BaseException | None = None
+        for sid in self._ordered(self._owners(oid)):
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                data = self._client(sid).wait(oid, remaining)
+                self._health.mark_ok(sid)
+                return data
+            except TimeoutError as e:
+                last = e
+                break                    # a real timeout: no producer
+            except _CONN_ERRORS as e:
+                self._suspect(sid)
+                self.n_failovers += 1
+                last = e
+        raise last if isinstance(last, TimeoutError) else TimeoutError(
+            f"wait({oid}): no reachable owner ({last})")
+
+    # -- streams: single-shard per topic (documented limitation) -------------
+    def _topic_client(self, topic: str) -> KVClient:
+        return self._client(self._ring.primary(f"@t:{topic}"))
+
+    def stream_append(self, topic: str, blob,
+                      ttl: float | None = None) -> int:
+        return self._topic_client(topic).stream_append(topic, blob, ttl)
+
+    def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
+                    location: str | None = None) -> StreamItem:
+        it = self._topic_client(topic).stream_next(topic, seq, timeout)
+        return StreamItem(seq, it["data"], it["available"], it["end"])
+
+    def stream_fetch(self, topic: str, seqs,
+                     location: str | None = None) -> list:
+        return self._topic_client(topic).stream_fetch(topic, seqs)
+
+    def stream_close(self, topic: str, location: str | None = None) -> None:
+        self._topic_client(topic).stream_close(topic)
+
+    # -- rebalancing ---------------------------------------------------------
+    def add_shard(self, addr) -> None:
+        """Join ``addr`` to the ring, migrating the slot ranges it now
+        owns (bulk → delta → prune; puts only pause for the delta)."""
+        sid = _canon(addr)
+        with self._admin_lock:
+            if sid in self._ring.shards:
+                return
+            self._migrate(self._ring.plus(sid))
+        log.info("fabric: shard %s joined (ring v%d)", sid,
+                 self._ring.version)
+
+    def remove_shard(self, addr, dead: bool = False) -> None:
+        """Leave ``addr`` (graceful drain) or repair after its death
+        (``dead=True``: re-replicate its keys from surviving replicas —
+        keys it held exclusively are unrecoverable and logged)."""
+        sid = _canon(addr)
+        with self._admin_lock:
+            if sid not in self._ring.shards:
+                return
+            if len(self._ring.shards) == 1:
+                raise ValueError("cannot remove the last shard")
+            if dead:
+                self._suspect(sid)
+            self._migrate(self._ring.minus(sid),
+                          exclude={sid} if dead else set())
+            with self._clients_lock:
+                c = self._clients.pop(sid, None)
+            if c is not None:
+                c.close()
+            self._health.forget(sid)
+        log.info("fabric: shard %s left (dead=%s, ring v%d)", sid, dead,
+                 self._ring.version)
+
+    def _migrate(self, new_ring: HashRing, exclude: set[str] = frozenset()
+                 ) -> None:
+        old_ring = self._ring
+        sources = [s for s in old_ring.shards if s not in exclude]
+        # phase 1: bulk copy, no lock — writes keep landing (journaled)
+        with self._ring_lock:
+            self._journal = set()
+        holders: dict[str, list[str]] = {}
+        refs: dict[str, int] = {}
+        leases: dict[str, float] = {}
+        reachable = []
+        for sid in sources:
+            try:
+                ks = self._client(sid).keyspace()
+                self._health.mark_ok(sid)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+                continue
+            reachable.append(sid)
+            for k in ks.get("keys", ()):
+                holders.setdefault(k, []).append(sid)
+            for k, n in ks.get("refs", {}).items():
+                refs[k] = max(refs.get(k, 0), int(n))
+            for k, t in ks.get("leases", {}).items():
+                leases[k] = max(leases.get(k, 0.0), float(t))
+        self._copy_missing(new_ring, holders, refs, leases)
+        # phase 2: drain the delta journal and swap — puts block briefly
+        with self._ring_lock:
+            delta, self._journal = self._journal or set(), None
+            if delta:
+                d_holders = {
+                    oid: [s for s in old_ring.owners(oid, self.replication)
+                          if s not in exclude]
+                    for oid in delta}
+                self._copy_missing(new_ring, d_holders, {}, {})
+            self._ring = new_ring
+        # phase 3: prune slot ranges that moved away (only on shards that
+        # remain members; a graceful leaver is pruned empty here too)
+        for sid in reachable:
+            owned = [k for k in holders
+                     if sid in holders[k]
+                     and sid not in new_ring.owners(k, self.replication)]
+            if not owned:
+                continue
+            try:
+                self._client(sid).mevict(owned)
+            except _CONN_ERRORS:
+                self._suspect(sid)
+
+    def _copy_missing(self, new_ring: HashRing,
+                      holders: dict[str, list[str]], refs: dict[str, int],
+                      leases: dict[str, float]) -> None:
+        """Copy each key to the new-ring owners that lack it, batched per
+        (source, dest) pair over mget2/mput2 — rebalance rides the same
+        pipelined fast path as ordinary batch traffic."""
+        plan: dict[tuple[str, str], list[str]] = {}
+        lost = 0
+        for oid, srcs in holders.items():
+            if not srcs:
+                lost += 1
+                continue
+            have = set(srcs)
+            for dst in new_ring.owners(oid, self.replication):
+                if dst not in have:
+                    plan.setdefault((srcs[0], dst), []).append(oid)
+        if lost:
+            log.error("fabric: %d keys unrecoverable (no surviving "
+                      "replica)", lost)
+        for (src, dst), oids in plan.items():
+            try:
+                blobs = self._client(src).mget(oids)
+                pairs = [(o, b) for o, b in zip(oids, blobs)
+                         if b is not None]
+                if not pairs:
+                    continue
+                self._client(dst).mput([o for o, _ in pairs],
+                                       [b for _, b in pairs])
+                # lifecycle state rides along: counts via incref(n),
+                # leases re-anchored with their remaining seconds
+                dc = self._client(dst)
+                futs = [dc.submit({"op": "incref", "key": o, "n": refs[o]})
+                        for o, _ in pairs if refs.get(o, 0) > 0]
+                futs += [dc.submit({"op": "touch", "key": o,
+                                    "ttl": leases[o]})
+                         for o, _ in pairs if leases.get(o, 0) > 0]
+                for f in futs:
+                    f.result(self.op_timeout)
+            except _CONN_ERRORS as e:
+                log.warning("fabric: migrate %s -> %s failed (%d keys): %s",
+                            src, dst, len(oids), e)
+                self._suspect(src)
+
+    # -- introspection / config ----------------------------------------------
+    @property
+    def ring(self) -> HashRing:
+        return self._ring
+
+    @property
+    def shards(self) -> tuple[str, ...]:
+        return self._ring.shards
+
+    def pipeline(self) -> "FabricPipeline":
+        """Open a :class:`FabricPipeline` — Redis-style pipelined bulk
+        transfers: ``put_batch``/``get_batch``/``evict_batch`` submit their
+        per-shard exchanges immediately and return without waiting; one
+        ``flush()`` (or clean ``with``-exit) barriers every ack.  Because
+        each shard connection is FIFO, a get submitted after a put of the
+        same key on the same pipeline observes it — so a full round trip
+        runs with all shards busy end to end instead of in lock-stepped
+        put/get/evict phases."""
+        return FabricPipeline(self)
+
+    def stats(self) -> dict[str, Any]:
+        with self._clients_lock:
+            clients = dict(self._clients)
+        per_shard: dict[str, Any] = {}
+        for sid in self._ring.shards:
+            c = clients.get(sid)
+            if c is None:
+                per_shard[sid] = None
+                continue
+            try:
+                per_shard[sid] = c.stats()
+            except _CONN_ERRORS:
+                per_shard[sid] = None
+        return {
+            "fabric": {
+                "n_shards": len(self._ring.shards),
+                "ring_version": self._ring.version,
+                "replication": self.replication,
+                "quorum": self.quorum,
+                "n_failovers": self.n_failovers,
+                "n_repl_errors": self.n_repl_errors,
+                "suspect": self._health.suspects(),
+                "n_reconnects": sum(c.n_reconnects
+                                    for c in clients.values()),
+                "n_retries": sum(c.n_retries for c in clients.values()),
+            },
+            "shards": per_shard,
+        }
+
+    def config(self) -> dict[str, Any]:
+        return {"shards": list(self._ring.shards),
+                "replication": self.replication, "quorum": self.quorum,
+                "op_timeout": self.op_timeout, "vnodes": self.vnodes}
+
+    def close(self) -> None:
+        self.flush_replicas(timeout=5.0)
+        with self._clients_lock:
+            clients, self._clients = list(self._clients.values()), {}
+        for c in clients:
+            c.close()
+        super().close()
+
+
+class PipelineResult:
+    """Handle for a pipelined ``get_batch``: ``result()`` is valid only
+    after the owning pipeline's ``flush()``."""
+
+    __slots__ = ("_value", "_ready")
+
+    def __init__(self) -> None:
+        self._value: list | None = None
+        self._ready = False
+
+    def result(self) -> list:
+        if not self._ready:
+            raise RuntimeError("pipeline not flushed — call flush() "
+                               "(or exit the with-block) first")
+        return self._value  # type: ignore[return-value]
+
+
+class FabricPipeline:
+    """Pipelined bulk transfers over a :class:`ShardedConnector`.
+
+    Every batch op submits its per-shard exchanges (``mput2``/``mget2``/
+    ``mevict``) and returns immediately; ``flush()`` waits for all acks at
+    once.  Per-connection FIFO ordering makes this correct: a shard
+    processes the pipeline's puts before its gets, so a get of a key put
+    earlier on the SAME pipeline always observes the value — while the
+    client never idles between phases and all shards stay busy.
+
+    Failure semantics are a superset of the plain batch ops: put acks are
+    all awaited at flush (≥1 owner ack required per key, like
+    ``put_batch`` with quorum), and any pipelined get that misses or whose
+    shard died is transparently re-fetched through the connector's normal
+    failover read path.
+    """
+
+    def __init__(self, fab: "ShardedConnector") -> None:
+        self.fab = fab
+        self._put_waits: list[tuple[dict, list, list[str]]] = []
+        self._get_waits: list[tuple[list, dict, PipelineResult]] = []
+        self._misc_waits: list[tuple[str, Future]] = []
+        self._flushed = False
+
+    # -- submits --------------------------------------------------------------
+    def put_batch(self, blobs: Sequence) -> list[Key]:
+        fab = self.fab
+        oids = [uuid.uuid4().hex for _ in blobs]
+        ring = fab._journal_add(oids)
+        shard_items: dict[str, list[int]] = {}
+        targets_per_key: list[list[str]] = []
+        for i, oid in enumerate(oids):
+            owners = fab._owners(oid, ring)
+            targets = ([s for s in owners if fab._health.usable(s)]
+                       or owners)
+            targets_per_key.append(targets)
+            for sid in targets:
+                shard_items.setdefault(sid, []).append(i)
+        futs: dict[str, Future] = {}
+        for sid, idxs in shard_items.items():
+            try:
+                futs[sid] = fab._client(sid).mput_async(
+                    [oids[i] for i in idxs], [blobs[i] for i in idxs])
+            except _CONN_ERRORS:
+                fab._suspect(sid)
+        self._put_waits.append((futs, oids, targets_per_key))
+        return [("fkv", oid) for oid in oids]
+
+    def get_batch(self, keys: Sequence[Key]) -> PipelineResult:
+        fab = self.fab
+        oids = [k[1] for k in keys]
+        groups: dict[str, list[int]] = {}
+        for i, oid in enumerate(oids):
+            owners = fab._owners(oid)
+            pref = next((s for s in owners if fab._health.usable(s)),
+                        owners[0])
+            if pref != owners[0]:
+                fab.n_failovers += 1
+            groups.setdefault(pref, []).append(i)
+        futs: dict[str, tuple[list[int], Future | None]] = {}
+        for sid, idxs in groups.items():
+            try:
+                futs[sid] = (idxs,
+                             fab._client(sid).mget_async(
+                                 [oids[i] for i in idxs]))
+            except _CONN_ERRORS:
+                fab._suspect(sid)
+                futs[sid] = (idxs, None)
+        res = PipelineResult()
+        self._get_waits.append((oids, futs, res))
+        return res
+
+    def evict_batch(self, keys: Sequence[Key]) -> None:
+        fab = self.fab
+        groups: dict[str, list[str]] = {}
+        for k in keys:
+            for sid in fab._owners(k[1]):
+                groups.setdefault(sid, []).append(k[1])
+        for sid, oids in groups.items():
+            try:
+                self._misc_waits.append(
+                    (sid, fab._client(sid).submit(
+                        {"op": "mevict", "keys": oids})))
+            except _CONN_ERRORS:
+                fab._suspect(sid)
+
+    # -- barrier --------------------------------------------------------------
+    def flush(self) -> None:
+        if self._flushed:
+            return
+        self._flushed = True
+        fab = self.fab
+        # puts: wait every owner ack; ≥1 per key or the put is lost
+        for futs, oids, targets_per_key in self._put_waits:
+            acked: set[str] = set()
+            for sid, f in futs.items():
+                try:
+                    f.result(fab.op_timeout)
+                    fab._health.mark_ok(sid)
+                    acked.add(sid)
+                except _CONN_ERRORS:
+                    fab._suspect(sid)
+            for oid, targets in zip(oids, targets_per_key):
+                if not any(s in acked for s in targets):
+                    raise ConnectionError(
+                        f"fabric: pipelined put lost key {oid} "
+                        f"(no owner ack among {targets})")
+        # gets: collect; misses / dead shards re-fetch via failover reads
+        for oids, futs, res in self._get_waits:
+            out: list = [None] * len(oids)
+            slow: list[int] = []
+            for sid, (idxs, f) in futs.items():
+                if f is None:
+                    slow.extend(idxs)
+                    continue
+                try:
+                    blobs = f.result(fab.op_timeout)
+                except _CONN_ERRORS:
+                    fab._suspect(sid)
+                    slow.extend(idxs)
+                    continue
+                fab._health.mark_ok(sid)
+                for i, b in zip(idxs, blobs):
+                    if b is None:
+                        slow.append(i)
+                    else:
+                        out[i] = b
+            for i in slow:
+                out[i] = fab._get_object(oids[i])
+            res._value, res._ready = out, True
+        # evicts and friends: best-effort acks
+        for sid, f in self._misc_waits:
+            try:
+                f.result(fab.op_timeout)
+                fab._health.mark_ok(sid)
+            except _CONN_ERRORS:
+                fab._suspect(sid)
+        self._put_waits.clear()
+        self._get_waits.clear()
+        self._misc_waits.clear()
+
+    def __enter__(self) -> "FabricPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.flush()

@@ -133,13 +133,33 @@ per-key *views* sliced from the one received batch buffer, and ``get2``/
 The pipelined client mirrors this: responses' raw payloads are received
 into preallocated per-blob buffers (``recv_into``) surfaced as writable
 memoryviews, ready for zero-copy deserialization.
+
+**Transports.** ``host`` is either a TCP host name or a Unix-domain
+address written ``unix:/path/to.sock`` (``port`` is then ignored).  Same-
+host deployments — the sharded fabric's local shards in particular —
+should prefer UDS: on loopback it moves bytes ~2× faster than the TCP
+stack.  Both transports speak the identical frame protocol.
+
+**Failure semantics** (the sharded fabric's substrate): ops in
+:data:`IDEMPOTENT_OPS` (reads, existence/metadata probes, absolute-value
+lease ops, hard evicts) are re-issued automatically through the
+transparent-reconnect path when a connection dies mid-request, governed
+by a :class:`repro.distributed.fault_tolerance.RetryPolicy`.  Mutating
+ops whose double-apply would corrupt state (``put2``/``mput2``,
+``incref``/``decref``, ``s_append``, consuming ``s_next``) fail fast
+with ``ConnectionError`` so the caller decides (the fabric fails a put
+over to the key's replica set; a lone client surfaces the error).
+``keyspace`` dumps keys + refcounts + lease remainders so a rebalance
+can migrate lifecycle state along with the data.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import contextlib
 import itertools
 import os
+import random
 import socket
 import struct
 import subprocess
@@ -153,8 +173,32 @@ from typing import Any
 
 import msgpack
 
+from repro.distributed.fault_tolerance import RetryPolicy
+
 _LEN = struct.Struct(">I")
 MAX_FRAME = 1 << 31
+
+# Ops safe to re-issue after a connection loss: reads, existence/metadata
+# probes, absolute-value lease ops (touch sets, never increments), hard
+# evicts (evicting twice == evicting once), parked waits, and diagnostics.
+# Deliberately NOT here: put2/mput2 (a retried put could overtake a later
+# put to the same key), incref/decref (double-applied deltas corrupt the
+# count), s_append (a duplicate item under a second sequence number), and
+# consuming s_next (the first attempt may already have consumed the item).
+IDEMPOTENT_OPS = frozenset({
+    "get", "get2", "mget", "mget2", "exists", "mexists", "refcount",
+    "touch", "mtouch", "evict", "mevict", "s_stat", "s_close", "wait",
+    "mwait", "ping", "stats", "keyspace", "sleep",
+})
+
+
+def is_uds(host: str) -> bool:
+    """True when ``host`` addresses a Unix-domain socket path."""
+    return host.startswith("unix:") or host.startswith("/")
+
+
+def uds_path(host: str) -> str:
+    return host[5:] if host.startswith("unix:") else host
 _IOV_MAX = 1024             # sendmsg segment cap per call (POSIX floor)
 # asyncio's default 64 KB StreamReader limit causes pause/resume flow-
 # control churn on every payload read and caps server ingest well below
@@ -649,6 +693,22 @@ class KVServer:
             ttl = req.get("ttl")
             return {"ok": True,
                     "data": [self._touch(k, ttl) for k in req["keys"]]}
+        if op == "keyspace":
+            # rebalance support: every plain key plus its lifecycle state
+            # (refcount, lease seconds REMAINING — relative, so the
+            # receiving shard re-anchors on its own monotonic clock).
+            # Stream item keys are excluded: topics don't migrate.
+            now = time.monotonic()
+            keys = [k for k in self._data if not k.startswith("@s:")]
+            present = set(keys)
+            return {"ok": True, "data": {
+                "keys": keys,
+                "refs": {k: n for k, n in self.lifetime.refs.items()
+                         if k in present},
+                "leases": {k: round(t - now, 3)
+                           for k, t in self.lifetime.leases.items()
+                           if k in present and t > now},
+            }}
         if op == "ping":
             return {"ok": True, "data": "pong"}
         if op == "stats":
@@ -964,11 +1024,16 @@ class KVIngestProtocol(asyncio.BufferedProtocol):
                 # holding the second half for the client's ACK would add a
                 # delayed-ACK round to every get
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            except OSError:
+                pass   # unix sockets have no Nagle — NOT a reason to skip
+                # the buffer sizing below (AF_UNIX defaults to ~208 KB,
+                # which costs a context-switch ping-pong per 1 MB payload)
+            try:
                 # MB-scale payloads: bigger kernel buffers mean fewer
                 # epoll_wait/recv_into rounds per transfer
                 sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, _SOCKBUF)
                 sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, _SOCKBUF)
-            except OSError:  # pragma: no cover - non-TCP transports
+            except OSError:  # pragma: no cover
                 pass
         self._writer = _TransportWriter(transport)
 
@@ -1169,11 +1234,20 @@ async def serve(host: str, port: int, persist_dir: str | None,
                 ready_file: str | None) -> None:
     kv = KVServer(persist_dir)
     loop = asyncio.get_running_loop()
-    server = await loop.create_server(lambda: KVIngestProtocol(kv),
-                                      host, port)
-    actual_port = server.sockets[0].getsockname()[1]
+    if is_uds(host):
+        path = uds_path(host)
+        with contextlib.suppress(OSError):
+            os.unlink(path)     # stale socket from a killed predecessor
+        server = await loop.create_unix_server(
+            lambda: KVIngestProtocol(kv), path)
+        actual_port = 0
+    else:
+        server = await loop.create_server(lambda: KVIngestProtocol(kv),
+                                          host, port)
+        actual_port = server.sockets[0].getsockname()[1]
     if ready_file:
         tmp = Path(ready_file + ".tmp")
+        # host may itself contain ':' (unix:/path) — readers rsplit
         tmp.write_text(f"{host}:{actual_port}:{os.getpid()}")
         tmp.replace(ready_file)
     sweeper = asyncio.create_task(_expiry_backstop(kv))
@@ -1210,7 +1284,8 @@ def spawn_server(*, host: str = "127.0.0.1", port: int = 0,
     path = Path(ready_file)
     while time.monotonic() < deadline:
         if path.exists():
-            h, p, pid = path.read_text().split(":")
+            # rsplit: the host part may be a unix:/path address with ':'s
+            h, p, pid = path.read_text().rsplit(":", 2)
             return h, int(p), int(pid)
         if proc.poll() is not None:
             raise RuntimeError(f"kv server died at startup (rc={proc.returncode})")
@@ -1259,24 +1334,46 @@ class KVClient:
     wrappers that submit and wait.
 
     On connection loss every pending future fails with ``ConnectionError``
-    and the next request transparently reconnects.
+    and the next request transparently reconnects.  Ops in
+    :data:`IDEMPOTENT_OPS` are additionally re-issued through that
+    reconnect path, paced by ``retry_policy``; mutating ops
+    (``put2``/``incref``/``s_append``...) stay fail-fast so a retry can
+    never double-commit.  ``host`` may be ``unix:/path`` for a
+    Unix-domain server (``port`` is carried but unused).
     """
 
-    def __init__(self, host: str, port: int, timeout: float = 60.0) -> None:
+    def __init__(self, host: str, port: int, timeout: float = 60.0,
+                 retry_policy: RetryPolicy | None = None) -> None:
         self.host, self.port, self.timeout = host, port, timeout
+        # snappier than the RetryPolicy defaults: a client-side retry sits
+        # on the failover read path, where 0.2 s base backoff would
+        # dominate recovery time
+        self.retry_policy = retry_policy or RetryPolicy(
+            max_attempts=2, base_delay_s=0.05, max_delay_s=1.0)
         self._lock = threading.Lock()     # guards _conn lifecycle
         self._conn: _Conn | None = None
         self._closed = False
-        self.n_reconnects = 0
+        self.n_reconnects = 0   # connections established (first connect = 1)
+        self.n_retries = 0      # idempotent ops re-issued after a conn loss
 
     # -- connection lifecycle ------------------------------------------------
     def _connect_locked(self) -> _Conn:
         if self._conn is None:
             if self._closed:
                 raise ConnectionError("client is closed")
-            s = socket.create_connection((self.host, self.port),
-                                         timeout=self.timeout)
-            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if is_uds(self.host):
+                s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                s.settimeout(self.timeout)
+                try:
+                    s.connect(uds_path(self.host))
+                except OSError as e:
+                    s.close()
+                    raise ConnectionError(
+                        f"kv connect failed: {self.host}: {e}") from e
+            else:
+                s = socket.create_connection((self.host, self.port),
+                                             timeout=self.timeout)
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             try:
                 s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, _SOCKBUF)
                 s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, _SOCKBUF)
@@ -1380,26 +1477,42 @@ class KVClient:
         return fut
 
     def request(self, msg: dict, payload=None,
-                timeout: float | None = None, retry: bool = True) -> dict:
+                timeout: float | None = None,
+                retry: bool | None = None) -> dict:
         """Send a framed request and wait for its response.
 
-        Retries once on a lost connection (most ops are idempotent; pass
-        ``retry=False`` for ones that are NOT, like ``s_append`` — a retry
-        after the server already committed would duplicate the effect).
+        ``retry=None`` (the default) classifies by op: members of
+        :data:`IDEMPOTENT_OPS` are re-issued through the transparent-
+        reconnect path on a lost connection, paced by ``retry_policy``
+        (exponential backoff, jittered); everything else — puts, refcount
+        mutations, ``s_append``, consuming ``s_next`` — fails fast, since
+        the server may have committed the effect before the link died.
+        Pass an explicit bool to override the classification.
         If the response carried an out-of-band payload it is surfaced as
         ``resp["data"]`` (a writable memoryview; None for missing).
         ``timeout`` overrides the client default for ops that park
         server-side (``wait``/``mwait``/``s_next``) longer than it.
         """
-        for attempt in (0, 1):
+        if retry is None:
+            retry = msg.get("op") in IDEMPOTENT_OPS
+        policy = self.retry_policy
+        attempts = max(1, policy.max_attempts) if retry else 1
+        delay = policy.base_delay_s
+        for attempt in range(attempts):
             fut = None
             try:
                 fut = self.submit(msg, payload)
                 return fut.result(self.timeout if timeout is None
                                   else timeout)
             except ConnectionError:
-                if attempt or not retry:
+                if attempt + 1 >= attempts:
                     raise
+                self.n_retries += 1
+                if attempt:     # first retry is immediate: the server is
+                    # usually back (restart) or a replica will take the op;
+                    # back off only once reconnect itself keeps failing
+                    time.sleep(delay * (1.0 + 0.2 * random.random()))
+                    delay = min(delay * 2.0, policy.max_delay_s)
             except FuturesTimeout:
                 # unregister the abandoned request so the entry (and its
                 # eventual response buffer) can't pile up on a long-lived
@@ -1454,6 +1567,19 @@ class KVClient:
                              "nbytes": sizes}, payload=segments)
         if not resp["ok"]:
             raise RuntimeError(resp.get("error"))
+
+    def mput_async(self, keys, blobs) -> Future:
+        """Pipelined batch put: ``Future[None]`` for the whole batch (the
+        fabric submits one of these per shard, concurrently)."""
+        from repro.core.serialize import as_segments, frame_nbytes
+
+        sizes = [frame_nbytes(b) for b in blobs]
+        if sum(sizes) > MAX_FRAME:
+            raise ValueError(f"batch too large: {sum(sizes)} > {MAX_FRAME}")
+        segments = [seg for b in blobs for seg in as_segments(b)]
+        return _chain(self.submit({"op": "mput2", "keys": list(keys),
+                                   "nbytes": sizes}, payload=segments),
+                      _check_ok)
 
     def mget(self, keys) -> list:
         """Batch get in ONE exchange; memoryview per present key, else None."""
@@ -1618,6 +1744,11 @@ class KVClient:
 
     def stats(self) -> dict:
         return self.request({"op": "stats"}).get("data") or {}
+
+    def keyspace(self) -> dict:
+        """Rebalance snapshot: ``{"keys": [...], "refs": {k: n},
+        "leases": {k: seconds_remaining}}`` (stream items excluded)."""
+        return self.request({"op": "keyspace"}).get("data") or {}
 
     def shutdown_server(self) -> None:
         try:

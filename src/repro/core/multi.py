@@ -9,6 +9,7 @@ with no constraints) is configured — mirroring the paper's guidance.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
@@ -16,6 +17,8 @@ from repro.core.connector import (BaseConnector, Connector, Key,
                                   group_indices, import_path,
                                   resolve_import_path)
 from repro.core.serialize import frame_nbytes
+
+log = logging.getLogger(__name__)
 
 
 class NoConnectorMatch(RuntimeError):
@@ -72,34 +75,71 @@ class MultiConnector(BaseConnector):
         return any(getattr(conn, "borrows_get", False)
                    for conn, _ in self.children)
 
-    def _route(self, size: int, constraints: frozenset) -> tuple[int, Connector]:
-        best: tuple[int, int, Connector] | None = None
-        for i, (conn, policy) in enumerate(self.children):
-            if policy.accepts(size, constraints):
-                if best is None or policy.priority > best[0]:
-                    best = (policy.priority, i, conn)
-        if best is None:
+    def _route_all(self, size: int,
+                   constraints: frozenset) -> list[tuple[int, Connector]]:
+        """Every policy-matching child, best first (priority desc, ties
+        keep declaration order) — the put fall-through chain."""
+        matches = [(-policy.priority, i, conn)
+                   for i, (conn, policy) in enumerate(self.children)
+                   if policy.accepts(size, constraints)]
+        if not matches:
             raise NoConnectorMatch(
                 f"no connector accepts size={size} constraints={set(constraints)}")
-        return best[1], best[2]
+        matches.sort()
+        return [(i, conn) for _, i, conn in matches]
+
+    def _route(self, size: int, constraints: frozenset) -> tuple[int, Connector]:
+        return self._route_all(size, constraints)[0]
 
     # -- ops -------------------------------------------------------------------
     def put(self, blob, constraints: Sequence[str] = ()) -> Key:
-        idx, conn = self._route(frame_nbytes(blob), frozenset(constraints))
-        sub = conn.put(blob)
-        return ("multi", idx) + tuple(sub)
+        # graceful degradation: a dead child (ConnectionError) must not
+        # abort the put — fall through to the next policy match, loudly
+        last: ConnectionError | None = None
+        for idx, conn in self._route_all(frame_nbytes(blob),
+                                         frozenset(constraints)):
+            try:
+                sub = conn.put(blob)
+            except ConnectionError as e:
+                log.error("multi: put failed on child %d (%s): %s; "
+                          "falling through", idx, type(conn).__name__, e)
+                last = e
+                continue
+            return ("multi", idx) + tuple(sub)
+        raise last  # type: ignore[misc]  # every matching child refused
 
     def put_batch(self, blobs, constraints: Sequence[str] = ()) -> list[Key]:
-        # route per-blob but batch per-child
-        routed: dict[int, list[int]] = {}
-        for j, b in enumerate(blobs):
-            idx, _ = self._route(frame_nbytes(b), frozenset(constraints))
-            routed.setdefault(idx, []).append(j)
+        # route per-blob but batch per-child; a child failing its batch
+        # falls through to the next match for just those blobs
         keys: list[Key] = [None] * len(blobs)  # type: ignore[list-item]
-        for idx, js in routed.items():
-            subkeys = self._by_id[idx].put_batch([blobs[j] for j in js])
-            for j, sk in zip(js, subkeys):
-                keys[j] = ("multi", idx) + tuple(sk)
+        failed: set[int] = set()
+        pending = list(range(len(blobs)))
+        last: ConnectionError | None = None
+        while pending:
+            routed: dict[int, list[int]] = {}
+            for j in pending:
+                for idx, _ in self._route_all(frame_nbytes(blobs[j]),
+                                              frozenset(constraints)):
+                    if idx not in failed:
+                        routed.setdefault(idx, []).append(j)
+                        break
+                else:
+                    raise last or NoConnectorMatch(
+                        "every matching connector failed")
+            pending = []
+            for idx, js in routed.items():
+                try:
+                    subkeys = self._by_id[idx].put_batch(
+                        [blobs[j] for j in js])
+                except ConnectionError as e:
+                    log.error("multi: put_batch failed on child %d: %s; "
+                              "falling through (%d blobs)", idx, e, len(js))
+                    failed.add(idx)
+                    last = e
+                    pending.extend(js)
+                    continue
+                for j, sk in zip(js, subkeys):
+                    keys[j] = ("multi", idx) + tuple(sk)
         return keys
 
     def _child(self, key: Key) -> tuple[Connector, Key]:

@@ -120,6 +120,23 @@ class StoreConfig:
     connector_config: dict[str, Any]
     cache_size: int = 16
 
+    @classmethod
+    def fabric(cls, name: str, shards: Sequence, *, replication: int = 2,
+               quorum: bool = False, op_timeout: float = 10.0,
+               cache_size: int = 16) -> "StoreConfig":
+        """Config for a store over the sharded KV fabric: ``shards`` are
+        ``host:port`` / ``unix:/path`` addresses; see
+        :class:`repro.core.fabric.ShardedConnector` for replication and
+        failover semantics.  The config (and every proxy minted from the
+        store) is location-free — any process rebuilds the same ring."""
+        return cls(name=name,
+                   connector_path="repro.core.fabric:ShardedConnector",
+                   connector_config={"shards": [str(s) for s in shards],
+                                     "replication": replication,
+                                     "quorum": quorum,
+                                     "op_timeout": op_timeout},
+                   cache_size=cache_size)
+
     def build(self) -> "Store":
         cls = resolve_import_path(self.connector_path)
         connector = cls(**self.connector_config)

@@ -1,0 +1,198 @@
+"""Fault-injection harness for the KV fabric (and anything TCP).
+
+Two layers:
+
+* :class:`ChaosProxy` — a thread-per-connection TCP shim that sits between
+  a client and one upstream server and injects faults **on command**:
+
+  - ``kill()``          — stop listening and sever every connection (the
+    process-death look-alike for servers you can't SIGKILL, e.g. in-proc);
+  - ``blackhole(True)`` — silently drop all forwarded bytes (both
+    directions) while leaving connections open: the client sees pure
+    timeout, not a reset;
+  - ``set_delay(s)``    — sleep ``s`` before forwarding each chunk (ack
+    delay / slow-network emulation);
+  - ``corrupt_next()``  — XOR the first 4 bytes of the next client→server
+    chunk.  Those bytes are a frame-length header, so the server sees a
+    length ≥ 2 GiB and must declare the stream dead — the corruption-
+    detection path the fabric tests assert on;
+  - ``reset_conns()``   — drop live connections but keep listening, so the
+    next request exercises the client's transparent-reconnect + retry path
+    deterministically.
+
+* :func:`kill_shard` — SIGKILL a spawned server's whole process group: the
+  real thing, used by the failover tests and the fig15 recovery benchmark.
+
+The proxy listens on loopback TCP and forwards to either a TCP or a
+``unix:/path`` upstream, so it can front fabric shards regardless of
+transport.  All faults are plain attribute flips — safe to toggle from the
+test thread while pumps are mid-transfer.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import socket
+import threading
+import time
+
+from repro.core.kv_tcp import is_uds, uds_path
+
+_CHUNK = 1 << 16
+
+
+class ChaosProxy:
+    """TCP shim with switchable fault injection (see module docstring).
+
+    Usage::
+
+        proxy = ChaosProxy(shard.host, shard.port)
+        client = KVClient("127.0.0.1", proxy.port)
+        proxy.corrupt_next()
+        ...
+        proxy.close()
+    """
+
+    def __init__(self, upstream_host: str, upstream_port: int = 0,
+                 listen_host: str = "127.0.0.1") -> None:
+        self.upstream_host = upstream_host
+        self.upstream_port = upstream_port
+        self._delay = 0.0
+        self._blackhole = False
+        self._corrupt_c2s = 0            # countdown of chunks to corrupt
+        self._killed = False
+        self._lock = threading.Lock()
+        self._conns: list[tuple[socket.socket, socket.socket]] = []
+        self._listener = socket.socket()
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((listen_host, 0))
+        self._listener.listen(64)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"chaos-accept-{self.port}",
+            daemon=True)
+        self._accept_thread.start()
+
+    # -- fault switches ------------------------------------------------------
+    def set_delay(self, seconds: float) -> None:
+        """Sleep ``seconds`` before forwarding each chunk (both ways)."""
+        self._delay = max(0.0, float(seconds))
+
+    def blackhole(self, on: bool = True) -> None:
+        """Silently drop forwarded bytes while ``on`` (connections stay
+        open: the far side sees a stall, not a reset)."""
+        self._blackhole = bool(on)
+
+    def corrupt_next(self, n: int = 1) -> None:
+        """Corrupt the next ``n`` client→server chunks (XOR the leading 4
+        bytes — a frame-length header becomes ≥ 2 GiB, which the server
+        rejects as a dead stream rather than parsing garbage)."""
+        with self._lock:
+            self._corrupt_c2s += int(n)
+
+    def reset_conns(self) -> None:
+        """Sever every live connection; keep accepting new ones."""
+        with self._lock:
+            conns, self._conns = self._conns, []
+        for a, b in conns:
+            _close(a)
+            _close(b)
+
+    def kill(self) -> None:
+        """Stop accepting AND sever everything — upstream looks dead."""
+        self._killed = True
+        _close(self._listener)
+        self.reset_conns()
+
+    close = kill
+
+    # -- plumbing ------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._killed:
+            try:
+                downstream, _addr = self._listener.accept()
+            except OSError:
+                return
+            try:
+                upstream = self._dial_upstream()
+            except OSError:
+                _close(downstream)
+                continue
+            with self._lock:
+                if self._killed:
+                    _close(downstream)
+                    _close(upstream)
+                    return
+                self._conns.append((downstream, upstream))
+            for src, dst, c2s in ((downstream, upstream, True),
+                                  (upstream, downstream, False)):
+                threading.Thread(target=self._pump, args=(src, dst, c2s),
+                                 name=f"chaos-pump-{self.port}",
+                                 daemon=True).start()
+
+    def _dial_upstream(self) -> socket.socket:
+        if is_uds(self.upstream_host):
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            s.connect(uds_path(self.upstream_host))
+            return s
+        s = socket.create_connection((self.upstream_host,
+                                      self.upstream_port), timeout=10.0)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return s
+
+    def _pump(self, src: socket.socket, dst: socket.socket,
+              c2s: bool) -> None:
+        try:
+            while True:
+                data = src.recv(_CHUNK)
+                if not data:
+                    break
+                if self._delay:
+                    time.sleep(self._delay)
+                if self._blackhole:
+                    continue                      # bytes vanish
+                if c2s and self._corrupt_c2s > 0:
+                    with self._lock:
+                        take = self._corrupt_c2s > 0
+                        if take:
+                            self._corrupt_c2s -= 1
+                    if take and len(data) >= 4:
+                        head = bytes(b ^ 0xFF for b in data[:4])
+                        data = head + data[4:]
+                dst.sendall(data)
+        except OSError:
+            pass
+        finally:
+            _close(src)
+            _close(dst)
+
+
+def kill_shard(handle) -> int:
+    """SIGKILL a spawned server's process group (no graceful anything).
+
+    ``handle`` is a ``deploy.ProcHandle`` (or any object with a
+    ``.proc.pid``); returns the pid killed.  This is the fault the
+    fabric's zero-lost-committed-puts guarantee is tested against.
+    """
+    pid = handle.proc.pid if hasattr(handle, "proc") else int(handle)
+    try:
+        os.killpg(pid, signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        try:
+            os.kill(pid, signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+    if hasattr(handle, "proc"):
+        handle.proc.wait(timeout=5)
+    return pid
+
+
+def _close(sock: socket.socket) -> None:
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass

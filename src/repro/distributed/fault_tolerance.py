@@ -15,30 +15,60 @@ from typing import Any, Callable
 
 
 class HeartbeatWriter:
+    """Atomic file heartbeat.  Each beat carries a monotonically increasing
+    ``seq`` so a reader can detect *change* without trusting wall-clock
+    stamps across processes."""
+
     def __init__(self, directory: str, worker_id: str) -> None:
         self.path = Path(directory) / f"{worker_id}.hb"
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._seq = 0
 
     def beat(self, **info) -> None:
+        self._seq += 1
         tmp = self.path.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"ts": time.time(), **info}))
+        tmp.write_text(json.dumps({"ts": time.time(), "seq": self._seq,
+                                   **info}))
         tmp.replace(self.path)
 
 
 class HeartbeatMonitor:
+    """Staleness is judged on the *reader's monotonic clock*: a worker ages
+    by the monotonic time since this monitor last observed its heartbeat
+    change (seq / ts / mtime marker), not by comparing the writer's
+    ``time.time()`` stamp with ours — the same NTP-step bug that once
+    broke leases (PR 4) would otherwise mass-declare workers dead the
+    instant a clock steps forward.  The only wall-clock read is the
+    first-sight bootstrap (file-mtime delta, one same-host comparison),
+    so a pre-existing stale file is still recognized as stale.
+    """
+
     def __init__(self, directory: str, stale_s: float = 10.0) -> None:
         self.dir = Path(directory)
         self.stale_s = stale_s
+        # worker -> (last marker, monotonic instant it last changed)
+        self._seen: dict[str, tuple[tuple, float]] = {}
 
     def alive(self) -> dict[str, dict]:
         out = {}
-        now = time.time()
+        mono = time.monotonic()
         for f in self.dir.glob("*.hb"):
             try:
                 info = json.loads(f.read_text())
-            except (json.JSONDecodeError, FileNotFoundError):
+                mtime = f.stat().st_mtime
+            except (json.JSONDecodeError, FileNotFoundError, OSError):
                 continue
-            if now - info.get("ts", 0) <= self.stale_s:
+            marker = (info.get("seq"), info.get("ts"), mtime)
+            prev = self._seen.get(f.stem)
+            if prev is None:            # first sight: mtime-delta bootstrap
+                age = max(0.0, time.time() - mtime)
+                self._seen[f.stem] = (marker, mono - age)
+            elif marker != prev[0]:     # beat observed: reset the age
+                age = 0.0
+                self._seen[f.stem] = (marker, mono)
+            else:                       # unchanged: monotonic age
+                age = mono - prev[1]
+            if age <= self.stale_s:
                 out[f.stem] = info
         return out
 

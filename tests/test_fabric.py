@@ -1,0 +1,383 @@
+"""Sharded KV fabric: ring routing, replication, failover, rebalancing,
+and the chaos fault-injection harness.
+
+The ``chaos``-marked tests SIGKILL shards / corrupt frames mid-workload —
+they run in the nightly tier alongside ``slow``.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import time
+
+import pytest
+
+from repro.core.deploy import start_kvserver
+from repro.core.fabric import HashRing, ShardedConnector, ShardHealth
+from repro.core.kv_tcp import IDEMPOTENT_OPS, KVClient
+from repro.core.multi import MultiConnector, Policy
+from repro.core.store import Store, StoreConfig
+from repro.distributed.chaos import ChaosProxy, kill_shard
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               HeartbeatWriter)
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    """Four UDS shards + a replication-2 quorum connector over them."""
+    handles = [start_kvserver(str(tmp_path), name=f"s{i}", uds=True)
+               for i in range(4)]
+    fab = ShardedConnector([h.host for h in handles], replication=2,
+                           quorum=True, op_timeout=5.0)
+    yield handles, fab
+    fab.close()
+    for h in handles:
+        h.stop()
+
+
+# ---------------------------------------------------------------------------
+# ring + health units (no servers)
+# ---------------------------------------------------------------------------
+def test_ring_balance_and_adjacency():
+    shards = [f"10.0.0.{i}:7000" for i in range(8)]
+    ring = HashRing(shards)
+    keys = [f"key-{i}" for i in range(4000)]
+    counts = collections.Counter(ring.primary(k) for k in keys)
+    assert set(counts) == set(shards)
+    assert max(counts.values()) < 3.5 * min(counts.values())  # vnode spread
+    # owners are distinct, stable, and replication-sized
+    owners = ring.owners("some-key", 3)
+    assert len(owners) == len(set(owners)) == 3
+    assert ring.owners("some-key", 3) == owners
+    # membership change only remaps ring-adjacent ranges: every key that
+    # didn't map to the removed shard keeps its primary
+    smaller = ring.minus(shards[3])
+    moved = [k for k in keys if ring.primary(k) != smaller.primary(k)]
+    assert all(ring.primary(k) == shards[3] for k in moved)
+    assert smaller.version == ring.version + 1
+
+
+def test_shard_health_half_open():
+    h = ShardHealth(probe_base_s=0.05, probe_max_s=0.2)
+    assert h.usable("a")
+    h.mark_suspect("a")
+    assert not h.usable("a")            # circuit open
+    assert h.suspects() == ["a"]
+    assert h.dead(["a", "b"]) == ["a"]  # HeartbeatMonitor shape
+    time.sleep(0.06)
+    assert h.usable("a")                # half-open: one probe allowed
+    assert not h.usable("a")            # ...and only one until next window
+    h.mark_ok("a")
+    assert h.usable("a") and h.suspects() == []
+
+
+def test_idempotent_classification_and_retry_counter(monkeypatch):
+    client = KVClient("127.0.0.1", 1)   # never actually connects
+    assert {"get", "get2", "mget2", "exists", "refcount", "touch",
+            "s_stat"} <= IDEMPOTENT_OPS
+    assert not {"put2", "mput2", "incref", "decref", "s_append"} \
+        & IDEMPOTENT_OPS
+    calls = []
+
+    def flaky(msg, payload=None):
+        calls.append(msg["op"])
+        raise ConnectionError("injected")
+
+    monkeypatch.setattr(client, "submit", flaky)
+    with pytest.raises(ConnectionError):
+        client.get("k")                 # idempotent: retried per policy
+    assert len(calls) == client.retry_policy.max_attempts
+    assert client.n_retries == client.retry_policy.max_attempts - 1
+    calls.clear()
+    with pytest.raises(ConnectionError):
+        client.put("k", b"v")           # mutation: fail-fast
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# fabric over live shards
+# ---------------------------------------------------------------------------
+def test_fabric_put_get_replication(cluster):
+    handles, fab = cluster
+    keys = fab.put_batch([f"blob-{i}".encode() * 50 for i in range(64)])
+    got = fab.get_batch(keys)
+    assert [bytes(b) for b in got] == \
+        [f"blob-{i}".encode() * 50 for i in range(64)]
+    # every key is physically present on `replication` distinct shards
+    clients = [KVClient(h.host, h.port) for h in handles]
+    for key in keys[:8]:
+        n = sum(c.exists(key[1]) for c in clients)
+        assert n == fab.replication
+    for c in clients:
+        c.close()
+    # single-key ops + lifecycle fan-out
+    k = fab.put(b"solo")
+    assert bytes(fab.get(k)) == b"solo"
+    assert fab.exists(k)
+    assert fab.incref(k, 2) == 2
+    assert fab.refcount(k) == 2
+    assert fab.touch(k, 30.0)
+    assert fab.decref(k) == 1
+    fab.evict(k)
+    assert not fab.exists(k)
+
+
+def test_fabric_pipeline_round_trip(cluster):
+    handles, fab = cluster
+    blobs = [f"p-{i}".encode() * 40 for i in range(32)]
+    with fab.pipeline() as p:
+        keys = p.put_batch(blobs)
+        h = p.get_batch(keys)          # FIFO: sees the puts above
+        p.evict_batch(keys)
+    got = h.result()
+    assert [bytes(b) for b in got] == blobs
+    assert all(fab.get(k) is None for k in keys)   # evicts landed too
+    # reading before flush is a usage error, loudly
+    p2 = fab.pipeline()
+    h2 = p2.get_batch(keys)
+    with pytest.raises(RuntimeError, match="flush"):
+        h2.result()
+    p2.flush()
+    assert h2.result() == [None] * len(keys)
+
+
+@pytest.mark.chaos
+def test_fabric_pipeline_get_fails_over_after_kill(cluster):
+    handles, fab = cluster
+    blobs = [f"q-{i}".encode() * 40 for i in range(16)]
+    keys = fab.put_batch(blobs)
+    # kill the shard the pipeline would prefer for some keys: the flush
+    # must transparently re-fetch those through the failover read path
+    kill_shard(handles[0])
+    with fab.pipeline() as p:
+        h = p.get_batch(keys)
+    assert [bytes(b) for b in h.result()] == blobs
+    assert fab.n_failovers > 0
+
+
+def test_fabric_store_roundtrip_and_stats(cluster, tmp_path):
+    handles, fab = cluster
+    cfg = StoreConfig.fabric("fab-store", [h.host for h in handles],
+                             quorum=True)
+    store = cfg.build()
+    try:
+        p = store.proxy({"weights": list(range(100))})
+        assert p["weights"][-1] == 99
+        st = store.stats()
+        f = st["connector"]["fabric"]
+        assert f["n_shards"] == 4 and f["replication"] == 2
+        assert "n_reconnects" in f and "n_retries" in f
+        # config round-trips: a rebuilt connector sees the same ring
+        fab2 = ShardedConnector(**fab.config())
+        assert fab2.shards == fab.shards
+        fab2.close()
+    finally:
+        store.close()
+
+
+def test_fabric_futures_and_streams(cluster):
+    _handles, fab = cluster
+    key = fab.reserve()
+    fab.put_to(key, b"later")
+    assert bytes(fab.wait(key, timeout=5.0)) == b"later"
+    fab.stream_append("topic-a", b"item0")
+    it = fab.stream_next("topic-a", 0, timeout=5.0)
+    assert bytes(it.data) == b"item0" and not it.end
+    fab.stream_close("topic-a")
+    assert fab.stream_next("topic-a", 1, timeout=5.0).end
+
+
+def test_fabric_rebalance_join_leave(cluster, tmp_path):
+    handles, fab = cluster
+    keys = fab.put_batch([f"v{i}".encode() * 20 for i in range(80)])
+    k = keys[0]
+    fab.incref(k, 3)
+    fab.touch(k, 60.0)
+    # join: only adjacent ranges migrate; everything stays resolvable
+    extra = start_kvserver(str(tmp_path), name="s-extra", uds=True)
+    try:
+        fab.add_shard(extra.host)
+        assert len(fab.shards) == 5
+        assert all(b is not None for b in fab.get_batch(keys))
+        # graceful leave: the drained shard's keys move, refcounts and
+        # leases survive on the new owners
+        fab.remove_shard(handles[0].host)
+        assert len(fab.shards) == 4
+        assert all(b is not None for b in fab.get_batch(keys))
+        assert fab.refcount(k) == 3
+    finally:
+        extra.stop()
+
+
+# ---------------------------------------------------------------------------
+# chaos tier: real faults
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+def test_kill_primary_mid_put_replica_serves_read(cluster):
+    handles, fab = cluster
+    keys = fab.put_batch([f"pre-kill-{i}".encode() * 30
+                          for i in range(40)])
+    victim = handles[0]
+    kill_shard(victim)
+    # zero committed puts lost: every pre-kill key resolves via failover
+    got = fab.get_batch(keys)
+    assert all(b is not None for b in got)
+    assert fab.n_failovers > 0
+    assert victim.host in fab.stats()["fabric"]["suspect"]
+    # writes keep working with the shard down (remaining owners ack)
+    k2 = fab.put(b"post-kill")
+    assert bytes(fab.get(k2)) == b"post-kill"
+
+
+@pytest.mark.chaos
+def test_lease_and_refcount_survive_shard_death(cluster):
+    handles, fab = cluster
+    k = fab.put(b"owned")
+    fab.incref(k, 2)
+    fab.touch(k, 60.0)
+    kill_shard(handles[1])
+    # counts were replicated with the key: surviving owner agrees
+    assert fab.refcount(k) == 2
+    assert bytes(fab.get(k)) == b"owned"
+    # repair: re-replicate onto the remaining shards; state intact
+    fab.remove_shard(handles[1].host, dead=True)
+    assert fab.refcount(k) == 2
+    assert fab.touch(k, 60.0)
+    assert bytes(fab.get(k)) == b"owned"
+
+
+@pytest.mark.chaos
+def test_rebalance_under_churn_keeps_keys_resolvable(cluster, tmp_path):
+    import threading
+
+    handles, fab = cluster
+    keys = fab.put_batch([f"churn-{i}".encode() * 10 for i in range(40)])
+    written: list = []
+    stop = threading.Event()
+
+    def writer() -> None:
+        while not stop.is_set():
+            written.append(fab.put(b"churned" * 10))
+            time.sleep(0.002)
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    extra = start_kvserver(str(tmp_path), name="churn-extra", uds=True)
+    try:
+        fab.add_shard(extra.host)          # join under live writes
+        fab.remove_shard(handles[2].host)  # ...then a graceful leave
+        stop.set()
+        t.join(timeout=5.0)
+        assert written                     # churn actually happened
+        for k in keys + written:           # every key still resolves
+            assert fab.get(k) is not None, k
+    finally:
+        stop.set()
+        extra.stop()
+
+
+@pytest.mark.chaos
+def test_chaosproxy_corruption_marks_stream_dead(tmp_path):
+    shard = start_kvserver(str(tmp_path), name="c0", uds=True)
+    proxy = ChaosProxy(shard.host, shard.port)
+    client = KVClient(proxy.host, proxy.port, timeout=5.0)
+    try:
+        client.put("k", b"v" * 100)
+        assert bytes(client.get("k")) == b"v" * 100
+        # corrupt the next request's frame-length header: the server must
+        # declare the stream DEAD (connection dropped), never parse it
+        proxy.corrupt_next()
+        with pytest.raises(ConnectionError):
+            client.put("k2", b"x" * 100)   # mutation: fails fast
+        # the server itself survived and the data plane is intact
+        assert bytes(client.get("k")) == b"v" * 100   # reconnects
+        assert client.n_reconnects >= 2
+        assert not client.exists("k2")
+    finally:
+        client.close()
+        proxy.close()
+        shard.stop()
+
+
+@pytest.mark.chaos
+def test_chaosproxy_blackhole_and_reset(tmp_path):
+    shard = start_kvserver(str(tmp_path), name="b0", uds=True)
+    proxy = ChaosProxy(shard.host, shard.port)
+    client = KVClient(proxy.host, proxy.port, timeout=0.5)
+    try:
+        client.put("k", b"v")
+        proxy.blackhole(True)              # bytes vanish: pure stall
+        with pytest.raises(Exception) as ei:
+            client.request({"op": "get2", "key": "k"}, retry=False)
+        assert "Timeout" in type(ei.value).__name__ \
+            or isinstance(ei.value, ConnectionError)
+        proxy.blackhole(False)
+        proxy.reset_conns()                # sever: next op reconnects
+        assert bytes(client.get("k")) == b"v"
+        assert client.n_reconnects >= 2
+    finally:
+        client.close()
+        proxy.close()
+        shard.stop()
+
+
+# ---------------------------------------------------------------------------
+# satellites: multi-connector degradation + heartbeat monotonic age
+# ---------------------------------------------------------------------------
+class _DeadConnector:
+    """Stand-in for a crashed child: every put raises ConnectionError."""
+
+    def put(self, blob):
+        raise ConnectionError("child is down")
+
+    def put_batch(self, blobs):
+        raise ConnectionError("child is down")
+
+    def get(self, key):
+        return None
+
+    def exists(self, key):
+        return False
+
+    def evict(self, key):
+        pass
+
+    def config(self):
+        return {}
+
+    def close(self):
+        pass
+
+
+def test_multiconnector_put_falls_through_on_dead_child():
+    from repro.core.connectors import LocalMemoryConnector
+
+    healthy = LocalMemoryConnector()
+    multi = MultiConnector([(_DeadConnector(), Policy(priority=10)),
+                            (healthy, Policy(priority=0))])
+    key = multi.put(b"degraded")           # high-priority child is dead
+    assert key[1] == 1                     # ...landed on the fallback
+    assert bytes(multi.get(key)) == b"degraded"
+    keys = multi.put_batch([b"a", b"b"])
+    assert all(k[1] == 1 for k in keys)
+    assert [bytes(b) for b in multi.get_batch(keys)] == [b"a", b"b"]
+    # every matching child dead -> the ConnectionError surfaces
+    only_dead = MultiConnector([(_DeadConnector(), Policy())])
+    with pytest.raises(ConnectionError):
+        only_dead.put(b"x")
+
+
+def test_heartbeat_age_is_monotonic_not_wallclock(tmp_path, monkeypatch):
+    w = HeartbeatWriter(str(tmp_path), "w0")
+    w.beat(round=1)
+    mon = HeartbeatMonitor(str(tmp_path), stale_s=5.0)
+    assert "w0" in mon.alive()
+    # a wall-clock step of +1h must NOT declare the worker dead: age is
+    # tracked on the reader's monotonic clock after first sight
+    real_time = time.time
+    monkeypatch.setattr(time, "time", lambda: real_time() + 3600.0)
+    assert "w0" in mon.alive()
+    monkeypatch.undo()
+    # ...and a beat observed (seq change) resets the age
+    w.beat(round=2)
+    assert mon.alive()["w0"]["seq"] == 2
