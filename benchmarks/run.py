@@ -6,11 +6,17 @@ the perf trajectory is recorded PR over PR (rows + any structured results
 the figure stashed via ``benchmarks.util.record``).
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig5,table2]
+
+``--sanitize`` smoke-checks the fig6 micro tier under ``REPRO_SANITIZE=1``
+(poison-on-free, quarantine, refcount ledger all hot) to bound the
+sanitizer's overhead; results land in ``BENCH_fig6_sanitize.json`` so the
+overhead trajectory is recorded without touching the perf-gate baseline.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -36,15 +42,16 @@ MODULES = [
 _ROOT = Path(__file__).resolve().parents[1]
 
 
-def _dump(tag: str, rows: list[dict], elapsed: float) -> None:
+def _dump(tag: str, rows: list[dict], elapsed: float,
+          suffix: str = "") -> None:
     out = {
-        "figure": tag,
+        "figure": tag + suffix,
         "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "elapsed_s": round(elapsed, 2),
         "rows": rows,   # structured dicts: numeric us_per_call / mb_per_s
-        "results": util.RESULTS.pop(tag, {}),
+        "results": util.RESULTS.pop(tag, {}),  # modules record by bare tag
     }
-    path = _ROOT / f"BENCH_{tag}.json"
+    path = _ROOT / f"BENCH_{tag}{suffix}.json"
     path.write_text(json.dumps(out, indent=2) + "\n")
     print(f"# wrote {path}", flush=True)
 
@@ -53,8 +60,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig5,table2")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the fig6 micro tier under REPRO_SANITIZE=1 "
+                         "to bound sanitizer overhead (writes "
+                         "BENCH_fig6_sanitize.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    suffix = ""
+    if args.sanitize:
+        # sanitize smoke: restrict to the micro tier — the point is the
+        # relative overhead of the hot path, not a full figure sweep
+        os.environ["REPRO_SANITIZE"] = "1"
+        only = {"fig6"} if only is None else (only & {"fig6"} or {"fig6"})
+        suffix = "_sanitize"
 
     print("name,us_per_call,derived")
     failures = []
@@ -66,8 +84,8 @@ def main() -> None:
         try:
             __import__(module, fromlist=["run"]).run()
             elapsed = time.time() - t0
-            _dump(tag, util.ROWS[n_rows:], elapsed)
-            print(f"# {tag} done in {elapsed:.1f}s", flush=True)
+            _dump(tag, util.ROWS[n_rows:], elapsed, suffix)
+            print(f"# {tag}{suffix} done in {elapsed:.1f}s", flush=True)
         except Exception:  # noqa: BLE001
             failures.append(tag)
             print(f"# {tag} FAILED:\n{traceback.format_exc()}",

@@ -1,0 +1,24 @@
+"""repro.analysis — the two-headed correctness tool.
+
+Head 1, ``proxylint`` (:mod:`repro.analysis.lint`): an AST-based static
+analysis pass over the source tree whose rules R1-R6 are distilled from
+this repo's own bug history (wall-clock lease arithmetic, borrowed shm
+views outliving their slot, multi-resolved ``evict=True`` ephemerals,
+``-O``-stripped asserts, blocking calls on the event loop, non-idempotent
+ops inside retry wrappers).  Run it as::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/
+
+Head 2, the runtime sanitizer (:mod:`repro.analysis.sanitize`): enabled by
+``REPRO_SANITIZE=1`` (or per-store with ``Store(..., sanitize=True)``), it
+poisons freed arena chunks, quarantines them a generation before reuse,
+tracks exported zero-copy views, and mirrors every incref/decref in a
+client-side ledger cross-checked against server counts at ``Store.close``.
+
+Both heads are stdlib-only: importing this package never pulls numpy/jax,
+so the lint CI job runs without installing the runtime dependencies.
+"""
+from repro.analysis.sanitize import (SanitizerError, SanitizerWarning,
+                                     enabled)
+
+__all__ = ["SanitizerError", "SanitizerWarning", "enabled"]

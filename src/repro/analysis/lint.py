@@ -1,0 +1,446 @@
+"""proxylint — AST rules distilled from this repo's own bug history.
+
+Every rule encodes a defect class that was actually fixed by hand in a
+past PR and must not regress as the codebase scales out:
+
+* **R1 wallclock** — ``time.time()`` anywhere in the tree.  Wall clock in
+  lease/deadline/timeout arithmetic broke leases under NTP steps twice
+  (the PR 4 lease fix, re-fixed for heartbeats in PR 7); deadline math
+  must use ``time.monotonic()``/``perf_counter()``.  Pure timestamps
+  (manifests, logs) are allowlisted with ``# lint: wallclock-ok``.
+* **R2 borrowed-view escape** — a value read from lifecycle-bound channel
+  memory (``Arena.read``/``slot_view``/``block_view``) returned from a
+  function that also drops references (``decref``/``evict``/``free``),
+  without ``serialize.materialize`` in between.  The PR 5 bug class: the
+  old per-object-segment design was only accidentally safe; arena chunks
+  recycle under live views.
+* **R3 ephemeral multi-resolve** — an ``evict=True`` proxy resolved more
+  than once on a path, or pickled into a fan-out loop.  The PR 3 bug
+  class (first resolve used to break every sibling; ephemerals still hold
+  exactly one reference per sibling, so double-resolving one is a bug).
+* **R4 bare assert** — ``assert`` guarding a runtime invariant inside
+  ``src/repro/core/``: stripped under ``python -O``, so connector
+  argument / frame-parsing / slot-state checks silently vanish.
+* **R5 blocking-in-async** — ``time.sleep``, sync socket ops, or file I/O
+  inside an ``async def`` body of the event-loop modules
+  (``kv_tcp.py``/``fabric.py``/``endpoint.py``): one blocking call stalls
+  every multiplexed connection on the loop.
+* **R6 non-idempotent retry** — ``put2``/``decref``/``s_append``-family
+  ops inside a retry wrapper.  The PR 7 rule: a lost-ack retry of a
+  non-idempotent op double-applies it (double-decref kills sibling data).
+
+Allowlist convention: a ``# lint: <tag>`` comment on the flagged line or
+the line above suppresses the finding (tags: ``wallclock-ok``,
+``borrow-ok``, ``evict-ok``, ``assert-ok``, ``blocking-ok``,
+``retry-ok``).
+
+Run: ``PYTHONPATH=src python -m repro.analysis.lint src/`` — exits
+non-zero on any finding.  Stdlib-only by design: the CI lint job needs no
+runtime dependencies.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator
+
+ALLOW_TAGS = {
+    "R1": "wallclock-ok",
+    "R2": "borrow-ok",
+    "R3": "evict-ok",
+    "R4": "assert-ok",
+    "R5": "blocking-ok",
+    "R6": "retry-ok",
+}
+
+# R2: calls that hand out views aliasing lifecycle-bound channel memory
+_BORROW_SOURCES = {"read", "block_view", "slot_view", "reserve_direct"}
+# R2: calls that can drop the last reference (and recycle the memory)
+_LIFECYCLE_DROPS = {"decref", "mdecref", "decref_batch", "evict", "mevict",
+                    "evict_batch", "free", "request_free"}
+# R5: blocking callables by attribute/name
+_BLOCKING_ATTRS = {"read_bytes", "write_bytes", "read_text", "write_text",
+                   "recv", "recv_into", "sendall", "sendto", "accept"}
+_R5_FILES = {"kv_tcp.py", "fabric.py", "endpoint.py"}
+# R6: ops that must never ride a transparent retry
+_NONIDEMPOTENT = {"put2", "mput2", "decref", "mdecref", "s_append",
+                  "stream_append"}
+_RETRY_WRAPPERS = {"with_retries", "retry", "retrying", "with_retry"}
+
+
+@dataclass
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+def _call_name(node: ast.AST) -> str | None:
+    """Trailing name of a call target: ``a.b.c(...)`` -> ``c``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` -> ``"a.b.c"`` (Names/Attributes only)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str, *, core: bool) -> None:
+        self.path = path
+        self.lines = source.splitlines()
+        self.core = core
+        self.basename = Path(path).name
+        self.findings: list[Finding] = []
+        # import aliases: local name -> canonical dotted name
+        self.aliases: dict[str, str] = {}
+        # nested-function context: (node, is_async) innermost last
+        self._funcs: list[tuple[ast.AST, bool]] = []
+        self._loop_depth = 0
+        self._retry_depth = 0
+
+    # -- infrastructure ------------------------------------------------------
+    def _allowed(self, node: ast.AST, rule: str) -> bool:
+        tag = f"lint: {ALLOW_TAGS[rule]}"
+        for ln in (node.lineno, node.lineno - 1):
+            if 1 <= ln <= len(self.lines) and tag in self.lines[ln - 1]:
+                return True
+        return False
+
+    def _flag(self, node: ast.AST, rule: str, message: str) -> None:
+        if not self._allowed(node, rule):
+            self.findings.append(Finding(self.path, node.lineno,
+                                         node.col_offset, rule, message))
+
+    def _canon(self, node: ast.AST) -> str | None:
+        """Canonical dotted name of a call target, through import aliases."""
+        dotted = _dotted(node)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        head = self.aliases.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self.aliases[alias.asname or alias.name.split(".")[0]] = \
+                alias.name if alias.asname else alias.name.split(".")[0]
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module:
+            for alias in node.names:
+                self.aliases[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+        self.generic_visit(node)
+
+    # -- scope/loop tracking -------------------------------------------------
+    def _visit_func(self, node, is_async: bool) -> None:
+        retry_deco = any(
+            (_call_name(d.func if isinstance(d, ast.Call) else d) or "")
+            in _RETRY_WRAPPERS for d in node.decorator_list)
+        self._funcs.append((node, is_async))
+        if retry_deco:
+            self._retry_depth += 1
+        self._scan_function(node)
+        self.generic_visit(node)
+        if retry_deco:
+            self._retry_depth -= 1
+        self._funcs.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_func(node, is_async=False)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_func(node, is_async=True)
+
+    def _visit_loop(self, node) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _visit_loop
+
+    # -- R4: bare asserts in core -------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self.core:
+            self._flag(node, "R4",
+                       "bare assert guards a runtime invariant (stripped "
+                       "under python -O); raise ValueError/RuntimeError")
+        self.generic_visit(node)
+
+    # -- R1 / R5 / R6 (call-site rules) -------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        canon = self._canon(node.func)
+        name = _call_name(node.func)
+
+        if canon == "time.time":
+            ctx = self._stmt_context(node)
+            if ctx in ("arith", "compare"):
+                self._flag(node, "R1",
+                           "time.time() feeds deadline/timeout arithmetic "
+                           "— wall clock steps under NTP; use "
+                           "time.monotonic() or time.perf_counter()")
+            else:
+                self._flag(node, "R1",
+                           "time.time() is wall clock; if this is a pure "
+                           "timestamp (manifest/log), allowlist with "
+                           "'# lint: wallclock-ok', otherwise use "
+                           "time.monotonic()")
+
+        if self._in_async() and self.basename in _R5_FILES:
+            blocking = None
+            if canon == "time.sleep":
+                blocking = "time.sleep"
+            elif isinstance(node.func, ast.Name) and node.func.id == "open":
+                blocking = "open()"
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _BLOCKING_ATTRS:
+                blocking = f".{node.func.attr}()"
+            if blocking:
+                self._flag(node, "R5",
+                           f"blocking call {blocking} inside an async def "
+                           f"stalls every connection multiplexed on this "
+                           f"event loop; await the async variant or punt "
+                           f"to an executor")
+
+        if name in _NONIDEMPOTENT:
+            if self._retry_depth:
+                self._flag(node, "R6",
+                           f"non-idempotent op {name!r} inside a retry "
+                           f"wrapper: a lost-ack retry double-applies it "
+                           f"(fail fast instead)")
+            for kw in node.keywords:
+                if kw.arg == "retry" \
+                        and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is True:
+                    self._flag(node, "R6",
+                               f"non-idempotent op {name!r} called with "
+                               f"retry=True")
+        if name in _RETRY_WRAPPERS:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Call):
+                        sub_name = _call_name(sub.func)
+                        if sub_name in _NONIDEMPOTENT:
+                            self._flag(sub, "R6",
+                                       f"non-idempotent op {sub_name!r} "
+                                       f"wrapped in {name}(): a lost-ack "
+                                       f"retry double-applies it")
+        # literal {"op": "decref"}-style requests with retry=True
+        if name == "request":
+            self._check_request_retry(node)
+        self.generic_visit(node)
+
+    def _check_request_retry(self, node: ast.Call) -> None:
+        retry_true = any(
+            kw.arg == "retry" and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True for kw in node.keywords)
+        if not (retry_true and node.args):
+            return
+        msg = node.args[0]
+        if isinstance(msg, ast.Dict):
+            for k, v in zip(msg.keys, msg.values):
+                if isinstance(k, ast.Constant) and k.value == "op" \
+                        and isinstance(v, ast.Constant) \
+                        and v.value in _NONIDEMPOTENT:
+                    self._flag(node, "R6",
+                               f"non-idempotent op {v.value!r} requested "
+                               f"with retry=True")
+
+    def _in_async(self) -> bool:
+        return bool(self._funcs) and self._funcs[-1][1]
+
+    def _stmt_context(self, node: ast.AST) -> str:
+        """'arith' / 'compare' / 'plain' for a call, from parent links."""
+        cur = getattr(node, "_lint_parent", None)
+        while cur is not None and not isinstance(cur, ast.stmt):
+            if isinstance(cur, ast.BinOp) and isinstance(
+                    cur.op, (ast.Add, ast.Sub)):
+                return "arith"
+            if isinstance(cur, ast.Compare):
+                return "compare"
+            cur = getattr(cur, "_lint_parent", None)
+        return "plain"
+
+    # -- R2 / R3 (function-scoped dataflow heuristics) -----------------------
+    def _scan_function(self, func) -> None:
+        borrow_names: dict[str, int] = {}     # name -> lineno of the borrow
+        materialized: set[str] = set()
+        evict_names: dict[str, int] = {}      # name -> lineno of creation
+        resolves: dict[str, list[int]] = {}   # evict name -> resolve linenos
+        drops = False
+        own_loops: list[tuple[int, int]] = []  # (lineno, end_lineno) spans
+
+        def in_own_loop(n: ast.AST) -> bool:
+            return any(a <= n.lineno <= b for a, b in own_loops)
+
+        def walk_shallow(root):
+            """Pre-order, SOURCE-ORDER descendants of ``root`` excluding
+            nested function bodies (those are scanned on their own visit).
+            Source order matters: resolves/pickles of an evict proxy must
+            see the assignment that created it."""
+            stack = list(ast.iter_child_nodes(root))[::-1]
+            while stack:
+                n = stack.pop()
+                yield n
+                if not isinstance(n, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)):
+                    stack.extend(list(ast.iter_child_nodes(n))[::-1])
+
+        for sub in walk_shallow(func):
+            if isinstance(sub, (ast.For, ast.While, ast.AsyncFor)):
+                own_loops.append((sub.lineno, sub.end_lineno or sub.lineno))
+            if isinstance(sub, ast.Assign) and isinstance(
+                    sub.value, ast.Call):
+                cname = _call_name(sub.value.func)
+                targets: list[str] = []
+                for t in sub.targets:
+                    if isinstance(t, ast.Name):
+                        targets.append(t.id)
+                    elif isinstance(t, ast.Tuple):
+                        targets.extend(e.id for e in t.elts
+                                       if isinstance(e, ast.Name))
+                if cname in _BORROW_SOURCES:
+                    for t in targets:
+                        borrow_names[t] = sub.lineno
+                if cname == "materialize":
+                    materialized.update(targets)
+                if any(kw.arg == "evict"
+                       and isinstance(kw.value, ast.Constant)
+                       and kw.value.value is True
+                       for kw in sub.value.keywords):
+                    for t in targets:
+                        evict_names[t] = sub.lineno
+            if isinstance(sub, ast.Call):
+                cname = _call_name(sub.func)
+                if cname in _LIFECYCLE_DROPS:
+                    drops = True
+                if cname == "materialize":
+                    for a in sub.args:
+                        if isinstance(a, ast.Name):
+                            materialized.add(a.id)
+                # R3: resolution sites + pickle fan-out of evict proxies
+                if cname in ("extract", "resolve", "asarray", "array"):
+                    for a in sub.args:
+                        if isinstance(a, ast.Name) and a.id in evict_names:
+                            w = 2 if in_own_loop(sub) else 1
+                            resolves.setdefault(a.id, []).extend(
+                                [sub.lineno] * w)
+                if cname == "dumps" and in_own_loop(sub):
+                    for a in sub.args:
+                        if isinstance(a, ast.Name) and a.id in evict_names:
+                            self._flag(
+                                sub, "R3",
+                                f"evict=True proxy {a.id!r} pickled inside "
+                                f"a loop: each pickle increfs, but a "
+                                f"fan-out should mint one sibling per "
+                                f"consumer (proxy_batch / clone)")
+
+        if drops:
+            for sub in walk_shallow(func):
+                if isinstance(sub, (ast.Return, ast.Yield)) \
+                        and isinstance(sub.value, ast.Name):
+                    nm = sub.value.id
+                    if nm in borrow_names and nm not in materialized:
+                        self._flag(
+                            sub, "R2",
+                            f"{nm!r} aliases lifecycle-bound channel "
+                            f"memory (borrowed at line "
+                            f"{borrow_names[nm]}) and escapes a scope "
+                            f"that drops references; call "
+                            f"serialize.materialize({nm}) before the "
+                            f"last decref/evict")
+        for nm, sites in resolves.items():
+            if len(sites) >= 2:
+                # walk order is stack-based, not source order: flag the
+                # second resolve BY LINE so its allowlist comment matches
+                self._flag_at(
+                    sorted(sites)[1], "R3",
+                    f"evict=True proxy {nm!r} (created line "
+                    f"{evict_names[nm]}) is resolved more than once on "
+                    f"this path; the first resolve consumes its "
+                    f"reference — use into_owned()/borrow() for reuse")
+
+    def _flag_at(self, lineno: int, rule: str, message: str) -> None:
+        shim = ast.Pass(lineno=lineno, col_offset=0)
+        self._flag(shim, rule, message)
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one source string; ``path`` decides file-scoped rules."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, "E0",
+                        f"syntax error: {e.msg}")]
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._lint_parent = parent  # type: ignore[attr-defined]
+    norm = str(path).replace("\\", "/")
+    core = "repro/core/" in norm
+    linter = _Linter(str(path), source, core=core)
+    linter.visit(tree)
+    linter.findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return linter.findings
+
+
+def lint_file(path: str | Path) -> list[Finding]:
+    return lint_source(Path(path).read_text(encoding="utf-8"), str(path))
+
+
+def iter_py_files(paths: list[str]) -> Iterator[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(lint_file(f))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="proxylint: lifecycle/correctness rules R1-R6")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print only the summary line")
+    args = ap.parse_args(argv)
+    findings = lint_paths(args.paths)
+    if not args.quiet:
+        for f in findings:
+            print(f)
+    n_files = sum(1 for _ in iter_py_files(args.paths))
+    print(f"proxylint: {len(findings)} finding(s) in {n_files} file(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,205 @@
+"""Runtime sanitizer primitives (stdlib-only; the hooks live in core).
+
+The proxy paradigm moves every lifecycle bug far from its cause: a
+use-after-evict in one process corrupts a consumer in another, a leaked
+incref shows up as memory growth hours later, a double-decref kills a
+sibling's data.  This module holds the shared machinery the core layers
+hook into when sanitizing is on:
+
+* :func:`enabled` — the ``REPRO_SANITIZE`` env toggle (``Store`` also takes
+  ``sanitize=True`` per instance);
+* :class:`RefLedger` — a client-side mirror of every incref/decref this
+  process performs, with creation/release backtraces, raising
+  ``double-decref`` / ``use-after-evict`` at the call site and reporting
+  ``refcount-leak`` candidates (cross-checked against server counts) at
+  ``Store.close()``;
+* poison helpers — freed arena chunks are filled with ``0xDE`` and
+  quarantined a generation before reuse, so a stale zero-copy view reads
+  an unmistakable pattern instead of silently-recycled bytes;
+  :func:`check_view` (and the ``PSJ2`` magic check in ``deserialize``)
+  turn that pattern into a named ``poisoned-read`` diagnostic.
+
+Every sanitizer failure is a :class:`SanitizerError` carrying a stable
+``diagnostic`` name (``use-after-free-view``, ``refcount-leak``,
+``double-decref``, ``use-after-evict``, ``poisoned-read``,
+``non-idempotent-retry``) so tests and CI can match on the class of bug,
+not on message wording.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import traceback
+from typing import Any, Iterable
+
+POISON_BYTE = 0xDE
+_POISON_RUN = bytes([POISON_BYTE]) * 8
+
+
+def enabled() -> bool:
+    """True when the process-wide sanitizer toggle is on."""
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+class SanitizerError(RuntimeError, LookupError):
+    """A sanitizer detection.  ``diagnostic`` is the stable class name.
+
+    Subclasses ``LookupError`` too: a ``use-after-evict`` fires on paths
+    whose un-sanitized failure mode is a ``LookupError`` miss, and callers
+    matching on that must keep working under ``REPRO_SANITIZE=1``.
+    """
+
+    def __init__(self, diagnostic: str, message: str) -> None:
+        self.diagnostic = diagnostic
+        super().__init__(f"[{diagnostic}] {message}")
+
+
+class SanitizerWarning(UserWarning):
+    """Non-fatal sanitizer report (leak candidates at ``Store.close``)."""
+
+
+def borrow_site(skip: int = 2, limit: int = 8) -> str:
+    """Short formatted stack naming where a borrow/acquire happened,
+    ending at the caller ``skip`` frames up (dropping sanitizer frames)."""
+    frames = traceback.extract_stack()
+    frames = frames[:-skip] if skip else frames
+    return "".join(traceback.format_list(frames[-limit:])) or "  <unknown>\n"
+
+
+def looks_poisoned(buf: Any) -> bool:
+    """Heuristic: does this buffer start with the arena poison pattern?"""
+    try:
+        mv = memoryview(buf)
+        if mv.format != "B" or mv.ndim != 1:
+            mv = mv.cast("B")
+    except (TypeError, ValueError):
+        return False
+    if mv.nbytes == 0:
+        return False
+    head = bytes(mv[:len(_POISON_RUN)])
+    return head == _POISON_RUN[:len(head)]
+
+
+def check_view(buf: Any, what: str = "view") -> None:
+    """Raise ``poisoned-read`` if ``buf`` reads as poisoned memory — the
+    signature of holding a zero-copy view across its slot's free."""
+    if looks_poisoned(buf):
+        raise SanitizerError(
+            "poisoned-read",
+            f"{what} reads as 0xDE poison: the arena chunk behind it was "
+            f"freed (and quarantined) while this reference was still live. "
+            f"Pin the key with a refcount/lease, or serialize.materialize "
+            f"the object before the last decref/evict.")
+
+
+class _Entry:
+    __slots__ = ("acquired", "released", "transferred", "dead",
+                 "acquire_site", "release_site")
+
+    def __init__(self) -> None:
+        self.acquired = 0
+        self.released = 0
+        self.transferred = 0
+        self.dead = False
+        self.acquire_site: str | None = None
+        self.release_site: str | None = None
+
+
+class RefLedger:
+    """Client-side mirror of this process's refcount traffic for one store.
+
+    ``acquired`` counts local increfs (proxy creation, clones, explicit
+    ``Store.incref``); ``transferred`` counts increfs made on behalf of a
+    pickled sibling (the reference travels with the bytes and is released
+    by whoever unpickles them — possibly this same process, so transfers
+    raise the local release budget rather than being excluded from it);
+    ``released`` counts local decrefs.  A release beyond
+    ``acquired + transferred`` on a locally-acquired key is a
+    ``double-decref``; an incref on a key this process watched hit zero is
+    a ``use-after-evict``; a positive balance at close is a
+    ``refcount-leak`` candidate (confirmed against the server's count).
+    """
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._lock = threading.Lock()
+        self._entries: dict[Any, _Entry] = {}
+
+    def _entry(self, key: Any) -> _Entry:
+        e = self._entries.get(key)
+        if e is None:
+            e = self._entries[key] = _Entry()
+        return e
+
+    def incref(self, key: Any, n: int = 1, *, transfer: bool = False) -> None:
+        site = borrow_site(skip=3)
+        with self._lock:
+            e = self._entry(key)
+            if e.dead:
+                raise SanitizerError(
+                    "use-after-evict",
+                    f"store {self.name!r}: incref on key {key} after this "
+                    f"process observed its count hit zero (the channel "
+                    f"evicted it).\nLast released at:\n"
+                    f"{e.release_site or '  <unknown>'}")
+            if transfer:
+                e.transferred += n
+            else:
+                e.acquired += n
+            if e.acquire_site is None:
+                e.acquire_site = site
+
+    def decref(self, key: Any, n: int = 1) -> None:
+        """Record (and vet) a local release BEFORE it hits the channel."""
+        site = borrow_site(skip=3)
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                # reference acquired in another process (a pickled-in
+                # sibling): nothing to vet locally
+                return
+            budget = e.acquired + e.transferred
+            if e.acquired and e.released + n > budget:
+                raise SanitizerError(
+                    "double-decref",
+                    f"store {self.name!r}: key {key} released "
+                    f"{e.released + n} times against {e.acquired} local + "
+                    f"{e.transferred} transferred acquisition(s).\n"
+                    f"First acquired at:\n{e.acquire_site or '  <unknown>'}"
+                    f"Previous release at:\n{e.release_site or '  <unknown>'}")
+            e.released += n
+            e.release_site = site
+
+    def mark_dead(self, key: Any) -> None:
+        """The channel reported count zero for ``key`` (it is gone)."""
+        with self._lock:
+            self._entry(key).dead = True
+
+    def is_dead(self, key: Any) -> bool:
+        with self._lock:
+            e = self._entries.get(key)
+            return bool(e and e.dead)
+
+    def leak_candidates(self) -> list[tuple[Any, int, str]]:
+        """``(key, balance, acquire_site)`` for keys whose local
+        acquisitions outnumber releases + transfers."""
+        with self._lock:
+            out = []
+            for key, e in self._entries.items():
+                balance = e.acquired - e.released - e.transferred
+                if balance > 0 and not e.dead:
+                    out.append((key, balance,
+                                e.acquire_site or "  <unknown>\n"))
+            return out
+
+    def format_leaks(self, confirmed: Iterable[tuple[Any, int, int, str]],
+                     ) -> str:
+        confirmed = list(confirmed)
+        lines = [f"[refcount-leak] store {self.name!r}: "
+                 f"{len(confirmed)} leaked reference(s) at close"]
+        for key, balance, server, site in confirmed:
+            lines.append(
+                f"  key {key}: {balance} unreleased local ref(s), server "
+                f"count {server}; first acquired at:\n{site}")
+        return "\n".join(lines)

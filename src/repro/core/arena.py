@@ -49,12 +49,14 @@ from __future__ import annotations
 import inspect
 import os
 import struct
+import sys
 import threading
 import uuid
 from multiprocessing import shared_memory
 from pathlib import Path
 from typing import Any, Iterator
 
+from repro.analysis import sanitize as _san
 from repro.core.serialize import copy_segments_into
 
 # -- slot states (one byte; the publication point) --------------------------
@@ -174,9 +176,18 @@ class Arena:
 
     def __init__(self, name: str, *, create: bool = False,
                  size: int = DEFAULT_ARENA_SIZE,
-                 nslots: int = DEFAULT_NSLOTS) -> None:
+                 nslots: int = DEFAULT_NSLOTS,
+                 sanitize: bool = False) -> None:
         self.name = name
         self.owner = create
+        self.sanitize = bool(sanitize)
+        # sanitizer state: views this process exported via read() (slot ->
+        # [_Export]), and the owner's freed-chunk quarantine (reuse only
+        # after a strictly younger free, so stale views read poison, not a
+        # silently-recycled object)
+        self._exports: dict[int, list[_Export]] = {}
+        self._quarantine: list[tuple[int, int, int]] = []
+        self._epoch = 0
         if create:
             data_off = -(-(_HEADER_SPAN + nslots * SLOT_SIZE) // _ALIGN) \
                 * _ALIGN
@@ -238,11 +249,14 @@ class Arena:
         """Reserve a chunk + slot for ``nbytes``; returns the slot index or
         None when this arena cannot fit it.  The slot is WRITING (invisible
         to readers) until :meth:`commit`."""
-        assert self.owner, "only the creating process allocates"
+        if not self.owner:
+            raise RuntimeError("only the creating process allocates")
         klass = size_class(nbytes)
         chunk = 1 << klass
         if chunk > self.size - self.data_off:
             return None
+        if self.sanitize:
+            self._drain_quarantine()
         free = self._free_chunks.get(klass)
         if free:
             offset = free.pop()
@@ -251,6 +265,8 @@ class Arena:
             self._bump += chunk
         else:
             self.reclaim()
+            if self.sanitize:
+                self._drain_quarantine()
             free = self._free_chunks.get(klass)
             if not free:
                 return None
@@ -289,19 +305,68 @@ class Arena:
 
     def free(self, slot: int, gen: int | None = None) -> bool:
         """Owner-side reclaim: generation bump kills stale keys, chunk goes
-        back on its class free list."""
-        assert self.owner
-        state, klass, _pad, cur_gen, _freq, _size, offset, _id = \
+        back on its class free list (via a one-free quarantine, poisoned
+        0xDE, when sanitizing)."""
+        if not self.owner:
+            raise RuntimeError("only the creating process frees slots")
+        state, klass, _pad, cur_gen, _freq, size, offset, _id = \
             self._entry(slot)
         if state == FREE or (gen is not None and gen != cur_gen):
             return False
+        if self.sanitize:
+            self._check_exports(slot, cur_gen)
         next_gen = (cur_gen + 1) & 0xFFFFFFFF
         if next_gen == _NO_FREQ:          # never collide with the sentinel
             next_gen = 0
         self._write_entry(slot, FREE, 0, next_gen, 0, 0, NO_ID)
-        self._free_chunks.setdefault(klass, []).append(offset)
+        if self.sanitize:
+            if size:
+                self.seg.buf[offset:offset + size] = \
+                    bytes([_san.POISON_BYTE]) * size
+            self._epoch += 1
+            self._quarantine.append((klass, offset, self._epoch))
+        else:
+            self._free_chunks.setdefault(klass, []).append(offset)
         self._free_slots.append(slot)
         return True
+
+    # -- sanitizer hooks -----------------------------------------------------
+    def _drain_quarantine(self) -> None:
+        """Release quarantined chunks freed strictly before the newest
+        free: a use-after-free view must observe poison at least until
+        another free happens, never a silently-recycled object."""
+        if not self._quarantine:
+            return
+        keep: list[tuple[int, int, int]] = []
+        for klass, offset, epoch in self._quarantine:
+            if epoch < self._epoch:
+                self._free_chunks.setdefault(klass, []).append(offset)
+            else:
+                keep.append((klass, offset, epoch))
+        self._quarantine = keep
+
+    def _check_exports(self, slot: int, gen: int) -> None:
+        """Raise ``use-after-free-view`` if this process still holds a live
+        zero-copy view of the slot being freed."""
+        recs = self._exports.get(slot)
+        if not recs:
+            return
+        # registry ref + getrefcount's argument = 2; anything above means
+        # a caller still holds the view
+        live = [r for r in recs if sys.getrefcount(r.view) > 2]
+        if not live:
+            self._exports.pop(slot, None)
+            return
+        self._exports[slot] = live
+        for rec in live:
+            if rec.gen == gen:
+                raise _san.SanitizerError(
+                    "use-after-free-view",
+                    f"arena {self.name} slot {slot} gen {gen}: freeing a "
+                    f"chunk while a zero-copy view of it is still live in "
+                    f"this process.  View borrowed at:\n{rec.site}"
+                    f"serialize.materialize the object (or drop the view) "
+                    f"before the last decref/evict.")
 
     def reclaim(self) -> int:
         """Sweep slots with a matching free request (non-owner evictions)
@@ -327,7 +392,14 @@ class Arena:
             return None
         if offset + size > self.size:
             return None
-        return self.seg.buf[offset:offset + size]
+        view = self.seg.buf[offset:offset + size]
+        if self.sanitize:
+            recs = self._exports.setdefault(slot, [])
+            if len(recs) >= 8:  # prune dropped views before growing
+                recs[:] = [r for r in recs
+                           if sys.getrefcount(r.view) > 2]
+            recs.append(_Export(view, gen, _san.borrow_site(skip=2)))
+        return view
 
     def committed(self, slot: int, gen: int) -> bool:
         if not 0 <= slot < self.nslots:
@@ -365,6 +437,17 @@ class Arena:
             if state == COMMITTED and freq != gen:
                 yield slot, gen, size
 
+    def slot_records(self) -> Iterator[tuple[int, int, int, bytes]]:
+        """Yield (slot, gen, size, idbytes) for every committed slot —
+        the sweep-report view of what an arena still holds."""
+        for slot in range(min(self.slots_used, self.nslots)):
+            state, _k, _pad, gen, freq, size, _off, sid = self._entry(slot)
+            if state == COMMITTED and freq != gen:
+                yield slot, gen, size, sid
+
+    def enable_sanitizer(self) -> None:
+        self.sanitize = True
+
     def close(self) -> None:
         close_mapping(self.seg)
 
@@ -373,6 +456,23 @@ class Arena:
             _unlink_segment(self.seg)
         except FileNotFoundError:
             pass
+
+
+class _Export:
+    """One zero-copy view handed out by :meth:`Arena.read` (sanitizer).
+
+    A ``memoryview`` is neither weakref-able nor subclassable, so liveness
+    is judged by refcount: the registry holds exactly one reference, and
+    ``sys.getrefcount`` adds one for its argument — above 2 means a caller
+    still holds the view.  Same-process tracking only, by construction.
+    """
+
+    __slots__ = ("view", "gen", "site")
+
+    def __init__(self, view: memoryview, gen: int, site: str) -> None:
+        self.view = view
+        self.gen = gen
+        self.site = site
 
 
 class ArenaPool:
@@ -387,14 +487,17 @@ class ArenaPool:
 
     def __init__(self, registry_dir: str,
                  arena_size: int = DEFAULT_ARENA_SIZE,
-                 nslots: int = DEFAULT_NSLOTS) -> None:
+                 nslots: int = DEFAULT_NSLOTS,
+                 sanitize: bool | None = None) -> None:
         self._dir = Path(registry_dir)
         self._dir.mkdir(parents=True, exist_ok=True)
         self.arena_size = int(arena_size)
         self.nslots = int(nslots)
+        self.sanitize = _san.enabled() if sanitize is None else bool(sanitize)
         self._lock = threading.RLock()
         self._owned: list[Arena] = []          # allocation order
         self._attached: dict[str, Arena | None] = {}  # name -> arena/dead
+        self.last_sweep_report: list[dict[str, Any]] = []
 
     # -- arena lifecycle -----------------------------------------------------
     def _marker(self, name: str) -> Path:
@@ -402,7 +505,8 @@ class ArenaPool:
 
     def _create_arena(self, size: int, nslots: int) -> Arena:
         name = f"psja_{uuid.uuid4().hex[:16]}"
-        arena = Arena(name, create=True, size=size, nslots=nslots)
+        arena = Arena(name, create=True, size=size, nslots=nslots,
+                      sanitize=self.sanitize)
         self._marker(name).write_text(str(os.getpid()))
         self._owned.append(arena)
         self._attached[name] = arena
@@ -415,11 +519,21 @@ class ArenaPool:
             if arena is not _ABSENT:
                 return arena
             try:
-                arena = Arena(name)
+                arena = Arena(name, sanitize=self.sanitize)
             except (FileNotFoundError, ValueError):
                 arena = None
             self._attached[name] = arena
             return arena
+
+    def enable_sanitizer(self) -> None:
+        """Turn sanitizing on for this pool and every mapped arena."""
+        with self._lock:
+            self.sanitize = True
+            for arena in self._owned:
+                arena.enable_sanitizer()
+            for arena in self._attached.values():
+                if arena is not None:
+                    arena.enable_sanitizer()
 
     def discover(self) -> list[str]:
         """Arena names published in the registry dir (any process)."""
@@ -524,8 +638,15 @@ class ArenaPool:
         owner process is dead (nothing will reclaim them) — and with it,
         legacy ``*.json`` sidecars + their segments from the pre-arena
         layout, so a restarted registry dir cannot leak segments.
+
+        Every dead-owner arena's surviving objects are itemized (arena,
+        slot, gen, size, owner pid, embedded id) in ``last_sweep_report``
+        — whether or not they are reclaimed — so CI output shows *what*
+        leaked, not just a count.  Sanitizing pools also print the report
+        to stderr.
         """
         n = 0
+        report: list[dict[str, Any]] = []
         for tmp in self._dir.glob(".*.tmp"):
             tmp.unlink(missing_ok=True)
             n += 1
@@ -538,13 +659,31 @@ class ArenaPool:
                 n += 1
                 continue
             try:
-                if clear and not _pid_alive(arena.owner_pid):
+                pid = arena.owner_pid
+                alive = _pid_alive(pid)
+                if not alive:
+                    for slot, gen, size, sid in arena.slot_records():
+                        report.append({
+                            "arena": name, "slot": slot, "gen": gen,
+                            "size": size, "owner_pid": pid,
+                            "reclaimed": bool(clear),
+                            "id": sid.hex() if sid != NO_ID else None,
+                        })
+                if clear and not alive:
                     arena.unlink()
                     marker.unlink(missing_ok=True)
                     n += 1
             finally:
                 if self._attached.get(name) is not arena:
                     arena.close()
+        self.last_sweep_report = report
+        if self.sanitize and report:
+            for rec in report:
+                print(f"[arena-sweep] orphaned slot "
+                      f"{rec['arena']}:{rec['slot']}@{rec['gen']} "
+                      f"size={rec['size']} owner_pid={rec['owner_pid']} "
+                      f"(dead) id={rec['id']} "
+                      f"reclaimed={rec['reclaimed']}", file=sys.stderr)
         if clear:
             for sidecar in self._dir.glob("*.json"):
                 try:

@@ -94,6 +94,10 @@ class KVServerConnector(BaseConnector):
     def refcount(self, key: Key) -> int:
         return self._client.refcount(key[3])
 
+    def ref_snapshot(self) -> dict[str, int]:
+        """Server's full refcount table (sanitizer cross-check)."""
+        return self._client.refsnap()
+
     def touch(self, key: Key, ttl: float | None) -> bool:
         return self._client.touch(key[3], ttl)
 

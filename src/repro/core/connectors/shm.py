@@ -165,6 +165,12 @@ class SharedMemoryConnector(BaseConnector):
     def stats(self) -> dict[str, Any]:
         return self._pool.stats()
 
+    def enable_sanitizer(self) -> None:
+        """Poison-on-free + quarantine + exported-view tracking for every
+        arena this connector maps (``Store(..., sanitize=True)`` calls
+        this; ``REPRO_SANITIZE=1`` enables it at pool construction)."""
+        self._pool.enable_sanitizer()
+
     def close(self) -> None:
         """Unlink arenas created by this process, detach attached ones.
         Mappings with exported zero-copy views stay alive for the GC."""

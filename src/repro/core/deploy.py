@@ -52,8 +52,8 @@ def _spawn(module: str, args: list[str], ready_file: str,
     proc = subprocess.Popen(cmd, env=env, stdout=subprocess.DEVNULL,
                             stderr=subprocess.PIPE,
                             start_new_session=True)
-    deadline = time.time() + timeout
-    while time.time() < deadline:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
         if Path(ready_file).exists():
             return proc, Path(ready_file).read_text().split(":")
         if proc.poll() is not None:

@@ -387,6 +387,7 @@ class LifetimeTable:
         self.refs: dict[str, int] = {}       # refcounted keys -> count
         self.leases: dict[str, float] = {}   # key -> absolute expiry time
         self.n_expired = 0
+        self.n_legacy_evicts = 0             # decrefs on unmanaged keys
         self._next_sweep = 0.0
         self._evict_fn = evict_fn
 
@@ -405,6 +406,7 @@ class LifetimeTable:
         if count is None:
             # legacy fire-and-forget: a decref on an unmanaged key is the
             # old hard evict, so pre-ownership evict=True proxies still work
+            self.n_legacy_evicts += 1
             self._evict_fn(key)
             return 0
         count -= int(n)
@@ -442,7 +444,13 @@ class LifetimeTable:
     def stats(self) -> dict:
         return {"n_refcounted": len(self.refs),
                 "n_leases": len(self.leases),
-                "n_expired": self.n_expired}
+                "n_expired": self.n_expired,
+                "n_legacy_evicts": self.n_legacy_evicts}
+
+    def snapshot(self) -> dict[str, int]:
+        """Copy of the full per-key refcount table (the sanitizer's
+        close-time cross-check reads this)."""
+        return dict(self.refs)
 
 
 # ---------------------------------------------------------------------------
@@ -687,6 +695,9 @@ class KVServer:
                     "data": [self.lifetime.decref(k, n) for k in req["keys"]]}
         if op == "refcount":
             return {"ok": True, "data": self.lifetime.refs.get(req["key"], 0)}
+        if op == "refsnap":
+            # sanitizer close-time cross-check: the whole refcount table
+            return {"ok": True, "data": self.lifetime.snapshot()}
         if op == "touch":
             return {"ok": True, "data": self._touch(req["key"], req.get("ttl"))}
         if op == "mtouch":
@@ -1247,7 +1258,8 @@ async def serve(host: str, port: int, persist_dir: str | None,
         actual_port = server.sockets[0].getsockname()[1]
     if ready_file:
         tmp = Path(ready_file + ".tmp")
-        # host may itself contain ':' (unix:/path) — readers rsplit
+        # host may itself contain ':' (unix:/path) — readers rsplit;
+        # one-time startup write, no clients yet  # lint: blocking-ok
         tmp.write_text(f"{host}:{actual_port}:{os.getpid()}")
         tmp.replace(ready_file)
     sweeper = asyncio.create_task(_expiry_backstop(kv))
@@ -1495,6 +1507,19 @@ class KVClient:
         """
         if retry is None:
             retry = msg.get("op") in IDEMPOTENT_OPS
+        elif retry and msg.get("op") not in IDEMPOTENT_OPS:
+            # a forced retry on a non-idempotent op can double-commit the
+            # effect (double put, double decref, duplicated stream item) —
+            # under the sanitizer that is a hard error, not a footgun
+            from repro.analysis import sanitize as _san
+
+            if _san.enabled():
+                raise _san.SanitizerError(
+                    "non-idempotent-retry",
+                    f"op {msg.get('op')!r} forced retry=True: the server "
+                    f"may have committed the effect before the link died, "
+                    f"so re-issuing can double-apply it.  Retry only "
+                    f"members of IDEMPOTENT_OPS.")
         policy = self.retry_policy
         attempts = max(1, policy.max_attempts) if retry else 1
         delay = policy.base_delay_s
@@ -1727,6 +1752,10 @@ class KVClient:
 
     def refcount(self, key: str) -> int:
         return int(self._data_op({"op": "refcount", "key": key}))
+
+    def refsnap(self) -> dict[str, int]:
+        """Full server refcount table (sanitizer close-time cross-check)."""
+        return dict(self._data_op({"op": "refsnap"}) or {})
 
     def touch(self, key: str, ttl: float | None) -> bool:
         """Set/refresh (or clear, for ttl None/<=0) a TTL lease on ``key``;

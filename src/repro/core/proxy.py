@@ -283,11 +283,15 @@ class _Resolved:
 
 def _quiet_release(release_fn: Callable[[], Any]) -> None:
     """GC-time release: the store/server may already be gone — a leaked
-    reference is bounded by its lease, so never raise out of a finalizer."""
+    reference is bounded by its lease, so never raise out of a finalizer.
+    Sanitizer detections (double-decref from a finalizer racing an
+    explicit release, use-after-evict) DO propagate: hiding them defeats
+    the point of running sanitized."""
     try:
         release_fn()
-    except Exception:  # noqa: BLE001 - GC context, lease is the backstop
-        pass
+    except Exception as exc:  # noqa: BLE001 - GC context, lease backstop
+        if getattr(exc, "diagnostic", None) is not None:
+            raise
 
 
 class OwnedProxy(Proxy[T]):

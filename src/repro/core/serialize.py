@@ -504,6 +504,12 @@ def deserialize(data) -> Any:
     if magic == _MAGIC_V1:
         return _decode_v1(mv)
     if magic != _MAGIC_V2:
+        if magic == b"\xde\xde\xde\xde":
+            # the arena sanitizer's poison fill: this payload's backing
+            # chunk was freed while a reference to it was still live
+            from repro.analysis.sanitize import check_view
+
+            check_view(mv, what="serialized payload")
         raise ValueError("not a repro-serialized payload (bad magic)")
     if mv.nbytes < _HEADER.size:
         raise ValueError(

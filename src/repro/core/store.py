@@ -22,11 +22,13 @@ from __future__ import annotations
 import pickle
 import threading
 import uuid as uuid_mod
+import warnings
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, Sequence
 
+from repro.analysis import sanitize as _san
 from repro.core.connector import (Connector, Key, import_path,
                                   resolve_import_path)
 from repro.core.proxy import OwnedProxy, Proxy, get_factory, is_proxy
@@ -312,7 +314,7 @@ class StoreFactory:
                 if self._spent:
                     raise RuntimeError("cannot pickle a released OwnedProxy")
                 # clone-on-pickle: the communicated copy owns its own ref
-                self._store().incref(self.key)
+                self._store()._incref_transfer(self.key)
             elif self.evict:
                 if self._spent:
                     state["evict"] = False   # reference already consumed
@@ -320,7 +322,7 @@ class StoreFactory:
                     # the communicated sibling carries its own reference,
                     # so N consumers across processes all resolve and the
                     # key dies exactly once, after the last of them
-                    self._store().incref(self.key)
+                    self._store()._incref_transfer(self.key)
         state["_spent"] = False
         return state
 
@@ -336,7 +338,8 @@ class Store:
                  cache_size: int = 16,
                  serializer: Callable[[Any], bytes] | None = None,
                  deserializer: Callable[[bytes], Any] | None = None,
-                 register: bool = True) -> None:
+                 register: bool = True,
+                 sanitize: bool | None = None) -> None:
         self.name = name
         self.connector = connector
         # register FIRST: a duplicate name must fail before this instance
@@ -348,6 +351,12 @@ class Store:
         self._deserialize = deserializer or deserialize
         self.cache = _LRUCache(cache_size)
         self.cache_size = cache_size
+        self.sanitize = _san.enabled() if sanitize is None else bool(sanitize)
+        self._ledger = _san.RefLedger(name) if self.sanitize else None
+        if self.sanitize:
+            enable = getattr(connector, "enable_sanitizer", None)
+            if callable(enable):
+                enable()
 
     # -- config round trip -----------------------------------------------------
     def config(self) -> StoreConfig:
@@ -569,15 +578,30 @@ class Store:
     # -- lifecycle: refcounts + leases -------------------------------------------
     def incref(self, key: Key, n: int = 1) -> int:
         """Add ``n`` references to ``key``; returns the new count."""
-        return int(self.connector.incref(tuple(key), n))
+        key = tuple(key)
+        if self._ledger is not None:
+            self._ledger.incref(key, n)
+        return int(self.connector.incref(key, n))
+
+    def _incref_transfer(self, key: Key, n: int = 1) -> int:
+        """Incref on behalf of a pickled sibling: the reference travels
+        with the bytes and is released by whoever unpickles them."""
+        key = tuple(key)
+        if self._ledger is not None:
+            self._ledger.incref(key, n, transfer=True)
+        return int(self.connector.incref(key, n))
 
     def decref(self, key: Key, n: int = 1) -> int:
         """Drop ``n`` references; the connector evicts the key (exactly
         once) when the count reaches zero."""
         key = tuple(key)
+        if self._ledger is not None:
+            self._ledger.decref(key, n)   # raises double-decref pre-channel
         count = int(self.connector.decref(key, n))
         if count <= 0:
             self.cache.pop(key)
+            if self._ledger is not None:
+                self._ledger.mark_dead(key)
         return count
 
     def refcount(self, key: Key) -> int:
@@ -602,7 +626,7 @@ class Store:
         if evict:
             # refcounted ephemeral: this sibling holds one reference,
             # dropped on resolve — the key dies after the LAST consumer
-            self.connector.incref(key)
+            self.incref(key)
         if ttl is not None:
             # lease backstop: a pickled-but-never-delivered sibling (or a
             # consumer that dies before resolving) cannot leak the key
@@ -614,6 +638,9 @@ class Store:
                     ttl: float | None = None) -> list[Proxy]:
         keys = self.put_batch(objs)  # single batch op (e.g. one Globus task)
         if evict:
+            if self._ledger is not None:
+                for k in keys:
+                    self._ledger.incref(tuple(k))
             self.connector.incref_batch([tuple(k) for k in keys])  # one exchange
         if ttl is not None:
             self.connector.touch_batch([tuple(k) for k in keys], ttl)
@@ -634,7 +661,7 @@ class Store:
     def owned_proxy_from_key(self, key: Key,
                              ttl: float | None = None) -> OwnedProxy:
         key = tuple(key)
-        self.connector.incref(key)
+        self.incref(key)
         if ttl is not None:
             self.connector.touch(key, ttl)
         return OwnedProxy(StoreFactory(key=key, store_config=self.config(),
@@ -660,9 +687,26 @@ class Store:
         return out
 
     def close(self, *, close_connector: bool = True) -> None:
+        if self._ledger is not None:
+            self._report_leaks()
         unregister_store(self.name)
         if close_connector:
             self.connector.close()
+
+    def _report_leaks(self) -> None:
+        """Cross-check the ledger's leak candidates against server counts
+        and warn (non-fatally) about confirmed unreleased references."""
+        confirmed = []
+        for key, balance, site in self._ledger.leak_candidates():
+            try:
+                server = int(self.connector.refcount(key))
+            except Exception:  # noqa: BLE001 - channel gone: cannot confirm
+                continue
+            if server > 0:
+                confirmed.append((key, balance, server, site))
+        if confirmed:
+            warnings.warn(self._ledger.format_leaks(confirmed),
+                          _san.SanitizerWarning, stacklevel=3)
 
     def __repr__(self) -> str:
         return f"Store(name={self.name!r}, connector={type(self.connector).__name__})"

@@ -27,8 +27,8 @@ class HeartbeatWriter:
     def beat(self, **info) -> None:
         self._seq += 1
         tmp = self.path.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"ts": time.time(), "seq": self._seq,
-                                   **info}))
+        tmp.write_text(json.dumps({  # lint: wallclock-ok (beat timestamp)
+            "ts": time.time(), "seq": self._seq, **info}))
         tmp.replace(self.path)
 
 
@@ -61,6 +61,7 @@ class HeartbeatMonitor:
             marker = (info.get("seq"), info.get("ts"), mtime)
             prev = self._seen.get(f.stem)
             if prev is None:            # first sight: mtime-delta bootstrap
+                # wall-clock vs file mtime, by design  # lint: wallclock-ok
                 age = max(0.0, time.time() - mtime)
                 self._seen[f.stem] = (marker, mono - age)
             elif marker != prev[0]:     # beat observed: reset the age

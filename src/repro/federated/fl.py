@@ -165,7 +165,7 @@ class FLOrchestrator:
         store_blob = pickle.dumps(self.store.config()) \
             if fl.transport == "proxy" else None
         fl_blob = pickle.dumps(fl)
-        t0 = time.time()
+        t0 = time.perf_counter()
         futures = {}
         for w in range(n):
             fut = self.executor.submit(
@@ -196,7 +196,7 @@ class FLOrchestrator:
             release(model_ref)   # eviction happens after the LAST worker's
         info = {"round": rnd, "workers": n, "ok": len(updates),
                 "failures": failures, "stragglers": stragglers,
-                "wall_s": time.time() - t0}
+                "wall_s": time.perf_counter() - t0}
         self.log.append(info)
         return info
 
@@ -280,7 +280,7 @@ class FLOrchestrator:
         losses = [self.eval_loss()]
         self._dispatch_round(0, weight_futs[0].proxy(), topics[0], counts[0])
         for rnd in range(fl.rounds):
-            t0 = time.time()
+            t0 = time.perf_counter()
             if rnd + 1 < fl.rounds:
                 # next round goes out NOW: its workers transit the cloud
                 # hop and park in wait while this round aggregates
@@ -298,7 +298,8 @@ class FLOrchestrator:
                 weight_futs[rnd + 1].set_result(self.params)  # release them
             info = {"round": rnd, "workers": counts[rnd],
                     "ok": len(updates), "failures": failures,
-                    "stragglers": stragglers, "wall_s": time.time() - t0}
+                    "stragglers": stragglers,
+                    "wall_s": time.perf_counter() - t0}
             self.log.append(info)
             losses.append(self.eval_loss())
         return {"losses": losses, "rounds": self.log}

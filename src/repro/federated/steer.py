@@ -91,7 +91,7 @@ class Steering:
 
     def run(self, fn: Callable, make_input: Callable[[int], Any],
             n_tasks: int, n_outstanding: int = 4) -> dict:
-        t0 = time.time()
+        t0 = time.perf_counter()
         submitted = received = 0
         results = []
         while received < n_tasks:
@@ -104,7 +104,7 @@ class Steering:
                 value = extract(value)
             results.append(value)
             received += 1
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         return {"wall_s": wall, "tasks_per_s": n_tasks / wall,
                 "server_bytes": self.server.bytes_moved,
                 "results": results}

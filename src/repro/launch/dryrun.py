@@ -173,13 +173,13 @@ def lower_cell(cfg, shape, mesh, *, opt_cfg=None, rules_overrides=None,
     rules = make_rules(mesh, fsdp=fsdp, overrides=rules_overrides)
     with sharding_rules(mesh, rules):
         spec = _shardings_for(mesh, rules, cfg, shape, shape.kind, opt_cfg)
-        t0 = time.time()
+        t0 = time.perf_counter()
         jitted = jax.jit(spec["fn"], in_shardings=spec["in_shardings"],
                          out_shardings=spec["out_shardings"],
                          donate_argnums=spec["donate"])
         lowered = jitted.lower(*spec["args"])
         compiled = lowered.compile()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
     return compiled, dt
 
 
@@ -318,7 +318,7 @@ def main() -> None:
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                t0 = time.time()
+                t0 = time.perf_counter()
                 r = run_cell(arch, shape, mp, out_dir=Path(args.out),
                              force=args.force, skip_cost=args.skip_cost,
                              fsdp=not args.no_fsdp)
@@ -326,7 +326,7 @@ def main() -> None:
                 print(f"{r['cell']:58s} {r['status']:8s} "
                       f"peak={mem/1e9:.2f}GB " if mem else
                       f"{r['cell']:58s} {r['status']:8s} ",
-                      f"({time.time()-t0:.0f}s)", flush=True)
+                      f"({time.perf_counter()-t0:.0f}s)", flush=True)
 
 
 if __name__ == "__main__":

@@ -88,7 +88,7 @@ class Trainer:
             self.store, _make_batch_fn(self.cfg, tc),
             n_producers=tc.n_producers, redundancy=tc.redundancy,
             start_index=start)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             for step in range(start, tc.steps):
                 if tc.crash_at_step is not None and step == tc.crash_at_step:
@@ -98,7 +98,8 @@ class Trainer:
                 if (step + 1) % tc.log_every == 0 or step + 1 == tc.steps:
                     m = {k: float(np.asarray(v)) for k, v in metrics.items()}
                     m["step"] = step + 1
-                    m["s_per_step"] = (time.time() - t0) / (step + 1 - start)
+                    m["s_per_step"] = \
+                        (time.perf_counter() - t0) / (step + 1 - start)
                     self.history.append(m)
                     print(f"[trainer] step {step+1}/{tc.steps} "
                           f"loss={m['loss']:.4f} "

@@ -1,0 +1,18 @@
+"""R1 fixture: wall-clock in deadline arithmetic fires; timestamps
+allowlist.  Linted by tests, never imported."""
+import time
+from time import time as now
+
+
+def bad_deadline(timeout):
+    deadline = time.time() + timeout          # FIRES: arithmetic
+    while time.time() < deadline:             # FIRES: comparison
+        pass
+
+
+def bad_alias(t0):
+    return now() - t0                         # FIRES: through the alias
+
+
+def ok_manifest():
+    return {"ts": time.time()}  # lint: wallclock-ok

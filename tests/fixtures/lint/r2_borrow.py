@@ -1,0 +1,26 @@
+"""R2 fixture: a borrowed channel view escaping a scope that drops
+references.  Linted by tests, never imported."""
+
+
+def bad_escape(arena, store, slot, gen, key):
+    view = arena.read(slot, gen)
+    store.decref(key)
+    return view                               # FIRES: un-materialized escape
+
+
+def ok_materialized(arena, store, slot, gen, key):
+    view = arena.read(slot, gen)
+    obj = materialize(view)                   # noqa: F821 - AST fixture
+    store.decref(key)
+    return obj
+
+
+def ok_allowlisted(arena, store, slot, gen, key):
+    view = arena.read(slot, gen)
+    store.decref(key)
+    return view  # lint: borrow-ok
+
+
+def ok_no_drop(arena, slot, gen):
+    view = arena.read(slot, gen)
+    return view                               # no drops in scope: fine

@@ -1,0 +1,29 @@
+"""R3 fixture: evict=True proxies double-resolved / pickled into a
+fan-out.  Linted by tests, never imported."""
+import pickle
+
+
+def bad_double_resolve(store, obj):
+    p = store.proxy(obj, evict=True)
+    a = extract(p)                            # noqa: F821 - consumes the ref
+    b = extract(p)                            # noqa: F821 - FIRES: 2nd resolve
+    return a, b
+
+
+def bad_pickle_fanout(store, obj, workers):
+    p = store.proxy(obj, evict=True)
+    for w in workers:
+        w.send(pickle.dumps(p))               # FIRES: fan-out pickle in loop
+    return None
+
+
+def ok_single(store, obj):
+    p = store.proxy(obj, evict=True)
+    return extract(p)                         # noqa: F821
+
+
+def ok_allowlisted(store, obj):
+    p = store.proxy(obj, evict=True)
+    a = extract(p)                            # noqa: F821
+    b = extract(p)  # lint: evict-ok          # noqa: F821
+    return a, b

@@ -1,0 +1,12 @@
+"""R4 fixture: bare asserts guarding runtime invariants (the test lints
+this source AS IF it lived under src/repro/core/).  Never imported."""
+
+
+def bad_guard(frame):
+    assert frame, "empty frame"               # FIRES under a core path
+    return frame
+
+
+def ok_allowlisted(frame):
+    assert frame is not None  # lint: assert-ok
+    return frame

@@ -1,0 +1,20 @@
+"""R5 fixture: blocking calls inside async defs (the test lints this
+source AS IF it were kv_tcp.py).  Never imported."""
+import time
+
+
+async def bad_handler(sock, path):
+    time.sleep(0.1)                           # FIRES: sleeps the loop
+    data = open(path)                         # FIRES: sync file I/O
+    sock.sendall(data)                        # FIRES: sync socket op
+    return data
+
+
+async def ok_allowlisted(path):
+    open(path)  # lint: blocking-ok
+    return None
+
+
+def ok_sync_scope(path):
+    time.sleep(0.0)                           # not async: fine
+    return open(path)

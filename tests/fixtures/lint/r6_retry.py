@@ -1,0 +1,25 @@
+"""R6 fixture: non-idempotent KV ops riding retries.  Linted by tests,
+never imported."""
+
+
+@with_retries                                 # noqa: F821 - AST fixture
+def bad_decref_in_retry(client, key):
+    return client.decref(key)                 # FIRES: retry-decorated scope
+
+
+def bad_forced_retry(client):
+    client.request({"op": "decref", "key": "k"}, retry=True)   # FIRES
+    return client.put2("k", b"v", retry=True)                  # FIRES
+
+
+def bad_wrapped(client, key):
+    return with_retries(lambda: client.s_append(key, b"x"))    # noqa: F821
+
+
+def ok_idempotent(client, key):
+    return client.get2(key)
+
+
+@with_retries                                 # noqa: F821
+def ok_allowlisted(client, key):
+    return client.decref(key)  # lint: retry-ok

@@ -1,0 +1,272 @@
+"""The two-headed correctness tool: proxylint rule fixtures (each R1-R6
+fires; each allowlist suppresses) and the runtime sanitizer's four seeded
+defect classes (use-after-free view, refcount leak, double-decref,
+poisoned stale read), each detected with its named diagnostic."""
+import multiprocessing as mp
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import SanitizerError, SanitizerWarning
+from repro.analysis.lint import lint_file, lint_paths, lint_source, main
+from repro.analysis.sanitize import RefLedger, check_view, looks_poisoned
+from repro.core import deserialize, serialize
+from repro.core.arena import ArenaPool
+from repro.core.connectors.memory import LocalMemoryConnector
+from repro.core.store import Store
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _lint_fixture(name: str, as_path: str | None = None):
+    src = (FIXTURES / name).read_text(encoding="utf-8")
+    return lint_source(src, as_path or str(FIXTURES / name))
+
+
+def _assert_allowlist_suppressed(findings, name: str, tag: str) -> None:
+    """No finding may land on a line carrying its allowlist tag."""
+    lines = (FIXTURES / name).read_text(encoding="utf-8").splitlines()
+    tagged = {i + 1 for i, ln in enumerate(lines) if f"lint: {tag}" in ln}
+    assert not {f.line for f in findings} & tagged
+
+
+# ---------------------------------------------------------------------------
+# Head 1: proxylint rule fixtures
+# ---------------------------------------------------------------------------
+def test_r1_wallclock_fires_and_allowlists():
+    findings = _lint_fixture("r1_wallclock.py")
+    assert [f.rule for f in findings] == ["R1"] * 3
+    assert any("monotonic" in f.message for f in findings)
+    _assert_allowlist_suppressed(findings, "r1_wallclock.py", "wallclock-ok")
+
+
+def test_r2_borrowed_view_escape():
+    findings = _lint_fixture("r2_borrow.py")
+    assert [f.rule for f in findings] == ["R2"]
+    assert "materialize" in findings[0].message
+    _assert_allowlist_suppressed(findings, "r2_borrow.py", "borrow-ok")
+
+
+def test_r3_ephemeral_multi_resolve_and_fanout():
+    findings = _lint_fixture("r3_evict.py")
+    assert sorted(f.rule for f in findings) == ["R3", "R3"]
+    msgs = " ".join(f.message for f in findings)
+    assert "resolved more than once" in msgs and "pickled inside" in msgs
+    _assert_allowlist_suppressed(findings, "r3_evict.py", "evict-ok")
+
+
+def test_r4_bare_assert_is_core_scoped():
+    # same source, linted under a core path vs anywhere else
+    core = _lint_fixture("r4_asserts.py", "src/repro/core/fixture.py")
+    assert [f.rule for f in core] == ["R4"]
+    assert "python -O" in core[0].message
+    _assert_allowlist_suppressed(core, "r4_asserts.py", "assert-ok")
+    assert _lint_fixture("r4_asserts.py", "src/repro/train/fixture.py") == []
+
+
+def test_r5_blocking_in_async_is_file_scoped():
+    findings = _lint_fixture("r5_async.py", "src/repro/core/kv_tcp.py")
+    assert [f.rule for f in findings] == ["R5"] * 3
+    blocked = " ".join(f.message for f in findings)
+    assert "time.sleep" in blocked and "open()" in blocked \
+        and ".sendall()" in blocked
+    _assert_allowlist_suppressed(findings, "r5_async.py", "blocking-ok")
+    # the same source outside the event-loop modules is not flagged
+    assert _lint_fixture("r5_async.py", "src/repro/train/worker.py") == []
+
+
+def test_r6_nonidempotent_retry():
+    findings = _lint_fixture("r6_retry.py")
+    assert [f.rule for f in findings] == ["R6"] * 4
+    msgs = " ".join(f.message for f in findings)
+    assert "'decref'" in msgs and "'put2'" in msgs and "'s_append'" in msgs
+    _assert_allowlist_suppressed(findings, "r6_retry.py", "retry-ok")
+
+
+def test_lint_cli_and_syntax_error(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\n\ndef f(t):\n    return time.time() - t\n")
+    assert main([str(bad)]) == 1
+    assert "R1" in capsys.readouterr().out
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean), "-q"]) == 0
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n")
+    assert lint_file(broken)[0].rule == "E0"
+
+
+def test_src_tree_is_lint_clean():
+    """The acceptance gate CI enforces: zero findings on the PR's tree."""
+    assert lint_paths([str(REPO / "src")]) == []
+
+
+# ---------------------------------------------------------------------------
+# Head 2: the runtime sanitizer's seeded defect classes
+# ---------------------------------------------------------------------------
+def test_use_after_free_view_names_borrow_site(tmp_path):
+    pool = ArenaPool(str(tmp_path / "shm"), sanitize=True)
+    try:
+        name, slot, gen = pool.put([b"x" * 2048], 2048)
+        arena = pool.attach(name)
+        view = arena.read(slot, gen)
+        with pytest.raises(SanitizerError, match="use-after-free-view") as ei:
+            arena.free(slot, gen)
+        assert ei.value.diagnostic == "use-after-free-view"
+        assert "test_analysis" in str(ei.value)   # the borrow site is named
+        del view                                  # dropping it unblocks
+        assert arena.free(slot, gen)
+    finally:
+        pool.close()
+
+
+def test_poisoned_stale_read(tmp_path):
+    pool = ArenaPool(str(tmp_path / "shm"), sanitize=True)
+    try:
+        payload = serialize({"v": list(range(64))})
+        nbytes = sum(len(bytes(s)) for s in payload)
+        name, slot, gen = pool.put(payload, nbytes)
+        arena = pool.attach(name)
+        view = arena.read(slot, gen)
+        stale = view[:nbytes]                 # a slice survives the free
+        del view
+        assert arena.free(slot, gen)          # poisons the chunk 0xDE
+        assert looks_poisoned(stale)
+        with pytest.raises(SanitizerError, match="poisoned-read") as ei:
+            check_view(stale)
+        assert ei.value.diagnostic == "poisoned-read"
+        # the deserializer recognizes the poison pattern too
+        with pytest.raises(SanitizerError, match="poisoned-read"):
+            deserialize(bytes(stale))
+    finally:
+        pool.close()
+
+
+def test_quarantine_delays_chunk_reuse(tmp_path):
+    """A freed chunk must not be recycled by the very next put: reuse only
+    after a strictly younger free."""
+    pool = ArenaPool(str(tmp_path / "shm"), sanitize=True)
+    try:
+        name, slot, gen = pool.put([b"a" * 1024], 1024)
+        arena = pool.attach(name)
+        view = arena.read(slot, gen)
+        off1 = None
+        for s, g, size in arena.live_slots():
+            if s == slot:
+                off1 = arena._entry(s)[6]
+        del view
+        pool.free(name, slot, gen)
+        n2, s2, g2 = pool.put([b"b" * 1024], 1024)
+        off2 = pool.attach(n2)._entry(s2)[6]
+        assert (n2, off2) != (name, off1)     # quarantined, not recycled
+    finally:
+        pool.close()
+
+
+def test_double_decref_and_use_after_evict():
+    store = Store("san-ledger", LocalMemoryConnector(), sanitize=True)
+    key = store.put({"a": 1})
+    store.incref(key)
+    assert store.decref(key) == 0             # legal: count hits zero
+    with pytest.raises(SanitizerError, match="double-decref") as ei:
+        store.decref(key)                     # raised BEFORE the channel op
+    assert ei.value.diagnostic == "double-decref"
+    assert "test_analysis" in str(ei.value)   # acquire site backtrace
+    with pytest.raises(SanitizerError, match="use-after-evict") as ei:
+        store.incref(key)                     # the key is gone
+    assert ei.value.diagnostic == "use-after-evict"
+    store.close()
+
+
+def test_refcount_leak_reported_at_close():
+    store = Store("san-leak", LocalMemoryConnector(), sanitize=True)
+    key = store.put([1, 2, 3])
+    store.incref(key)                         # never released
+    with pytest.warns(SanitizerWarning, match="refcount-leak") as rec:
+        store.close()
+    text = str(rec[0].message)
+    assert "1 leaked reference" in text and "first acquired at" in text
+
+
+def test_balanced_lifecycle_is_quiet():
+    import warnings
+
+    store = Store("san-clean", LocalMemoryConnector(), sanitize=True)
+    key = store.put("payload")
+    store.incref(key)
+    store.decref(key)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SanitizerWarning)
+        store.close()                         # no leak candidates: silent
+
+
+def test_transfer_budget_allows_local_roundtrip():
+    """A pickle-incref (transfer) raises the local release budget, so a
+    same-process pickle/unpickle/resolve cycle is not a double-decref."""
+    ledger = RefLedger("t")
+    ledger.incref("k")                        # proxy creation
+    ledger.incref("k", transfer=True)         # pickled sibling's ref
+    ledger.decref("k")                        # sibling resolved locally
+    ledger.decref("k")                        # original resolved
+    with pytest.raises(SanitizerError, match="double-decref"):
+        ledger.decref("k")                    # beyond the budget
+
+
+def _orphan_child(registry_dir: str) -> None:
+    pool = ArenaPool(registry_dir)
+    pool.put([b"orphan-payload" * 64], 14 * 64)
+    os._exit(0)                               # die without cleanup
+
+
+def test_sweep_reports_orphaned_slots(tmp_path):
+    """Satellite: sweep() itemizes WHAT leaked (arena, slot, owner pid),
+    not just a count — with and without reclaiming."""
+    registry = str(tmp_path / "shm")
+    ctx = mp.get_context("spawn")
+    child = ctx.Process(target=_orphan_child, args=(registry,))
+    child.start()
+    child.join(timeout=30)
+    assert child.exitcode == 0
+
+    pool = ArenaPool(registry)
+    try:
+        pool.sweep()                          # report-only pass
+        report = pool.last_sweep_report
+        assert len(report) == 1
+        rec = report[0]
+        assert rec["owner_pid"] == child.pid
+        assert rec["size"] == 14 * 64
+        assert rec["reclaimed"] is False
+        pool.sweep(clear=True)                # reclaim pass
+        assert pool.last_sweep_report[0]["reclaimed"] is True
+        pool.sweep(clear=True)
+        assert pool.last_sweep_report == []   # nothing left to report
+    finally:
+        pool.close()
+
+
+def test_forced_retry_on_nonidempotent_op(tmp_path, monkeypatch):
+    """The R6 rule's runtime twin: KVClient.request(retry=True) on a
+    non-idempotent op is a hard error under the sanitizer."""
+    import signal
+
+    from repro.core.kv_tcp import KVClient, spawn_server
+
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    host, port, pid = spawn_server(ready_file=str(tmp_path / "kv.ready"))
+    client = KVClient(host, port)
+    try:
+        with pytest.raises(SanitizerError, match="non-idempotent-retry") as ei:
+            client.request({"op": "decref", "key": "k"}, retry=True)
+        assert ei.value.diagnostic == "non-idempotent-retry"
+        # idempotent ops still retry transparently
+        assert client.request({"op": "ping"}, retry=True)["data"] == "pong"
+        client.shutdown_server()
+    finally:
+        client.close()
+        try:
+            os.kill(pid, signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass

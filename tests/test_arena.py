@@ -124,6 +124,8 @@ def test_slot_reuse_bounds_arena_count(tmp_path):
 # zero-copy views: eviction + close while exported
 # ---------------------------------------------------------------------------
 def test_evict_while_view_exported(tmp_path):
+    from repro.analysis import SanitizerError, enabled
+
     conn = SharedMemoryConnector(str(tmp_path / "shm"))
     try:
         arr = np.arange(4096, dtype=np.float32)
@@ -131,10 +133,19 @@ def test_evict_while_view_exported(tmp_path):
         view = conn.get(key)
         out = deserialize(view)              # zero-copy array over the view
         np.testing.assert_array_equal(out, arr)
-        conn.evict(key)                      # while the view is exported
-        assert not conn.exists(key)
-        assert conn.get(key) is None
-        assert view.nbytes > 0               # view stays VALID (no crash)...
+        if enabled():
+            # the sanitizer turns this exact pattern into a hard error
+            # naming the borrow site; dropping the view unblocks the evict
+            with pytest.raises(SanitizerError, match="use-after-free-view"):
+                conn.evict(key)
+            del view
+            conn.evict(key)
+            assert not conn.exists(key)
+        else:
+            conn.evict(key)                  # while the view is exported
+            assert not conn.exists(key)
+            assert conn.get(key) is None
+            assert view.nbytes > 0           # view stays VALID (no crash)...
     finally:
         conn.close()                         # ...even through close()
 
