@@ -21,6 +21,15 @@ against the classic produce→put→proxy→consume sequence:
 
 The produce/consume "compute" is a deterministic sleep so the overlap is
 the measured quantity, not JIT noise.
+
+* ``fig13.fanout.*`` — the PR 9 broker tier: ONE producer publishes
+  1 MB events to 1/4/8 consumer groups.  ``proxy_on_publish`` resolves
+  the payload in exactly one group (the others are ``payload=False``
+  metadata taps — the paper's proxy-in-event pattern), so the data
+  plane serves ~1× the payload bytes regardless of fanout;
+  ``payload_in_event`` models classic pub/sub where every subscriber
+  receives the full payload (G× served bytes).  A filtered tap rides
+  along to confirm filtered events cost ZERO payload gets.
 """
 from __future__ import annotations
 
@@ -36,6 +45,10 @@ N_CHUNKS = 12
 CHUNK_BYTES = 250_000
 T_PRODUCE = 0.03          # simulated per-chunk producer compute (s)
 T_CONSUME = 0.03          # simulated per-chunk consumer compute (s)
+
+FANOUT_EVENTS = 8         # events per fanout tier
+FANOUT_BYTES = 1_000_000  # 1 MB payloads: the data plane dominates
+FANOUT_GROUPS = (1, 4, 8)
 
 
 def _chunks():
@@ -100,11 +113,83 @@ def run_future(store: Store) -> tuple[float, float]:
     return done["latency"], t_prod
 
 
-def run() -> None:
+def _drain_group(conn, topic: str, group: str, *, payload: bool) -> None:
+    evs = conn.stream_take_batch(topic, group, FANOUT_EVENTS,
+                                 payload=payload)
+    if len(evs) != FANOUT_EVENTS:
+        raise RuntimeError(f"{group}: drained {len(evs)} events")
+    if payload and any(ev.data is None for ev in evs):
+        raise RuntimeError(f"{group}: missing payloads")
+    conn.stream_ack(topic, group, [ev.seq for ev in evs])
+
+
+def run_fanout(store: Store) -> dict:
+    """ONE publish stream to N groups: proxy-on-publish (one resolving
+    group + metadata taps) vs payload-in-event (every group resolves)."""
+    conn = store.connector
+    data = payload(FANOUT_BYTES, seed=7).tobytes()
+    tiers: dict[str, dict] = {}
+    for n_groups in FANOUT_GROUPS:
+        for mode in ("proxy_on_publish", "payload_in_event"):
+            topic = f"fan-{mode}-{n_groups}-{time.monotonic_ns()}"
+            groups = [f"g{i}" for i in range(n_groups)]
+            for g in groups:
+                conn.stream_subscribe(topic, g)
+            served0 = conn.stats()["payload_bytes_served"]
+            # the publish leg is identical in both modes (the broker
+            # stores ONE copy either way) — time the fanout DELIVERY:
+            # every group drained, proxy mode resolving in exactly one
+            for i in range(FANOUT_EVENTS):
+                conn.stream_append(topic, data, meta={"i": i})
+            t0 = time.perf_counter()
+            for gi, g in enumerate(groups):
+                resolve = mode == "payload_in_event" or gi == 0
+                _drain_group(conn, topic, g, payload=resolve)
+            dt = time.perf_counter() - t0
+            served = conn.stats()["payload_bytes_served"] - served0
+            eps = FANOUT_EVENTS / dt
+            ratio = served / (FANOUT_EVENTS * FANOUT_BYTES)
+            emit(f"fig13.fanout.{mode}.g{n_groups}", dt / FANOUT_EVENTS
+                 * 1e6, f"served {ratio:.1f}x payload bytes",
+                 req_per_s=eps)
+            tiers[f"{mode}.g{n_groups}"] = {
+                "events_per_s": round(eps, 1),
+                "served_bytes_ratio": round(ratio, 2)}
+
+    # filtered tap: events a group filters out cost ZERO payload gets
+    topic = f"fan-filtered-{time.monotonic_ns()}"
+    conn.stream_subscribe(topic, "tap",
+                          filter={"key": "i", "op": "<", "value": 0})
+    served0 = conn.stats()["payload_bytes_served"]
+    for i in range(FANOUT_EVENTS):
+        conn.stream_append(topic, data, meta={"i": i})
+    if conn.stream_take_batch(topic, "tap", FANOUT_EVENTS,
+                              payload=False):
+        raise RuntimeError("filtered tap delivered events")
+    filtered_gets = conn.stats()["payload_bytes_served"] - served0
+    g8 = tiers["proxy_on_publish.g8"]
+    b8 = tiers["payload_in_event.g8"]
+    return {
+        "events": FANOUT_EVENTS, "event_bytes": FANOUT_BYTES,
+        "tiers": tiers,
+        "g8_speedup": round(g8["events_per_s"] / b8["events_per_s"], 2),
+        "g8_served_ratio_proxy": g8["served_bytes_ratio"],
+        "g8_served_ratio_baseline": b8["served_bytes_ratio"],
+        "filtered_payload_bytes": filtered_gets,
+    }
+
+
+def run(micro: bool = False) -> None:
+    """``micro=True`` (the CI perf gate) runs ONLY the fanout tier —
+    the overlap tiers are deterministic sleeps, nothing to gate."""
     d = tmpdir("fig13")
     kv = start_kvserver(d)
     store = Store("fig13", KVServerConnector(kv.host, kv.port))
     try:
+        fanout = run_fanout(store)
+        if micro:
+            record("fig13", {"fanout": fanout})
+            return
         base_s = run_baseline(store)
         stream_s = run_stream(store)
         fut_latency, fut_prod = run_future(store)
@@ -127,9 +212,13 @@ def run() -> None:
             "future_time_to_data_s": round(fut_latency, 4),
             "future_producer_s": round(fut_prod, 4),
             "overlap_beats_baseline": bool(stream_s < base_s),
+            "fanout": fanout,
         }
         record("fig13", results)
         assert results["overlap_beats_baseline"], results
+        assert fanout["filtered_payload_bytes"] == 0, fanout
+        assert fanout["g8_served_ratio_proxy"] <= 1.5, fanout
+        assert fanout["g8_speedup"] >= 3.0, fanout
     finally:
         store.close()
         unregister_store("fig13")

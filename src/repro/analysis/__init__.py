@@ -1,7 +1,7 @@
 """repro.analysis — the two-headed correctness tool.
 
 Head 1, ``proxylint`` (:mod:`repro.analysis.lint`): an AST-based static
-analysis pass over the source tree whose rules R1-R6 are distilled from
+analysis pass over the source tree whose rules R1-R7 are distilled from
 this repo's own bug history (wall-clock lease arithmetic, borrowed shm
 views outliving their slot, multi-resolved ``evict=True`` ephemerals,
 ``-O``-stripped asserts, blocking calls on the event loop, non-idempotent

@@ -28,11 +28,18 @@ past PR and must not regress as the codebase scales out:
 * **R6 non-idempotent retry** — ``put2``/``decref``/``s_append``-family
   ops inside a retry wrapper.  The PR 7 rule: a lost-ack retry of a
   non-idempotent op double-applies it (double-decref kills sibling data).
+* **R7 unclosed stream consumer** — a consumer built by
+  ``stream_consumer``/``StreamConsumer``/``ProxyStream`` (or the
+  ``metrics_tap``/``monitor_updates`` helpers) iterated without a
+  ``with`` block or a reachable ``.close()``.  The PR 9 bug class: a
+  consumer abandoned mid-stream leaves its prefetched-but-undelivered
+  events unacked, parking their group references (and the payloads'
+  broker refcounts) until the TTL backstop reaps them.
 
 Allowlist convention: a ``# lint: <tag>`` comment on the flagged line or
 the line above suppresses the finding (tags: ``wallclock-ok``,
 ``borrow-ok``, ``evict-ok``, ``assert-ok``, ``blocking-ok``,
-``retry-ok``).
+``retry-ok``, ``stream-ok``).
 
 Run: ``PYTHONPATH=src python -m repro.analysis.lint src/`` — exits
 non-zero on any finding.  Stdlib-only by design: the CI lint job needs no
@@ -54,6 +61,7 @@ ALLOW_TAGS = {
     "R4": "assert-ok",
     "R5": "blocking-ok",
     "R6": "retry-ok",
+    "R7": "stream-ok",
 }
 
 # R2: calls that hand out views aliasing lifecycle-bound channel memory
@@ -69,6 +77,11 @@ _R5_FILES = {"kv_tcp.py", "fabric.py", "endpoint.py"}
 _NONIDEMPOTENT = {"put2", "mput2", "decref", "mdecref", "s_append",
                   "stream_append"}
 _RETRY_WRAPPERS = {"with_retries", "retry", "retrying", "with_retry"}
+# R7: calls that build a group-cursor stream consumer
+_CONSUMER_SOURCES = {"stream_consumer", "StreamConsumer", "ProxyStream",
+                     "metrics_tap", "monitor_updates"}
+# R7: builtins that drain an iterable passed by name
+_DRAINERS = {"list", "tuple", "sorted", "next", "iter", "sum", "max", "min"}
 
 
 @dataclass
@@ -291,6 +304,11 @@ class _Linter(ast.NodeVisitor):
         resolves: dict[str, list[int]] = {}   # evict name -> resolve linenos
         drops = False
         own_loops: list[tuple[int, int]] = []  # (lineno, end_lineno) spans
+        # R7 state: consumer name -> creation line; names closed/managed
+        consumers: dict[str, int] = {}
+        closed: set[str] = set()
+        managed: set[str] = set()
+        drained: list[tuple[ast.AST, str | None]] = []  # (site, name|anon)
 
         def in_own_loop(n: ast.AST) -> bool:
             return any(a <= n.lineno <= b for a, b in own_loops)
@@ -324,6 +342,9 @@ class _Linter(ast.NodeVisitor):
                 if cname in _BORROW_SOURCES:
                     for t in targets:
                         borrow_names[t] = sub.lineno
+                if cname in _CONSUMER_SOURCES:
+                    for t in targets:
+                        consumers[t] = sub.lineno
                 if cname == "materialize":
                     materialized.update(targets)
                 if any(kw.arg == "evict"
@@ -332,8 +353,36 @@ class _Linter(ast.NodeVisitor):
                        for kw in sub.value.keywords):
                     for t in targets:
                         evict_names[t] = sub.lineno
+            # R7: sites that drain a consumer, and the escape hatches
+            if isinstance(sub, (ast.For, ast.AsyncFor)):
+                if isinstance(sub.iter, ast.Name):
+                    drained.append((sub, sub.iter.id))
+                elif isinstance(sub.iter, ast.Call) \
+                        and _call_name(sub.iter.func) in _CONSUMER_SOURCES:
+                    drained.append((sub, None))
+            if isinstance(sub, ast.comprehension):
+                if isinstance(sub.iter, ast.Name):
+                    drained.append((sub.iter, sub.iter.id))
+                elif isinstance(sub.iter, ast.Call) \
+                        and _call_name(sub.iter.func) in _CONSUMER_SOURCES:
+                    drained.append((sub.iter, None))
+            if isinstance(sub, (ast.With, ast.AsyncWith)):
+                for item in sub.items:
+                    if isinstance(item.context_expr, ast.Name):
+                        managed.add(item.context_expr.id)
             if isinstance(sub, ast.Call):
                 cname = _call_name(sub.func)
+                if isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr == "close" \
+                        and isinstance(sub.func.value, ast.Name):
+                    closed.add(sub.func.value.id)
+                if cname in _DRAINERS and sub.args:
+                    a = sub.args[0]
+                    if isinstance(a, ast.Name):
+                        drained.append((sub, a.id))
+                    elif isinstance(a, ast.Call) \
+                            and _call_name(a.func) in _CONSUMER_SOURCES:
+                        drained.append((sub, None))
                 if cname in _LIFECYCLE_DROPS:
                     drops = True
                 if cname == "materialize":
@@ -371,6 +420,22 @@ class _Linter(ast.NodeVisitor):
                             f"that drops references; call "
                             f"serialize.materialize({nm}) before the "
                             f"last decref/evict")
+        for site, nm in drained:
+            if nm is None:
+                self._flag(site, "R7",
+                           "stream consumer built inline and drained with "
+                           "no handle to close(): prefetched-but-"
+                           "undelivered events stay unacked, parking "
+                           "their group references — bind it in a `with` "
+                           "block")
+            elif nm in consumers and nm not in closed \
+                    and nm not in managed:
+                self._flag(site, "R7",
+                           f"stream consumer {nm!r} (created line "
+                           f"{consumers[nm]}) is iterated without "
+                           f"close(): use `with` or try/finally close() "
+                           f"so prefetched-but-undelivered events are "
+                           f"requeued to the group")
         for nm, sites in resolves.items():
             if len(sites) >= 2:
                 # walk order is stack-based, not source order: flag the
@@ -428,7 +493,7 @@ def lint_paths(paths: list[str]) -> list[Finding]:
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="proxylint: lifecycle/correctness rules R1-R6")
+        description="proxylint: lifecycle/correctness rules R1-R7")
     ap.add_argument("paths", nargs="+", help="files or directories to lint")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="print only the summary line")

@@ -47,6 +47,20 @@ the distributed-future and streaming proxy patterns of arXiv:2407.01764):
   connectors forward to their server's stream ops (``s_append`` etc.);
   the fallback keeps a channel-scoped topic table and stores items
   through the connector's own ``put``.
+* Pub/sub group extension (the broker-backed stream plane —
+  :mod:`repro.stream` rides these): ``stream_subscribe`` /
+  ``stream_unsubscribe`` attach named consumer groups with independent
+  cursors and optional server-side metadata filters; ``stream_take`` /
+  ``stream_take_batch`` deliver events per group (unacked until
+  ``stream_ack`` — the payload is retained with one reference per
+  matching group and evicted after the LAST group acks, so bytes cross
+  the data plane once regardless of fanout); ``stream_requeue`` returns
+  delivered-but-unprocessed events to the group; ``stream_limit``
+  installs credit-based producer backpressure.  ``stream_append`` takes
+  the event's metadata map and a backpressure timeout.  KV-backed
+  connectors forward to the server group ops (``s_sub``/``s_next2``/…);
+  the fallback implements the same semantics on the channel-scoped
+  topic table.
 
 Keys are plain tuples of msgpack-serializable scalars so they can ride inside
 factories across process and site boundaries.
@@ -58,9 +72,12 @@ process re-materialize its Store (paper §3.5's registry behavior).
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from typing import Any, NamedTuple, Protocol, Sequence, runtime_checkable
+
+from repro.stream.broker import BrokerEvent
 
 Key = tuple  # (str | int, ...)
 
@@ -259,6 +276,15 @@ class BaseConnector:
         for k in keys:
             self.touch(k, ttl)
 
+    # True when stream topics are location-addressed: they live on the
+    # PRODUCING site's server (a socket node id, a PS-endpoint uuid) and a
+    # consumer elsewhere passes that id as ``location``.  False means the
+    # channel has exactly one stream home (this process, one KV server, a
+    # topic's fabric shard) and a ``location`` argument would silently
+    # subscribe to a topic nothing ever produces — the Store layer raises
+    # instead.
+    supports_location = False
+
     # -- block reservation (arena-backed channels only) ----------------------
     # True when the channel can hand out writable in-place payload views
     # (``reserve_block``/``commit_block``); consumers without it fall back
@@ -339,24 +365,64 @@ class BaseConnector:
         streams = self._channel_state()["streams"]
         st = streams.get(topic)
         if st is None:
-            st = streams[topic] = {"count": 0, "closed": False, "keys": []}
+            st = streams[topic] = {
+                "count": 0, "closed": False, "keys": [],
+                # pub/sub group state: name -> {queue, unacked, fn};
+                # owners counts outstanding group refs per seq (the
+                # backpressure "buffered" measure); meta rides filters
+                "groups": {}, "meta": {}, "owners": {}, "limit": None,
+            }
         return st
 
-    def stream_append(self, topic: str, blob,
-                      ttl: float | None = None) -> int:
-        key = self.put(blob)
-        self.incref(key)                 # one ref: dropped by the consumer
-        if ttl is not None:
-            self.touch(key, ttl)         # abandoned-stream leak backstop
+    def stream_append(self, topic: str, blob, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
         state = self._channel_state()
+        deadline = None
         with state["cond"]:
             st = self._stream_state(topic)
+            while (st["limit"] is not None
+                   and len(st["owners"]) >= st["limit"]
+                   and not st["closed"]):
+                # credit-based backpressure: park until consumer acks
+                # free a buffer slot (the ack path notifies this cond)
+                if deadline is None:
+                    deadline = time.monotonic() + (
+                        timeout if timeout is not None else 60.0)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"stream {topic!r} append timed out on "
+                        f"backpressure (buffer full)")
+                state["cond"].wait(remaining)
             if st["closed"]:
-                self.decref(key)
                 raise RuntimeError(f"stream {topic!r} is closed")
             seq = st["count"]
-            st["keys"].append(tuple(key))
             st["count"] += 1
+            m = meta or {}
+            groups = st["groups"]
+            matched = (None if not groups else
+                       [g for g in groups.values()
+                        if g["fn"] is None or g["fn"](m)])
+            if meta:
+                st["meta"][seq] = dict(meta)
+            if matched is not None and not matched:
+                # filtered out by EVERY group: the payload is never
+                # stored — zero bytes enter the data plane
+                st["keys"].append(None)
+            else:
+                key = tuple(self.put(blob))
+                # legacy topic (no groups): one ref, dropped by the
+                # consumer; grouped topic: one ref per matching group,
+                # each dropped by that group's ack
+                self.incref(key, 1 if matched is None else len(matched))
+                if ttl is not None:
+                    self.touch(key, ttl)     # abandoned-stream backstop
+                st["keys"].append(key)
+                if matched:
+                    st["owners"][seq] = len(matched)
+            for g in matched or []:
+                g["queue"].append(seq)
             state["cond"].notify_all()
         return seq
 
@@ -409,6 +475,180 @@ class BaseConnector:
                      for b in blobs]
         self.decref_batch(keys)
         return blobs
+
+    # -- pub/sub consumer groups: channel-scoped in-process fallback ---------
+    # Same semantics as the server group ops (kv_tcp.StreamTable), on the
+    # channel-scoped topic table: per-group cursors + acks, payloads held
+    # with one connector refcount per matching group and evicted by the
+    # last group's ack, filters evaluated at append time.
+    def _drop_stream_owner(self, st: dict, seq: int) -> None:
+        n = st["owners"].get(seq)
+        if n is None:
+            return
+        if n <= 1:
+            st["owners"].pop(seq, None)
+            st["meta"].pop(seq, None)
+        else:
+            st["owners"][seq] = n - 1
+        key = st["keys"][seq]
+        if key is not None:
+            self.decref(key)             # refcount zero on last drop: evict
+
+    def stream_subscribe(self, topic: str, group: str, start: str = "new",
+                         filter: dict | None = None,  # noqa: A002
+                         location: str | None = None) -> dict:
+        from repro.stream.filters import compile_filter
+
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            g = st["groups"].get(group)
+            created = g is None
+            if created:
+                fn = compile_filter(filter) if filter else None
+                g = {"queue": collections.deque(), "unacked": set(),
+                     "fn": fn}
+                st["groups"][group] = g
+                if start == "begin":
+                    for seq in range(st["count"]):
+                        key = st["keys"][seq]
+                        if key is None or not self.exists(key):
+                            continue     # filtered-at-append or consumed
+                        if fn is not None and \
+                                not fn(st["meta"].get(seq) or {}):
+                            continue
+                        g["queue"].append(seq)
+                        if st["owners"].get(seq):
+                            st["owners"][seq] += 1
+                            self.incref(key)
+                        else:
+                            # adopt the legacy single reference
+                            st["owners"][seq] = 1
+                state["cond"].notify_all()
+            return {"created": created, "queued": len(g["queue"]),
+                    "count": st["count"], "closed": st["closed"]}
+
+    def stream_unsubscribe(self, topic: str, group: str,
+                           location: str | None = None) -> None:
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            g = st["groups"].pop(group, None)
+            if g is None:
+                return
+            for seq in (*g["queue"], *g["unacked"]):
+                self._drop_stream_owner(st, seq)
+            state["cond"].notify_all()
+
+    def _stream_pop(self, st: dict, group: str) -> tuple | None:
+        g = st["groups"].get(group)
+        if g is None:
+            raise KeyError(f"no consumer group {group!r}")
+        if not g["queue"]:
+            return None
+        seq = g["queue"].popleft()
+        g["unacked"].add(seq)
+        return seq, st["keys"][seq], dict(st["meta"].get(seq) or {})
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True,
+                    location: str | None = None) -> BrokerEvent:
+        deadline = time.monotonic() + float(timeout)
+        state = self._channel_state()
+        with state["cond"]:
+            while True:
+                st = self._stream_state(topic)
+                popped = self._stream_pop(st, group)
+                if popped is not None:
+                    seq, key, meta = popped
+                    break
+                if st["closed"]:
+                    return BrokerEvent(-1, None, {}, end=True)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"stream {topic!r} group {group!r} timed out")
+                state["cond"].wait(remaining)
+        blob = self.get(key) if (payload and key is not None) else None
+        if blob is not None and self.borrows_get:
+            blob = bytes(memoryview(blob))   # the ack may recycle memory
+        return BrokerEvent(seq, blob, meta)
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True,
+                          location: str | None = None) -> list[BrokerEvent]:
+        taken: list[tuple] = []
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            while len(taken) < n:
+                popped = self._stream_pop(st, group)
+                if popped is None:
+                    break
+                taken.append(popped)
+        if not payload:
+            return [BrokerEvent(seq, None, meta) for seq, _, meta in taken]
+        blobs = self.get_batch([key for _, key, _ in taken])
+        if self.borrows_get:
+            blobs = [bytes(memoryview(b)) if b is not None else None
+                     for b in blobs]
+        return [BrokerEvent(seq, blob, meta)
+                for (seq, _, meta), blob in zip(taken, blobs)]
+
+    def stream_ack(self, topic: str, group: str, seqs,
+                   location: str | None = None) -> int:
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            g = st["groups"].get(group)
+            if g is None:
+                return 0
+            acked = {int(s) for s in seqs} & g["unacked"]
+            g["unacked"] -= acked
+            for seq in sorted(acked):
+                self._drop_stream_owner(st, seq)
+            if acked:
+                state["cond"].notify_all()   # acks free producer credits
+            return len(acked)
+
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       location: str | None = None) -> int:
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            g = st["groups"].get(group)
+            if g is None:
+                return 0
+            back = {int(s) for s in seqs} & g["unacked"]
+            if not back:
+                return 0
+            g["unacked"] -= back
+            g["queue"] = collections.deque(sorted(back | set(g["queue"])))
+            state["cond"].notify_all()
+            return len(back)
+
+    def stream_limit(self, topic: str, limit: int | None,
+                     location: str | None = None) -> None:
+        state = self._channel_state()
+        with state["cond"]:
+            self._stream_state(topic)["limit"] = int(limit) if limit \
+                else None
+            state["cond"].notify_all()
+
+    def stream_stat(self, topic: str,
+                    location: str | None = None) -> dict:
+        state = self._channel_state()
+        with state["cond"]:
+            st = self._stream_state(topic)
+            out: dict = {"count": st["count"], "closed": st["closed"]}
+            if st["groups"]:
+                out["groups"] = {name: {"queued": len(g["queue"]),
+                                        "unacked": len(g["unacked"])}
+                                 for name, g in st["groups"].items()}
+                out["buffered"] = len(st["owners"])
+                if st["limit"] is not None:
+                    out["limit"] = st["limit"]
+            return out
 
     def close(self) -> None:
         self._drop_lifetime_state()

@@ -19,6 +19,7 @@ from typing import Any
 from repro.core.connector import BaseConnector, Key, StreamItem, group_indices
 from repro.core.kv_tcp import MAX_FRAME, KVClient, _chain, stream_item_key
 from repro.core.serialize import as_segments, frame_nbytes
+from repro.stream.broker import BrokerEvent
 
 
 class EndpointConnector(BaseConnector):
@@ -164,14 +165,23 @@ class EndpointConnector(BaseConnector):
         return resp.get("data")
 
     # -- streams: topics live on the PRODUCER's endpoint ---------------------
-    def stream_append(self, topic: str, blob,
-                      ttl: float | None = None) -> int:
+    supports_location = True
+
+    def stream_append(self, topic: str, blob, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
+        # ``timeout`` is accepted for interface parity but unused:
+        # endpoints do not park appends on s_limit bounds (backpressure is
+        # a KV-broker / LocalBroker feature — a parked append would stall
+        # the endpoint's single-threaded peer loop)
         nbytes = frame_nbytes(blob)
         if nbytes > MAX_FRAME:
             raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
         msg = {"op": "s_append", "topic": topic, "nbytes": nbytes}
         if ttl is not None:
             msg["ttl"] = ttl
+        if meta:
+            msg["meta"] = meta
         # not idempotent: a reconnect-retry could append the item twice
         resp = self._client.request(msg, payload=as_segments(blob),
                                     retry=False)
@@ -219,6 +229,86 @@ class EndpointConnector(BaseConnector):
              "endpoint_id": location or self.endpoint_uuid})
         if not resp.get("ok"):
             raise ConnectionError(resp.get("error"))
+
+    # -- pub/sub consumer groups: state on the PRODUCING endpoint, ops
+    # peer-forwarded when ``location`` names a remote one ---------------------
+    def _group_op(self, msg: dict, location: str | None):
+        msg["endpoint_id"] = location or self.endpoint_uuid
+        resp = self._client.request(msg)
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
+        return resp.get("data")
+
+    def stream_subscribe(self, topic: str, group: str, start: str = "new",
+                         filter: dict | None = None,  # noqa: A002
+                         location: str | None = None) -> dict:
+        msg = {"op": "s_sub", "topic": topic, "group": group,
+               "start": start}
+        if filter:
+            msg["filter"] = filter
+        return self._group_op(msg, location)
+
+    def stream_unsubscribe(self, topic: str, group: str,
+                           location: str | None = None) -> None:
+        self._group_op({"op": "s_unsub", "topic": topic, "group": group},
+                       location)
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True,
+                    location: str | None = None) -> BrokerEvent:
+        # parks on the producing endpoint (peer-forwarded when remote);
+        # delivery moves the event out of the group queue, so no retry
+        resp = self._client.request(
+            {"op": "s_next2", "topic": topic, "group": group,
+             "timeout": timeout, "payload": payload,
+             "endpoint_id": location or self.endpoint_uuid},
+            timeout=timeout + 60.0, retry=False)
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
+        if resp.get("end"):
+            return BrokerEvent(-1, None, {}, end=True)
+        return BrokerEvent(int(resp["i"]), resp.get("data"),
+                           resp.get("meta") or {})
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True,
+                          location: str | None = None) -> list[BrokerEvent]:
+        resp = self._client.request(
+            {"op": "s_fetch", "topic": topic, "group": group, "n": int(n),
+             "payload": payload,
+             "endpoint_id": location or self.endpoint_uuid}, retry=False)
+        if not resp.get("ok"):
+            raise ConnectionError(resp.get("error"))
+        seqs = resp.get("seqs") or []
+        metas = resp.get("metas") or [{}] * len(seqs)
+        datas = resp.get("data") or [None] * len(seqs)
+        return [BrokerEvent(int(s), d, m or {})
+                for s, m, d in zip(seqs, metas, datas)]
+
+    def stream_ack(self, topic: str, group: str, seqs,
+                   location: str | None = None) -> int:
+        return int(self._group_op(
+            {"op": "s_ack", "topic": topic, "group": group,
+             "seqs": [int(s) for s in seqs]}, location) or 0)
+
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       location: str | None = None) -> int:
+        return int(self._group_op(
+            {"op": "s_requeue", "topic": topic, "group": group,
+             "seqs": [int(s) for s in seqs]}, location) or 0)
+
+    def stream_limit(self, topic: str, limit: int | None,
+                     location: str | None = None) -> None:
+        # accepted for interface parity: bounds the topic's buffered
+        # accounting server-side, but endpoint appends never park on it
+        self._group_op({"op": "s_limit", "topic": topic, "limit": limit},
+                       location)
+
+    def stream_stat(self, topic: str,
+                    location: str | None = None) -> dict:
+        return self._group_op({"op": "s_stat", "topic": topic}, location)
 
     # -- lifecycle: counts live on the OWNING endpoint (peer-forwarded) ------
     def _lifetime_op(self, op: str, key: Key, **extra):

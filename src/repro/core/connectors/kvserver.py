@@ -15,6 +15,7 @@ from typing import Any
 
 from repro.core.connector import BaseConnector, Key, StreamItem
 from repro.core.kv_tcp import KVClient
+from repro.stream.broker import BrokerEvent
 
 
 class KVServerConnector(BaseConnector):
@@ -68,9 +69,11 @@ class KVServerConnector(BaseConnector):
         return self._client.wait(key[3], timeout)
 
     # -- streams: server-side topics (one owning server per store) -----------
-    def stream_append(self, topic: str, blob,
-                      ttl: float | None = None) -> int:
-        return self._client.stream_append(topic, blob, ttl)
+    def stream_append(self, topic: str, blob, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
+        return self._client.stream_append(topic, blob, ttl, meta=meta,
+                                          timeout=timeout)
 
     def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
                     location: str | None = None) -> StreamItem:
@@ -83,6 +86,47 @@ class KVServerConnector(BaseConnector):
 
     def stream_close(self, topic: str, location: str | None = None) -> None:
         self._client.stream_close(topic)
+
+    # -- pub/sub consumer groups: state lives in the server ------------------
+    def stream_subscribe(self, topic: str, group: str, start: str = "new",
+                         filter: dict | None = None,  # noqa: A002
+                         location: str | None = None) -> dict:
+        return self._client.stream_sub(topic, group, start, filter)
+
+    def stream_unsubscribe(self, topic: str, group: str,
+                           location: str | None = None) -> None:
+        self._client.stream_unsub(topic, group)
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True,
+                    location: str | None = None) -> BrokerEvent:
+        it = self._client.stream_take(topic, group, timeout, payload)
+        if it["end"]:
+            return BrokerEvent(-1, None, {}, end=True)
+        return BrokerEvent(int(it["seq"]), it["data"], it["meta"])
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True,
+                          location: str | None = None) -> list[BrokerEvent]:
+        return [BrokerEvent(it["seq"], it["data"], it["meta"])
+                for it in self._client.stream_take_batch(topic, group, n,
+                                                         payload)]
+
+    def stream_ack(self, topic: str, group: str, seqs,
+                   location: str | None = None) -> int:
+        return self._client.stream_ack(topic, group, seqs)
+
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       location: str | None = None) -> int:
+        return self._client.stream_requeue(topic, group, seqs)
+
+    def stream_limit(self, topic: str, limit: int | None,
+                     location: str | None = None) -> None:
+        self._client.stream_limit(topic, limit)
+
+    def stream_stat(self, topic: str,
+                    location: str | None = None) -> dict:
+        return self._client.stream_stat(topic)
 
     # -- lifecycle: server-side refcounts + leases (atomic on its loop) ------
     def incref(self, key: Key, n: int = 1) -> int:

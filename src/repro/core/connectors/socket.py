@@ -16,6 +16,7 @@ from typing import Any
 
 from repro.core.connector import BaseConnector, Key, StreamItem, group_indices
 from repro.core.kv_tcp import KVClient, spawn_server
+from repro.stream.broker import BrokerEvent
 
 
 class SocketConnector(BaseConnector):
@@ -119,6 +120,8 @@ class SocketConnector(BaseConnector):
 
     # -- streams: topics live on the PRODUCING node's server; a consumer on
     # another node passes that node's id as ``location`` ---------------------
+    supports_location = True
+
     def _stream_client(self, location: str | None) -> KVClient:
         if location is None or location == self.node_id:
             return self._client
@@ -126,9 +129,11 @@ class SocketConnector(BaseConnector):
         host, port, _pid = addr.read_text().split(":")
         return KVClient(host, int(port))
 
-    def stream_append(self, topic: str, blob,
-                      ttl: float | None = None) -> int:
-        return self._client.stream_append(topic, blob, ttl)
+    def stream_append(self, topic: str, blob, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
+        return self._client.stream_append(topic, blob, ttl, meta=meta,
+                                          timeout=timeout)
 
     def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
                     location: str | None = None) -> StreamItem:
@@ -141,6 +146,51 @@ class SocketConnector(BaseConnector):
 
     def stream_close(self, topic: str, location: str | None = None) -> None:
         self._stream_client(location).stream_close(topic)
+
+    # -- pub/sub consumer groups: state on the producing node's server -------
+    def stream_subscribe(self, topic: str, group: str, start: str = "new",
+                         filter: dict | None = None,  # noqa: A002
+                         location: str | None = None) -> dict:
+        return self._stream_client(location).stream_sub(topic, group,
+                                                        start, filter)
+
+    def stream_unsubscribe(self, topic: str, group: str,
+                           location: str | None = None) -> None:
+        self._stream_client(location).stream_unsub(topic, group)
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True,
+                    location: str | None = None) -> BrokerEvent:
+        it = self._stream_client(location).stream_take(topic, group,
+                                                       timeout, payload)
+        if it["end"]:
+            return BrokerEvent(-1, None, {}, end=True)
+        return BrokerEvent(int(it["seq"]), it["data"], it["meta"])
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True,
+                          location: str | None = None) -> list[BrokerEvent]:
+        items = self._stream_client(location).stream_take_batch(
+            topic, group, n, payload)
+        return [BrokerEvent(it["seq"], it["data"], it["meta"])
+                for it in items]
+
+    def stream_ack(self, topic: str, group: str, seqs,
+                   location: str | None = None) -> int:
+        return self._stream_client(location).stream_ack(topic, group, seqs)
+
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       location: str | None = None) -> int:
+        return self._stream_client(location).stream_requeue(topic, group,
+                                                            seqs)
+
+    def stream_limit(self, topic: str, limit: int | None,
+                     location: str | None = None) -> None:
+        self._stream_client(location).stream_limit(topic, limit)
+
+    def stream_stat(self, topic: str,
+                    location: str | None = None) -> dict:
+        return self._stream_client(location).stream_stat(topic)
 
     # -- lifecycle: refcounts live on the owning node's server ---------------
     def incref(self, key: Key, n: int = 1) -> int:

@@ -26,12 +26,14 @@ from pathlib import Path
 import msgpack
 
 from repro.core.kv_tcp import (MAX_FRAME, STREAM_LIMIT, LifetimeTable,
-                               StreamTable, WaiterTable, stream_item_key)
+                               StreamTable, WaiterTable,
+                               stream_append_locally, stream_group_op,
+                               stream_item_key)
 
-# ops that may PARK (futures wait / stream next): handled on tasks both on
-# the client API (so pipelined requests overtake them) and on the peer
-# channel (so a parked wait never stalls the peer's read loop)
-_PARKING_OPS = ("wait", "s_next")
+# ops that may PARK (futures wait / stream next / group take): handled on
+# tasks both on the client API (so pipelined requests overtake them) and on
+# the peer channel (so a parked wait never stalls the peer's read loop)
+_PARKING_OPS = ("wait", "s_next", "s_next2")
 
 _LEN = struct.Struct(">I")
 
@@ -158,19 +160,42 @@ class Endpoint:
             return {"ok": True}
         if op == "s_append":
             # data first, count bump + consumer wake second (a consumer
-            # woken early would miss on its prefetch mget)
-            topic = req["topic"]
-            key = stream_item_key(topic, self.streams.next_seq(topic))
-            self._store_obj(key, req["data"])
-            self.lifetime.incref(key)
-            if req.get("ttl"):
-                self.lifetime.touch(key, req["ttl"])
-            return {"ok": True, "data": self.streams.committed(topic)}
+            # woken early would miss on its prefetch mget).  Grouped
+            # topics store one reference per matching group; endpoints do
+            # not park on s_limit bounds (backpressure is a KV-broker /
+            # LocalBroker feature — an endpoint append never blocks the
+            # single-threaded peer loop)
+            return stream_append_locally(
+                self.streams, self.lifetime, self._store_obj,
+                req["topic"], req["data"], req.get("ttl"), req.get("meta"))
+        if op in ("s_sub", "s_unsub", "s_ack", "s_requeue", "s_limit"):
+            return stream_group_op(self.streams, self.lifetime,
+                                   self._data.__contains__, req)
+        if op == "s_fetch":
+            # non-blocking batch take for one group: blobs ride in-band
+            # here ("data" list); the client API loop / peer forwarder
+            # convert them to the mget2-style raws wire format
+            topic, group = req["topic"], req["group"]
+            seqs: list[int] = []
+            while len(seqs) < int(req.get("n", 1)):
+                seq = self.streams.take(topic, group)
+                if seq is None:
+                    break
+                seqs.append(seq)
+            metas = self.streams.meta.get(topic, {})
+            st = self.streams.state(topic)
+            resp = {"ok": True, "seqs": seqs,
+                    "metas": [metas.get(s) or {} for s in seqs],
+                    "available": st["count"], "closed": st["closed"]}
+            if req.get("payload", True):
+                resp["data"] = [self._data.get(stream_item_key(topic, s))
+                                for s in seqs]
+            return resp
         if op == "s_close":
             self.streams.close(req["topic"])
             return {"ok": True}
         if op == "s_stat":
-            return {"ok": True, "data": dict(self.streams.state(req["topic"]))}
+            return {"ok": True, "data": self.streams.describe(req["topic"])}
         if op == "get":
             return {"ok": True, "data": self._data.get(oid)}
         if op == "mget":
@@ -254,6 +279,29 @@ class Endpoint:
                 return out
             return {"ok": True, "data": None, "end": True,
                     "available": st["count"], "closed": True}
+        if op == "s_next2":
+            # blocking group take (delivery does not release the payload
+            # reference — the group acks separately)
+            topic, group = req["topic"], req["group"]
+            got = await self.streams.wait_take(
+                topic, group, float(req.get("timeout", 60.0)))
+            if got is None:
+                return {"ok": False, "timeout": True,
+                        "error": f"stream {topic!r} group {group!r} "
+                                 f"timed out"}
+            st = self.streams.state(topic)
+            if got == "end":
+                return {"ok": True, "data": None, "end": True,
+                        "available": st["count"], "closed": True}
+            out = {"ok": True, "i": got, "data": None,
+                   "meta": self.streams.meta.get(topic, {}).get(got) or {},
+                   "available": st["count"], "closed": st["closed"]}
+            if req.get("payload", True):
+                data = self._data.get(stream_item_key(topic, got))
+                out["data"] = data
+                if data is None:
+                    out["missing"] = True
+            return out
         return self._local(req)
 
     # ------------------------------------------------------------------
@@ -418,7 +466,7 @@ class Endpoint:
     # response fields relayed verbatim from a peer (futures/stream ops
     # carry park-outcome metadata beyond the classic ok/data/error)
     _RELAY_FIELDS = ("ok", "data", "error", "timeout", "end", "available",
-                     "closed", "missing")
+                     "closed", "missing", "i", "meta", "seqs", "metas")
 
     async def _forward(self, req: dict, writer: asyncio.StreamWriter,
                        lock: asyncio.Lock, target: str,
@@ -443,8 +491,8 @@ class Endpoint:
         raw: tuple | None = None
         if raw_reply and resp.get("ok"):
             data = resp.pop("data", None)
-            if req.get("op") == "mget":        # forwarded batch: blob list
-                datas = data or []
+            if req.get("op") in ("mget", "s_fetch"):   # forwarded batch:
+                datas = data or []                     # blob list
                 resp["raws"] = [-1 if d is None else len(d) for d in datas]
                 raw = tuple(d for d in datas if d is not None)
             else:
@@ -571,11 +619,25 @@ class Endpoint:
                         resp = self._local({"op": "s_append",
                                             "topic": req["topic"],
                                             "data": data,
-                                            "ttl": req.get("ttl")})
+                                            "ttl": req.get("ttl"),
+                                            "meta": req.get("meta")})
                     except Exception as e:  # noqa: BLE001 - e.g. a late
                         # append to a closed stream: an error RESPONSE, not
                         # a torn-down connection for every pipelined op
                         resp = {"ok": False, "error": str(e)}
+                elif op == "s_fetch":
+                    # batch group take: blobs answer mget2-style (raws)
+                    target = req.get("endpoint_id") or self.uuid
+                    if target != self.uuid:
+                        spawn(self._forward(req, writer, send_lock, target,
+                                            raw_reply=True))
+                        continue
+                    resp = self._local(req)
+                    datas = resp.pop("data", None)
+                    if resp.get("ok") and datas is not None:
+                        resp["raws"] = [-1 if d is None else len(d)
+                                        for d in datas]
+                        raw = tuple(d for d in datas if d is not None)
                 elif op in _PARKING_OPS:
                     # wait / s_next park until a producer acts: always on a
                     # task, local or forwarded, so pipelined requests on

@@ -39,11 +39,20 @@ single mediated channel, scaled out):
   (``keyspace`` op → ``incref(n)`` + ``touch(remaining)``), so ownership
   semantics survive shard membership changes.
 
-**Limitations** (documented, not bugs): streams live on their topic's
-primary shard only (stream items are consumed exactly-once, which does
-not compose with passive replicas), and a key is readable-while-absent
-on a lagging async replica — readers fall through a miss to the other
-owners before declaring None.
+* **Streams** — a topic hashes to a home shard like any key (its ring
+  primary); the pub/sub group ops (``stream_subscribe`` /
+  ``stream_take`` / ``stream_ack`` …) run there.  Consumer-group
+  subscriptions and backpressure limits are additionally tracked
+  client-side: when the home shard dies mid-stream, the fabric re-homes
+  the topic to the next ring owner, re-installs the limit, and
+  re-subscribes every group (``start="new"``) before retrying the op —
+  producers and consumers ride through a shard kill.
+
+**Limitations** (documented, not bugs): broker state is NOT replicated —
+events buffered only on a dead home shard are lost, so streams are
+at-most-once across a failover (replicating group cursors is an open
+item); and a key is readable-while-absent on a lagging async replica —
+readers fall through a miss to the other owners before declaring None.
 
 Fault injection for all of the above lives in
 :mod:`repro.distributed.chaos`; `benchmarks/fig15_fabric.py` measures
@@ -65,6 +74,7 @@ from typing import Any, Sequence
 from repro.core.connector import BaseConnector, Key, StreamItem
 from repro.core.kv_tcp import KVClient, is_uds
 from repro.distributed.fault_tolerance import RetryPolicy
+from repro.stream.broker import BrokerEvent
 
 log = logging.getLogger(__name__)
 
@@ -225,6 +235,12 @@ class ShardedConnector(BaseConnector):
         self._repl_futs: set[Future] = set()
         self.n_failovers = 0       # reads served off the first-choice owner
         self.n_repl_errors = 0     # background replica writes that failed
+        # stream plane: client-side subscription registry so a topic's
+        # groups can be re-established on its next owner after failover
+        self._streams_lock = threading.Lock()
+        self._stream_subs: dict[tuple[str, str], dict] = {}
+        self._stream_limits: dict[str, int] = {}
+        self._stream_home: dict[str, str] = {}
 
     # -- shard plumbing ------------------------------------------------------
     def _client(self, sid: str) -> KVClient:
@@ -576,25 +592,131 @@ class ShardedConnector(BaseConnector):
         raise last if isinstance(last, TimeoutError) else TimeoutError(
             f"wait({oid}): no reachable owner ({last})")
 
-    # -- streams: single-shard per topic (documented limitation) -------------
-    def _topic_client(self, topic: str) -> KVClient:
-        return self._client(self._ring.primary(f"@t:{topic}"))
+    # -- streams: one home shard per topic, failover with re-subscribe -------
+    def _topic_owners(self, topic: str) -> list[str]:
+        return self._owners(f"@t:{topic}")
 
-    def stream_append(self, topic: str, blob,
-                      ttl: float | None = None) -> int:
-        return self._topic_client(topic).stream_append(topic, blob, ttl)
+    def _ensure_stream_home(self, topic: str, sid: str,
+                            client: KVClient) -> None:
+        """First contact of ``topic`` on shard ``sid`` (initial bind or a
+        post-failover re-home): re-install its backpressure limit and
+        re-subscribe its groups with ``start="new"`` — events buffered
+        only on the dead shard are lost (at-most-once across failover,
+        module doc)."""
+        with self._streams_lock:
+            if self._stream_home.get(topic) == sid:
+                return
+            limit = self._stream_limits.get(topic)
+            subs = [(g, spec) for (t, g), spec in self._stream_subs.items()
+                    if t == topic]
+        if limit:
+            client.stream_limit(topic, limit)
+        for group, spec in subs:
+            client.stream_sub(topic, group, "new", spec.get("filter"))
+        with self._streams_lock:
+            self._stream_home[topic] = sid
+
+    def _stream_call(self, topic: str, fn):
+        """Run ``fn(client)`` on the topic's home shard, failing over
+        along its ring owners.  A parked-op TimeoutError is a real
+        outcome (no producer/event) and propagates; only channel errors
+        move the topic."""
+        last: BaseException | None = None
+        for sid in self._ordered(self._topic_owners(topic)):
+            client = self._client(sid)
+            try:
+                self._ensure_stream_home(topic, sid, client)
+                out = fn(client)
+                self._health.mark_ok(sid)
+                return out
+            except TimeoutError:
+                raise
+            except _CONN_ERRORS as e:
+                self._suspect(sid)
+                with self._streams_lock:
+                    self._stream_home.pop(topic, None)
+                self.n_failovers += 1
+                last = e
+        raise ConnectionError(
+            f"fabric: stream op on topic {topic!r} failed on every "
+            f"owner ({last})")
+
+    def stream_append(self, topic: str, blob, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
+        return self._stream_call(
+            topic, lambda c: c.stream_append(topic, blob, ttl, meta=meta,
+                                             timeout=timeout))
 
     def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
                     location: str | None = None) -> StreamItem:
-        it = self._topic_client(topic).stream_next(topic, seq, timeout)
+        it = self._stream_call(
+            topic, lambda c: c.stream_next(topic, seq, timeout))
         return StreamItem(seq, it["data"], it["available"], it["end"])
 
     def stream_fetch(self, topic: str, seqs,
                      location: str | None = None) -> list:
-        return self._topic_client(topic).stream_fetch(topic, seqs)
+        return self._stream_call(topic,
+                                 lambda c: c.stream_fetch(topic, seqs))
 
     def stream_close(self, topic: str, location: str | None = None) -> None:
-        self._topic_client(topic).stream_close(topic)
+        self._stream_call(topic, lambda c: c.stream_close(topic))
+
+    # -- pub/sub consumer groups (subscriptions survive shard death) ---------
+    def stream_subscribe(self, topic: str, group: str, start: str = "new",
+                         filter: dict | None = None,  # noqa: A002
+                         location: str | None = None) -> dict:
+        out = self._stream_call(
+            topic, lambda c: c.stream_sub(topic, group, start, filter))
+        with self._streams_lock:
+            self._stream_subs[(topic, group)] = {"filter": filter}
+        return out
+
+    def stream_unsubscribe(self, topic: str, group: str,
+                           location: str | None = None) -> None:
+        with self._streams_lock:
+            self._stream_subs.pop((topic, group), None)
+        self._stream_call(topic, lambda c: c.stream_unsub(topic, group))
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True,
+                    location: str | None = None) -> BrokerEvent:
+        it = self._stream_call(
+            topic, lambda c: c.stream_take(topic, group, timeout, payload))
+        if it["end"]:
+            return BrokerEvent(-1, None, {}, end=True)
+        return BrokerEvent(int(it["seq"]), it["data"], it["meta"])
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True,
+                          location: str | None = None) -> list[BrokerEvent]:
+        items = self._stream_call(
+            topic, lambda c: c.stream_take_batch(topic, group, n, payload))
+        return [BrokerEvent(it["seq"], it["data"], it["meta"])
+                for it in items]
+
+    def stream_ack(self, topic: str, group: str, seqs,
+                   location: str | None = None) -> int:
+        return self._stream_call(
+            topic, lambda c: c.stream_ack(topic, group, seqs))
+
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       location: str | None = None) -> int:
+        return self._stream_call(
+            topic, lambda c: c.stream_requeue(topic, group, seqs))
+
+    def stream_limit(self, topic: str, limit: int | None,
+                     location: str | None = None) -> None:
+        with self._streams_lock:
+            if limit:
+                self._stream_limits[topic] = int(limit)
+            else:
+                self._stream_limits.pop(topic, None)
+        self._stream_call(topic, lambda c: c.stream_limit(topic, limit))
+
+    def stream_stat(self, topic: str,
+                    location: str | None = None) -> dict:
+        return self._stream_call(topic, lambda c: c.stream_stat(topic))
 
     # -- rebalancing ---------------------------------------------------------
     def add_shard(self, addr) -> None:

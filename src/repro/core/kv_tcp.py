@@ -112,7 +112,51 @@ stall the sweep.
 * ``s_close``: ``{"op": "s_close", "topic": t}`` — sets the end-of-stream
   marker and releases every parked consumer.
 * ``s_stat``: ``{"op": "s_stat", "topic": t}`` — ``{"count", "closed"}``
-  without blocking.
+  plus, for topics with consumer groups, ``{"groups", "limit",
+  "buffered"}`` — without blocking.
+
+**Pub/sub group ops** (broker mode: named consumer groups with independent
+cursors, per-group acks, server-side filters, credit-based backpressure —
+the arXiv:2407.01764 "proxy-on-publish" event-stream pattern):
+
+* ``s_sub``: ``{"op": "s_sub", "topic": t, "group": g, "start":
+  "new"|"begin", "filter": spec}`` — create consumer group ``g``
+  (idempotent: re-subscribing returns the existing group's state).  With
+  ``start="begin"`` the group adopts every retained item; later groups
+  incref retained items so each holds its own payload reference.
+  ``filter`` is a declarative spec (see :mod:`repro.stream.filters`)
+  evaluated server-side against event *metadata*: events a group filters
+  out never enter its queue and never touch the payload path.
+* ``s_append`` extension: ``"meta"`` (a small msgpack map) rides in the
+  request header.  On a topic with subscribed groups the payload is stored
+  with ONE reference per matching group — bytes cross the data plane once
+  regardless of fanout, and the item is evicted when the LAST group acks.
+  An event every group filters out is never stored at all (zero payload
+  work).  Topics without groups keep the legacy single-reference
+  behavior.  When an ``s_limit`` bound is set and the topic's buffer of
+  unacked events is full, ``s_append`` PARKS until consumer acks free
+  credits (timeout → ``{"ok": False, "timeout": True}``).
+* ``s_next2``: ``{"op": "s_next2", "topic": t, "group": g, "timeout": s,
+  "payload": bool}`` — park until an event is deliverable to the group;
+  responds ``get2``-style with ``"i"`` (the event's seq) and ``"meta"``
+  in-band.  ``payload=False`` delivers metadata only (the payload bytes
+  are never served — metrics-tap consumers).  Delivery does NOT release
+  the payload reference; the group acks separately.
+* ``s_fetch``: ``{"op": "s_fetch", "topic": t, "group": g, "n": k,
+  "payload": bool}`` — non-blocking batch take of up to ``k`` deliverable
+  events in ONE exchange (``seqs`` + ``metas`` in-band, blobs
+  ``mget2``-style out-of-band).
+* ``s_ack``: ``{"op": "s_ack", "topic": t, "group": g, "seqs": [...]}`` —
+  per-group ack: releases each event's group reference (payload evicted
+  after the last group acks) and frees backpressure credits.  Idempotent
+  (only seqs the group actually holds unacked are applied).
+* ``s_requeue``: ``{"op": "s_requeue", "topic": t, "group": g, "seqs":
+  [...]}`` — return delivered-but-unprocessed events to the group's queue
+  (redelivered in sequence order); how a consumer hands back prefetched
+  items on ``close()`` instead of leaking them.
+* ``s_unsub``: drop the group, releasing its outstanding references.
+* ``s_limit``: ``{"op": "s_limit", "topic": t, "limit": n}`` — bound the
+  per-topic buffer of unacked events (``limit`` falsy clears the bound).
 
 Responses: ``{"ok": bool, "seq": int, "data": ..., "error": str}`` plus the
 ``raw``/``raws`` out-of-band markers above.
@@ -156,6 +200,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import collections
 import contextlib
 import itertools
 import os
@@ -189,6 +234,11 @@ IDEMPOTENT_OPS = frozenset({
     "get", "get2", "mget", "mget2", "exists", "mexists", "refcount",
     "touch", "mtouch", "evict", "mevict", "s_stat", "s_close", "wait",
     "mwait", "ping", "stats", "keyspace", "sleep",
+    # group ops: s_sub re-subscribe returns the existing group, s_unsub
+    # twice == once, s_ack/s_requeue act only on seqs the group actually
+    # holds unacked, s_limit sets an absolute bound.  NOT s_next2/s_fetch:
+    # delivery moves events out of the group queue.
+    "s_sub", "s_unsub", "s_ack", "s_requeue", "s_limit",
 })
 
 
@@ -516,11 +566,27 @@ class StreamTable:
     under :func:`stream_item_key` with one reference per item, so consumed
     items decref (and are evicted exactly once) like the ownership
     subsystem's ephemerals.  All mutations happen in synchronous handler
-    sections on the server's single event loop."""
+    sections on the server's single event loop.
+
+    **Broker mode**: topics may carry named consumer *groups* — each with
+    its own delivery queue, unacked set, and optional metadata filter.  An
+    event's payload holds one reference per matching group (evicted after
+    the LAST group acks), so the bytes cross the data plane once no matter
+    the fanout.  The table only tracks seqs/refcount bookkeeping; payload
+    storage and lifetime stay with the owning server (callers translate
+    the seq lists this table returns into incref/decref on the derived
+    :func:`stream_item_key` keys)."""
 
     def __init__(self) -> None:
         self.topics: dict[str, dict] = {}     # topic -> {count, closed}
         self._waiters: dict[str, list[asyncio.Future]] = {}
+        # broker mode: topic -> group -> {queue, unacked, filter, fn}
+        self.groups: dict[str, dict[str, dict]] = {}
+        self.owners: dict[str, dict[int, int]] = {}   # seq -> group refs
+        self.meta: dict[str, dict[int, dict]] = {}    # seq -> event meta
+        self.limits: dict[str, int] = {}              # backpressure bound
+        self._gwaiters: dict[tuple[str, str], list[asyncio.Future]] = {}
+        self._pwaiters: dict[str, list[asyncio.Future]] = {}
 
     def state(self, topic: str) -> dict:
         return self.topics.setdefault(topic, {"count": 0, "closed": False})
@@ -545,11 +611,243 @@ class StreamTable:
     def close(self, topic: str) -> None:
         self.state(topic)["closed"] = True
         self._wake(topic)
+        for group in self.groups.get(topic, ()):
+            self._wake_group(topic, group)
+        self._wake_producers(topic)   # parked appends fail fast on closed
 
     def _wake(self, topic: str) -> None:
         for fut in self._waiters.pop(topic, ()):
             if not fut.done():
                 fut.set_result(None)
+
+    def _wake_group(self, topic: str, group: str) -> None:
+        for fut in self._gwaiters.pop((topic, group), ()):
+            if not fut.done():
+                fut.set_result(None)
+
+    def _wake_producers(self, topic: str) -> None:
+        for fut in self._pwaiters.pop(topic, ()):
+            if not fut.done():
+                fut.set_result(None)
+
+    # -- broker mode: consumer groups ---------------------------------------
+    def subscribe(self, topic: str, group: str, start: str,
+                  filter_spec, present_fn) -> tuple[bool, list[int]]:
+        """Create consumer group ``group`` (idempotent — an existing group
+        is untouched).  ``start="begin"`` queues every retained item that
+        passes the group's filter: the FIRST group adopts the item's
+        legacy single reference; each later group needs its own, so the
+        caller must incref the returned seqs.  Returns
+        ``(created, seqs_to_incref)``."""
+        groups = self.groups.setdefault(topic, {})
+        if group in groups:
+            return False, []
+        fn = None
+        if filter_spec:
+            from repro.stream.filters import compile_filter
+            fn = compile_filter(filter_spec)
+        g = {"queue": collections.deque(), "unacked": set(),
+             "filter": filter_spec, "fn": fn}
+        groups[group] = g
+        increfs: list[int] = []
+        if start == "begin":
+            owners = self.owners.setdefault(topic, {})
+            metas = self.meta.get(topic, {})
+            for seq in range(self.state(topic)["count"]):
+                if not present_fn(seq):
+                    continue          # consumed / reaped / never stored
+                if fn is not None and not fn(metas.get(seq) or {}):
+                    continue
+                g["queue"].append(seq)
+                n = owners.get(seq, 0)
+                owners[seq] = n + 1
+                if n:                 # the legacy ref is already adopted
+                    increfs.append(seq)
+        return True, increfs
+
+    def unsubscribe(self, topic: str, group: str) -> list[int]:
+        """Drop the group; returns the seqs whose group reference the
+        caller must release (queued and unacked alike)."""
+        g = self.groups.get(topic, {}).pop(group, None)
+        if g is None:
+            return []
+        released = [seq for seq in (*g["queue"], *g["unacked"])
+                    if self._drop_owner(topic, seq)]
+        if released:
+            self._wake_producers(topic)
+        return released
+
+    def _drop_owner(self, topic: str, seq: int) -> bool:
+        """Release one group reference on ``seq``; True if it was held."""
+        owners = self.owners.get(topic)
+        n = owners.get(seq) if owners else None
+        if n is None:
+            return False
+        if n <= 1:
+            del owners[seq]
+            self.meta.get(topic, {}).pop(seq, None)
+        else:
+            owners[seq] = n - 1
+        return True
+
+    def has_groups(self, topic: str) -> bool:
+        return bool(self.groups.get(topic))
+
+    def match(self, topic: str, meta: dict | None) -> list[str] | None:
+        """Group names whose filter passes ``meta``; None when the topic
+        has no groups at all (legacy single-cursor mode)."""
+        groups = self.groups.get(topic)
+        if not groups:
+            return None
+        m = meta or {}
+        return [name for name, g in groups.items()
+                if g["fn"] is None or g["fn"](m)]
+
+    def publish(self, topic: str, seq: int, meta: dict | None,
+                matched: list[str]) -> None:
+        """Record a stored event: remember its metadata, queue it for each
+        matching group, and wake their parked consumers.  Call AFTER the
+        payload landed in the data map (a consumer woken early would miss
+        on its fetch)."""
+        if meta:
+            self.meta.setdefault(topic, {})[seq] = dict(meta)
+        if matched:
+            self.owners.setdefault(topic, {})[seq] = len(matched)
+        for name in matched:
+            g = self.groups.get(topic, {}).get(name)
+            if g is not None:
+                g["queue"].append(seq)
+                self._wake_group(topic, name)
+
+    def take(self, topic: str, group: str) -> int | None:
+        """Pop the group's next deliverable seq (moved to unacked)."""
+        g = self.groups.get(topic, {}).get(group)
+        if g is None or not g["queue"]:
+            return None
+        seq = g["queue"].popleft()
+        g["unacked"].add(seq)
+        return seq
+
+    async def wait_take(self, topic: str, group: str, timeout: float):
+        """Park until an event is deliverable to the group; returns its
+        seq, the string ``"end"`` (topic closed, nothing left to deliver),
+        or None on timeout."""
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + float(timeout)
+        while True:
+            seq = self.take(topic, group)
+            if seq is not None:
+                return seq
+            if self.state(topic)["closed"]:
+                return "end"
+            remaining = deadline - loop.time()
+            if remaining <= 0:
+                return None
+            fut = loop.create_future()
+            self._gwaiters.setdefault((topic, group), []).append(fut)
+            try:
+                await asyncio.wait_for(fut, remaining)
+            except asyncio.TimeoutError:
+                seq = self.take(topic, group)
+                if seq is not None:
+                    return seq
+                return "end" if self.state(topic)["closed"] else None
+            finally:
+                lst = self._gwaiters.get((topic, group))
+                if lst and fut in lst:
+                    lst.remove(fut)
+                    if not lst:
+                        del self._gwaiters[(topic, group)]
+
+    def ack(self, topic: str, group: str, seqs) -> list[int]:
+        """Per-group ack: returns the seqs that were actually outstanding
+        (the caller releases their payload reference).  Seqs the group
+        does not hold unacked are ignored — acking twice is harmless."""
+        g = self.groups.get(topic, {}).get(group)
+        if g is None:
+            return []
+        done = []
+        for seq in seqs:
+            seq = int(seq)
+            if seq not in g["unacked"]:
+                continue
+            g["unacked"].discard(seq)
+            self._drop_owner(topic, seq)
+            done.append(seq)
+        if done:
+            self._wake_producers(topic)   # acks free backpressure credits
+        return done
+
+    def requeue(self, topic: str, group: str, seqs) -> int:
+        """Return delivered-but-unprocessed events to the group's queue
+        (merged in sequence order, ahead of later events); returns how
+        many were handed back.  No reference changes — the events stay
+        buffered for redelivery."""
+        g = self.groups.get(topic, {}).get(group)
+        if g is None:
+            return 0
+        back = {int(s) for s in seqs} & g["unacked"]
+        if not back:
+            return 0
+        g["unacked"] -= back
+        g["queue"] = collections.deque(sorted(back | set(g["queue"])))
+        self._wake_group(topic, group)
+        return len(back)
+
+    def set_limit(self, topic: str, limit) -> None:
+        if limit:
+            self.limits[topic] = int(limit)
+        else:
+            self.limits.pop(topic, None)
+            self._wake_producers(topic)
+
+    def buffered(self, topic: str) -> int:
+        """Unacked (group-referenced) events buffered on the topic — the
+        quantity the backpressure limit bounds."""
+        return len(self.owners.get(topic, ()))
+
+    async def wait_capacity(self, topic: str, timeout: float) -> bool:
+        """Park the producer until the topic's unacked buffer has room
+        (or the topic closes — the append then fails loudly on its own).
+        Returns False on timeout."""
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + float(timeout)
+        while True:
+            limit = self.limits.get(topic)
+            if (limit is None or self.buffered(topic) < limit
+                    or self.state(topic)["closed"]):
+                return True
+            remaining = deadline - loop.time()
+            if remaining <= 0:
+                return False
+            fut = loop.create_future()
+            self._pwaiters.setdefault(topic, []).append(fut)
+            try:
+                await asyncio.wait_for(fut, remaining)
+            except asyncio.TimeoutError:
+                limit = self.limits.get(topic)
+                return (limit is None or self.buffered(topic) < limit
+                        or self.state(topic)["closed"])
+            finally:
+                lst = self._pwaiters.get(topic)
+                if lst and fut in lst:
+                    lst.remove(fut)
+                    if not lst:
+                        del self._pwaiters[topic]
+
+    def describe(self, topic: str) -> dict:
+        """``s_stat`` payload: legacy ``{count, closed}`` plus group/
+        backpressure state for broker-mode topics."""
+        st = dict(self.state(topic))
+        groups = self.groups.get(topic)
+        if groups:
+            st["groups"] = {name: {"queued": len(g["queue"]),
+                                   "unacked": len(g["unacked"])}
+                            for name, g in groups.items()}
+            st["buffered"] = self.buffered(topic)
+            if topic in self.limits:
+                st["limit"] = self.limits[topic]
+        return st
 
     async def wait_item(self, topic: str, seq: int, timeout: float) -> dict | None:
         """Park until item ``seq`` exists or the stream is closed; returns
@@ -581,7 +879,69 @@ class StreamTable:
     def stats(self) -> dict:
         return {"n_topics": len(self.topics),
                 "n_stream_waiters": sum(len(v)
-                                        for v in self._waiters.values())}
+                                        for v in self._waiters.values()),
+                "n_groups": sum(len(g) for g in self.groups.values()),
+                "n_unacked": sum(len(o) for o in self.owners.values())}
+
+
+def stream_append_locally(streams: StreamTable, lifetime: LifetimeTable,
+                          store_fn, topic: str, data, ttl, meta) -> dict:
+    """Grouped append, shared by the KV server and the PS-endpoint.
+
+    Topics with subscribed groups store the payload with one reference per
+    matching group (evicted after the last ack); an event every group
+    filters out is never stored at all.  Topics without groups keep the
+    legacy single-reference behavior.  ``store_fn(key, data)`` lands the
+    payload in the owning server's data map."""
+    seq = streams.next_seq(topic)            # raises when closed
+    matched = streams.match(topic, meta)     # None = legacy, [] = filtered
+    if matched is None or matched:
+        key = stream_item_key(topic, seq)
+        store_fn(key, data)
+        lifetime.incref(key, 1 if matched is None else len(matched))
+        if ttl:
+            lifetime.touch(key, ttl)
+    streams.publish(topic, seq, meta, matched or [])
+    return {"ok": True, "data": streams.committed(topic)}
+
+
+def stream_group_op(streams: StreamTable, lifetime: LifetimeTable,
+                    present_fn, req: dict) -> dict:
+    """The synchronous group ops (``s_sub``/``s_unsub``/``s_ack``/
+    ``s_requeue``/``s_limit``), shared by the KV server and the
+    PS-endpoint.  ``present_fn(key)`` reports data-map membership (used to
+    skip already-consumed retained items on a ``start="begin"``
+    subscribe)."""
+    op, topic = req["op"], req["topic"]
+    if op == "s_sub":
+        group = req["group"]
+        created, increfs = streams.subscribe(
+            topic, group, req.get("start", "new"), req.get("filter"),
+            lambda seq: present_fn(stream_item_key(topic, seq)))
+        for seq in increfs:
+            lifetime.incref(stream_item_key(topic, seq))
+        st = streams.state(topic)
+        g = streams.groups[topic][group]
+        return {"ok": True, "data": {"created": created,
+                                     "queued": len(g["queue"]),
+                                     "count": st["count"],
+                                     "closed": st["closed"]}}
+    if op == "s_unsub":
+        for seq in streams.unsubscribe(topic, req["group"]):
+            lifetime.decref(stream_item_key(topic, seq))
+        return {"ok": True}
+    if op == "s_ack":
+        acked = streams.ack(topic, req["group"], req.get("seqs") or ())
+        for seq in acked:
+            lifetime.decref(stream_item_key(topic, seq))
+        return {"ok": True, "data": len(acked)}
+    if op == "s_requeue":
+        n = streams.requeue(topic, req["group"], req.get("seqs") or ())
+        return {"ok": True, "data": n}
+    if op == "s_limit":
+        streams.set_limit(topic, req.get("limit"))
+        return {"ok": True}
+    return {"ok": False, "error": f"unknown stream op {op!r}"}
 
 
 # ---------------------------------------------------------------------------
@@ -599,6 +959,12 @@ class KVServer:
         self.streams = StreamTable()
         self._persist = Path(persist_dir) if persist_dir else None
         self._n_ops = 0
+        # payload-serve accounting: every op that ships stored payload
+        # bytes to a client bumps these (the fanout benchmark's served-
+        # bytes ratio, and the proof that filtered-out events do ZERO
+        # payload-path work, both read them from ``stats``)
+        self._n_payload_serves = 0
+        self._payload_bytes = 0
         self._io_pool: ThreadPoolExecutor | None = None
         if self._persist:
             self._persist.mkdir(parents=True, exist_ok=True)
@@ -652,6 +1018,10 @@ class KVServer:
     def _maybe_sweep(self) -> None:
         self.lifetime.maybe_sweep()
 
+    def _count_serve(self, data) -> None:
+        self._n_payload_serves += 1
+        self._payload_bytes += len(data)
+
     def handle(self, req: dict) -> dict:
         self._n_ops += 1
         self._maybe_sweep()
@@ -661,6 +1031,8 @@ class KVServer:
             return {"ok": True}
         if op == "get":
             data = self._data.get(req["key"])
+            if data is not None:
+                self._count_serve(data)
             return {"ok": True, "data": data}
         if op == "exists":
             return {"ok": True, "data": req["key"] in self._data}
@@ -672,7 +1044,14 @@ class KVServer:
                 self._put(k, b)
             return {"ok": True}
         if op == "mget":
-            return {"ok": True, "data": [self._data.get(k) for k in req["keys"]]}
+            datas = [self._data.get(k) for k in req["keys"]]
+            for d in datas:
+                if d is not None:
+                    self._count_serve(d)
+            return {"ok": True, "data": datas}
+        if op in ("s_sub", "s_unsub", "s_ack", "s_requeue", "s_limit"):
+            return stream_group_op(self.streams, self.lifetime,
+                                   self._data.__contains__, req)
         if op == "mevict":
             for k in req["keys"]:
                 self._evict(k)
@@ -727,6 +1106,8 @@ class KVServer:
                 "n_objects": len(self._data),
                 "bytes": sum(len(v) for v in self._data.values()),
                 "n_ops": self._n_ops,
+                "n_payload_serves": self._n_payload_serves,
+                "payload_bytes_served": self._payload_bytes,
                 **self.lifetime.stats(),
                 **self.waiters.stats(),
                 **self.streams.stats(),
@@ -752,7 +1133,8 @@ class KVServer:
 
     # ops with await points (parked, timed, or executor-bound) — these can
     # never take the inline fast path
-    _ASYNC_OPS = frozenset({"wait", "mwait", "s_next", "sleep", "shutdown"})
+    _ASYNC_OPS = frozenset({"wait", "mwait", "s_next", "s_next2", "sleep",
+                            "shutdown"})
 
     def try_sync(self, req: dict, payload) -> tuple[dict, tuple | None] | None:
         """Handle a request with NO await points synchronously; returns
@@ -763,6 +1145,8 @@ class KVServer:
         op = req.get("op")
         if op in self._ASYNC_OPS:
             return None
+        if op == "s_append" and req.get("topic") in self.streams.limits:
+            return None          # backpressure: the append may park
         if self._persist and op in ("put", "mput", "put2", "mput2"):
             return None          # disk write-through rides the executor
         self._maybe_sweep()
@@ -790,25 +1174,50 @@ class KVServer:
                 resp = {"ok": True, "raw": -1 if data is None else len(data)}
                 if data is not None:
                     raw = (data,)
+                    self._count_serve(data)
             elif op == "mget2":
                 self._n_ops += 1
                 datas = [self._data.get(k) for k in req["keys"]]
                 resp = {"ok": True,
                         "raws": [-1 if d is None else len(d) for d in datas]}
                 raw = tuple(d for d in datas if d is not None)
+                for d in raw:
+                    self._count_serve(d)
             elif op == "s_append":
                 # data first, count bump + consumer wake second: a consumer
                 # woken before the bytes land would miss on its prefetch.
                 # (Stream items are ephemerals — never persisted.)
                 self._n_ops += 1
-                topic = req["topic"]
-                key = stream_item_key(topic, self.streams.next_seq(topic))
-                self._store_mem(key, payload)
-                self.lifetime.incref(key)        # one ref: the consumer
-                ttl = req.get("ttl")
-                if ttl:
-                    self.lifetime.touch(key, ttl)
-                resp = {"ok": True, "data": self.streams.committed(topic)}
+                resp = stream_append_locally(
+                    self.streams, self.lifetime, self._store_mem,
+                    req["topic"], payload, req.get("ttl"), req.get("meta"))
+            elif op == "s_fetch":
+                # non-blocking batch take for one consumer group: seqs +
+                # metas in-band, payload blobs mget2-style out-of-band
+                # (delivered events move to the group's unacked set; the
+                # ack releases their references separately)
+                self._n_ops += 1
+                topic, group = req["topic"], req["group"]
+                want = req.get("payload", True)
+                seqs: list[int] = []
+                while len(seqs) < int(req.get("n", 1)):
+                    seq = self.streams.take(topic, group)
+                    if seq is None:
+                        break
+                    seqs.append(seq)
+                metas = self.streams.meta.get(topic, {})
+                st = self.streams.state(topic)
+                resp = {"ok": True, "seqs": seqs,
+                        "metas": [metas.get(s) or {} for s in seqs],
+                        "available": st["count"], "closed": st["closed"]}
+                if want:
+                    datas = [self._data.get(stream_item_key(topic, s))
+                             for s in seqs]
+                    resp["raws"] = [-1 if d is None else len(d)
+                                    for d in datas]
+                    raw = tuple(d for d in datas if d is not None)
+                    for d in raw:
+                        self._count_serve(d)
             elif op == "s_close":
                 self._n_ops += 1
                 self.streams.close(req["topic"])
@@ -816,7 +1225,7 @@ class KVServer:
             elif op == "s_stat":
                 self._n_ops += 1
                 resp = {"ok": True,
-                        "data": dict(self.streams.state(req["topic"]))}
+                        "data": self.streams.describe(req["topic"])}
             else:
                 resp = self.handle(req)
         except Exception as e:  # noqa: BLE001 - surface to client
@@ -878,6 +1287,7 @@ class KVServer:
                 else:
                     resp = {"ok": True, "raw": len(data)}
                     raw = (data,)
+                    self._count_serve(data)
             elif op == "mwait":
                 self._n_ops += 1
                 loop = asyncio.get_running_loop()
@@ -890,6 +1300,8 @@ class KVServer:
                 if any(d is None for d in datas):
                     resp["timeout"] = True
                 raw = tuple(d for d in datas if d is not None)
+                for d in raw:
+                    self._count_serve(d)
             elif op == "s_next":
                 self._n_ops += 1
                 # stream position rides as "i": "seq" is the connection's
@@ -912,11 +1324,60 @@ class KVServer:
                         resp["missing"] = True
                     else:
                         raw = (data,)
+                        self._count_serve(data)
                         if req.get("consume", True):
                             self.lifetime.decref(key)
                 else:                    # closed before this item: end marker
                     resp = {"ok": True, "raw": -1, "end": True,
                             "available": st["count"], "closed": True}
+            elif op == "s_next2":
+                # blocking group take: parks until an event is deliverable
+                # to THIS group (or the topic closes).  Delivery does not
+                # release the payload reference — the group acks when done.
+                self._n_ops += 1
+                topic, group = req["topic"], req["group"]
+                got = await self.streams.wait_take(
+                    topic, group, float(req.get("timeout", 60.0)))
+                if got is None:
+                    resp = {"ok": False, "timeout": True,
+                            "error": f"stream {topic!r} group {group!r} "
+                                     f"timed out"}
+                elif got == "end":
+                    st = self.streams.state(topic)
+                    resp = {"ok": True, "raw": -1, "end": True,
+                            "available": st["count"], "closed": True}
+                else:
+                    st = self.streams.state(topic)
+                    resp = {"ok": True, "i": got,
+                            "meta": self.streams.meta.get(topic, {})
+                                                     .get(got) or {},
+                            "available": st["count"],
+                            "closed": st["closed"]}
+                    if req.get("payload", True):
+                        data = self._data.get(stream_item_key(topic, got))
+                        resp["raw"] = -1 if data is None else len(data)
+                        if data is None:   # lease-reaped under the group
+                            resp["missing"] = True
+                        else:
+                            raw = (data,)
+                            self._count_serve(data)
+                    else:                  # metadata-only tap: the payload
+                        resp["raw"] = -1   # bytes are never served
+            elif op == "s_append":
+                # only lands here for topics with a backpressure limit
+                # (try_sync refuses them): park until consumer acks free a
+                # buffer slot, then run the same grouped append
+                self._n_ops += 1
+                topic = req["topic"]
+                if await self.streams.wait_capacity(
+                        topic, float(req.get("timeout", 60.0))):
+                    resp = stream_append_locally(
+                        self.streams, self.lifetime, self._store_mem,
+                        topic, payload, req.get("ttl"), req.get("meta"))
+                else:
+                    resp = {"ok": False, "timeout": True,
+                            "error": f"stream {topic!r} append timed out "
+                                     f"on backpressure (buffer full)"}
             elif op == "sleep":
                 await asyncio.sleep(float(req.get("s", 0.0)))
                 self._n_ops += 1
@@ -1649,10 +2110,16 @@ class KVClient:
         return resp.get("data")
 
     # -- streams: per-topic append/consume -----------------------------------
-    def stream_append(self, topic: str, data, ttl: float | None = None) -> int:
+    def stream_append(self, topic: str, data, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
         """Append one item (bytes | Frame | segments) to ``topic``; returns
-        its sequence number.  The item is stored refcounted (one reference,
-        dropped when a consumer takes it)."""
+        its sequence number.  The item is stored refcounted — one
+        reference per subscribed consumer group whose filter matches
+        ``meta`` (legacy single reference on topics without groups).  On a
+        topic with an ``s_limit`` bound the append parks server-side until
+        consumer acks free a buffer slot (raises TimeoutError past
+        ``timeout``)."""
         from repro.core.serialize import as_segments, frame_nbytes
 
         nbytes = frame_nbytes(data)
@@ -1661,12 +2128,95 @@ class KVClient:
         msg = {"op": "s_append", "topic": topic, "nbytes": nbytes}
         if ttl is not None:
             msg["ttl"] = ttl
+        if meta:
+            msg["meta"] = dict(meta)
+        if timeout is not None:
+            msg["timeout"] = timeout
         # never auto-retried: a reconnect-retry after the server committed
         # would append the item twice under a second sequence number
-        resp = self.request(msg, payload=as_segments(data), retry=False)
+        resp = self.request(msg, payload=as_segments(data), retry=False,
+                            timeout=(None if timeout is None
+                                     else timeout + self.timeout))
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
         if not resp.get("ok"):
             raise RuntimeError(resp.get("error"))
         return int(resp["data"])
+
+    # -- pub/sub consumer groups ---------------------------------------------
+    def stream_sub(self, topic: str, group: str, start: str = "new",
+                   filter: dict | None = None) -> dict:  # noqa: A002
+        """Create (idempotently) consumer group ``group`` on ``topic``.
+        ``start="begin"`` queues the retained items that pass ``filter``;
+        ``"new"`` starts from the next append.  Returns the group state
+        ``{"created", "queued", "count", "closed"}``."""
+        msg = {"op": "s_sub", "topic": topic, "group": group, "start": start}
+        if filter:
+            msg["filter"] = filter
+        return self._data_op(msg)
+
+    def stream_unsub(self, topic: str, group: str) -> None:
+        """Drop the group, releasing its outstanding payload references."""
+        self._data_op({"op": "s_unsub", "topic": topic, "group": group})
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True) -> dict:
+        """Block until an event is deliverable to ``group``; returns
+        ``{"seq", "data", "meta", "available", "closed", "end",
+        "missing"}`` (``data`` None for metadata-only takes and past-end
+        markers).  The event stays unacked until :meth:`stream_ack`."""
+        # delivery moves the event out of the group's queue: a reconnect-
+        # retry could observe it as already delivered, so fail fast
+        resp = self.request({"op": "s_next2", "topic": topic,
+                             "group": group, "timeout": timeout,
+                             "payload": payload},
+                            timeout=timeout + self.timeout, retry=False)
+        if resp.get("timeout"):
+            raise TimeoutError(resp.get("error"))
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return {"seq": resp.get("i"), "data": resp.get("data"),
+                "meta": resp.get("meta") or {},
+                "available": int(resp.get("available", 0)),
+                "closed": bool(resp.get("closed")),
+                "end": bool(resp.get("end")),
+                "missing": bool(resp.get("missing"))}
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True) -> list[dict]:
+        """Non-blocking batch take: up to ``n`` deliverable events in ONE
+        exchange, each ``{"seq", "data", "meta"}`` (``data`` None for
+        metadata-only takes).  Events stay unacked until acked."""
+        resp = self.request({"op": "s_fetch", "topic": topic,
+                             "group": group, "n": int(n),
+                             "payload": payload}, retry=False)
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        seqs = resp.get("seqs") or []
+        metas = resp.get("metas") or [{}] * len(seqs)
+        datas = resp.get("data") or [None] * len(seqs)
+        return [{"seq": int(s), "meta": m or {}, "data": d}
+                for s, m, d in zip(seqs, metas, datas)]
+
+    def stream_ack(self, topic: str, group: str, seqs) -> int:
+        """Ack delivered events for ``group`` — releases each event's
+        group reference (payload evicted after the LAST group acks) and
+        frees backpressure credits.  Returns how many were newly acked."""
+        return int(self._data_op({"op": "s_ack", "topic": topic,
+                                  "group": group,
+                                  "seqs": [int(s) for s in seqs]}) or 0)
+
+    def stream_requeue(self, topic: str, group: str, seqs) -> int:
+        """Hand delivered-but-unprocessed events back to the group (they
+        redeliver in sequence order).  Returns how many were requeued."""
+        return int(self._data_op({"op": "s_requeue", "topic": topic,
+                                  "group": group,
+                                  "seqs": [int(s) for s in seqs]}) or 0)
+
+    def stream_limit(self, topic: str, limit: int | None) -> None:
+        """Bound the topic's buffer of unacked events (credit-based
+        backpressure); falsy ``limit`` clears the bound."""
+        self._data_op({"op": "s_limit", "topic": topic, "limit": limit})
 
     def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
                     consume: bool = True) -> dict:

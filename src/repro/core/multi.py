@@ -204,9 +204,12 @@ class MultiConnector(BaseConnector):
         conn, sub = self._child(key)
         return conn.wait(sub, timeout)
 
-    def stream_append(self, topic: str, blob,
-                      ttl: float | None = None) -> int:
-        return self._future_child()[1].stream_append(topic, blob, ttl)
+    def stream_append(self, topic: str, blob, ttl: float | None = None,
+                      meta: dict | None = None,
+                      timeout: float | None = None) -> int:
+        return self._future_child()[1].stream_append(topic, blob, ttl,
+                                                     meta=meta,
+                                                     timeout=timeout)
 
     def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
                     location: str | None = None):
@@ -219,6 +222,52 @@ class MultiConnector(BaseConnector):
 
     def stream_close(self, topic: str, location: str | None = None) -> None:
         self._future_child()[1].stream_close(topic, location)
+
+    # pub/sub group ops ride the same deterministically-routed child (and
+    # location addressing is whatever that child supports)
+    @property
+    def supports_location(self) -> bool:
+        return bool(getattr(self._future_child()[1], "supports_location",
+                            False))
+
+    def stream_subscribe(self, topic: str, group: str, start: str = "new",
+                         filter: dict | None = None,  # noqa: A002
+                         location: str | None = None) -> dict:
+        return self._future_child()[1].stream_subscribe(
+            topic, group, start, filter, location)
+
+    def stream_unsubscribe(self, topic: str, group: str,
+                           location: str | None = None) -> None:
+        self._future_child()[1].stream_unsubscribe(topic, group, location)
+
+    def stream_take(self, topic: str, group: str, timeout: float = 60.0,
+                    payload: bool = True, location: str | None = None):
+        return self._future_child()[1].stream_take(topic, group, timeout,
+                                                   payload, location)
+
+    def stream_take_batch(self, topic: str, group: str, n: int,
+                          payload: bool = True,
+                          location: str | None = None) -> list:
+        return self._future_child()[1].stream_take_batch(
+            topic, group, n, payload, location)
+
+    def stream_ack(self, topic: str, group: str, seqs,
+                   location: str | None = None) -> int:
+        return self._future_child()[1].stream_ack(topic, group, seqs,
+                                                  location)
+
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       location: str | None = None) -> int:
+        return self._future_child()[1].stream_requeue(topic, group, seqs,
+                                                      location)
+
+    def stream_limit(self, topic: str, limit: int | None,
+                     location: str | None = None) -> None:
+        self._future_child()[1].stream_limit(topic, limit, location)
+
+    def stream_stat(self, topic: str,
+                    location: str | None = None) -> dict:
+        return self._future_child()[1].stream_stat(topic, location)
 
     # -- lifecycle: dispatch on the child that stored the object -------------
     def _forget_lifetime(self, key: Key) -> None:

@@ -145,12 +145,18 @@ class Frame:
 
 
 def as_segments(blob) -> list:
-    """Normalize ``bytes | Frame | Sequence[memoryview]`` to a segment list."""
+    """Normalize ``bytes | Frame | Sequence[memoryview]`` to a segment list.
+    Buffer-protocol objects (numpy arrays, arrays.array, ...) become ONE
+    flat segment — never iterated element-wise, which would shred a 1 MB
+    array into 250k scalar segments."""
     if isinstance(blob, Frame):
         return blob.segments
     if isinstance(blob, (bytes, bytearray, memoryview)):
         return [blob]
-    return list(blob)
+    try:
+        return [memoryview(blob).cast("B")]
+    except TypeError:
+        return list(blob)
 
 
 def frame_nbytes(blob) -> int:
@@ -159,7 +165,10 @@ def frame_nbytes(blob) -> int:
         return blob.nbytes
     if isinstance(blob, (bytes, bytearray, memoryview)):
         return memoryview(blob).nbytes
-    return sum(memoryview(s).nbytes for s in blob)
+    try:
+        return memoryview(blob).nbytes
+    except TypeError:
+        return sum(memoryview(s).nbytes for s in blob)
 
 
 def join_frame(blob) -> bytes:

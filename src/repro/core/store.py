@@ -34,6 +34,9 @@ from repro.core.connector import (Connector, Key, import_path,
 from repro.core.proxy import OwnedProxy, Proxy, get_factory, is_proxy
 from repro.core.serialize import (deserialize, frame_nbytes, materialize,
                                   serialize)
+from repro.stream.interface import StreamConsumer as _BrokerConsumer
+from repro.stream.interface import StreamProducer as _BrokerProducer
+from repro.stream.kv import KVBroker
 
 _REGISTRY: dict[str, "Store"] = {}
 _REGISTRY_LOCK = threading.RLock()
@@ -523,26 +526,39 @@ class Store:
         return ProxyFuture(self, self.connector.reserve(),
                            timeout=timeout, ttl=ttl)
 
-    # -- streams: ordered per-topic pipelines --------------------------------
+    # -- streams: broker-backed per-topic pub/sub ----------------------------
     def stream_producer(self, topic: str | None = None, *,
-                        ttl: float | None = None) -> "StreamProducer":
+                        ttl: float | None = None, limit: int | None = None,
+                        timeout: float | None = None) -> "StreamProducer":
         """Producer handle for an ordered stream of objects.  Items are
         appended as they are produced (no barrier) and stored refcounted —
-        each is evicted exactly once after its consumer takes it.  ``ttl``
-        leases items against abandoned streams."""
+        one reference per subscribed consumer group (the last group's ack
+        evicts; a lone default-group consumer keeps the classic evicted-
+        exactly-once behavior).  ``ttl`` leases items against abandoned
+        streams; ``limit`` installs credit-based backpressure (appends
+        park once ``limit`` events sit unacked, TimeoutError past
+        ``timeout``)."""
         return StreamProducer(self, topic or f"s-{uuid_mod.uuid4().hex}",
-                              ttl=ttl)
+                              ttl=ttl, limit=limit, timeout=timeout)
 
     def stream_consumer(self, topic: str, *, timeout: float = 60.0,
-                        prefetch: int = 8,
-                        location: str | None = None) -> "ProxyStream":
-        """Iterator over a topic's items in order: blocks for the next item
-        (released by the producer's append, ends at ``close``), then
-        batch-prefetches the already-ready tail in ONE ``mget2``-style
-        exchange.  ``location`` addresses the producing site on
-        location-addressed channels (PS-endpoints)."""
+                        prefetch: int = 8, location: str | None = None,
+                        group: str = "default", start: str = "begin",
+                        filter: dict | None = None,  # noqa: A002
+                        payload: bool = True) -> "ProxyStream":
+        """Iterator over a topic's objects for one consumer ``group``:
+        blocks for the next event (released by the producer's append,
+        ends at ``close``), then batch-prefetches the already-deliverable
+        tail in ONE exchange.  Every group sees every event its
+        server-side ``filter`` matches, with payload bytes crossing the
+        data plane once regardless of how many groups subscribe;
+        ``payload=False`` subscribes a metadata-only tap.  ``location``
+        addresses the producing site on location-addressed channels
+        (socket node ids, PS-endpoint uuids) — connectors without
+        location addressing reject it with ``ValueError``."""
         return ProxyStream(self, topic, timeout=timeout, prefetch=prefetch,
-                           location=location)
+                           location=location, group=group, start=start,
+                           filter=filter, payload=payload)
 
     # -- future-returning async ops ---------------------------------------------
     def put_async(self, obj: Any) -> Future:
@@ -775,108 +791,79 @@ class ProxyFuture:
             self.key, self.timeout if timeout is None else timeout)
 
 
-class StreamProducer:
+class StreamProducer(_BrokerProducer):
     """Producer side of an ordered stream of objects (pattern three of
     arXiv:2407.01764): append as you produce, close when done.  Consumers
     (:class:`ProxyStream`) overlap with production — no barrier-put.
 
-    Usable as a context manager: the stream closes on exit, so consumers
-    observe end-of-stream instead of timing out.
+    A thin shim over :class:`repro.stream.StreamProducer` on the in-tree
+    KV broker (the connector's ``stream_*`` ops): objects serialize
+    through the Store and publish with an optional metadata map consumer
+    groups filter on.  Usable as a context manager: the stream closes on
+    exit, so consumers observe end-of-stream instead of timing out.
     """
 
-    def __init__(self, store: Store, topic: str,
-                 ttl: float | None = None) -> None:
+    def __init__(self, store: Store, topic: str, ttl: float | None = None,
+                 *, limit: int | None = None,
+                 timeout: float | None = None) -> None:
         self._store = store
-        self.topic = topic
-        self.ttl = ttl
+        super().__init__(KVBroker(store.connector), topic,
+                         serializer=store._serialize, ttl=ttl,
+                         limit=limit, timeout=timeout)
 
-    def append(self, obj: Any) -> int:
-        """Serialize + append one item; returns its sequence number."""
-        return self._store.connector.stream_append(
-            self.topic, self._store._serialize(obj), self.ttl)
-
-    def append_exception(self, exc: BaseException) -> int:
+    def append_exception(self, exc: BaseException,
+                         *, meta: dict | None = None) -> int:
         """Append a failure marker: the consumer re-raises it in order."""
-        return self.append(_RaisedException(exc))
-
-    def close(self) -> None:
-        self._store.connector.stream_close(self.topic)
+        return self.append(_RaisedException(exc), meta=meta)
 
     @property
     def location(self) -> str | None:
         """Producing site id for location-addressed channels (the value a
         remote consumer passes as ``stream_consumer(location=...)``)."""
-        return getattr(self._store.connector, "endpoint_uuid", None)
-
-    def __enter__(self) -> "StreamProducer":
-        return self
-
-    def __exit__(self, *exc) -> bool:
-        self.close()
-        return False
+        conn = self._store.connector
+        return getattr(conn, "endpoint_uuid", None) or (
+            getattr(conn, "node_id", None) if conn.supports_location
+            else None)
 
 
-class ProxyStream:
-    """Consumer side: an iterator yielding a topic's objects in order.
+class ProxyStream(_BrokerConsumer):
+    """Consumer side: an iterator yielding a topic's objects in order,
+    as one named consumer group on the broker-backed stream plane.
 
-    ``__next__`` parks in the channel's ``s_next`` until the next item is
-    appended (StopIteration once the producer closes past it); when the
-    producer is ahead, the already-appended tail is prefetched in ONE
-    batched exchange (``mget2`` + ``mdecref`` on KV-backed channels) so a
-    fast consumer pays one round trip per *batch*, not per item.  Items
-    are consumed exactly once: taking one drops its single reference and
-    the channel evicts it.
+    ``__next__`` parks in the broker's group take until the next matching
+    event is published (StopIteration once the producer closes past it);
+    when the producer is ahead, the already-deliverable tail is
+    prefetched in ONE batched exchange, so a fast consumer pays one round
+    trip per *batch*, not per item.  With the default lone group the
+    classic semantics hold: each object is delivered exactly once and
+    evicted after its delivery is acked.  With several groups every group
+    gets every matching object, and the payload is evicted after the LAST
+    group's ack — the bytes still cross the data plane once per
+    delivering group, never per subscriber re-publish.
+
+    Prefetched events stay unacked until actually yielded, so
+    :meth:`close` hands anything prefetched-but-undelivered back to the
+    group instead of leaking it.  Producer exceptions
+    (:meth:`StreamProducer.append_exception`) re-raise in order.
     """
 
     def __init__(self, store: Store, topic: str, *, timeout: float = 60.0,
-                 prefetch: int = 8, location: str | None = None) -> None:
+                 prefetch: int = 8, location: str | None = None,
+                 group: str = "default", start: str = "begin",
+                 filter: dict | None = None,  # noqa: A002
+                 payload: bool = True) -> None:
         self._store = store
-        self.topic = topic
-        self.timeout = timeout
-        self.prefetch = max(0, int(prefetch))
         self.location = location
-        self._cursor = 0          # next sequence number to take
-        self._buffer: list[tuple[int, Any]] = []   # prefetched (seq, blob);
-        # materialized on pop so producer exceptions surface in order
+        super().__init__(KVBroker(store.connector, location=location),
+                         topic, group, start=start, filter=filter,
+                         payload=payload, prefetch=prefetch,
+                         timeout=timeout, deserializer=self._materialize)
 
-    def _materialize(self, blob, seq: int) -> Any:
-        if blob is None:
-            raise LookupError(
-                f"stream {self.topic!r} item {seq} is gone (already "
-                f"consumed or expired)")
+    def _materialize(self, blob) -> Any:
         obj = self._store._deserialize(blob)
         if isinstance(obj, _RaisedException):
             raise obj.unwrap()
         return obj
-
-    def pending(self) -> int:
-        """Prefetched items not yet taken.  These were already CONSUMED on
-        the channel (their references dropped) — a consumer abandoning the
-        stream on a deadline should drain them first, or they are lost."""
-        return len(self._buffer)
-
-    def __iter__(self) -> Iterator[Any]:
-        return self
-
-    def __next__(self) -> Any:
-        if self._buffer:
-            seq, blob = self._buffer.pop(0)
-            return self._materialize(blob, seq)
-        item = self._store.connector.stream_next(
-            self.topic, self._cursor, self.timeout, self.location)
-        if item.end:
-            raise StopIteration
-        seq = self._cursor
-        self._cursor += 1
-        ready = item.available - self._cursor
-        if ready > 0 and self.prefetch:
-            take = min(ready, self.prefetch)
-            seqs = list(range(self._cursor, self._cursor + take))
-            blobs = self._store.connector.stream_fetch(
-                self.topic, seqs, self.location)
-            self._buffer.extend(zip(seqs, blobs))
-            self._cursor += take
-        return self._materialize(item.data, seq)
 
 
 # ---------------------------------------------------------------------------

@@ -119,7 +119,11 @@ def local_train_task(model_ref: Any, cfg: ArchConfig, fl_blob: bytes,
         if compression != "none":
             update = Compressor(compression).compress(update)
         if producer is not None:
-            return {"streamed": producer.append(update)}
+            # meta rides the broker (not the data plane): a payload=False
+            # monitor group can tail who delivered what without resolving
+            # a single update payload
+            return {"streamed": producer.append(
+                update, meta={"worker": worker_seed, "ok": True})}
         if store is not None:
             # owned reference back: the aggregator releases it after
             # averaging; the lease reaps it if the aggregator dies first
@@ -128,7 +132,8 @@ def local_train_task(model_ref: Any, cfg: ArchConfig, fl_blob: bytes,
     except Exception as e:
         if producer is not None:
             try:
-                producer.append_exception(e)   # the aggregator counts it
+                producer.append_exception(     # the aggregator counts it
+                    e, meta={"worker": worker_seed, "ok": False})
             except Exception:  # noqa: BLE001 - stream already closed (the
                 pass           # round's deadline passed): don't mask `e`
         raise
@@ -136,10 +141,17 @@ def local_train_task(model_ref: Any, cfg: ArchConfig, fl_blob: bytes,
 
 class FLOrchestrator:
     def __init__(self, cfg: ArchConfig, fl: FLConfig,
-                 executor: FaasExecutor, store: Store | None) -> None:
+                 executor: FaasExecutor, store: Store | None,
+                 monitor_group: str | None = None) -> None:
         self.cfg, self.fl = cfg, fl
         self.executor = executor
         self.store = store
+        # pipelined rounds only: a second consumer group pre-subscribed on
+        # every round's update stream, so a dashboard can tail worker
+        # updates without stealing them from the aggregator (see
+        # monitor_updates())
+        self.monitor_group = monitor_group
+        self._round_topics: list[str] = []
         from repro.models.model import build_model
 
         self.model = build_model(cfg)
@@ -218,26 +230,31 @@ class FLOrchestrator:
         workers that haven't appended when the ROUND deadline passes are
         stragglers (the deadline bounds the round, not each item)."""
         deadline = time.monotonic() + self.fl.deadline_s
-        stream = self.store.stream_consumer(topic,
+        stream = self.store.stream_consumer(topic, group="aggregator",
                                             timeout=self.fl.deadline_s)
         updates, failures = [], 0
-        for _ in range(n):
-            remaining = deadline - time.monotonic()
-            if remaining <= 0 and not stream.pending():
-                # past the deadline, but DRAIN prefetched updates first:
-                # they were already consumed (evicted) on the channel
-                break
-            stream.timeout = max(remaining, 0.05)  # per blocking next
-            try:
-                updates.append(Compressor.decompress(next(stream)))
-            except StopIteration:
-                break
-            except TimeoutError:
-                break
-            except Exception:  # noqa: BLE001 - a worker's streamed failure
-                failures += 1
+        try:
+            for _ in range(n):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 and not stream.pending():
+                    # past the deadline, but DRAIN prefetched updates
+                    # first: they are already taken for this group
+                    break
+                stream.timeout = max(remaining, 0.05)  # per blocking next
+                try:
+                    updates.append(Compressor.decompress(next(stream)))
+                except StopIteration:
+                    break
+                except TimeoutError:
+                    break
+                except Exception:  # noqa: BLE001 - worker's streamed failure
+                    failures += 1
+        finally:
+            # flush acks; requeue anything prefetched-but-undelivered so
+            # the group (and the payload refcounts) stay consistent
+            stream.close()
+            self.store.connector.stream_close(topic)  # reject late appends
         stragglers = n - len(updates) - failures
-        self.store.connector.stream_close(topic)   # reject late appends
         return updates, failures, stragglers
 
     @staticmethod
@@ -272,6 +289,16 @@ class FLOrchestrator:
         counts = [worker_schedule[r] if worker_schedule
                   else fl.workers_per_round for r in range(fl.rounds)]
         topics = [f"{run_id}-r{r}" for r in range(fl.rounds)]
+        self._round_topics = topics
+        if self.monitor_group:
+            # pre-subscribe the monitor on every round's topic BEFORE any
+            # worker appends: each update is then retained until BOTH the
+            # aggregator and the monitor ack it, so tailing the stream
+            # steals nothing from aggregation (updates publish once; the
+            # producer's TTL lease backstops a monitor that never drains)
+            for t in topics:
+                self.store.connector.stream_subscribe(
+                    t, self.monitor_group, start="begin")
         # every round's weights exist as a future BEFORE any aggregation
         weight_futs = [self.store.future(timeout=4 * fl.deadline_s,
                                          ttl=8 * fl.deadline_s)
@@ -303,6 +330,23 @@ class FLOrchestrator:
             self.log.append(info)
             losses.append(self.eval_loss())
         return {"losses": losses, "rounds": self.log}
+
+    def monitor_updates(self, rnd: int, *, payload: bool = False,
+                        timeout: float = 5.0):
+        """Consumer tailing round ``rnd``'s update stream in the monitor
+        group (pipelined runs with ``monitor_group`` set).  Defaults to
+        ``payload=False``: iteration yields each update's metadata
+        (``worker``/``ok``) without resolving the update tensors, so a
+        live dashboard costs zero data-plane bytes.  The group's cursor
+        is independent of the aggregator's — taking here steals nothing
+        from aggregation.  Close (or ``with``) the returned consumer."""
+        if not self.monitor_group:
+            raise ValueError("orchestrator was built without monitor_group")
+        if rnd >= len(self._round_topics):
+            raise IndexError(f"round {rnd} has not been dispatched")
+        return self.store.stream_consumer(
+            self._round_topics[rnd], group=self.monitor_group,
+            start="begin", payload=payload, timeout=timeout)
 
     def eval_loss(self) -> float:
         batch = lm_batch(999, 0, self.fl.batch, self.fl.seq, self.cfg.vocab)

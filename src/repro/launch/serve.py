@@ -105,8 +105,9 @@ def _run_stream(args, engine: ServeEngine) -> None:
     from repro.core.proxy import extract, is_proxy
 
     results = []
-    for item in store.stream_consumer("results", timeout=10.0):
-        results.append(extract(item) if is_proxy(item) else item)
+    with store.stream_consumer("results", timeout=10.0) as stream:
+        for item in stream:
+            results.append(extract(item) if is_proxy(item) else item)
     print(json.dumps({
         "mode": "stream", "served": stats["completed"],
         "decode_steps": stats["decode_steps"],

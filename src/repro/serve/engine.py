@@ -32,6 +32,7 @@ import uuid
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -506,16 +507,28 @@ class ServeEngine:
     def serve_stream(self, store, request_topic: str,
                      result_topic: str | None = None, *,
                      data_store=None, timeout: float = 60.0,
-                     result_ttl: float | None = 120.0) -> dict:
+                     result_ttl: float | None = 120.0,
+                     result_groups: Sequence[str] | None = None) -> dict:
         """Serve until the request stream closes (or stays idle past
         ``timeout``).  Requests are stream items (optionally proxies);
-        completions publish to ``result_topic`` — as ephemeral
+        completions publish ONCE to ``result_topic`` — as ephemeral
         ``evict=True`` proxies through ``data_store`` when given (each
-        result is consumed exactly once, then its slot is reclaimed), or
-        inline otherwise.  Returns the scheduler's stats."""
+        result is consumed exactly once per group, then its slot is
+        reclaimed), or inline otherwise — and fan out to every consumer
+        group on the topic.  Each completion carries its metadata
+        (``req_id``/``n_tokens``/latencies) on the event itself, so a
+        ``payload=False`` tap (:func:`metrics_tap`) observes the serve
+        loop without resolving a single result payload.  Groups named in
+        ``result_groups`` are pre-subscribed before serving starts, so
+        consumers attaching mid-stream (the client, a metrics dashboard)
+        miss nothing.  Returns the scheduler's stats."""
         consumer = store.stream_consumer(request_topic, timeout=timeout)
         producer = (store.stream_producer(result_topic)
                     if result_topic else None)
+        if producer is not None:
+            for group in result_groups or ():
+                store.connector.stream_subscribe(result_topic, group,
+                                                 start="begin")
         local: list[Completion] = []
 
         def sink(c: Completion) -> None:
@@ -525,16 +538,20 @@ class ServeEngine:
             payload = {"req_id": c.req_id, "tokens": c.tokens,
                        "prompt_len": c.prompt_len,
                        "queued_s": c.queued_s, "total_s": c.total_s}
+            meta = {"req_id": c.req_id, "n_tokens": len(c.tokens),
+                    "queued_s": c.queued_s, "total_s": c.total_s}
             if data_store is not None:
                 producer.append(data_store.proxy(payload, evict=True,
-                                                 ttl=result_ttl))
+                                                 ttl=result_ttl),
+                                meta=meta)
             else:
-                producer.append(payload)
+                producer.append(payload, meta=meta)
 
         try:
             stats = self._run_continuous(
                 _StreamSource(consumer, timeout=timeout), sink)
         finally:
+            consumer.close()        # return prefetched requests, if any
             if producer is not None:
                 producer.close()
         stats["completions"] = local
@@ -625,3 +642,22 @@ class ServeEngine:
             self._kv_store.close()
             self._kv_store = None
             self._kv_pool = None
+
+
+def metrics_tap(store, result_topic: str, *, group: str = "metrics",
+                start: str = "begin", timeout: float = 60.0):
+    """Metadata-only consumer group over an engine's result stream.
+
+    Subscribes ``group`` to ``result_topic`` with ``payload=False``: the
+    tap iterates completion metadata (``req_id``/``n_tokens``/latencies)
+    that :meth:`ServeEngine.serve_stream` attaches to every event, while
+    the broker serves the actual result payloads only to the groups that
+    resolve them.  The serve loop publishes each completion exactly once
+    — adding (or removing) taps changes zero bytes on the data plane.
+
+    Pass the returned consumer's group name in ``result_groups`` when
+    starting ``serve_stream`` (or attach with ``start="begin"``, the
+    default here) so no completions are missed.
+    """
+    return store.stream_consumer(result_topic, group=group, start=start,
+                                 payload=False, timeout=timeout)

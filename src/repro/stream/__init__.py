@@ -1,0 +1,42 @@
+"""Broker-backed pub/sub stream plane (arXiv:2407.01764 pattern three).
+
+``StreamProducer``/``StreamConsumer`` over a pluggable :class:`Broker`
+protocol: event *metadata* rides the broker, the payload rides the fast
+data plane once regardless of fanout ("proxy-on-publish").  Named consumer
+groups get independent cursors and per-group acks; server-side filters
+skip the payload path entirely for filtered-out events; credit-based
+backpressure parks producers when a topic's unacked buffer fills.
+
+In-tree brokers:
+
+* :class:`repro.stream.kv.KVBroker` — the KV stream table (any
+  server-backed connector: kvserver / socket / endpoint / fabric), group
+  state held in the owning server's :class:`repro.core.kv_tcp.StreamTable`.
+* :class:`repro.stream.local.LocalBroker` — in-process queues, no server;
+  for tests and single-node pipelines.
+
+Submodules are imported lazily so :mod:`repro.core` modules can import
+:mod:`repro.stream.filters` without a cycle.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Broker": "repro.stream.broker",
+    "BrokerEvent": "repro.stream.broker",
+    "compile_filter": "repro.stream.filters",
+    "LocalBroker": "repro.stream.local",
+    "KVBroker": "repro.stream.kv",
+    "StreamProducer": "repro.stream.interface",
+    "StreamConsumer": "repro.stream.interface",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target), name)

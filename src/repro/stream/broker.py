@@ -1,0 +1,100 @@
+"""The pluggable broker protocol the stream plane runs over.
+
+A :class:`Broker` owns topics: ordered sequences of events, each carrying
+a small metadata map plus an opaque payload blob.  Named consumer groups
+subscribe with independent cursors; an event is delivered to every group
+whose filter matches its metadata, and its payload is retained until the
+LAST subscribed group acks it — so the payload bytes cross the data plane
+once regardless of fanout (the "proxy-on-publish" pattern: in the Store
+layer the blob is a serialized proxy, and heavyweight data rides the
+object store's fast path instead of the broker).
+
+In-tree implementations: :class:`repro.stream.kv.KVBroker` (group state
+in the owning KV server / PS-endpoint — works across processes and
+sites) and :class:`repro.stream.local.LocalBroker` (in-process queues,
+no server).  A Redis-shim broker can slot in behind the same ABC.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, NamedTuple
+
+
+class BrokerEvent(NamedTuple):
+    """One delivered event.  ``data`` is None for metadata-only takes
+    (``payload=False`` subscriptions — metrics taps), for events whose
+    payload was reaped by a lease, and for the terminal end-of-stream
+    marker (``end=True``)."""
+
+    seq: int
+    data: Any               # bytes-like | None
+    meta: dict
+    end: bool = False
+
+
+class Broker(abc.ABC):
+    """Pub/sub topics with consumer groups, filters, and backpressure.
+
+    Implementations must be safe to drive from multiple threads (the
+    stream plane overlaps producers and consumers by construction).
+    """
+
+    @abc.abstractmethod
+    def publish(self, topic: str, data, *, meta: dict | None = None,
+                ttl: float | None = None,
+                timeout: float | None = None) -> int:
+        """Append one event; returns its sequence number.  Parks (up to
+        ``timeout``) when the topic has a backpressure limit and its
+        unacked buffer is full; raises TimeoutError past the deadline and
+        RuntimeError on a closed topic."""
+
+    @abc.abstractmethod
+    def subscribe(self, topic: str, group: str, *, start: str = "new",
+                  filter: dict | None = None) -> dict:  # noqa: A002
+        """Create consumer group ``group`` (idempotent).  ``start="begin"``
+        queues retained events that pass ``filter`` (a
+        :mod:`repro.stream.filters` spec); ``"new"`` starts from the next
+        publish.  Returns ``{"created", "queued", "count", "closed"}``."""
+
+    @abc.abstractmethod
+    def unsubscribe(self, topic: str, group: str) -> None:
+        """Drop the group, releasing its outstanding payload references."""
+
+    @abc.abstractmethod
+    def take(self, topic: str, group: str, *, timeout: float = 60.0,
+             payload: bool = True) -> BrokerEvent:
+        """Block until an event is deliverable to ``group``; the event
+        stays unacked until :meth:`ack`.  Returns ``end=True`` once the
+        topic is closed and drained; raises TimeoutError."""
+
+    @abc.abstractmethod
+    def take_batch(self, topic: str, group: str, n: int, *,
+                   payload: bool = True) -> list[BrokerEvent]:
+        """Non-blocking: up to ``n`` already-deliverable events."""
+
+    @abc.abstractmethod
+    def ack(self, topic: str, group: str, seqs) -> None:
+        """Release the group's reference on delivered events (the payload
+        is evicted after the last group acks).  Idempotent."""
+
+    @abc.abstractmethod
+    def requeue(self, topic: str, group: str, seqs) -> None:
+        """Hand delivered-but-unprocessed events back to the group (they
+        redeliver in sequence order) — how a consumer returns prefetched
+        events on close instead of leaking them."""
+
+    @abc.abstractmethod
+    def set_limit(self, topic: str, limit: int | None) -> None:
+        """Bound the topic's unacked-event buffer (credit-based
+        backpressure); falsy ``limit`` clears the bound."""
+
+    @abc.abstractmethod
+    def close_topic(self, topic: str) -> None:
+        """Set the end-of-stream marker and release parked consumers."""
+
+    @abc.abstractmethod
+    def stat(self, topic: str) -> dict:
+        """``{"count", "closed"}`` plus group/backpressure state."""
+
+    def close(self) -> None:
+        """Release broker-side client resources (default: nothing)."""

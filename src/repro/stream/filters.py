@@ -1,0 +1,88 @@
+"""Declarative event-metadata filters, evaluated server-side.
+
+A filter is a plain (msgpack-serializable) dict so it can ride a
+subscribe request to whichever process owns the topic — the KV server,
+a PS-endpoint, or an in-process broker — and be evaluated there against
+each event's metadata map.  Filtered-out events are acked for the group
+without ever resolving the payload: zero bytes cross the data plane.
+
+Spec grammar (``m`` is the event's metadata dict)::
+
+    {"key": k}                                  m[k] exists (truthy test:
+                                                op defaults to "exists")
+    {"key": k, "op": "==", "value": v}          m[k] == v
+    {"key": k, "op": "!=", "value": v}          m[k] != v   (missing: True)
+    {"key": k, "op": ">" | ">=" | "<" | "<=", "value": v}
+    {"key": k, "op": "in", "value": [v, ...]}   m[k] in value
+    {"key": k, "op": "contains", "value": v}    v in m[k]
+    {"all": [spec, ...]}                        conjunction
+    {"any": [spec, ...]}                        disjunction
+    {"not": spec}                               negation
+
+A comparison on a missing key is False (except ``!=``), and any type
+error during evaluation makes that clause False — a malformed event can
+never take down the broker's delivery loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+_MISSING = object()
+
+
+def _compare(op: str, a: Any, b: Any) -> bool:
+    if op == "==":
+        return a == b
+    if op == "!=":
+        return a != b
+    if op == ">":
+        return a > b
+    if op == ">=":
+        return a >= b
+    if op == "<":
+        return a < b
+    if op == "<=":
+        return a <= b
+    if op == "in":
+        return a in b
+    if op == "contains":
+        return b in a
+    raise ValueError(f"unknown filter op {op!r}")
+
+
+def compile_filter(spec: dict) -> Callable[[dict], bool]:
+    """Compile a filter spec into ``fn(meta) -> bool``.
+
+    Raises ``ValueError`` on a malformed spec (at subscribe time — never
+    during delivery)."""
+    if not isinstance(spec, dict):
+        raise ValueError(f"filter spec must be a dict, got {type(spec)}")
+    if "all" in spec:
+        fns = [compile_filter(s) for s in spec["all"]]
+        return lambda m: all(fn(m) for fn in fns)
+    if "any" in spec:
+        fns = [compile_filter(s) for s in spec["any"]]
+        return lambda m: any(fn(m) for fn in fns)
+    if "not" in spec:
+        fn = compile_filter(spec["not"])
+        return lambda m: not fn(m)
+    if "key" not in spec:
+        raise ValueError(f"filter spec needs 'key'/'all'/'any'/'not': {spec}")
+    key = spec["key"]
+    op = spec.get("op", "exists")
+    if op == "exists":
+        return lambda m: key in m
+    value = spec.get("value")
+    if op not in ("==", "!=", ">", ">=", "<", "<=", "in", "contains"):
+        raise ValueError(f"unknown filter op {op!r}")
+
+    def fn(m: dict, key=key, op=op, value=value) -> bool:
+        a = m.get(key, _MISSING)
+        if a is _MISSING:
+            return op == "!="
+        try:
+            return _compare(op, a, value)
+        except TypeError:
+            return False
+
+    return fn

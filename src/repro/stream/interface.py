@@ -1,0 +1,196 @@
+"""StreamProducer / StreamConsumer — the user-facing stream plane.
+
+A producer appends serialized objects to a topic on a pluggable
+:class:`~repro.stream.broker.Broker`; any number of named consumer
+groups iterate the topic independently, each seeing every event whose
+filter matches (the broker retains a payload until the LAST group acks
+it, so the bytes cross the data plane once regardless of fanout).
+
+Consumers ack-on-delivery with piggybacked batching: delivered events
+accumulate locally and flush in one ``ack`` exchange every
+``ack_every`` items or right before the next blocking take — a fast
+consumer pays one lifecycle round trip per batch, not per item.
+Prefetched events stay UNACKED until actually delivered, which is what
+makes :meth:`StreamConsumer.close` safe: anything prefetched but never
+handed to the application is returned to the group (requeued in order)
+instead of leaking its payload reference — a crashed-or-abandoning
+consumer loses nothing for its group.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+from repro.stream.broker import Broker, BrokerEvent
+
+
+class StreamProducer:
+    """Append objects to a topic; close to mark end-of-stream.
+
+    ``serializer`` turns objects into bytes-likes (default: payloads
+    must already be bytes-like).  ``limit`` installs credit-based
+    backpressure on the topic: appends park once ``limit`` events sit
+    unacked, until consumer acks free slots (TimeoutError past
+    ``timeout``).  Usable as a context manager — the topic closes on
+    exit so consumer groups observe end-of-stream instead of timing out.
+    """
+
+    def __init__(self, broker: Broker, topic: str, *,
+                 serializer: Callable[[Any], Any] | None = None,
+                 ttl: float | None = None, limit: int | None = None,
+                 timeout: float | None = None) -> None:
+        self.broker = broker
+        self.topic = topic
+        self.ttl = ttl
+        self.timeout = timeout
+        self._serializer = serializer
+        if limit:
+            broker.set_limit(topic, int(limit))
+
+    def append(self, obj: Any, *, meta: dict | None = None) -> int:
+        """Serialize + publish one event; returns its sequence number.
+        ``meta`` is the small metadata map consumer-group filters are
+        evaluated against (it rides the broker, not the data plane)."""
+        data = self._serializer(obj) if self._serializer else obj
+        return self.broker.publish(self.topic, data, meta=meta,
+                                   ttl=self.ttl, timeout=self.timeout)
+
+    def close(self) -> None:
+        self.broker.close_topic(self.topic)
+
+    def stat(self) -> dict:
+        return self.broker.stat(self.topic)
+
+    def __enter__(self) -> "StreamProducer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class StreamConsumer:
+    """One consumer group's iterator over a topic.
+
+    ``__next__`` blocks (up to the mutable ``timeout``) for the next
+    event, then batch-prefetches the already-deliverable tail in ONE
+    exchange; iteration ends (StopIteration) once the topic is closed
+    and the group drained.  ``payload=False`` subscribes a metadata-only
+    tap: iteration yields the metadata dicts and the payload bytes are
+    never resolved — combined with a server-side ``filter``, events the
+    group does not want cost zero data-plane traffic.
+
+    Events are acked only when DELIVERED to the application (flushed in
+    batches of ``ack_every``); :meth:`close` flushes pending acks and
+    requeues anything prefetched-but-undelivered back to the group, so
+    abandoning mid-stream leaks no payload references.  Iterate inside a
+    ``with`` block (or try/finally ``close()``).
+    """
+
+    def __init__(self, broker: Broker, topic: str, group: str = "default",
+                 *, start: str = "new", filter: dict | None = None,  # noqa: A002
+                 payload: bool = True, prefetch: int = 8,
+                 timeout: float = 60.0, ack_every: int = 8,
+                 deserializer: Callable[[Any], Any] | None = None) -> None:
+        self.broker = broker
+        self.topic = topic
+        self.group = group
+        self.payload = payload
+        self.prefetch = max(0, int(prefetch))
+        self.timeout = timeout
+        self.ack_every = max(1, int(ack_every))
+        self._deserializer = deserializer
+        self._buffer: list[BrokerEvent] = []   # taken (unacked), undelivered
+        self._to_ack: list[int] = []           # delivered, ack not yet sent
+        self._closed = False
+        self._ended = False
+        broker.subscribe(topic, group, start=start, filter=filter)
+
+    # -- lifecycle -----------------------------------------------------------
+    def pending(self) -> int:
+        """Prefetched events not yet delivered.  Unlike the pre-broker
+        stream plane these are still UNACKED — ``close()`` returns them
+        to the group rather than losing them."""
+        return len(self._buffer)
+
+    def _flush_acks(self) -> None:
+        if self._to_ack:
+            seqs, self._to_ack = self._to_ack, []
+            self.broker.ack(self.topic, self.group, seqs)
+
+    def close(self, *, unsubscribe: bool = False) -> None:
+        """Flush delivered-event acks and hand every prefetched-but-
+        undelivered event back to the group (redelivered, in order, to
+        the group's next taker).  ``unsubscribe=True`` additionally
+        drops the group, releasing all its outstanding references."""
+        if self._closed:
+            return
+        self._closed = True
+        buf, self._buffer = self._buffer, []
+        try:
+            self._flush_acks()
+            if buf:
+                self.broker.requeue(self.topic, self.group,
+                                    [ev.seq for ev in buf])
+        finally:
+            if unsubscribe:
+                self.broker.unsubscribe(self.topic, self.group)
+
+    def __enter__(self) -> "StreamConsumer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- iteration -----------------------------------------------------------
+    def _deliver(self, ev: BrokerEvent) -> Any:
+        self._to_ack.append(ev.seq)
+        if len(self._to_ack) >= self.ack_every:
+            self._flush_acks()
+        if not self.payload:
+            return ev.meta
+        if ev.data is None:
+            raise LookupError(
+                f"stream {self.topic!r} event {ev.seq} payload is gone "
+                f"(lease-reaped or evicted)")
+        return self._deserializer(ev.data) if self._deserializer else ev.data
+
+    def take_event(self) -> BrokerEvent:
+        """One raw event (blocking), payload deserialized, ack deferred
+        like ``__next__`` — for consumers that want seq + meta + data."""
+        ev = self._take()
+        if ev.end:
+            raise StopIteration
+        obj = self._deliver(ev)
+        return BrokerEvent(ev.seq, obj if self.payload else ev.data,
+                           ev.meta)
+
+    def _take(self) -> BrokerEvent:
+        if self._closed:
+            raise RuntimeError(
+                f"consumer of stream {self.topic!r} is closed")
+        if self._buffer:
+            return self._buffer.pop(0)
+        if self._ended:
+            return BrokerEvent(-1, None, {}, end=True)
+        self._flush_acks()   # piggyback before parking: frees credits
+        ev = self.broker.take(self.topic, self.group,
+                              timeout=self.timeout, payload=self.payload)
+        if ev.end:
+            self._ended = True
+            return ev
+        if self.prefetch:
+            self._buffer.extend(self.broker.take_batch(
+                self.topic, self.group, self.prefetch,
+                payload=self.payload))
+        return ev
+
+    def __iter__(self) -> Iterator[Any]:
+        return self
+
+    def __next__(self) -> Any:
+        ev = self._take()
+        if ev.end:
+            self._flush_acks()
+            raise StopIteration
+        return self._deliver(ev)

@@ -1,0 +1,82 @@
+"""KVBroker: the in-tree broker — group state lives in whichever server
+owns the topic.
+
+A thin adapter from the :class:`repro.stream.broker.Broker` protocol onto
+a connector's ``stream_*`` ops, so the broker works over every
+server-backed channel: a standalone KV server, per-node socket servers
+(``location`` selects the producing node), peered PS-endpoints
+(``location`` is the producer's endpoint UUID; subscriptions and takes
+are peer-forwarded), and the sharded fabric (topics hash to their
+primary shard and subscriptions fail over).
+
+The payload lifecycle is exactly the proxy-on-publish story: the blob is
+stored ONCE in the owning server's data plane with one reference per
+matching consumer group, each delivery serves the bytes straight from
+the data map, and the last group's ack evicts it.
+"""
+from __future__ import annotations
+
+from repro.stream.broker import Broker, BrokerEvent
+
+
+class KVBroker(Broker):
+    def __init__(self, connector, location: str | None = None) -> None:
+        if location is not None and \
+                not getattr(connector, "supports_location", False):
+            raise ValueError(
+                f"{type(connector).__name__} does not support location "
+                f"addressing: topics live on this channel's own server, "
+                f"so a location={location!r} subscription would hang on a "
+                f"topic that will never produce.  Use a socket or "
+                f"endpoint connector (or drop location).")
+        self.connector = connector
+        self.location = location
+
+    # -- producer side -------------------------------------------------------
+    def publish(self, topic: str, data, *, meta: dict | None = None,
+                ttl: float | None = None,
+                timeout: float | None = None) -> int:
+        return self.connector.stream_append(topic, data, ttl, meta=meta,
+                                            timeout=timeout)
+
+    # -- group lifecycle -----------------------------------------------------
+    def subscribe(self, topic: str, group: str, *, start: str = "new",
+                  filter: dict | None = None) -> dict:  # noqa: A002
+        return self.connector.stream_subscribe(
+            topic, group, start=start, filter=filter,
+            location=self.location)
+
+    def unsubscribe(self, topic: str, group: str) -> None:
+        self.connector.stream_unsubscribe(topic, group,
+                                          location=self.location)
+
+    # -- consumer side -------------------------------------------------------
+    def take(self, topic: str, group: str, *, timeout: float = 60.0,
+             payload: bool = True) -> BrokerEvent:
+        return self.connector.stream_take(topic, group, timeout=timeout,
+                                          payload=payload,
+                                          location=self.location)
+
+    def take_batch(self, topic: str, group: str, n: int, *,
+                   payload: bool = True) -> list[BrokerEvent]:
+        return self.connector.stream_take_batch(topic, group, n,
+                                                payload=payload,
+                                                location=self.location)
+
+    def ack(self, topic: str, group: str, seqs) -> None:
+        self.connector.stream_ack(topic, group, seqs,
+                                  location=self.location)
+
+    def requeue(self, topic: str, group: str, seqs) -> None:
+        self.connector.stream_requeue(topic, group, seqs,
+                                      location=self.location)
+
+    # -- topic admin ---------------------------------------------------------
+    def set_limit(self, topic: str, limit: int | None) -> None:
+        self.connector.stream_limit(topic, limit, location=self.location)
+
+    def close_topic(self, topic: str) -> None:
+        self.connector.stream_close(topic, location=self.location)
+
+    def stat(self, topic: str) -> dict:
+        return self.connector.stream_stat(topic, location=self.location)

@@ -1,0 +1,220 @@
+"""LocalBroker: the in-process broker — queues and a condition variable,
+no server.
+
+For tests and single-node pipelines where producer and consumers share
+one process.  Implements the full broker semantics (groups, filters,
+per-group acks with evict-after-last-ack, backpressure) so code written
+against :class:`repro.stream.broker.Broker` moves to the KV broker — or a
+future Redis shim — without changes.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+from repro.stream.broker import Broker, BrokerEvent
+from repro.stream.filters import compile_filter
+
+
+def _as_bytes(data) -> bytes:
+    """Flatten bytes-likes and multi-segment frames to one owned blob
+    (the broker retains it across the producer's next reuse of buffers)."""
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return bytes(data)
+    from repro.core.serialize import as_segments
+
+    return b"".join(bytes(memoryview(s)) for s in as_segments(data))
+
+
+class _Topic:
+    __slots__ = ("count", "closed", "data", "meta", "owners", "groups",
+                 "limit")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.closed = False
+        self.data: dict[int, bytes] = {}       # payloads, evicted on last ack
+        self.meta: dict[int, dict] = {}
+        self.owners: dict[int, int] = {}       # seq -> outstanding group refs
+        self.groups: dict[str, dict] = {}      # {queue, unacked, fn, filter}
+        self.limit: int | None = None
+
+
+class LocalBroker(Broker):
+    def __init__(self) -> None:
+        self._topics: dict[str, _Topic] = {}
+        self._cond = threading.Condition()
+
+    def _topic(self, topic: str) -> _Topic:
+        return self._topics.setdefault(topic, _Topic())
+
+    # -- producer side -------------------------------------------------------
+    def publish(self, topic: str, data, *, meta: dict | None = None,
+                ttl: float | None = None,
+                timeout: float | None = None) -> int:
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else 60.0)
+        with self._cond:
+            t = self._topic(topic)
+            while (t.limit is not None and len(t.owners) >= t.limit
+                   and not t.closed):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"stream {topic!r} publish timed out on "
+                        f"backpressure (buffer full)")
+                self._cond.wait(remaining)
+            if t.closed:
+                raise RuntimeError(f"stream {topic!r} is closed")
+            seq = t.count
+            t.count += 1
+            if meta:
+                t.meta[seq] = dict(meta)
+            m = meta or {}
+            matched = [g for g in t.groups.values()
+                       if g["fn"] is None or g["fn"](m)]
+            if t.groups and not matched:
+                pass           # filtered out by every group: never stored
+            else:
+                t.data[seq] = _as_bytes(data)
+                if matched:
+                    t.owners[seq] = len(matched)
+            for g in matched:
+                g["queue"].append(seq)
+            self._cond.notify_all()
+            return seq
+
+    # -- group lifecycle -----------------------------------------------------
+    def subscribe(self, topic: str, group: str, *, start: str = "new",
+                  filter: dict | None = None) -> dict:  # noqa: A002
+        with self._cond:
+            t = self._topic(topic)
+            g = t.groups.get(group)
+            created = g is None
+            if created:
+                fn = compile_filter(filter) if filter else None
+                g = {"queue": collections.deque(), "unacked": set(),
+                     "fn": fn, "filter": filter}
+                t.groups[group] = g
+                if start == "begin":
+                    for seq in range(t.count):
+                        if seq not in t.data:
+                            continue
+                        if fn is not None and not fn(t.meta.get(seq) or {}):
+                            continue
+                        g["queue"].append(seq)
+                        t.owners[seq] = t.owners.get(seq, 0) + 1
+                self._cond.notify_all()
+            return {"created": created, "queued": len(g["queue"]),
+                    "count": t.count, "closed": t.closed}
+
+    def unsubscribe(self, topic: str, group: str) -> None:
+        with self._cond:
+            t = self._topic(topic)
+            g = t.groups.pop(group, None)
+            if g is None:
+                return
+            for seq in (*g["queue"], *g["unacked"]):
+                self._drop_owner(t, seq)
+            self._cond.notify_all()
+
+    def _drop_owner(self, t: _Topic, seq: int) -> None:
+        n = t.owners.get(seq)
+        if n is None:
+            return
+        if n <= 1:
+            del t.owners[seq]
+            t.data.pop(seq, None)       # last group acked: evict
+            t.meta.pop(seq, None)
+        else:
+            t.owners[seq] = n - 1
+
+    # -- consumer side -------------------------------------------------------
+    def _pop(self, t: _Topic, group: str, payload: bool):
+        g = t.groups.get(group)
+        if g is None or not g["queue"]:
+            return None
+        seq = g["queue"].popleft()
+        g["unacked"].add(seq)
+        return BrokerEvent(seq, t.data.get(seq) if payload else None,
+                           t.meta.get(seq) or {})
+
+    def take(self, topic: str, group: str, *, timeout: float = 60.0,
+             payload: bool = True) -> BrokerEvent:
+        deadline = time.monotonic() + float(timeout)
+        with self._cond:
+            t = self._topic(topic)
+            while True:
+                ev = self._pop(t, group, payload)
+                if ev is not None:
+                    return ev
+                if t.closed:
+                    return BrokerEvent(-1, None, {}, end=True)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"stream {topic!r} group {group!r} timed out")
+                self._cond.wait(remaining)
+
+    def take_batch(self, topic: str, group: str, n: int, *,
+                   payload: bool = True) -> list[BrokerEvent]:
+        out: list[BrokerEvent] = []
+        with self._cond:
+            t = self._topic(topic)
+            while len(out) < n:
+                ev = self._pop(t, group, payload)
+                if ev is None:
+                    break
+                out.append(ev)
+        return out
+
+    def ack(self, topic: str, group: str, seqs) -> None:
+        with self._cond:
+            t = self._topic(topic)
+            g = t.groups.get(group)
+            if g is None:
+                return
+            acked = {int(s) for s in seqs} & g["unacked"]
+            g["unacked"] -= acked
+            for seq in acked:
+                self._drop_owner(t, seq)
+            if acked:
+                self._cond.notify_all()   # acks free backpressure credits
+
+    def requeue(self, topic: str, group: str, seqs) -> None:
+        with self._cond:
+            t = self._topic(topic)
+            g = t.groups.get(group)
+            if g is None:
+                return
+            back = {int(s) for s in seqs} & g["unacked"]
+            if not back:
+                return
+            g["unacked"] -= back
+            g["queue"] = collections.deque(sorted(back | set(g["queue"])))
+            self._cond.notify_all()
+
+    # -- topic admin ---------------------------------------------------------
+    def set_limit(self, topic: str, limit: int | None) -> None:
+        with self._cond:
+            self._topic(topic).limit = int(limit) if limit else None
+            self._cond.notify_all()
+
+    def close_topic(self, topic: str) -> None:
+        with self._cond:
+            self._topic(topic).closed = True
+            self._cond.notify_all()
+
+    def stat(self, topic: str) -> dict:
+        with self._cond:
+            t = self._topic(topic)
+            st: dict = {"count": t.count, "closed": t.closed}
+            if t.groups:
+                st["groups"] = {name: {"queued": len(g["queue"]),
+                                       "unacked": len(g["unacked"])}
+                                for name, g in t.groups.items()}
+                st["buffered"] = len(t.owners)
+                if t.limit is not None:
+                    st["limit"] = t.limit
+            return st

@@ -1,0 +1,46 @@
+"""R7 fixture: stream consumers iterated without close().  Linted by
+tests, never imported."""
+
+
+def bad_for_loop(store):
+    stream = store.stream_consumer("t")
+    out = []
+    for item in stream:                       # FIRES: no close anywhere
+        out.append(item)
+    return out
+
+
+def bad_inline_drain(store):
+    total = 0
+    for item in store.stream_consumer("t"):   # FIRES: no handle to close
+        total += 1
+    return total
+
+
+def bad_list_drain(store):
+    tap = metrics_tap(store, "res")           # noqa: F821 - AST fixture
+    return list(tap)                          # FIRES: drained, never closed
+
+
+def ok_with_block(store):
+    with store.stream_consumer("t") as stream:
+        return [item for item in stream]
+
+
+def ok_with_named(store):
+    stream = store.stream_consumer("t")
+    with stream:
+        return list(stream)
+
+
+def ok_try_finally(store):
+    stream = store.stream_consumer("t")
+    try:
+        return next(stream)
+    finally:
+        stream.close()
+
+
+def ok_allowlisted(store):
+    stream = store.stream_consumer("t")       # exhausted streams self-drain
+    return [x for x in stream]  # lint: stream-ok

@@ -1,4 +1,4 @@
-"""The two-headed correctness tool: proxylint rule fixtures (each R1-R6
+"""The two-headed correctness tool: proxylint rule fixtures (each R1-R7
 fires; each allowlist suppresses) and the runtime sanitizer's four seeded
 defect classes (use-after-free view, refcount leak, double-decref,
 poisoned stale read), each detected with its named diagnostic."""
@@ -83,6 +83,15 @@ def test_r6_nonidempotent_retry():
     msgs = " ".join(f.message for f in findings)
     assert "'decref'" in msgs and "'put2'" in msgs and "'s_append'" in msgs
     _assert_allowlist_suppressed(findings, "r6_retry.py", "retry-ok")
+
+
+def test_r7_unclosed_stream_consumer():
+    findings = _lint_fixture("r7_stream.py")
+    assert [f.rule for f in findings] == ["R7"] * 3
+    msgs = " ".join(f.message for f in findings)
+    assert "'stream'" in msgs and "no handle to close()" in msgs \
+        and "'tap'" in msgs
+    _assert_allowlist_suppressed(findings, "r7_stream.py", "stream-ok")
 
 
 def test_lint_cli_and_syntax_error(tmp_path, capsys):

@@ -68,10 +68,17 @@ def test_fl_pipelined_futures_and_streams(executor, tmp_path):
         store = Store("fl-pipe", KVServerConnector(kv.host, kv.port))
         fl = FLConfig(rounds=2, workers_per_round=2, local_steps=3,
                       transport="proxy", pipeline=True, deadline_s=120)
-        orch = FLOrchestrator(TINY, fl, executor, store)
+        orch = FLOrchestrator(TINY, fl, executor, store,
+                              monitor_group="monitor")
         res = orch.run()
         assert all(r["ok"] == 2 for r in res["rounds"])
         assert res["losses"][-1] < res["losses"][0]
+        # the monitor group tailed the same updates the aggregator
+        # consumed (ok == 2 above proves nothing was stolen): metadata
+        # only, no update tensors resolved
+        with orch.monitor_updates(0, timeout=5.0) as tap:
+            metas = list(tap)
+        assert len(metas) == 2 and all(m["ok"] for m in metas)
         store.close()
     finally:
         kv.stop()

@@ -15,7 +15,7 @@ from repro.core.connectors import FileConnector, SharedMemoryConnector
 from repro.core.proxy import extract, get_factory, is_proxy
 from repro.core.store import unregister_store
 from repro.models.serve_paths import KVBlockPool, KVPoolExhausted
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, metrics_tap
 from repro.train.checkpoints import ProxyCheckpointManager
 
 CFG = ARCHS["qwen2.5-14b"].reduced().replace(dtype="float32", n_layers=2)
@@ -202,7 +202,8 @@ def test_serve_stream_roundtrip(engine, shm_store):
     t = threading.Thread(target=feed)
     t.start()
     stats = engine.serve_stream(shm_store, "req", "res",
-                                data_store=shm_store, timeout=30.0)
+                                data_store=shm_store, timeout=30.0,
+                                result_groups=("metrics",))
     t.join()
     assert stats["completed"] == len(reqs)
     got = {}
@@ -211,6 +212,12 @@ def test_serve_stream_roundtrip(engine, shm_store):
         got[c["req_id"]] = c["tokens"]
         assert c["total_s"] >= c["queued_s"] >= 0.0
     assert got == want
+    # completions published ONCE fan out to the pre-subscribed metrics
+    # group too: the tap reads per-request metadata without resolving
+    # (or stealing) a single result payload
+    with metrics_tap(shm_store, "res", timeout=10.0) as tap:
+        metas = {m["req_id"]: m["n_tokens"] for m in tap}
+    assert metas == {rid: len(toks) for rid, toks in want.items()}
 
 
 # ---------------------------------------------------------------------------

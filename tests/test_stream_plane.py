@@ -1,0 +1,348 @@
+"""Broker-backed pub/sub stream plane (multi-consumer fanout).
+
+LocalBroker full semantics, the KV wire path (per-group payload
+refcounts with evict-after-last-ack, filtered metadata taps that never
+touch the data plane, credit-based backpressure), the Store shim that
+keeps PR-4 ``stream_producer``/``stream_consumer`` behavior byte-
+identical under a single group, location addressing errors, and
+consumer-group failover on the sharded fabric (chaos tier).
+"""
+import os
+import signal
+import threading
+import time
+import uuid
+
+import pytest
+
+from repro.core import Store
+from repro.core.connectors import KVServerConnector, LocalMemoryConnector
+from repro.core.kv_tcp import KVClient, spawn_server, stream_item_key
+from repro.core.store import unregister_store
+from repro.stream import LocalBroker, StreamConsumer, StreamProducer
+from repro.stream.filters import compile_filter
+
+
+# ---------------------------------------------------------------------------
+# LocalBroker: full broker semantics, no server
+# ---------------------------------------------------------------------------
+def test_local_fanout_exactly_once_and_evict_after_last_ack():
+    b = LocalBroker()
+    b.subscribe("t", "a")
+    b.subscribe("t", "b")
+    seqs = [b.publish("t", f"i{i}".encode()) for i in range(3)]
+    got_a = [b.take("t", "a", timeout=1) for _ in range(3)]
+    assert [bytes(e.data) for e in got_a] == [b"i0", b"i1", b"i2"]
+    b.ack("t", "a", [e.seq for e in got_a])
+    t = b._topics["t"]
+    assert len(t.data) == 3            # group b has not acked: retained
+    got_b = b.take_batch("t", "b", 10)
+    assert [e.seq for e in got_b] == seqs
+    b.ack("t", "b", seqs)
+    assert t.data == {} and t.owners == {}   # LAST ack evicts
+    with pytest.raises(TimeoutError):        # exactly once per group
+        b.take("t", "a", timeout=0.05)
+
+
+def test_local_filtered_group_and_unmatched_never_stored():
+    b = LocalBroker()
+    b.subscribe("t", "big", filter={"key": "n", "op": ">=", "value": 10})
+    for n in (3, 12, 7, 20):
+        b.publish("t", f"v{n}".encode(), meta={"n": n})
+    t = b._topics["t"]
+    # events no group wants were never stored (count still advances)
+    assert t.count == 4 and set(t.data) == {1, 3}
+    evs = [b.take("t", "big", timeout=1) for _ in range(2)]
+    assert [e.meta["n"] for e in evs] == [12, 20]
+    b.ack("t", "big", [e.seq for e in evs])
+    assert t.data == {}
+
+
+def test_local_backpressure_parks_and_acks_release():
+    b = LocalBroker()
+    b.subscribe("bp", "g")
+    b.set_limit("bp", 2)
+    b.publish("bp", b"0")
+    b.publish("bp", b"1")
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):
+        b.publish("bp", b"2", timeout=0.2)
+    assert time.monotonic() - t0 >= 0.2
+
+    def drain():
+        time.sleep(0.2)
+        ev = b.take("bp", "g", timeout=5)
+        b.ack("bp", "g", [ev.seq])
+
+    th = threading.Thread(target=drain)
+    th.start()
+    # released by the ack; the timed-out publish was never committed,
+    # so the next sequence number is 2
+    assert b.publish("bp", b"2", timeout=10) == 2
+    th.join(5)
+
+
+def test_local_unsubscribe_releases_references():
+    b = LocalBroker()
+    b.subscribe("t", "a")
+    b.subscribe("t", "b")
+    b.publish("t", b"x")
+    ev = b.take("t", "a", timeout=1)
+    b.ack("t", "a", [ev.seq])
+    assert b._topics["t"].data            # b still holds a reference
+    b.unsubscribe("t", "b")
+    assert b._topics["t"].data == {}
+
+
+def test_consumer_close_requeues_prefetched_to_group():
+    b = LocalBroker()
+    with StreamProducer(b, "q") as prod:
+        for i in range(5):
+            prod.append(f"m{i}".encode())
+    c1 = StreamConsumer(b, "q", "g", start="begin", prefetch=8, timeout=1)
+    assert bytes(next(c1)) == b"m0"
+    assert c1.pending() == 4              # prefetched, NOT yet acked
+    c1.close()                            # requeues the 4 to the group
+    c2 = StreamConsumer(b, "q", "g", prefetch=0, timeout=1)
+    assert [bytes(x) for x in c2] == [b"m1", b"m2", b"m3", b"m4"]
+    c2.close()
+    with pytest.raises(RuntimeError):     # closed consumer refuses takes
+        next(c1)
+
+
+def test_filter_spec_validation_and_semantics():
+    fn = compile_filter({"any": [{"key": "a", "op": "==", "value": 1},
+                                 {"not": {"key": "b"}}]})
+    assert fn({"a": 1, "b": 0}) and fn({}) and not fn({"a": 2, "b": 1})
+    assert compile_filter({"key": "k", "op": "!="})({})     # missing: True
+    assert not compile_filter({"key": "k", "op": ">", "value": 1})({"k": "s"})
+    with pytest.raises(ValueError):
+        compile_filter({"key": "k", "op": "~="})
+    with pytest.raises(ValueError):
+        compile_filter({"op": "=="})
+
+
+# ---------------------------------------------------------------------------
+# KV wire path: per-group refcounts on the lifetime table
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def kv(tmp_path):
+    host, port, pid = spawn_server(ready_file=str(tmp_path / "kv.ready"))
+    client = KVClient(host, port)
+    yield client
+    client.shutdown_server()
+    client.close()
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except (ProcessLookupError, PermissionError):
+        pass
+
+
+def test_kv_fanout_refcount_and_evict_after_last_ack(kv):
+    kv.stream_sub("f", "a")
+    kv.stream_sub("f", "b")
+    kv.stream_append("f", b"x")
+    key = stream_item_key("f", 0)
+    assert kv.refcount(key) == 2          # one reference per matching group
+    ita = kv.stream_take("f", "a", timeout=5)
+    itb = kv.stream_take("f", "b", timeout=5)
+    assert bytes(ita["data"]) == b"x" == bytes(itb["data"])
+    assert kv.stream_ack("f", "a", [0]) == 1
+    assert kv.exists(key)                 # group b still holds it
+    assert kv.stream_ack("f", "b", [0]) == 1
+    assert not kv.exists(key)             # last ack: evicted exactly once
+    assert kv.stream_ack("f", "b", [0]) == 0   # idempotent
+
+
+def test_kv_filtered_tap_serves_zero_payloads(kv):
+    kv.stream_sub("m", "main")
+    kv.stream_sub("m", "tap", filter={"key": "i", "op": ">=", "value": 2})
+    for i in range(4):
+        kv.stream_append("m", f"p{i}".encode(), meta={"i": i})
+    base = kv.stats()["n_payload_serves"]
+    evs = [kv.stream_take("m", "tap", timeout=5, payload=False)
+           for _ in range(2)]
+    assert [e["meta"]["i"] for e in evs] == [2, 3]
+    assert all(e["data"] is None for e in evs)
+    assert kv.stream_ack("m", "tap", [e["seq"] for e in evs]) == 2
+    # the metadata-only tap crossed ZERO payload bytes
+    assert kv.stats()["n_payload_serves"] == base
+    it = kv.stream_take("m", "main", timeout=5)      # main group resolves
+    assert bytes(it["data"]) == b"p0"
+    assert kv.stats()["n_payload_serves"] == base + 1
+
+
+def test_kv_begin_subscribe_adopts_retained_events(kv):
+    for i in range(3):
+        kv.stream_append("pre", f"e{i}".encode())    # legacy: no groups yet
+    st = kv.stream_sub("pre", "late", start="begin")
+    assert st["queued"] == 3
+    got = kv.stream_take_batch("pre", "late", 10)
+    assert [bytes(e["data"]) for e in got] == [b"e0", b"e1", b"e2"]
+    kv.stream_ack("pre", "late", [e["seq"] for e in got])
+    assert not kv.exists(stream_item_key("pre", 0))
+    # start="new" skips history
+    assert kv.stream_sub("pre", "fresh", start="new")["queued"] == 0
+
+
+def test_kv_backpressure_park_and_release(kv):
+    kv.stream_sub("bp", "g")
+    kv.stream_limit("bp", 2)
+    assert kv.stream_append("bp", b"0") == 0
+    assert kv.stream_append("bp", b"1") == 1
+    with pytest.raises(TimeoutError):     # buffer full: append parks
+        kv.stream_append("bp", b"2", timeout=0.3)
+
+    def drain():
+        time.sleep(0.3)
+        it = kv.stream_take("bp", "g", timeout=5)
+        kv.stream_ack("bp", "g", [it["seq"]])
+
+    th = threading.Thread(target=drain)
+    th.start()
+    # the ack frees a credit and un-parks the append (timed-out append
+    # above was never committed: the next sequence number is 2)
+    assert kv.stream_append("bp", b"2", timeout=10) == 2
+    th.join(5)
+
+
+def test_kv_requeue_redelivers_in_order(kv):
+    kv.stream_sub("rq", "g")
+    for i in range(3):
+        kv.stream_append("rq", f"r{i}".encode())
+    taken = [kv.stream_take("rq", "g", timeout=5) for _ in range(3)]
+    assert kv.stream_requeue("rq", "g", [t["seq"] for t in taken[1:]]) == 2
+    again = kv.stream_take_batch("rq", "g", 10)
+    assert [bytes(e["data"]) for e in again] == [b"r1", b"r2"]
+
+
+# ---------------------------------------------------------------------------
+# Store shim: PR-4 call sites run unchanged on the broker plane
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def mem_store():
+    name = f"stream-plane-{uuid.uuid4().hex[:8]}"
+    store = Store(name, LocalMemoryConnector())
+    yield store
+    store.close()
+    unregister_store(name)
+
+
+def test_shim_single_group_round_trip(mem_store):
+    with mem_store.stream_producer("s") as prod:
+        for i in range(5):
+            prod.append({"i": i})
+    assert [o["i"] for o in mem_store.stream_consumer("s", timeout=5)] \
+        == [0, 1, 2, 3, 4]
+
+
+def test_shim_exception_delivered_in_order(mem_store):
+    with mem_store.stream_producer("x") as prod:
+        prod.append(1)
+        prod.append_exception(ValueError("boom"))
+        prod.append(3)
+    stream = mem_store.stream_consumer("x", timeout=5, prefetch=0)
+    assert next(stream) == 1
+    with pytest.raises(ValueError, match="boom"):
+        next(stream)
+    assert next(stream) == 3
+    with pytest.raises(StopIteration):
+        next(stream)
+
+
+def test_store_fanout_tap_steals_nothing(mem_store):
+    tap = mem_store.stream_consumer("r", group="tap", payload=False,
+                                    timeout=5)
+    with mem_store.stream_producer("r") as prod:
+        for i in range(3):
+            prod.append({"i": i}, meta={"i": i})
+    main = [o["i"] for o in mem_store.stream_consumer("r", group="client",
+                                                      timeout=5)]
+    assert main == [0, 1, 2]              # full payloads, nothing stolen
+    assert [m["i"] for m in tap] == [0, 1, 2]   # metadata only
+    tap.close()
+
+
+def test_store_consumer_close_requeues(mem_store):
+    with mem_store.stream_producer("q") as prod:
+        for i in range(6):
+            prod.append(i)
+    c1 = mem_store.stream_consumer("q", timeout=5, prefetch=8)
+    assert next(c1) == 0
+    assert c1.pending() == 5
+    c1.close()
+    assert list(mem_store.stream_consumer("q", timeout=5)) == [1, 2, 3, 4, 5]
+
+
+def test_store_location_rejected_without_support(mem_store):
+    with pytest.raises(ValueError, match="location"):
+        mem_store.stream_consumer("t", location="node-1")
+
+
+def test_kvserver_store_fanout_and_filter(kv, tmp_path):
+    name = f"stream-kv-{uuid.uuid4().hex[:8]}"
+    store = Store(name, KVServerConnector(kv.host, kv.port))
+    try:
+        # both groups subscribe BEFORE publishing: an event matched by
+        # no group at publish time is never stored at all
+        slow = store.stream_consumer("jobs", group="slow",
+                                     filter={"key": "p", "op": ">",
+                                             "value": 0}, timeout=5)
+        every_c = store.stream_consumer("jobs", group="all", timeout=5)
+        with store.stream_producer("jobs") as prod:
+            for i in range(4):
+                prod.append({"job": i}, meta={"p": i % 2})
+        assert [o["job"] for o in every_c] == [0, 1, 2, 3]
+        assert [o["job"] for o in slow] == [1, 3]
+        slow.close()
+    finally:
+        store.close()
+        unregister_store(name)
+
+
+# ---------------------------------------------------------------------------
+# chaos tier: consumer-group failover on the sharded fabric
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+def test_fabric_stream_group_survives_shard_kill(tmp_path):
+    """Kill the topic's home shard mid-stream: the subscription re-homes
+    to a replica (re-subscribed ``start="new"``) and the group keeps
+    consuming appends — at-most-once across the failover, never stuck."""
+    from repro.core.deploy import start_kvserver
+    from repro.core.fabric import ShardedConnector
+    from repro.distributed.chaos import kill_shard
+
+    handles = [start_kvserver(str(tmp_path), name=f"s{i}", uds=True)
+               for i in range(4)]
+    fab = ShardedConnector([h.host for h in handles], replication=2,
+                           quorum=True, op_timeout=5.0)
+    try:
+        fab.stream_subscribe("events", "workers")
+        fab.stream_append("events", b"before")
+        ev = fab.stream_take("events", "workers", timeout=5.0)
+        assert bytes(ev.data) == b"before"
+        fab.stream_ack("events", "workers", [ev.seq])
+
+        home = fab._stream_home["events"]
+        victim = next(h for h in handles if h.host == home)
+        kill_shard(victim)
+
+        # appends fail over to a replica; the group was re-subscribed
+        # there so the take below is served by the new home
+        deadline = time.monotonic() + 30.0
+        while True:
+            try:
+                fab.stream_append("events", b"after")
+                break
+            except (ConnectionError, TimeoutError):
+                if time.monotonic() > deadline:
+                    raise
+        ev = fab.stream_take("events", "workers", timeout=10.0)
+        assert bytes(ev.data) == b"after"
+        assert fab.stream_ack("events", "workers", [ev.seq]) == 1
+        assert fab.n_failovers > 0
+        assert fab._stream_home["events"] != home
+    finally:
+        fab.close()
+        for h in handles:
+            h.stop()
