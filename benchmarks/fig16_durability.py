@@ -1,0 +1,221 @@
+"""Fig 16 (repo extension): durability — chain-replication egress,
+zero-loss failover, and at-least-once stream delivery.
+
+Three measurements over the 4-shard / replication-2 fabric (Unix-domain
+shards, the same-host deployment CI can exercise):
+
+* ``fig16.egress.{chain,legacy}.*`` — client put egress under
+  server-side chain replication vs the legacy client fanout.  The same
+  batch of blobs is put through both modes and the fabric's summed
+  client TX byte counters are compared: the chain path uploads ONE copy
+  (the head forwards to its ring successors shard-to-shard), so the
+  recorded ``egress_ratio_chain_vs_legacy`` lands near 1/R — the
+  tentpole claim, gated at ≤ 0.75 for R=2.
+
+* ``fig16.durability.kill1of4`` — SIGKILL one shard under a live
+  chain-replicated write workload and verify the zero-lost-committed-
+  puts guarantee: every put acked before or after the kill must resolve
+  via failover reads (``lost_puts`` is recorded and must be 0).  Replica
+  writes that failed mid-chain surface in ``n_repl_errors`` and queue
+  for repair instead of being dropped silently.
+
+* ``fig16.stream.failover`` — SIGKILL the home shard of a topic with an
+  active consumer group mid-stream.  The group must resume from the
+  replicated cursor with every committed event delivered at least once
+  (``skipped_seqs`` must be 0); duplicates are the permitted cost and
+  are recorded as ``redelivery_ratio`` (total deliveries / unique
+  committed events, gated ≤ 1.5).  A poison event requeued past
+  ``max_deliveries`` must land in ``<topic>.dlq`` (``dlq_count``).
+
+``run(micro=True)`` is the perf-gate tier: fewer/smaller blobs and a
+shorter stream, same invariants.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import emit, fmt_bytes, record, time_call, tmpdir
+from repro.core.deploy import start_kvserver
+from repro.core.fabric import ShardedConnector
+from repro.core.kv_tcp import dlq_topic
+from repro.distributed.chaos import (crash_during_cursor_replication,
+                                     kill_shard)
+
+SIZE = 262_144
+N_SHARDS = 4
+
+
+def _spawn(d: str, tag: str, chain: bool = True,
+           op_timeout: float = 10.0):
+    handles = [start_kvserver(d, name=f"{tag}{i}", uds=True)
+               for i in range(N_SHARDS)]
+    fab = ShardedConnector([h.host for h in handles], replication=2,
+                           quorum=True, op_timeout=op_timeout, chain=chain)
+    return handles, fab
+
+
+def _egress_row(micro: bool) -> dict:
+    """Same blob batch through chain vs legacy puts; compare client TX."""
+    batch = 16 if micro else 64
+    blobs = [bytes([i % 251]) * SIZE for i in range(batch)]
+    nbytes = sum(len(b) for b in blobs)
+    out: dict = {}
+    tx: dict[str, int] = {}
+    for mode, chain in (("chain", True), ("legacy", False)):
+        d = tmpdir(f"fig16-egress-{mode}")
+        handles, fab = _spawn(d, "eg", chain=chain)
+        try:
+            fab.put_batch(blobs)                     # warm: conns + ring
+            base = fab.stats()["fabric"]["client_tx_bytes"]
+            t = time_call(lambda: fab.put_batch(blobs), reps=1, warmup=0,
+                          inner=1)
+            tx[mode] = fab.stats()["fabric"]["client_tx_bytes"] - base
+            emit(f"fig16.egress.{mode}.{fmt_bytes(SIZE)}", t * 1e6,
+                 f"{tx[mode] / 1e6:.1f}MB client tx for "
+                 f"{nbytes / 1e6:.1f}MB payload r{fab.replication}",
+                 mb_per_s=nbytes / t / 1e6)
+            out[f"put_mb_per_s_{mode}"] = round(nbytes / t / 1e6, 1)
+            out[f"client_tx_mb_{mode}"] = round(tx[mode] / 1e6, 2)
+        finally:
+            fab.close()
+            for h in handles:
+                h.stop()
+    out["egress_ratio_chain_vs_legacy"] = round(tx["chain"] / tx["legacy"],
+                                                3)
+    return out
+
+
+def _durability_row(micro: bool) -> dict:
+    """Kill 1 of 4 shards under chain-replicated writes: zero committed
+    puts lost, failed replica hops surfaced + queued for repair."""
+    d = tmpdir("fig16-durability")
+    handles, fab = _spawn(d, "dur", op_timeout=5.0)
+    try:
+        n = 32 if micro else 128
+        keys = fab.put_batch([b"committed-pre-kill" * 64
+                              for _ in range(n)])
+        kill_shard(handles[0])
+        # writes keep committing through the failure window; unacked
+        # attempts may fail, acked ones must survive
+        acked: list = []
+        deadline = time.monotonic() + 30.0
+        while len(acked) < n and time.monotonic() < deadline:
+            try:
+                acked.append(fab.put(b"mid-kill-write" * 64))
+            except (ConnectionError, TimeoutError, OSError):
+                pass
+        lost = sum(b is None for b in fab.get_batch(keys + acked))
+        st = fab.stats()["fabric"]
+        emit("fig16.durability.kill1of4", 0.0,
+             f"{lost} lost of {len(keys) + len(acked)} committed, "
+             f"{st['n_repl_errors']} repl errors, "
+             f"{st['n_repairs_pending']} queued repairs")
+        return {"lost_puts": lost,
+                "committed_puts": len(keys) + len(acked),
+                "n_repl_errors": st["n_repl_errors"],
+                "n_repairs_pending": st["n_repairs_pending"],
+                "n_hint_shards_pending": st["n_hint_shards_pending"]}
+    finally:
+        fab.close()
+        for h in handles:
+            h.stop()
+
+
+def _retrying(fn, deadline_s: float = 30.0):
+    deadline = time.monotonic() + deadline_s
+    while True:
+        try:
+            return fn()
+        except (ConnectionError, TimeoutError, OSError):
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.05)
+
+
+def _stream_row(micro: bool) -> dict:
+    """Kill the topic home mid-stream: at-least-once resume from the
+    replicated cursor, poison event dead-lettered."""
+    d = tmpdir("fig16-stream")
+    handles, fab = _spawn(d, "str", op_timeout=5.0)
+    try:
+        n = 24 if micro else 96
+        poison_at = n // 2
+        fab.stream_subscribe("events", "workers")
+        fab.stream_subscribe(dlq_topic("events"), "audit")
+        fab.stream_limit("events", None, max_deliveries=2)
+        committed: set[int] = set()
+        for i in range(n // 2):
+            meta = ({"i": i, "poison": True} if i == poison_at
+                    else {"i": i})
+            committed.add(fab.stream_append("events", f"e{i}".encode(),
+                                            meta=meta))
+        home = fab._stream_home["events"]
+        victim = next(h for h in handles if h.host == home)
+        sched = crash_during_cursor_replication(victim, delay_s=0.02)
+        for i in range(n // 2, n):
+            meta = ({"i": i, "poison": True} if i == poison_at
+                    else {"i": i})
+            committed.add(_retrying(lambda i=i, meta=meta:
+                                    fab.stream_append(
+                                        "events", f"e{i}".encode(),
+                                        meta=meta)))
+        sched.join(10.0)
+        t0 = time.perf_counter()
+        seen: set[int] = set()
+        deliveries = 0
+        poison_dead = False
+        # drain until every committed seq was delivered AND the poison
+        # event actually dead-lettered: a requeue that moves the event to
+        # the DLQ returns 0 (nothing went back in the queue) — until then
+        # the poison is still pending redelivery and the loop must keep
+        # taking or it never reaches max_deliveries
+        while not (committed <= seen and poison_dead):
+            if time.perf_counter() - t0 > 60.0:
+                break
+            ev = _retrying(lambda: fab.stream_take("events", "workers",
+                                                   timeout=10.0))
+            deliveries += 1
+            seen.add(ev.seq)
+            if ev.meta.get("poison"):
+                back = _retrying(lambda: fab.stream_requeue(
+                    "events", "workers", [ev.seq], reason="poison"))
+                if not back:
+                    poison_dead = True
+            else:
+                _retrying(lambda: fab.stream_ack("events", "workers",
+                                                 [ev.seq]))
+        skipped = len(committed - seen)
+        dlq = 0
+        try:
+            dev = _retrying(lambda: fab.stream_take(
+                dlq_topic("events"), "audit", timeout=15.0),
+                deadline_s=30.0)
+            dlq = int(bool(dev.meta.get("dlq")))
+        except (ConnectionError, TimeoutError, OSError):
+            pass
+        ratio = deliveries / max(1, len(committed))
+        emit("fig16.stream.failover", 0.0,
+             f"{len(committed)} committed, {skipped} skipped, "
+             f"redelivery x{ratio:.2f}, {dlq} dead-lettered, "
+             f"{fab.n_failovers} failovers")
+        return {"stream_committed": len(committed),
+                "skipped_seqs": skipped,
+                "redelivery_ratio": round(ratio, 3),
+                "dlq_count": dlq,
+                "n_failovers": fab.n_failovers}
+    finally:
+        fab.close()
+        for h in handles:
+            h.stop()
+
+
+def run(micro: bool = False) -> None:
+    results: dict = {}
+    results.update(_egress_row(micro))
+    results.update(_durability_row(micro))
+    results.update(_stream_row(micro))
+    record("durability", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -35,6 +35,16 @@ published bytes (a ratio above 1.5 means taps started resolving payloads
 and fanout cost is back to O(groups), tolerance does not excuse it).
 Skip just this half with ``PERF_GATE_SKIP_FANOUT=1``.
 
+When a committed ``BENCH_durability.json`` baseline exists, the gate
+also runs ``benchmarks.fig16_durability.run(micro=True)`` (chain-vs-
+legacy put egress, kill-1-of-4 zero-loss, stream failover) and checks
+the durability invariants outright — these are correctness bars, not
+tolerance-scaled: ``lost_puts`` and ``skipped_seqs`` must be 0, the
+redelivery ratio must stay under a hard 1.5x cap, and the chain-put
+client egress must stay at or under 0.75x the legacy fanout at R=2
+(the tentpole claim is ~0.5x).  Skip just this half with
+``PERF_GATE_SKIP_DURABILITY=1`` (it SIGKILLs shards, ~10 s).
+
 Opt-outs for slow or shared runners:
 
 * ``PERF_GATE_SKIP=1``      — skip entirely (exit 0).
@@ -59,6 +69,8 @@ FABRIC_GATED_ROW = "fig15.agg.4shard.977KB"
 FABRIC_RECOVERY_ROW = "fig15.recovery.kill1of4"
 FANOUT_GATED_ROW = "fig13.fanout.proxy_on_publish.g8"
 FANOUT_RATIO_CAP = 1.5
+DURABILITY_EGRESS_CAP = 0.75    # chain put tx vs legacy fanout at R=2
+DURABILITY_REDELIVERY_CAP = 1.5
 _ROOT = Path(__file__).resolve().parents[1]
 
 
@@ -101,6 +113,7 @@ def main() -> int:
     failures += _gate_serve(tolerance)
     failures += _gate_fabric(tolerance)
     failures += _gate_fanout(tolerance)
+    failures += _gate_durability(tolerance)
     if not failures:
         print("perf gate: ok")
         return 0
@@ -250,6 +263,63 @@ def _gate_fanout(tolerance: float) -> list[str]:
         failures.append(f"fanout served-bytes ratio {ratio:.2f}x > "
                         f"{FANOUT_RATIO_CAP}x: proxy-on-publish is "
                         f"resolving payloads in more than one group")
+    return failures
+
+
+def _gate_durability(tolerance: float) -> list[str]:
+    """Durability invariants: zero committed puts lost, zero skipped
+    stream seqs, redelivery ratio under a hard cap, and chain-put client
+    egress at or under ``DURABILITY_EGRESS_CAP`` of the legacy fanout.
+    These are correctness bars — ``tolerance`` does not widen them."""
+    if os.environ.get("PERF_GATE_SKIP_DURABILITY"):
+        print("perf gate: durability half skipped "
+              "(PERF_GATE_SKIP_DURABILITY set)")
+        return []
+    if not (_ROOT / "BENCH_durability.json").exists():
+        print("perf gate: no BENCH_durability.json baseline; "
+              "durability not gated")
+        return []
+
+    from benchmarks import util
+    from benchmarks.fig16_durability import run
+
+    run(micro=True)
+    res = util.RESULTS.get("durability", {})
+    failures: list[str] = []
+    checks = [
+        ("lost_puts", res.get("lost_puts"), 0,
+         "committed chain-replicated puts lost across a shard kill"),
+        ("skipped_seqs", res.get("skipped_seqs"), 0,
+         "committed stream events skipped across failover"),
+    ]
+    for name, value, bar, what in checks:
+        status = "ok" if value == bar else "FAIL"
+        print(f"  fig16.{name}: {value} (must be {bar}) [{status}]")
+        if status == "FAIL":
+            failures.append(f"fig16.{name}: {value} {what} (must be {bar})")
+    ratio = float(res.get("redelivery_ratio") or 0.0)
+    status = "ok" if 0 < ratio <= DURABILITY_REDELIVERY_CAP else "FAIL"
+    print(f"  fig16.redelivery_ratio: {ratio:.2f}x "
+          f"(cap {DURABILITY_REDELIVERY_CAP}x) [{status}]")
+    if status == "FAIL":
+        failures.append(f"fig16.redelivery_ratio {ratio:.2f}x outside "
+                        f"(0, {DURABILITY_REDELIVERY_CAP}]: failover "
+                        f"redelivery is no longer bounded")
+    egress = float(res.get("egress_ratio_chain_vs_legacy") or 0.0)
+    status = "ok" if 0 < egress <= DURABILITY_EGRESS_CAP else "FAIL"
+    print(f"  fig16.egress_ratio_chain_vs_legacy: {egress:.2f}x "
+          f"(cap {DURABILITY_EGRESS_CAP}x) [{status}]")
+    if status == "FAIL":
+        failures.append(f"fig16.egress chain/legacy ratio {egress:.2f}x "
+                        f"outside (0, {DURABILITY_EGRESS_CAP}]: the chain "
+                        f"path is no longer saving client upload bandwidth")
+    if res.get("dlq_count") != 1:
+        failures.append(f"fig16.dlq_count: {res.get('dlq_count')} poison "
+                        f"events dead-lettered (must be 1)")
+        print(f"  fig16.dlq_count: {res.get('dlq_count')} (must be 1) "
+              f"[FAIL]")
+    else:
+        print("  fig16.dlq_count: 1 (must be 1) [ok]")
     return failures
 
 

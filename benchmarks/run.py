@@ -37,6 +37,7 @@ MODULES = [
     ("fig13", "benchmarks.fig13_futures"),
     ("serve", "benchmarks.fig14_serving"),
     ("fabric", "benchmarks.fig15_fabric"),
+    ("durability", "benchmarks.fig16_durability"),
 ]
 
 _ROOT = Path(__file__).resolve().parents[1]

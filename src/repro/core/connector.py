@@ -371,6 +371,9 @@ class BaseConnector:
                 # owners counts outstanding group refs per seq (the
                 # backpressure "buffered" measure); meta rides filters
                 "groups": {}, "meta": {}, "owners": {}, "limit": None,
+                # (group, seq) -> delivery count; events delivered more
+                # than max_deliveries times dead-letter to <topic>.dlq
+                "deliveries": {}, "max_deliveries": None,
             }
         return st
 
@@ -538,6 +541,9 @@ class BaseConnector:
                 return
             for seq in (*g["queue"], *g["unacked"]):
                 self._drop_stream_owner(st, seq)
+            d = st["deliveries"]
+            for k in [k for k in d if k[0] == group]:
+                d.pop(k, None)
             state["cond"].notify_all()
 
     def _stream_pop(self, st: dict, group: str) -> tuple | None:
@@ -548,6 +554,8 @@ class BaseConnector:
             return None
         seq = g["queue"].popleft()
         g["unacked"].add(seq)
+        d = st["deliveries"]
+        d[(group, seq)] = d.get((group, seq), 0) + 1
         return seq, st["keys"][seq], dict(st["meta"].get(seq) or {})
 
     def stream_take(self, topic: str, group: str, timeout: float = 60.0,
@@ -606,12 +614,14 @@ class BaseConnector:
             acked = {int(s) for s in seqs} & g["unacked"]
             g["unacked"] -= acked
             for seq in sorted(acked):
+                st["deliveries"].pop((group, seq), None)
                 self._drop_stream_owner(st, seq)
             if acked:
                 state["cond"].notify_all()   # acks free producer credits
             return len(acked)
 
     def stream_requeue(self, topic: str, group: str, seqs,
+                       reason: str | None = None,
                        location: str | None = None) -> int:
         state = self._channel_state()
         with state["cond"]:
@@ -619,20 +629,64 @@ class BaseConnector:
             g = st["groups"].get(group)
             if g is None:
                 return 0
-            back = {int(s) for s in seqs} & g["unacked"]
-            if not back:
+            claimed = {int(s) for s in seqs} & g["unacked"]
+            if not claimed:
                 return 0
-            g["unacked"] -= back
-            g["queue"] = collections.deque(sorted(back | set(g["queue"])))
+            limit = st["max_deliveries"]
+            dead = ({s for s in claimed
+                     if st["deliveries"].get((group, s), 0) >= limit}
+                    if limit else set())
+            back = claimed - dead
+            g["unacked"] -= claimed
+            if back:
+                g["queue"] = collections.deque(
+                    sorted(back | set(g["queue"])))
+            for seq in sorted(dead):
+                self._dead_letter_local(st, topic, group, seq, reason)
             state["cond"].notify_all()
             return len(back)
 
+    def _dead_letter_local(self, st: dict, topic: str, group: str,
+                           seq: int, reason: str | None) -> None:
+        """Move a poison event to ``<topic>.dlq`` (same channel, same
+        payload key — one extra reference) with failure metadata, then
+        release the group's claim on the original."""
+        from repro.core.kv_tcp import dlq_topic
+
+        deliveries = st["deliveries"].pop((group, seq), 0)
+        dst = self._stream_state(dlq_topic(topic))
+        if not dst["closed"]:
+            dseq = dst["count"]
+            dst["count"] += 1
+            meta = dict(st["meta"].get(seq) or {})
+            meta["dlq"] = {"topic": topic, "group": group, "seq": seq,
+                           "deliveries": deliveries, "reason": reason}
+            dst["meta"][dseq] = meta
+            key = st["keys"][seq]
+            matched = (None if not dst["groups"] else
+                       [g2 for g2 in dst["groups"].values()
+                        if g2["fn"] is None or g2["fn"](meta)])
+            if key is None or (matched is not None and not matched):
+                dst["keys"].append(None)
+            else:
+                self.incref(key, 1 if matched is None else len(matched))
+                dst["keys"].append(key)
+                if matched:
+                    dst["owners"][dseq] = len(matched)
+            for g2 in matched or []:
+                g2["queue"].append(dseq)
+        self._drop_stream_owner(st, seq)
+
     def stream_limit(self, topic: str, limit: int | None,
+                     max_deliveries: int | None = None,
                      location: str | None = None) -> None:
         state = self._channel_state()
         with state["cond"]:
-            self._stream_state(topic)["limit"] = int(limit) if limit \
-                else None
+            st = self._stream_state(topic)
+            st["limit"] = int(limit) if limit else None
+            if max_deliveries is not None:
+                st["max_deliveries"] = (int(max_deliveries)
+                                        if max_deliveries else None)
             state["cond"].notify_all()
 
     def stream_stat(self, topic: str,
@@ -648,6 +702,8 @@ class BaseConnector:
                 out["buffered"] = len(st["owners"])
                 if st["limit"] is not None:
                     out["limit"] = st["limit"]
+                if st["max_deliveries"]:
+                    out["max_deliveries"] = st["max_deliveries"]
             return out
 
     def close(self) -> None:

@@ -294,17 +294,23 @@ class EndpointConnector(BaseConnector):
              "seqs": [int(s) for s in seqs]}, location) or 0)
 
     def stream_requeue(self, topic: str, group: str, seqs,
+                       reason: str | None = None,
                        location: str | None = None) -> int:
-        return int(self._group_op(
-            {"op": "s_requeue", "topic": topic, "group": group,
-             "seqs": [int(s) for s in seqs]}, location) or 0)
+        msg = {"op": "s_requeue", "topic": topic, "group": group,
+               "seqs": [int(s) for s in seqs]}
+        if reason:
+            msg["reason"] = reason
+        return int(self._group_op(msg, location) or 0)
 
     def stream_limit(self, topic: str, limit: int | None,
+                     max_deliveries: int | None = None,
                      location: str | None = None) -> None:
         # accepted for interface parity: bounds the topic's buffered
         # accounting server-side, but endpoint appends never park on it
-        self._group_op({"op": "s_limit", "topic": topic, "limit": limit},
-                       location)
+        msg = {"op": "s_limit", "topic": topic, "limit": limit}
+        if max_deliveries is not None:
+            msg["max_deliveries"] = max_deliveries
+        self._group_op(msg, location)
 
     def stream_stat(self, topic: str,
                     location: str | None = None) -> dict:

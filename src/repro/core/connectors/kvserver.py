@@ -117,12 +117,16 @@ class KVServerConnector(BaseConnector):
         return self._client.stream_ack(topic, group, seqs)
 
     def stream_requeue(self, topic: str, group: str, seqs,
+                       reason: str | None = None,
                        location: str | None = None) -> int:
-        return self._client.stream_requeue(topic, group, seqs)
+        return self._client.stream_requeue(topic, group, seqs,
+                                           reason=reason)
 
     def stream_limit(self, topic: str, limit: int | None,
+                     max_deliveries: int | None = None,
                      location: str | None = None) -> None:
-        self._client.stream_limit(topic, limit)
+        self._client.stream_limit(topic, limit,
+                                  max_deliveries=max_deliveries)
 
     def stream_stat(self, topic: str,
                     location: str | None = None) -> dict:

@@ -12,15 +12,23 @@ single mediated channel, scaled out):
   connector from ``config()`` maps a key to its owners via the ring, so
   proxies resolve anywhere without embedding a server address.
 
-* **Replicated puts** — a put is submitted to every owner *pipelined*
-  (the frames for all replicas are on the wire before any ack is
-  awaited).  The default async chain acks as soon as the first owner
-  commits and drains the replica futures in the background
-  (:meth:`ShardedConnector.flush_replicas` barriers them);
-  ``quorum=True`` waits for every reachable owner synchronously.  Either
-  way a put succeeds iff **at least one** owner acked — with
-  ``replication=2`` the fabric therefore tolerates any single shard
-  death without losing a committed put.
+* **Replicated puts** — by default (``chain=True``) a put uploads ONE
+  copy to the first usable owner, which **chain-forwards** it to the
+  remaining owners over shard-to-shard connections with per-hop acks
+  (``put2``/``mput2`` + ``"chain"``) — client egress is ~1/R of the
+  legacy client-fanout path.  A successor the head cannot reach is
+  queued for **repair** (:meth:`ShardedConnector.repair_replicas`
+  re-puts the blob when the shard answers again), and a put whose ring
+  primary is suspect lands on the next usable successor with a
+  **hinted-handoff** record — the landing shard replays bytes +
+  refcount + lease to the owner on recovery
+  (:meth:`ShardedConnector.replay_hints`, triggered automatically by
+  the first successful exchange with the recovered shard).  With
+  ``chain=False`` the legacy path applies: the client submits to every
+  owner pipelined, first ack commits, replicas drain in the background
+  (``quorum=True`` awaits them all).  Either way a put succeeds iff
+  **at least one** owner acked — with ``replication=2`` the fabric
+  tolerates any single shard death without losing a committed put.
 
 * **Read failover** — a read tries owners in ring order; a dead or
   timed-out shard is marked *suspect* (:class:`ShardHealth`, the
@@ -40,19 +48,30 @@ single mediated channel, scaled out):
   semantics survive shard membership changes.
 
 * **Streams** — a topic hashes to a home shard like any key (its ring
-  primary); the pub/sub group ops (``stream_subscribe`` /
-  ``stream_take`` / ``stream_ack`` …) run there.  Consumer-group
-  subscriptions and backpressure limits are additionally tracked
-  client-side: when the home shard dies mid-stream, the fabric re-homes
-  the topic to the next ring owner, re-installs the limit, and
-  re-subscribes every group (``start="new"``) before retrying the op —
-  producers and consumers ride through a shard kill.
+  primary; a ``<topic>.dlq`` dead-letter sibling co-homes with its
+  parent); the pub/sub group ops (``stream_subscribe`` /
+  ``stream_take`` / ``stream_ack`` …) run there.  On first contact the
+  fabric installs the topic's **replica chain** (its other ring owners)
+  on the home shard: appends forward payloads and group-state snapshots
+  to the chain before acking, and every cursor mutation pushes a
+  coalesced snapshot — so when the home shard dies mid-stream, the next
+  ring owner already holds the events AND the group cursors, and the
+  re-homed group **resumes from its replicated cursor**.  Stream
+  delivery across failover is therefore **at-least-once**: committed
+  (producer-acked) events are never skipped, but events delivered just
+  before a crash may be redelivered — consumers needing exactly-once
+  must dedup by ``seq`` (each event's seq is stable across failover).
+  Events requeued more than ``max_deliveries`` times move to
+  ``<topic>.dlq`` with failure metadata instead of spinning forever.
 
-**Limitations** (documented, not bugs): broker state is NOT replicated —
-events buffered only on a dead home shard are lost, so streams are
-at-most-once across a failover (replicating group cursors is an open
-item); and a key is readable-while-absent on a lagging async replica —
-readers fall through a miss to the other owners before declaring None.
+**Limitations** (documented, not bugs): a key is readable-while-absent
+on a lagging replica (chain repair / hint replay in flight) — readers
+fall through a miss to the other owners before declaring None; the
+cursor push that follows a delivery is asynchronous, so a crash between
+delivery and push redelivers (never skips) events; and repair/hint
+queues are held in client memory — a fabric client that exits before
+``repair_replicas()``/``replay_hints()`` drain leaves the ring one
+replica short until the next rebalance.
 
 Fault injection for all of the above lives in
 :mod:`repro.distributed.chaos`; `benchmarks/fig15_fabric.py` measures
@@ -72,7 +91,7 @@ from hashlib import blake2b
 from typing import Any, Sequence
 
 from repro.core.connector import BaseConnector, Key, StreamItem
-from repro.core.kv_tcp import KVClient, is_uds
+from repro.core.kv_tcp import KVClient, is_uds, stream_item_key
 from repro.distributed.fault_tolerance import RetryPolicy
 from repro.stream.broker import BrokerEvent
 
@@ -217,13 +236,18 @@ class ShardedConnector(BaseConnector):
     def __init__(self, shards: Sequence, replication: int = 2,
                  quorum: bool = False, op_timeout: float = 10.0,
                  vnodes: int = 64,
-                 retry_policy: RetryPolicy | None = None) -> None:
+                 retry_policy: RetryPolicy | None = None,
+                 chain: bool = True) -> None:
         self.replication = max(1, int(replication))
         self.quorum = bool(quorum)
         self.op_timeout = float(op_timeout)
         self.vnodes = int(vnodes)
+        self.chain = bool(chain)
+        # total-deadline cap: a retry loop on the failover path gives up
+        # and reroutes instead of backing off past two op timeouts
         self.retry_policy = retry_policy or RetryPolicy(
-            max_attempts=2, base_delay_s=0.05, max_delay_s=0.5)
+            max_attempts=2, base_delay_s=0.05, max_delay_s=0.5,
+            deadline_s=2.0 * self.op_timeout)
         self._ring = HashRing(shards, vnodes=self.vnodes)
         self._ring_lock = threading.Lock()     # ring swap + put journal
         self._admin_lock = threading.Lock()    # one rebalance at a time
@@ -234,12 +258,23 @@ class ShardedConnector(BaseConnector):
         self._repl_lock = threading.Lock()
         self._repl_futs: set[Future] = set()
         self.n_failovers = 0       # reads served off the first-choice owner
-        self.n_repl_errors = 0     # background replica writes that failed
+        self.n_repl_errors = 0     # replica writes that failed
+        self.n_repaired = 0        # repaired replica copies (re-puts)
+        self.n_hints_replayed = 0  # hinted keys replayed to recovered owners
+        # failed replica writes queue here until the missed owner answers
+        # again: (sid, oid) -> blob
+        self._repair_lock = threading.Lock()
+        self._repair_q: dict[tuple[str, str], Any] = {}
+        # hinted handoff bookkeeping: suspect owner -> landing shards that
+        # hold hint records for it (replayed on the owner's recovery)
+        self._hint_lock = threading.Lock()
+        self._hints_out: dict[str, set[str]] = {}
         # stream plane: client-side subscription registry so a topic's
         # groups can be re-established on its next owner after failover
         self._streams_lock = threading.Lock()
         self._stream_subs: dict[tuple[str, str], dict] = {}
         self._stream_limits: dict[str, int] = {}
+        self._stream_maxdel: dict[str, int] = {}
         self._stream_home: dict[str, str] = {}
 
     # -- shard plumbing ------------------------------------------------------
@@ -296,6 +331,184 @@ class ShardedConnector(BaseConnector):
         if futs:
             futures_wait(futs, timeout=timeout)
 
+    # -- recovery plumbing: replica repair + hinted handoff ------------------
+    def _mark_ok(self, sid: str) -> None:
+        """``mark_ok`` plus the recovery hook: the first successful
+        exchange with a shard we owe hinted keys or queued repairs
+        triggers their replay — no background thread, recovery rides on
+        ordinary traffic."""
+        self._health.mark_ok(sid)
+        with self._hint_lock:
+            owed_hints = sid in self._hints_out
+        if owed_hints:
+            self.replay_hints(owner=sid)
+        with self._repair_lock:
+            owed_repair = any(s == sid for s, _ in self._repair_q)
+        if owed_repair:
+            self.repair_replicas()
+
+    def _note_hint(self, owner: str, landing: str) -> None:
+        with self._hint_lock:
+            self._hints_out.setdefault(owner, set()).add(landing)
+
+    def _enqueue_repair(self, sid: str, oid: str, blob) -> None:
+        """Remember a replica write that failed so it can be re-put when
+        ``sid`` answers again (the blob is pinned client-side until then
+        — module-doc limitation)."""
+        with self._repair_lock:
+            self._repair_q[(sid, oid)] = blob
+
+    def repair_replicas(self) -> int:
+        """Re-put queued failed replica writes to shards that answer
+        again.  Entries whose shard no longer owns the key (the ring
+        moved) are dropped — the rebalance re-replicated them.  Returns
+        how many copies were repaired; also runs automatically from
+        :meth:`_mark_ok` when a shard with queued repairs recovers."""
+        with self._repair_lock:
+            entries = list(self._repair_q.items())
+        repaired = 0
+        for (sid, oid), blob in entries:
+            if sid not in self._owners(oid):
+                with self._repair_lock:
+                    self._repair_q.pop((sid, oid), None)
+                continue
+            if not self._health.usable(sid):
+                continue
+            try:
+                self._client(sid).put(oid, blob)
+                self._health.mark_ok(sid)   # direct: no recursive hook
+            except _CONN_ERRORS:
+                self._suspect(sid)
+                continue
+            with self._repair_lock:
+                self._repair_q.pop((sid, oid), None)
+            repaired += 1
+        self.n_repaired += repaired
+        return repaired
+
+    def replay_hints(self, owner: str | None = None) -> int:
+        """Ask every landing shard holding hint records for ``owner``
+        (or for any owner when None) to replay them — bytes + refcount +
+        remaining lease land on the recovered shard.  Returns the number
+        of keys replayed; runs automatically from :meth:`_mark_ok`."""
+        with self._hint_lock:
+            if owner is not None:
+                pending = {owner: set(self._hints_out.get(owner, ()))}
+            else:
+                pending = {o: set(ls) for o, ls in self._hints_out.items()}
+        replayed = 0
+        for own, landings in pending.items():
+            if not landings or not self._health.usable(own):
+                continue
+            for sid in sorted(landings):
+                try:
+                    replayed += self._client(sid).hint_replay(own)
+                    self._health.mark_ok(sid)   # direct: no recursion
+                except _CONN_ERRORS:
+                    self._suspect(sid)
+                    continue
+                with self._hint_lock:
+                    left = self._hints_out.get(own)
+                    if left is not None:
+                        left.discard(sid)
+                        if not left:
+                            self._hints_out.pop(own, None)
+        self.n_hints_replayed += replayed
+        return replayed
+
+    # -- chain puts: one upload, server-side forwarding ----------------------
+    def _chain_route(self, owners: list[str]
+                     ) -> tuple[str | None, tuple[str, ...], str | None]:
+        """Pick the chain head (first usable owner), its forward list,
+        and the hinted-handoff target (the ring primary when it is
+        suspect — the head stores a hint instead of forwarding to it)."""
+        head = next((s for s in owners if self._health.usable(s)), None)
+        if head is None:
+            return None, (), None
+        hint = owners[0] if head != owners[0] else None
+        rest = tuple(s for s in owners if s not in (head, hint))
+        return head, rest, hint
+
+    def _put_chain(self, oid: str, blob, owners: list[str]) -> bool:
+        """One chain-replicated put.  Returns False when no head is
+        usable or the head itself fails (the caller falls back to the
+        legacy client-fanout path); successor failures queue repairs
+        rather than failing the put."""
+        head, rest, hint = self._chain_route(owners)
+        if head is None:
+            return False
+        try:
+            resp = self._client(head).put_chain(oid, blob, chain=rest,
+                                                hint_for=hint)
+        except _CONN_ERRORS:
+            self._suspect(head)
+            return False
+        self._mark_ok(head)
+        if hint:
+            self._note_hint(hint, head)
+        for addr in resp.get("chain_errors") or ():
+            sid = _canon(addr)
+            self.n_repl_errors += 1
+            self._suspect(sid)
+            self._enqueue_repair(sid, oid, blob)
+        return True
+
+    def _chain_plan(self, oids: list[str], ring: HashRing
+                    ) -> tuple[dict, list[int]]:
+        """Group batch keys by (head, forwards, hint) — one ``mput2`` +
+        chain per distinct route.  Keys with no usable head land in the
+        returned ``slow`` list for the legacy per-key path."""
+        groups: dict[tuple, list[int]] = {}
+        slow: list[int] = []
+        for i, oid in enumerate(oids):
+            owners = self._owners(oid, ring)
+            head, rest, hint = self._chain_route(owners)
+            if head is None:
+                slow.append(i)
+                continue
+            groups.setdefault((head, rest, hint), []).append(i)
+        return groups, slow
+
+    def _chain_submit(self, groups: dict, oids, blobs,
+                      slow: list[int]) -> list:
+        subs = []
+        for (head, rest, hint), idxs in groups.items():
+            try:
+                subs.append(((head, rest, hint), idxs,
+                             self._client(head).mput_chain_async(
+                                 [oids[i] for i in idxs],
+                                 [blobs[i] for i in idxs],
+                                 chain=rest, hint_for=hint)))
+            except _CONN_ERRORS:
+                self._suspect(head)
+                slow.extend(idxs)
+        return subs
+
+    def _chain_collect(self, subs: list, oids, blobs,
+                       slow: list[int]) -> None:
+        """Await each chain batch: a successful head commits its whole
+        group (unreachable successors queue repairs); a failed head
+        drops its keys to ``slow`` for the legacy path."""
+        for (head, rest, hint), idxs, f in subs:
+            resp: dict = {}
+            try:
+                resp = f.result(self.op_timeout) or {}
+            except _CONN_ERRORS:
+                pass
+            if not resp.get("ok"):
+                self._suspect(head)
+                slow.extend(idxs)
+                continue
+            self._mark_ok(head)
+            if hint:
+                self._note_hint(hint, head)
+            for addr in resp.get("chain_errors") or ():
+                sid = _canon(addr)
+                self.n_repl_errors += 1
+                self._suspect(sid)
+                for i in idxs:
+                    self._enqueue_repair(sid, oids[i], blobs[i])
+
     # -- puts: replicate to all owners, pipelined ----------------------------
     def put(self, blob) -> Key:
         oid = uuid.uuid4().hex
@@ -305,6 +518,9 @@ class ShardedConnector(BaseConnector):
     def _put_object(self, oid: str, blob) -> None:
         ring = self._journal_add((oid,))
         owners = self._owners(oid, ring)
+        if (self.chain and len(owners) > 1
+                and self._put_chain(oid, blob, owners)):
+            return
         targets = [s for s in owners if self._health.usable(s)] or owners
         futs: list[tuple[str, Future]] = []
         for sid in targets:            # all submits before any wait
@@ -320,7 +536,7 @@ class ShardedConnector(BaseConnector):
             for sid, f in futs:
                 try:
                     f.result(self.op_timeout)
-                    self._health.mark_ok(sid)
+                    self._mark_ok(sid)
                     acks += 1
                 except _CONN_ERRORS:
                     self._suspect(sid)
@@ -335,7 +551,7 @@ class ShardedConnector(BaseConnector):
                     continue
                 try:
                     f.result(self.op_timeout)
-                    self._health.mark_ok(sid)
+                    self._mark_ok(sid)
                     acked = True
                 except _CONN_ERRORS:
                     self._suspect(sid)
@@ -347,8 +563,15 @@ class ShardedConnector(BaseConnector):
             return []
         oids = [uuid.uuid4().hex for _ in blobs]
         ring = self._journal_add(oids)
-        # one mput2 per shard covering every key it owns (primary or
-        # replica); all batches are in flight before any ack is awaited
+        if self.chain and self.replication > 1 and len(ring.shards) > 1:
+            groups, slow = self._chain_plan(oids, ring)
+            subs = self._chain_submit(groups, oids, blobs, slow)
+            self._chain_collect(subs, oids, blobs, slow)
+            for i in slow:                 # no usable head: legacy fanout
+                self._put_object(oids[i], blobs[i])
+            return [("fkv", oid) for oid in oids]
+        # legacy: one mput2 per shard covering every key it owns (primary
+        # or replica); all batches are in flight before any ack is awaited
         shard_items: dict[str, list[int]] = {}
         targets_per_key: list[list[str]] = []
         for i, oid in enumerate(oids):
@@ -369,7 +592,7 @@ class ShardedConnector(BaseConnector):
         for sid, f in futs.items():
             try:
                 f.result(self.op_timeout)
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
                 acked.add(sid)
             except _CONN_ERRORS:
                 self._suspect(sid)
@@ -394,7 +617,7 @@ class ShardedConnector(BaseConnector):
                 self._suspect(sid)
                 failed_over = True
                 continue
-            self._health.mark_ok(sid)
+            self._mark_ok(sid)
             if data is not None:
                 if failed_over or sid != owners[0]:
                     self.n_failovers += 1
@@ -437,7 +660,7 @@ class ShardedConnector(BaseConnector):
                 self._suspect(sid)
                 slow.extend(idxs)
                 continue
-            self._health.mark_ok(sid)
+            self._mark_ok(sid)
             for i, b in zip(idxs, blobs):
                 if b is None:
                     slow.append(i)
@@ -452,9 +675,9 @@ class ShardedConnector(BaseConnector):
         for sid in self._ordered(self._owners(oid)):
             try:
                 if self._client(sid).exists(oid):
-                    self._health.mark_ok(sid)
+                    self._mark_ok(sid)
                     return True
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
             except _CONN_ERRORS:
                 self._suspect(sid)
         return False
@@ -470,7 +693,7 @@ class ShardedConnector(BaseConnector):
         for sid in self._owners(oid):
             try:
                 results.append(op(self._client(sid), oid))
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
             except _CONN_ERRORS as e:
                 self._suspect(sid)
                 errors.append((sid, e))
@@ -506,7 +729,7 @@ class ShardedConnector(BaseConnector):
         for sid in self._ordered(self._owners(oid)):
             try:
                 n = self._client(sid).refcount(oid)
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
                 return n
             except _CONN_ERRORS:
                 self._suspect(sid)
@@ -530,7 +753,7 @@ class ShardedConnector(BaseConnector):
             try:
                 res = getattr(self._client(sid), method)(
                     [oids[i] for i in idxs], *args)
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
             except _CONN_ERRORS:
                 self._suspect(sid)
                 continue
@@ -580,7 +803,7 @@ class ShardedConnector(BaseConnector):
                 break
             try:
                 data = self._client(sid).wait(oid, remaining)
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
                 return data
             except TimeoutError as e:
                 last = e
@@ -594,23 +817,32 @@ class ShardedConnector(BaseConnector):
 
     # -- streams: one home shard per topic, failover with re-subscribe -------
     def _topic_owners(self, topic: str) -> list[str]:
-        return self._owners(f"@t:{topic}")
+        # a dead-letter topic co-homes with its parent so poison events
+        # never cross shards and rebalance moves them together
+        base = topic[:-4] if topic.endswith(".dlq") else topic
+        return self._owners(f"@t:{base}")
 
     def _ensure_stream_home(self, topic: str, sid: str,
                             client: KVClient) -> None:
         """First contact of ``topic`` on shard ``sid`` (initial bind or a
-        post-failover re-home): re-install its backpressure limit and
-        re-subscribe its groups with ``start="new"`` — events buffered
-        only on the dead shard are lost (at-most-once across failover,
-        module doc)."""
+        post-failover re-home): install the topic's replica chain (its
+        other ring owners — appends and cursor mutations replicate
+        there), re-install its limits, and re-subscribe its groups.
+        ``stream_sub`` is idempotent, so a group restored from a
+        replicated snapshot keeps its cursor — the at-least-once
+        resume."""
         with self._streams_lock:
             if self._stream_home.get(topic) == sid:
                 return
             limit = self._stream_limits.get(topic)
+            maxdel = self._stream_maxdel.get(topic)
             subs = [(g, spec) for (t, g), spec in self._stream_subs.items()
                     if t == topic]
-        if limit:
-            client.stream_limit(topic, limit)
+        if self.chain and self.replication > 1:
+            peers = [s for s in self._topic_owners(topic) if s != sid]
+            client.stream_chain(topic, peers[:self.replication - 1])
+        if limit or maxdel:
+            client.stream_limit(topic, limit, max_deliveries=maxdel)
         for group, spec in subs:
             client.stream_sub(topic, group, "new", spec.get("filter"))
         with self._streams_lock:
@@ -627,7 +859,7 @@ class ShardedConnector(BaseConnector):
             try:
                 self._ensure_stream_home(topic, sid, client)
                 out = fn(client)
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
                 return out
             except TimeoutError:
                 raise
@@ -701,18 +933,29 @@ class ShardedConnector(BaseConnector):
             topic, lambda c: c.stream_ack(topic, group, seqs))
 
     def stream_requeue(self, topic: str, group: str, seqs,
+                       reason: str | None = None,
                        location: str | None = None) -> int:
         return self._stream_call(
-            topic, lambda c: c.stream_requeue(topic, group, seqs))
+            topic,
+            lambda c: c.stream_requeue(topic, group, seqs, reason=reason))
 
     def stream_limit(self, topic: str, limit: int | None,
+                     max_deliveries: int | None = None,
                      location: str | None = None) -> None:
         with self._streams_lock:
             if limit:
                 self._stream_limits[topic] = int(limit)
             else:
                 self._stream_limits.pop(topic, None)
-        self._stream_call(topic, lambda c: c.stream_limit(topic, limit))
+            if max_deliveries is not None:
+                if max_deliveries:
+                    self._stream_maxdel[topic] = int(max_deliveries)
+                else:
+                    self._stream_maxdel.pop(topic, None)
+        self._stream_call(
+            topic,
+            lambda c: c.stream_limit(topic, limit,
+                                     max_deliveries=max_deliveries))
 
     def stream_stat(self, topic: str,
                     location: str | None = None) -> dict:
@@ -766,7 +1009,7 @@ class ShardedConnector(BaseConnector):
         for sid in sources:
             try:
                 ks = self._client(sid).keyspace()
-                self._health.mark_ok(sid)
+                self._mark_ok(sid)
             except _CONN_ERRORS:
                 self._suspect(sid)
                 continue
@@ -788,6 +1031,9 @@ class ShardedConnector(BaseConnector):
                     for oid in delta}
                 self._copy_missing(new_ring, d_holders, {}, {})
             self._ring = new_ring
+        # stream state moves separately: `keyspace` excludes stream items,
+        # so topics (events + cursors + DLQ siblings) travel by snapshot
+        self._migrate_streams(old_ring, new_ring, exclude)
         # phase 3: prune slot ranges that moved away (only on shards that
         # remain members; a graceful leaver is pruned empty here too)
         for sid in reachable:
@@ -800,6 +1046,69 @@ class ShardedConnector(BaseConnector):
                 self._client(sid).mevict(owned)
             except _CONN_ERRORS:
                 self._suspect(sid)
+
+    def _migrate_streams(self, old_ring: HashRing, new_ring: HashRing,
+                         exclude: set[str] = frozenset()) -> None:
+        """Move every client-known topic (plus its ``.dlq`` sibling) whose
+        owner set changed: snapshot broker state off a surviving old
+        owner, copy the retained payload keys, restore on the new owners,
+        drop from shards leaving the owner set.  Group cursors, pending
+        sets, delivery counts, and DLQ contents all ride the snapshot."""
+        with self._streams_lock:
+            topics = (set(self._stream_home) | set(self._stream_limits)
+                      | set(self._stream_maxdel)
+                      | {t for t, _ in self._stream_subs})
+        topics |= {f"{t}.dlq" for t in list(topics)
+                   if not t.endswith(".dlq")}
+        for topic in sorted(topics):
+            base = topic[:-4] if topic.endswith(".dlq") else topic
+            old_owners = [s for s in old_ring.owners(f"@t:{base}",
+                                                     self.replication)
+                          if s not in exclude]
+            new_owners = new_ring.owners(f"@t:{base}", self.replication)
+            if set(old_owners) == set(new_owners):
+                continue
+            snap, src = None, None
+            for sid in old_owners:          # freshest copy lives up front
+                try:
+                    snap = self._client(sid).stream_snap(topic)
+                    self._mark_ok(sid)
+                    src = sid
+                    break
+                except _CONN_ERRORS:
+                    self._suspect(sid)
+            if src is None or not (snap.get("count") or snap.get("groups")):
+                continue                    # nothing to move
+            keys = [stream_item_key(topic, int(s))
+                    for s in snap.get("owners") or ()]
+            pairs: list[tuple[str, Any]] = []
+            if keys:
+                try:
+                    blobs = self._client(src).mget(keys)
+                    pairs = [(k, b) for k, b in zip(keys, blobs)
+                             if b is not None]
+                except _CONN_ERRORS:
+                    self._suspect(src)
+                    continue
+            for dst in new_owners:
+                try:
+                    c = self._client(dst)
+                    if pairs:
+                        c.mput([k for k, _ in pairs],
+                               [b for _, b in pairs])
+                    c.stream_restore(topic, snap)
+                    self._mark_ok(dst)
+                except _CONN_ERRORS:
+                    self._suspect(dst)
+            for sid in old_owners:
+                if sid in new_owners:
+                    continue
+                try:
+                    self._client(sid).stream_drop(topic)
+                except _CONN_ERRORS:
+                    self._suspect(sid)
+            with self._streams_lock:
+                self._stream_home.pop(topic, None)
 
     def _copy_missing(self, new_ring: HashRing,
                       holders: dict[str, list[str]], refs: dict[str, int],
@@ -877,18 +1186,29 @@ class ShardedConnector(BaseConnector):
                 per_shard[sid] = c.stats()
             except _CONN_ERRORS:
                 per_shard[sid] = None
+        with self._repair_lock:
+            repair_pending = len(self._repair_q)
+        with self._hint_lock:
+            hints_pending = sum(len(v) for v in self._hints_out.values())
         return {
             "fabric": {
                 "n_shards": len(self._ring.shards),
                 "ring_version": self._ring.version,
                 "replication": self.replication,
                 "quorum": self.quorum,
+                "chain": self.chain,
                 "n_failovers": self.n_failovers,
                 "n_repl_errors": self.n_repl_errors,
+                "n_repaired": self.n_repaired,
+                "n_repairs_pending": repair_pending,
+                "n_hints_replayed": self.n_hints_replayed,
+                "n_hint_shards_pending": hints_pending,
                 "suspect": self._health.suspects(),
                 "n_reconnects": sum(c.n_reconnects
                                     for c in clients.values()),
                 "n_retries": sum(c.n_retries for c in clients.values()),
+                "client_tx_bytes": sum(c.n_tx_bytes
+                                       for c in clients.values()),
             },
             "shards": per_shard,
         }
@@ -896,7 +1216,8 @@ class ShardedConnector(BaseConnector):
     def config(self) -> dict[str, Any]:
         return {"shards": list(self._ring.shards),
                 "replication": self.replication, "quorum": self.quorum,
-                "op_timeout": self.op_timeout, "vnodes": self.vnodes}
+                "op_timeout": self.op_timeout, "vnodes": self.vnodes,
+                "chain": self.chain}
 
     def close(self) -> None:
         self.flush_replicas(timeout=5.0)
@@ -950,6 +1271,11 @@ class FabricPipeline:
 
     # -- submits --------------------------------------------------------------
     def put_batch(self, blobs: Sequence) -> list[Key]:
+        # Deliberately the legacy client-fanout path even when the fabric
+        # defaults to chain replication: pipeline correctness rests on
+        # per-connection FIFO (a later get/evict on the same shard
+        # connection observes the put), and a server-side forward hop
+        # would land on the replica AFTER a directly-submitted evict.
         fab = self.fab
         oids = [uuid.uuid4().hex for _ in blobs]
         ring = fab._journal_add(oids)
@@ -1022,7 +1348,7 @@ class FabricPipeline:
             for sid, f in futs.items():
                 try:
                     f.result(fab.op_timeout)
-                    fab._health.mark_ok(sid)
+                    fab._mark_ok(sid)
                     acked.add(sid)
                 except _CONN_ERRORS:
                     fab._suspect(sid)
@@ -1045,7 +1371,7 @@ class FabricPipeline:
                     fab._suspect(sid)
                     slow.extend(idxs)
                     continue
-                fab._health.mark_ok(sid)
+                fab._mark_ok(sid)
                 for i, b in zip(idxs, blobs):
                     if b is None:
                         slow.append(i)
@@ -1058,7 +1384,7 @@ class FabricPipeline:
         for sid, f in self._misc_waits:
             try:
                 f.result(fab.op_timeout)
-                fab._health.mark_ok(sid)
+                fab._mark_ok(sid)
             except _CONN_ERRORS:
                 fab._suspect(sid)
         self._put_waits.clear()

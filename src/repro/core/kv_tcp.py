@@ -158,6 +158,51 @@ the arXiv:2407.01764 "proxy-on-publish" event-stream pattern):
 * ``s_limit``: ``{"op": "s_limit", "topic": t, "limit": n}`` — bound the
   per-topic buffer of unacked events (``limit`` falsy clears the bound).
 
+**Durability ops** (server-side replication — the sharded fabric's
+durable-by-default plane):
+
+* ``put2``/``mput2`` extension — **chain replication**: ``"chain":
+  [addr, ...]`` makes the receiving shard (the key's ring primary)
+  forward the stored bytes to each listed successor over a shard-to-shard
+  connection, awaiting a per-hop ack, before responding.  The client
+  uploads ONE copy instead of R; the response carries ``"chain_acks"``
+  and, for successors that could not be reached, ``"chain_errors":
+  [addr, ...]`` so the caller can queue a repair.  Forwarded copies are
+  plain ``mput2`` (no ``chain`` field), so a forward never re-forwards.
+  ``"refs"``/``"ttl"`` on a ``put2`` install refcount/lease state with
+  the bytes (hinted-handoff replay ships lifecycle state this way).
+* **Hinted handoff**: ``"hint_for": addr`` on a put records, on the shard
+  that accepted it, that ``addr`` (the suspect intended owner) is owed
+  the key.  ``hints`` dumps the pending hint map; ``hint_replay``
+  ``{"op": "hint_replay", "owner": addr}`` re-puts every hinted key —
+  bytes + current refcount + remaining lease — to the recovered owner
+  and drops the hints (failed replays are kept for a later attempt).
+* ``s_chain``: ``{"op": "s_chain", "topic": t, "chain": [addr, ...]}`` —
+  install the topic's replica chain.  Every subsequent group-state
+  mutation (subscribe, take, ack, requeue, limit, close) pushes a
+  cursor snapshot to the chain (coalesced, asynchronous), and every
+  ``s_append`` forwards the payload AND pushes the snapshot
+  *synchronously* before acking — a committed append is on every chain
+  member, so a failover loses no committed events (at-least-once: the
+  crash window re-delivers, never skips).
+* ``s_snap``: ``{"op": "s_snap", "topic": t}`` — the topic's full broker
+  state (cursors, group queues/unacked sets, filters, metadata, owner
+  refcounts, limits, delivery counts) as one msgpack map.
+* ``s_restore``: ``{"op": "s_restore", "topic": t, "state": snap}`` —
+  install a snapshot wholesale, reconciling payload-key refcounts with
+  the replicated owner counts and pruning payloads no group retains.
+* ``s_drop``: ``{"op": "s_drop", "topic": t}`` — remove the topic's
+  broker state and evict its payload keys (rebalance uses snap → copy →
+  restore → drop to move a topic's home shard).
+
+**Dead-letter queues**: ``s_limit`` accepts ``"max_deliveries": n``.
+The table counts deliveries per (group, seq); an event requeued after its
+n-th delivery is not redelivered — it moves to the ``<topic>.dlq`` topic
+with the original metadata plus ``{"dlq": {"topic", "group", "seq",
+"deliveries", "reason"}}``, and the group's claim on the original payload
+is released.  DLQ topics are ordinary topics: subscribe a group (e.g. a
+``payload=False`` tap) to observe failures.
+
 Responses: ``{"ok": bool, "seq": int, "data": ..., "error": str}`` plus the
 ``raw``/``raws`` out-of-band markers above.
 
@@ -204,7 +249,6 @@ import collections
 import contextlib
 import itertools
 import os
-import random
 import socket
 import struct
 import subprocess
@@ -239,6 +283,11 @@ IDEMPOTENT_OPS = frozenset({
     # holds unacked, s_limit sets an absolute bound.  NOT s_next2/s_fetch:
     # delivery moves events out of the group queue.
     "s_sub", "s_unsub", "s_ack", "s_requeue", "s_limit",
+    # durability ops: s_snap is a read, s_restore installs an absolute
+    # snapshot (restoring twice == once), s_chain sets an absolute chain,
+    # s_drop twice == once, hints is a read.  NOT hint_replay: a replay
+    # re-applies incref deltas on the owner.
+    "s_snap", "s_restore", "s_chain", "s_drop", "hints",
 })
 
 
@@ -513,6 +562,13 @@ def stream_item_key(topic: str, seq: int) -> str:
     return f"@s:{topic}:{seq}"
 
 
+def dlq_topic(topic: str) -> str:
+    """Dead-letter topic of ``topic``.  A DLQ is an ordinary topic (the
+    fabric homes it on its parent topic's shard); events land here with a
+    ``"dlq"`` metadata record once redelivered past ``max_deliveries``."""
+    return f"{topic}.dlq"
+
+
 class WaiterTable:
     """key -> parked asyncio futures.  ``wake(key)`` (called wherever a put
     lands) releases every waiter; each re-checks the data map, so a racing
@@ -585,6 +641,10 @@ class StreamTable:
         self.owners: dict[str, dict[int, int]] = {}   # seq -> group refs
         self.meta: dict[str, dict[int, dict]] = {}    # seq -> event meta
         self.limits: dict[str, int] = {}              # backpressure bound
+        # dead-letter bookkeeping: delivery counts per (group, seq) and the
+        # per-topic redelivery bound past which an event is dead-lettered
+        self.deliveries: dict[str, dict[tuple[str, int], int]] = {}
+        self.max_deliveries: dict[str, int] = {}
         self._gwaiters: dict[tuple[str, str], list[asyncio.Future]] = {}
         self._pwaiters: dict[str, list[asyncio.Future]] = {}
 
@@ -673,6 +733,10 @@ class StreamTable:
             return []
         released = [seq for seq in (*g["queue"], *g["unacked"])
                     if self._drop_owner(topic, seq)]
+        d = self.deliveries.get(topic)
+        if d:
+            for k in [k for k in d if k[0] == group]:
+                del d[k]
         if released:
             self._wake_producers(topic)
         return released
@@ -726,6 +790,8 @@ class StreamTable:
             return None
         seq = g["queue"].popleft()
         g["unacked"].add(seq)
+        d = self.deliveries.setdefault(topic, {})
+        d[(group, seq)] = d.get((group, seq), 0) + 1
         return seq
 
     async def wait_take(self, topic: str, group: str, timeout: float):
@@ -773,33 +839,62 @@ class StreamTable:
                 continue
             g["unacked"].discard(seq)
             self._drop_owner(topic, seq)
+            self.deliveries.get(topic, {}).pop((group, seq), None)
             done.append(seq)
         if done:
             self._wake_producers(topic)   # acks free backpressure credits
         return done
 
-    def requeue(self, topic: str, group: str, seqs) -> int:
+    def requeue(self, topic: str, group: str, seqs) -> tuple[int, list[int]]:
         """Return delivered-but-unprocessed events to the group's queue
-        (merged in sequence order, ahead of later events); returns how
-        many were handed back.  No reference changes — the events stay
-        buffered for redelivery."""
+        (merged in sequence order, ahead of later events); returns
+        ``(n_requeued, dead_seqs)``.  An event already delivered
+        ``max_deliveries`` times is NOT requeued — it lands in
+        ``dead_seqs`` and the caller dead-letters it (see
+        :meth:`dead_letter`).  No reference changes for requeued events —
+        they stay buffered for redelivery."""
         g = self.groups.get(topic, {}).get(group)
         if g is None:
-            return 0
+            return 0, []
         back = {int(s) for s in seqs} & g["unacked"]
         if not back:
-            return 0
-        g["unacked"] -= back
-        g["queue"] = collections.deque(sorted(back | set(g["queue"])))
-        self._wake_group(topic, group)
-        return len(back)
+            return 0, []
+        limit = self.max_deliveries.get(topic)
+        d = self.deliveries.get(topic, {})
+        dead = ([s for s in back if d.get((group, s), 0) >= limit]
+                if limit else [])
+        back -= set(dead)
+        g["unacked"] -= back | set(dead)
+        if back:
+            g["queue"] = collections.deque(sorted(back | set(g["queue"])))
+            self._wake_group(topic, group)
+        return len(back), sorted(dead)
 
-    def set_limit(self, topic: str, limit) -> None:
+    def dead_letter(self, topic: str, group: str, seq: int) -> dict:
+        """Drop the group's claim on a poison ``seq``: forget its delivery
+        count and release the group's owner reference.  Returns ``{"meta",
+        "deliveries", "released"}`` — the caller moves the payload plus
+        this metadata to the ``<topic>.dlq`` topic, and decrefs the
+        original payload key when ``released`` is True (exactly like an
+        ack would)."""
+        meta = dict(self.meta.get(topic, {}).get(seq) or {})
+        n = self.deliveries.get(topic, {}).pop((group, seq), 0)
+        released = self._drop_owner(topic, seq)
+        if released:
+            self._wake_producers(topic)   # dead-letters free credits too
+        return {"meta": meta, "deliveries": n, "released": released}
+
+    def set_limit(self, topic: str, limit, max_deliveries=None) -> None:
         if limit:
             self.limits[topic] = int(limit)
         else:
             self.limits.pop(topic, None)
             self._wake_producers(topic)
+        if max_deliveries is not None:
+            if max_deliveries:
+                self.max_deliveries[topic] = int(max_deliveries)
+            else:
+                self.max_deliveries.pop(topic, None)
 
     def buffered(self, topic: str) -> int:
         """Unacked (group-referenced) events buffered on the topic — the
@@ -847,7 +942,81 @@ class StreamTable:
             st["buffered"] = self.buffered(topic)
             if topic in self.limits:
                 st["limit"] = self.limits[topic]
+            if topic in self.max_deliveries:
+                st["max_deliveries"] = self.max_deliveries[topic]
         return st
+
+    # -- replication: cursor snapshot/restore --------------------------------
+    def snapshot(self, topic: str) -> dict:
+        """One topic's full broker state as a msgpack-safe map — cursor
+        (count/closed), group queues + unacked sets + filters, event
+        metadata, owner refcounts, limits, and delivery counts.  Payload
+        bytes travel separately (chain-forwarded puts of the derived item
+        keys)."""
+        st = self.state(topic)
+        return {
+            "count": st["count"], "closed": st["closed"],
+            "groups": {name: {"queue": list(g["queue"]),
+                              "unacked": sorted(g["unacked"]),
+                              "filter": g["filter"]}
+                       for name, g in self.groups.get(topic, {}).items()},
+            "owners": dict(self.owners.get(topic, {})),
+            "meta": dict(self.meta.get(topic, {})),
+            "limit": self.limits.get(topic),
+            "max_deliveries": self.max_deliveries.get(topic),
+            # (group, seq) tuples can't be msgpack map keys: flat triples
+            "deliveries": [[g, s, n] for (g, s), n
+                           in self.deliveries.get(topic, {}).items()],
+        }
+
+    def restore(self, topic: str, snap: dict) -> None:
+        """Install a replicated :meth:`snapshot` wholesale (the replica
+        side of cursor replication, and the rebalance path that moves a
+        topic's home shard).  Parked consumers are woken so they re-check
+        the restored state."""
+        self.topics[topic] = {"count": int(snap.get("count") or 0),
+                              "closed": bool(snap.get("closed"))}
+        groups: dict[str, dict] = {}
+        for name, g in (snap.get("groups") or {}).items():
+            spec = g.get("filter")
+            fn = None
+            if spec:
+                from repro.stream.filters import compile_filter
+                fn = compile_filter(spec)
+            groups[name] = {
+                "queue": collections.deque(int(s) for s in g.get("queue")
+                                           or ()),
+                "unacked": {int(s) for s in g.get("unacked") or ()},
+                "filter": spec, "fn": fn}
+        if groups or topic in self.groups:
+            self.groups[topic] = groups
+        self.owners[topic] = {int(s): int(n)
+                              for s, n in (snap.get("owners") or {}).items()}
+        self.meta[topic] = {int(s): dict(m)
+                            for s, m in (snap.get("meta") or {}).items()}
+        self.set_limit(topic, snap.get("limit"),
+                       snap.get("max_deliveries") or 0)
+        self.deliveries[topic] = {(g, int(s)): int(n)
+                                  for g, s, n in snap.get("deliveries") or ()}
+        self._wake(topic)
+        for name in groups:
+            self._wake_group(topic, name)
+
+    def drop(self, topic: str) -> None:
+        """Forget the topic entirely (rebalance: the shard no longer homes
+        it).  Waiters are woken so parked consumers re-check instead of
+        hanging on state that will never advance here."""
+        self._wake(topic)
+        for name in self.groups.get(topic, {}):
+            self._wake_group(topic, name)
+        self._wake_producers(topic)
+        self.topics.pop(topic, None)
+        self.groups.pop(topic, None)
+        self.owners.pop(topic, None)
+        self.meta.pop(topic, None)
+        self.limits.pop(topic, None)
+        self.max_deliveries.pop(topic, None)
+        self.deliveries.pop(topic, None)
 
     async def wait_item(self, topic: str, seq: int, timeout: float) -> dict | None:
         """Park until item ``seq`` exists or the stream is closed; returns
@@ -906,12 +1075,15 @@ def stream_append_locally(streams: StreamTable, lifetime: LifetimeTable,
 
 
 def stream_group_op(streams: StreamTable, lifetime: LifetimeTable,
-                    present_fn, req: dict) -> dict:
+                    present_fn, req: dict, dlq_fn=None) -> dict:
     """The synchronous group ops (``s_sub``/``s_unsub``/``s_ack``/
     ``s_requeue``/``s_limit``), shared by the KV server and the
     PS-endpoint.  ``present_fn(key)`` reports data-map membership (used to
     skip already-consumed retained items on a ``start="begin"``
-    subscribe)."""
+    subscribe).  ``dlq_fn(topic, group, seq, reason)`` dead-letters a
+    poison event (moves payload + failure metadata to ``<topic>.dlq`` and
+    releases the group's claim); without one, dead events are dropped
+    outright — their claim still released so they cannot leak."""
     op, topic = req["op"], req["topic"]
     if op == "s_sub":
         group = req["group"]
@@ -936,10 +1108,19 @@ def stream_group_op(streams: StreamTable, lifetime: LifetimeTable,
             lifetime.decref(stream_item_key(topic, seq))
         return {"ok": True, "data": len(acked)}
     if op == "s_requeue":
-        n = streams.requeue(topic, req["group"], req.get("seqs") or ())
-        return {"ok": True, "data": n}
+        group = req["group"]
+        n, dead = streams.requeue(topic, group, req.get("seqs") or ())
+        for seq in dead:
+            if dlq_fn is not None:
+                dlq_fn(topic, group, seq, req.get("reason"))
+            else:
+                info = streams.dead_letter(topic, group, seq)
+                if info["released"]:
+                    lifetime.decref(stream_item_key(topic, seq))
+        return {"ok": True, "data": n, "dead": dead}
     if op == "s_limit":
-        streams.set_limit(topic, req.get("limit"))
+        streams.set_limit(topic, req.get("limit"),
+                          req.get("max_deliveries"))
         return {"ok": True}
     return {"ok": False, "error": f"unknown stream op {op!r}"}
 
@@ -950,7 +1131,8 @@ def stream_group_op(streams: StreamTable, lifetime: LifetimeTable,
 class KVServer:
     SWEEP_INTERVAL = LifetimeTable.SWEEP_INTERVAL
 
-    def __init__(self, persist_dir: str | None = None) -> None:
+    def __init__(self, persist_dir: str | None = None,
+                 peer_timeout: float | None = None) -> None:
         # values are bytes-like: put2/s_append land the received bytearray
         # itself, mput2 lands sliced views of the one batch buffer
         self._data: dict[str, Any] = {}
@@ -965,6 +1147,27 @@ class KVServer:
         # payload-path work, both read them from ``stats``)
         self._n_payload_serves = 0
         self._payload_bytes = 0
+        # shard-to-shard plane: lazily-dialed peer clients for chain
+        # replication forwards, hinted-handoff replays, and cursor pushes.
+        # Peer calls run on the loop's default executor (the loop itself
+        # never blocks on a peer socket); the hop timeout is deliberately
+        # shorter than client timeouts so a dead successor fails the hop —
+        # reported in the put response — instead of stalling the put.
+        if peer_timeout is None:
+            peer_timeout = float(os.environ.get("REPRO_PEER_TIMEOUT", "5.0"))
+        self.peer_timeout = peer_timeout
+        self._peers: dict[str, KVClient] = {}
+        self._peers_lock = threading.Lock()
+        self._hints: dict[str, list[str]] = {}    # owner addr -> hinted keys
+        self._stream_chain: dict[str, list[str]] = {}
+        self._push_dirty: set[str] = set()
+        self._n_chain_forwards = 0
+        self._n_chain_errors = 0
+        self._n_hint_stores = 0
+        self._n_hint_replays = 0
+        self._n_cursor_pushes = 0
+        self._n_cursor_push_errors = 0
+        self._n_dead_letters = 0
         self._io_pool: ThreadPoolExecutor | None = None
         if self._persist:
             self._persist.mkdir(parents=True, exist_ok=True)
@@ -1022,6 +1225,148 @@ class KVServer:
         self._n_payload_serves += 1
         self._payload_bytes += len(data)
 
+    # -- shard-to-shard plane: chain replication, hints, cursor pushes ------
+    def _peer(self, addr: str) -> KVClient:
+        """Lazily-dialed client to a peer shard (``host:port`` or
+        ``unix:/path``).  Called from executor threads — the dict is
+        lock-guarded and the blocking connect happens off the loop."""
+        with self._peers_lock:
+            c = self._peers.get(addr)
+            if c is None:
+                if is_uds(addr):
+                    host, port = addr, 0
+                else:
+                    host, _, port_s = addr.rpartition(":")
+                    host, port = host or addr, int(port_s or 0)
+                c = KVClient(host, port, timeout=self.peer_timeout)
+                self._peers[addr] = c
+        return c
+
+    async def _chain_forward(self, items, chain) -> list[str]:
+        """Chain replication: forward stored puts to each ring successor in
+        ``chain`` over a shard-to-shard connection — one ``mput2`` per
+        successor (plain, no ``chain`` field: a forward never re-forwards)
+        — awaiting every hop's ack.  Returns the addrs that failed; the
+        caller reports them so the client can queue repairs."""
+        loop = asyncio.get_running_loop()
+        keys = [k for k, _ in items]
+        blobs = [b for _, b in items]
+
+        def _fwd(addr: str) -> None:
+            self._peer(addr).mput(keys, blobs)
+
+        futs = [(addr, loop.run_in_executor(None, _fwd, addr))
+                for addr in chain]
+        errs: list[str] = []
+        for addr, f in futs:
+            try:
+                await f
+                self._n_chain_forwards += 1
+            except Exception:  # noqa: BLE001 - a dead hop fails, not the put
+                self._n_chain_errors += 1
+                errs.append(addr)
+        return errs
+
+    def _apply_put_state(self, req: dict, key: str | None = None) -> None:
+        """Install the lifecycle/hint state riding on a ``put2``: an
+        initial refcount (``refs``), a lease (``ttl``), and/or a hinted-
+        handoff record (``hint_for`` — the suspect owner this shard is
+        holding the key for)."""
+        key = key if key is not None else req["key"]
+        n = int(req.get("refs") or 0)
+        if n > 0:
+            self.lifetime.incref(key, n)
+        ttl = req.get("ttl")
+        if ttl:
+            self.lifetime.touch(key, ttl)
+        owner = req.get("hint_for")
+        if owner:
+            self._hints.setdefault(owner, []).append(key)
+            self._n_hint_stores += 1
+
+    def _hint_replay_plan(self, owner: str) -> list[tuple]:
+        """Snapshot the hinted keys owed to ``owner`` — (key, bytes,
+        refcount, remaining-lease) tuples — synchronously on the loop, so
+        the executor thread that replays them touches no shared state."""
+        keys = self._hints.pop(owner, [])
+        now = time.monotonic()
+        plan = []
+        for key in dict.fromkeys(keys):       # dedup, keep order
+            data = self._data.get(key)
+            if data is None:
+                continue                      # consumed/reaped: nothing owed
+            lease = self.lifetime.leases.get(key)
+            plan.append((key, data, self.lifetime.refs.get(key, 0),
+                         round(lease - now, 3) if lease and lease > now
+                         else None))
+        return plan
+
+    def _dead_letter(self, topic: str, group: str, seq: int,
+                     reason: str | None = None) -> None:
+        """Move a poison event to ``<topic>.dlq``: append the payload (if
+        still present) under the DLQ topic with the original metadata plus
+        a ``"dlq"`` failure record, then release the group's claim on the
+        original — exactly the reference an ack would drop."""
+        key = stream_item_key(topic, seq)
+        info = self.streams.dead_letter(topic, group, seq)
+        data = self._data.get(key)
+        meta = info["meta"]
+        meta["dlq"] = {"topic": topic, "group": group, "seq": seq,
+                       "deliveries": info["deliveries"],
+                       "reason": reason or "max_deliveries"}
+        stream_append_locally(self.streams, self.lifetime, self._store_mem,
+                              dlq_topic(topic),
+                              data if data is not None else b"", None, meta)
+        self._n_dead_letters += 1
+        if info["released"]:
+            self.lifetime.decref(key)
+
+    def _schedule_push(self, topic: str) -> None:
+        """Coalesced asynchronous cursor push: after a group-state
+        mutation, ship the topic's snapshot to its replica chain.  A crash
+        before the push lands costs duplicate deliveries after failover
+        (at-least-once), never skipped events — committed appends push
+        synchronously in the ``s_append`` handler instead."""
+        if not self._stream_chain.get(topic):
+            return
+        try:
+            loop = asyncio.get_running_loop()
+        except RuntimeError:
+            return     # driven directly (tests): no loop, no replication
+        if topic in self._push_dirty:
+            return     # a scheduled push will snapshot the latest state
+        self._push_dirty.add(topic)
+        loop.create_task(self._push_stream_state(topic))
+
+    async def _push_stream_state(self, topic: str,
+                                 chain: list[str] | None = None) -> list[str]:
+        """Push the topic's current snapshot to every chain member;
+        returns the addrs that failed."""
+        self._push_dirty.discard(topic)
+        chain = chain if chain is not None else self._stream_chain.get(topic)
+        if not chain:
+            return []
+        snap = self.streams.snapshot(topic)
+        loop = asyncio.get_running_loop()
+
+        def _push(addr: str) -> None:
+            resp = self._peer(addr).request(
+                {"op": "s_restore", "topic": topic, "state": snap})
+            if not resp.get("ok"):
+                raise RuntimeError(resp.get("error"))
+
+        futs = [(addr, loop.run_in_executor(None, _push, addr))
+                for addr in chain]
+        errs: list[str] = []
+        for addr, f in futs:
+            try:
+                await f
+                self._n_cursor_pushes += 1
+            except Exception:  # noqa: BLE001 - dead replica, not fatal here
+                self._n_cursor_push_errors += 1
+                errs.append(addr)
+        return errs
+
     def handle(self, req: dict) -> dict:
         self._n_ops += 1
         self._maybe_sweep()
@@ -1050,8 +1395,61 @@ class KVServer:
                     self._count_serve(d)
             return {"ok": True, "data": datas}
         if op in ("s_sub", "s_unsub", "s_ack", "s_requeue", "s_limit"):
-            return stream_group_op(self.streams, self.lifetime,
-                                   self._data.__contains__, req)
+            chain = req.get("chain")
+            if chain is not None:
+                # replica chain riding a group op (the fabric installs it
+                # on first contact): absolute set, empty clears
+                topic = req["topic"]
+                if chain:
+                    self._stream_chain[topic] = [str(a) for a in chain]
+                else:
+                    self._stream_chain.pop(topic, None)
+            resp = stream_group_op(self.streams, self.lifetime,
+                                   self._data.__contains__, req,
+                                   dlq_fn=self._dead_letter)
+            self._schedule_push(req["topic"])
+            return resp
+        if op == "s_chain":
+            topic, chain = req["topic"], req.get("chain") or []
+            if chain:
+                self._stream_chain[topic] = [str(a) for a in chain]
+            else:
+                self._stream_chain.pop(topic, None)
+            self._schedule_push(topic)   # seed the replicas right away
+            return {"ok": True}
+        if op == "s_snap":
+            return {"ok": True, "data": self.streams.snapshot(req["topic"])}
+        if op == "s_restore":
+            topic = req["topic"]
+            self.streams.restore(topic, req.get("state") or {})
+            # reconcile payload-key refcounts with the replicated owner
+            # counts (evict-after-last-ack must keep working after a
+            # failover promotes this replica), and prune payloads no group
+            # retains any more
+            owned = {}
+            for seq, n in self.streams.owners.get(topic, {}).items():
+                key = stream_item_key(topic, seq)
+                if key in self._data:
+                    owned[key] = int(n)
+            prefix = f"@s:{topic}:"
+            for key in [k for k in self._data if k.startswith(prefix)
+                        and k not in owned]:
+                self._evict(key)
+            for key, n in owned.items():
+                self.lifetime.refs[key] = n
+            return {"ok": True}
+        if op == "s_drop":
+            topic = req["topic"]
+            prefix = f"@s:{topic}:"
+            for key in [k for k in self._data if k.startswith(prefix)]:
+                self._evict(key)
+            self.streams.drop(topic)
+            self._stream_chain.pop(topic, None)
+            return {"ok": True}
+        if op == "hints":
+            return {"ok": True,
+                    "data": {owner: list(keys)
+                             for owner, keys in self._hints.items()}}
         if op == "mevict":
             for k in req["keys"]:
                 self._evict(k)
@@ -1108,6 +1506,14 @@ class KVServer:
                 "n_ops": self._n_ops,
                 "n_payload_serves": self._n_payload_serves,
                 "payload_bytes_served": self._payload_bytes,
+                "n_chain_forwards": self._n_chain_forwards,
+                "n_chain_errors": self._n_chain_errors,
+                "n_hints_pending": sum(len(v) for v in self._hints.values()),
+                "n_hint_stores": self._n_hint_stores,
+                "n_hint_replays": self._n_hint_replays,
+                "n_cursor_pushes": self._n_cursor_pushes,
+                "n_cursor_push_errors": self._n_cursor_push_errors,
+                "n_dead_letters": self._n_dead_letters,
                 **self.lifetime.stats(),
                 **self.waiters.stats(),
                 **self.streams.stats(),
@@ -1134,7 +1540,7 @@ class KVServer:
     # ops with await points (parked, timed, or executor-bound) — these can
     # never take the inline fast path
     _ASYNC_OPS = frozenset({"wait", "mwait", "s_next", "s_next2", "sleep",
-                            "shutdown"})
+                            "shutdown", "hint_replay"})
 
     def try_sync(self, req: dict, payload) -> tuple[dict, tuple | None] | None:
         """Handle a request with NO await points synchronously; returns
@@ -1147,6 +1553,10 @@ class KVServer:
             return None
         if op == "s_append" and req.get("topic") in self.streams.limits:
             return None          # backpressure: the append may park
+        if op == "s_append" and req.get("topic") in self._stream_chain:
+            return None          # chained: forwards await peer acks
+        if req.get("chain") and op in ("put2", "mput2", "s_append"):
+            return None          # chain forwarding awaits peer acks
         if self._persist and op in ("put", "mput", "put2", "mput2"):
             return None          # disk write-through rides the executor
         self._maybe_sweep()
@@ -1155,6 +1565,7 @@ class KVServer:
             if op == "put2":
                 self._n_ops += 1
                 self._store_mem(req["key"], payload)
+                self._apply_put_state(req)
                 resp = {"ok": True}
             elif op == "mput2":
                 self._n_ops += 1
@@ -1166,6 +1577,7 @@ class KVServer:
                 off = 0
                 for k, n in zip(req["keys"], req["nbytes"]):
                     self._store_mem(k, mv[off:off + n])
+                    self._apply_put_state(req, key=k)
                     off += n
                 resp = {"ok": True}
             elif op == "get2":
@@ -1218,9 +1630,12 @@ class KVServer:
                     raw = tuple(d for d in datas if d is not None)
                     for d in raw:
                         self._count_serve(d)
+                if seqs:
+                    self._schedule_push(topic)   # cursor moved: replicate
             elif op == "s_close":
                 self._n_ops += 1
                 self.streams.close(req["topic"])
+                self._schedule_push(req["topic"])
                 resp = {"ok": True}
             elif op == "s_stat":
                 self._n_ops += 1
@@ -1254,7 +1669,15 @@ class KVServer:
             if op == "put2":
                 self._n_ops += 1
                 await self._put_async(req["key"], payload)
+                self._apply_put_state(req)
                 resp = {"ok": True}
+                chain = req.get("chain")
+                if chain:
+                    errs = await self._chain_forward(
+                        [(req["key"], payload)], chain)
+                    resp["chain_acks"] = len(chain) - len(errs)
+                    if errs:
+                        resp["chain_errors"] = errs
             elif op == "mput2":
                 self._n_ops += 1
                 mv = memoryview(payload)
@@ -1264,6 +1687,7 @@ class KVServer:
                     blob = mv[off:off + n]
                     off += n
                     self._store_mem(k, blob)
+                    self._apply_put_state(req, key=k)
                     stores.append((k, blob))
                 if self._persist:
                     loop = asyncio.get_running_loop()
@@ -1274,6 +1698,12 @@ class KVServer:
 
                     await loop.run_in_executor(self._io_pool, _persist_all)
                 resp = {"ok": True}
+                chain = req.get("chain")
+                if chain:
+                    errs = await self._chain_forward(stores, chain)
+                    resp["chain_acks"] = len(chain) - len(errs)
+                    if errs:
+                        resp["chain_errors"] = errs
             elif op == "wait":
                 # a get2 that parks until the put lands; completes out of
                 # order behind faster ops, like sleep does
@@ -1363,10 +1793,11 @@ class KVServer:
                             self._count_serve(data)
                     else:                  # metadata-only tap: the payload
                         resp["raw"] = -1   # bytes are never served
+                    self._schedule_push(topic)   # cursor moved: replicate
             elif op == "s_append":
-                # only lands here for topics with a backpressure limit
-                # (try_sync refuses them): park until consumer acks free a
-                # buffer slot, then run the same grouped append
+                # lands here for topics with a backpressure limit (the
+                # append may park) or a replica chain (the forward awaits
+                # peer acks) — try_sync refuses both
                 self._n_ops += 1
                 topic = req["topic"]
                 if await self.streams.wait_capacity(
@@ -1374,10 +1805,67 @@ class KVServer:
                     resp = stream_append_locally(
                         self.streams, self.lifetime, self._store_mem,
                         topic, payload, req.get("ttl"), req.get("meta"))
+                    chain = req.get("chain")
+                    if chain is not None:    # riding the append: install
+                        chain = [str(a) for a in chain]
+                        if chain:
+                            self._stream_chain[topic] = chain
+                        else:
+                            self._stream_chain.pop(topic, None)
+                    else:
+                        chain = self._stream_chain.get(topic)
+                    if resp.get("ok") and chain:
+                        # a committed append is durable: payload + cursor
+                        # snapshot reach every chain member BEFORE the ack,
+                        # so a failover replica re-delivers, never skips
+                        key = stream_item_key(topic, int(resp["data"]))
+                        data = self._data.get(key)
+                        errs: set[str] = set()
+                        if data is not None:
+                            errs.update(await self._chain_forward(
+                                [(key, data)], chain))
+                        errs.update(await self._push_stream_state(
+                            topic, chain=chain))
+                        resp["chain_acks"] = len(chain) - len(errs)
+                        if errs:
+                            resp["chain_errors"] = sorted(errs)
                 else:
                     resp = {"ok": False, "timeout": True,
                             "error": f"stream {topic!r} append timed out "
                                      f"on backpressure (buffer full)"}
+            elif op == "hint_replay":
+                # hinted handoff, replay side: re-put every key this shard
+                # held for the (recovered) owner — bytes + refcount +
+                # remaining lease — over the shard-to-shard connection
+                self._n_ops += 1
+                owner = req["owner"]
+                plan = self._hint_replay_plan(owner)
+                loop = asyncio.get_running_loop()
+
+                def _replay() -> int:
+                    peer = self._peer(owner)
+                    for key, data, refs, ttl in plan:
+                        msg, segs = (
+                            {"op": "put2", "key": key,
+                             "nbytes": len(data)}, [data])
+                        if refs:
+                            msg["refs"] = refs
+                        if ttl:
+                            msg["ttl"] = ttl
+                        r = peer.request(msg, payload=segs, retry=False)
+                        if not r.get("ok"):
+                            raise RuntimeError(r.get("error"))
+                    return len(plan)
+
+                try:
+                    sent = await loop.run_in_executor(None, _replay)
+                    self._n_hint_replays += sent
+                    resp = {"ok": True, "data": {"replayed": sent}}
+                except Exception as e:  # noqa: BLE001 - keep hints, report
+                    self._hints.setdefault(owner, []).extend(
+                        key for key, _, _, _ in plan)
+                    resp = {"ok": False,
+                            "error": f"hint replay to {owner!r} failed: {e}"}
             elif op == "sleep":
                 await asyncio.sleep(float(req.get("s", 0.0)))
                 self._n_ops += 1
@@ -1828,6 +2316,10 @@ class KVClient:
         self._closed = False
         self.n_reconnects = 0   # connections established (first connect = 1)
         self.n_retries = 0      # idempotent ops re-issued after a conn loss
+        self.n_tx_bytes = 0     # bytes written to the socket (frames +
+        # payloads) — the fig16 client-egress accounting: chain replication
+        # should cut a replicated put's client bytes to ~1/R of the
+        # client-uploads-every-copy baseline
 
     # -- connection lifecycle ------------------------------------------------
     def _connect_locked(self) -> _Conn:
@@ -1941,6 +2433,7 @@ class KVClient:
         segments = [_LEN.pack(len(body)) + body]
         if payload is not None:
             segments.extend(payload)
+        self.n_tx_bytes += sum(memoryview(s).nbytes for s in segments)
         try:
             with conn.send_lock:
                 send_segments_sync(conn.sock, segments)
@@ -1983,7 +2476,7 @@ class KVClient:
                     f"members of IDEMPOTENT_OPS.")
         policy = self.retry_policy
         attempts = max(1, policy.max_attempts) if retry else 1
-        delay = policy.base_delay_s
+        start = time.monotonic()
         for attempt in range(attempts):
             fut = None
             try:
@@ -1997,8 +2490,10 @@ class KVClient:
                 if attempt:     # first retry is immediate: the server is
                     # usually back (restart) or a replica will take the op;
                     # back off only once reconnect itself keeps failing
-                    time.sleep(delay * (1.0 + 0.2 * random.random()))
-                    delay = min(delay * 2.0, policy.max_delay_s)
+                    delay = policy.delay_for(attempt - 1)
+                    if policy.expired(start, delay):
+                        raise   # the retry budget is spent: fail now
+                    time.sleep(delay)
             except FuturesTimeout:
                 # unregister the abandoned request so the entry (and its
                 # eventual response buffer) can't pile up on a long-lived
@@ -2031,6 +2526,25 @@ class KVClient:
             # fail before streaming gigabytes the server will reject
             raise ValueError(f"payload too large: {nbytes} > {MAX_FRAME}")
         return {"op": "put2", "key": key, "nbytes": nbytes}, as_segments(data)
+
+    def put_chain(self, key: str, data, chain=(),
+                  hint_for: str | None = None) -> dict:
+        """Replicated put, server-side: upload ONE copy; the receiving
+        shard forwards it to each ``chain`` successor with per-hop acks.
+        ``hint_for`` marks this put as hinted handoff — the receiver
+        records that ``hint_for`` (the suspect intended owner) is owed the
+        key, replayed via :meth:`hint_replay` on recovery.  Returns the
+        raw response (``chain_acks``/``chain_errors``) so the caller can
+        queue repairs for unreachable successors."""
+        msg, payload = self._put_msg(key, data)
+        if chain:
+            msg["chain"] = [str(a) for a in chain]
+        if hint_for:
+            msg["hint_for"] = str(hint_for)
+        resp = self.request(msg, payload=payload, retry=False)
+        if not resp.get("ok"):
+            raise RuntimeError(resp.get("error"))
+        return resp
 
     def get(self, key: str):
         """Return the payload as a writable memoryview, or None."""
@@ -2066,6 +2580,25 @@ class KVClient:
         return _chain(self.submit({"op": "mput2", "keys": list(keys),
                                    "nbytes": sizes}, payload=segments),
                       _check_ok)
+
+    def mput_chain_async(self, keys, blobs, chain=(),
+                         hint_for: str | None = None) -> Future:
+        """Pipelined chain-replicated batch put: ``Future[resp]`` — the
+        raw response map, so the caller inspects ``chain_errors`` (the
+        pipeline queues repairs for failed hops instead of failing the
+        batch)."""
+        from repro.core.serialize import as_segments, frame_nbytes
+
+        sizes = [frame_nbytes(b) for b in blobs]
+        if sum(sizes) > MAX_FRAME:
+            raise ValueError(f"batch too large: {sum(sizes)} > {MAX_FRAME}")
+        segments = [seg for b in blobs for seg in as_segments(b)]
+        msg = {"op": "mput2", "keys": list(keys), "nbytes": sizes}
+        if chain:
+            msg["chain"] = [str(a) for a in chain]
+        if hint_for:
+            msg["hint_for"] = str(hint_for)
+        return self.submit(msg, payload=segments)
 
     def mget(self, keys) -> list:
         """Batch get in ONE exchange; memoryview per present key, else None."""
@@ -2206,17 +2739,63 @@ class KVClient:
                                   "group": group,
                                   "seqs": [int(s) for s in seqs]}) or 0)
 
-    def stream_requeue(self, topic: str, group: str, seqs) -> int:
+    def stream_requeue(self, topic: str, group: str, seqs,
+                       reason: str | None = None) -> int:
         """Hand delivered-but-unprocessed events back to the group (they
-        redeliver in sequence order).  Returns how many were requeued."""
-        return int(self._data_op({"op": "s_requeue", "topic": topic,
-                                  "group": group,
-                                  "seqs": [int(s) for s in seqs]}) or 0)
+        redeliver in sequence order).  Returns how many were requeued.
+        Events already delivered ``max_deliveries`` times are NOT requeued
+        — they move to ``<topic>.dlq`` with failure metadata (``reason``
+        rides into the DLQ record)."""
+        msg = {"op": "s_requeue", "topic": topic, "group": group,
+               "seqs": [int(s) for s in seqs]}
+        if reason:
+            msg["reason"] = reason
+        return int(self._data_op(msg) or 0)
 
-    def stream_limit(self, topic: str, limit: int | None) -> None:
+    def stream_limit(self, topic: str, limit: int | None,
+                     max_deliveries: int | None = None) -> None:
         """Bound the topic's buffer of unacked events (credit-based
-        backpressure); falsy ``limit`` clears the bound."""
-        self._data_op({"op": "s_limit", "topic": topic, "limit": limit})
+        backpressure); falsy ``limit`` clears the bound.
+        ``max_deliveries`` (kept independently; None leaves it untouched,
+        0 clears) bounds redeliveries per (group, event) before the event
+        is dead-lettered to ``<topic>.dlq``."""
+        msg = {"op": "s_limit", "topic": topic, "limit": limit}
+        if max_deliveries is not None:
+            msg["max_deliveries"] = max_deliveries
+        self._data_op(msg)
+
+    # -- durability: replica chains, snapshots, hinted handoff ---------------
+    def stream_chain(self, topic: str, chain) -> None:
+        """Install the topic's replica chain on its home shard: group-state
+        mutations push cursor snapshots there, appends forward payloads.
+        Empty ``chain`` clears it."""
+        self._data_op({"op": "s_chain", "topic": topic,
+                       "chain": [str(a) for a in chain]})
+
+    def stream_snap(self, topic: str) -> dict:
+        """The topic's full replicated broker state (see ``s_snap``)."""
+        return dict(self._data_op({"op": "s_snap", "topic": topic}) or {})
+
+    def stream_restore(self, topic: str, state: dict) -> None:
+        """Install a snapshot wholesale on this shard (see ``s_restore``)."""
+        self._data_op({"op": "s_restore", "topic": topic,
+                       "state": state})
+
+    def stream_drop(self, topic: str) -> None:
+        """Forget the topic and evict its payload keys on this shard (the
+        tail of a rebalance move)."""
+        self._data_op({"op": "s_drop", "topic": topic})
+
+    def hints(self) -> dict:
+        """Pending hinted-handoff records: ``{owner_addr: [keys]}``."""
+        return dict(self._data_op({"op": "hints"}) or {})
+
+    def hint_replay(self, owner: str) -> int:
+        """Replay this shard's hinted keys to the recovered ``owner``
+        (bytes + refcount + remaining lease); returns how many keys were
+        replayed.  Failed replays keep their hints for a later attempt."""
+        out = self._data_op({"op": "hint_replay", "owner": owner})
+        return int((out or {}).get("replayed", 0))
 
     def stream_next(self, topic: str, seq: int, timeout: float = 60.0,
                     consume: bool = True) -> dict:

@@ -257,13 +257,16 @@ class MultiConnector(BaseConnector):
                                                   location)
 
     def stream_requeue(self, topic: str, group: str, seqs,
+                       reason: str | None = None,
                        location: str | None = None) -> int:
-        return self._future_child()[1].stream_requeue(topic, group, seqs,
-                                                      location)
+        return self._future_child()[1].stream_requeue(
+            topic, group, seqs, reason=reason, location=location)
 
     def stream_limit(self, topic: str, limit: int | None,
+                     max_deliveries: int | None = None,
                      location: str | None = None) -> None:
-        self._future_child()[1].stream_limit(topic, limit, location)
+        self._future_child()[1].stream_limit(
+            topic, limit, max_deliveries=max_deliveries, location=location)
 
     def stream_stat(self, topic: str,
                     location: str | None = None) -> dict:

@@ -23,6 +23,21 @@ Two layers:
 * :func:`kill_shard` — SIGKILL a spawned server's whole process group: the
   real thing, used by the failover tests and the fig15 recovery benchmark.
 
+* :class:`Partition` — a **symmetric network partition** over a set of
+  :class:`ChaosProxy` links: blackholes every link both directions (each
+  side of the cut sees the other stall, exactly like a switch dying), and
+  heals on ``heal()`` / context-manager exit.
+
+* :class:`FaultSchedule` — a scripted fault sequence on a background
+  thread: ``(delay_s, action, label)`` steps fire in order (delays are
+  relative to the previous step), recording fired labels.  The factories
+  :func:`crash_during_chain_forward` and
+  :func:`crash_during_cursor_replication` build the durability-PR
+  schedules: arm one, start the put/append storm, and the SIGKILL lands
+  while primary→successor chain forwards (or home→replica cursor pushes)
+  are in flight — the exact windows the at-least-once guarantee must
+  survive.
+
 The proxy listens on loopback TCP and forwards to either a TCP or a
 ``unix:/path`` upstream, so it can front fabric shards regardless of
 transport.  All faults are plain attribute flips — safe to toggle from the
@@ -185,6 +200,108 @@ def kill_shard(handle) -> int:
     if hasattr(handle, "proc"):
         handle.proc.wait(timeout=5)
     return pid
+
+
+class Partition:
+    """Symmetric network partition across ChaosProxy links.
+
+    ``Partition(p1, p2, ...)`` blackholes every given proxy in both
+    directions on ``apply()`` (or ``with`` entry) and restores traffic on
+    ``heal()`` (or exit).  Front every shard with a proxy and ring the
+    fabric through the proxy addresses, and the links you pass here are
+    the cut: shard-to-shard chain forwards crossing it stall exactly like
+    client traffic does.
+
+    Usage::
+
+        with Partition(proxy_a, proxy_b):   # the cut is live
+            ...                             # puts time out / fail over
+        # healed on exit
+    """
+
+    def __init__(self, *links: ChaosProxy) -> None:
+        self.links = list(links)
+        self.active = False
+
+    def apply(self) -> "Partition":
+        for p in self.links:
+            p.blackhole(True)
+        self.active = True
+        return self
+
+    def heal(self) -> None:
+        for p in self.links:
+            p.blackhole(False)
+        self.active = False
+
+    __enter__ = apply
+
+    def __exit__(self, *exc) -> None:
+        self.heal()
+
+
+class FaultSchedule:
+    """Scripted fault sequence: ``steps`` is a list of ``(delay_s,
+    action, label)`` — after ``delay_s`` seconds (relative to the
+    previous step) ``action()`` runs and ``label`` is appended to
+    ``fired``.  ``start()`` arms it on a daemon thread; ``join()`` waits
+    for completion; ``cancel()`` stops unfired steps.  Actions that raise
+    still record their label (the kill may race the process exiting on
+    its own) — the error lands in ``errors``."""
+
+    def __init__(self, steps) -> None:
+        self.steps = list(steps)
+        self.fired: list[str] = []
+        self.errors: list[tuple[str, Exception]] = []
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "FaultSchedule":
+        self._thread = threading.Thread(target=self._run,
+                                        name="chaos-schedule", daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        for delay, action, label in self.steps:
+            if self._stop.wait(float(delay)):
+                return
+            try:
+                action()
+            except Exception as e:  # noqa: BLE001 - record, keep going
+                self.errors.append((label, e))
+            finally:
+                self.fired.append(label)
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def cancel(self) -> None:
+        self._stop.set()
+
+
+def crash_during_chain_forward(victim, delay_s: float = 0.05) -> FaultSchedule:
+    """Schedule a SIGKILL of ``victim`` (a successor shard's ProcHandle)
+    ``delay_s`` after ``start()`` — arm it, then fire a chain-replicated
+    put storm so the kill lands while primary→successor forwards are in
+    flight.  Committed puts (acked to the client) must survive on the
+    primary; unacked ones may fail but must never half-commit."""
+    return FaultSchedule([
+        (delay_s, lambda: kill_shard(victim), "kill-chain-successor"),
+    ]).start()
+
+
+def crash_during_cursor_replication(victim,
+                                    delay_s: float = 0.05) -> FaultSchedule:
+    """Schedule a SIGKILL of ``victim`` (a topic's home-shard ProcHandle)
+    ``delay_s`` after ``start()`` — arm it, then keep appending/consuming
+    so the kill lands between group-state mutations and their replica
+    pushes.  After failover the group must resume from its replicated
+    cursor: duplicates allowed, skipped events are the bug."""
+    return FaultSchedule([
+        (delay_s, lambda: kill_shard(victim), "kill-stream-home"),
+    ]).start()
 
 
 def _close(sock: socket.socket) -> None:

@@ -80,23 +80,56 @@ class HeartbeatMonitor:
 
 @dataclass
 class RetryPolicy:
+    """Jittered exponential backoff, capped per-delay AND in total.
+
+    ``jitter`` spreads synchronized retry storms: each delay is scaled by
+    a uniform factor in ``[1, 1 + jitter]``.  ``deadline_s`` (None = no
+    cap) bounds the *total* time a retry loop may burn, measured on the
+    monotonic clock from its first attempt — a caller on the failover
+    path gives up and reroutes instead of backing off forever.
+    """
+
     max_attempts: int = 3
     base_delay_s: float = 0.2
     max_delay_s: float = 5.0
     retry_on: tuple = (ConnectionError, TimeoutError, OSError)
+    jitter: float = 0.2
+    deadline_s: float | None = None
+
+    def delay_for(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (0-based): exponential from
+        ``base_delay_s``, capped at ``max_delay_s``, jittered."""
+        delay = min(self.base_delay_s * (2.0 ** max(0, attempt)),
+                    self.max_delay_s)
+        return delay * (1.0 + self.jitter * random.random())
+
+    def expired(self, start_monotonic: float,
+                next_delay: float = 0.0) -> bool:
+        """True when sleeping ``next_delay`` more seconds would overrun
+        the total deadline (sleeping past it just delays the inevitable
+        failure — fail now and let the caller reroute)."""
+        if self.deadline_s is None:
+            return False
+        elapsed = time.monotonic() - start_monotonic
+        return elapsed + next_delay >= self.deadline_s
 
 
 def with_retries(fn: Callable[..., Any], policy: RetryPolicy = RetryPolicy()):
+    """Wrap ``fn`` to retry on ``policy.retry_on`` with the policy's
+    jittered exponential backoff, bounded by ``max_attempts`` and (when
+    set) the total ``deadline_s`` budget."""
     def wrapped(*args, **kwargs):
-        delay = policy.base_delay_s
+        start = time.monotonic()
         for attempt in range(policy.max_attempts):
             try:
                 return fn(*args, **kwargs)
             except policy.retry_on:
                 if attempt == policy.max_attempts - 1:
                     raise
-                time.sleep(delay * (1 + 0.2 * random.random()))
-                delay = min(delay * 2, policy.max_delay_s)
+                delay = policy.delay_for(attempt)
+                if policy.expired(start, delay):
+                    raise
+                time.sleep(delay)
     return wrapped
 
 

@@ -13,6 +13,17 @@ In-tree implementations: :class:`repro.stream.kv.KVBroker` (group state
 in the owning KV server / PS-endpoint — works across processes and
 sites) and :class:`repro.stream.local.LocalBroker` (in-process queues,
 no server).  A Redis-shim broker can slot in behind the same ABC.
+
+**Delivery guarantees.**  Within one broker incarnation delivery is
+exactly-once per group (cursor + ack).  Across a failure (a KVBroker
+over the sharded fabric with replication) delivery is **at-least-once**:
+group cursors are replicated with the topic, so committed events are
+never skipped, but events in flight at the crash are redelivered.
+Consumers needing exactly-once must dedup by ``seq`` — an event's
+sequence number is stable across failover (``StreamConsumer`` offers
+``dedup=True`` for this).  Poison events stop recycling after
+``max_deliveries`` (:meth:`Broker.set_limit`): the next
+:meth:`Broker.requeue` moves them to ``<topic>.dlq``.
 """
 from __future__ import annotations
 
@@ -78,15 +89,25 @@ class Broker(abc.ABC):
         is evicted after the last group acks).  Idempotent."""
 
     @abc.abstractmethod
-    def requeue(self, topic: str, group: str, seqs) -> None:
+    def requeue(self, topic: str, group: str, seqs,
+                reason: str | None = None) -> None:
         """Hand delivered-but-unprocessed events back to the group (they
         redeliver in sequence order) — how a consumer returns prefetched
-        events on close instead of leaking them."""
+        events on close instead of leaking them.  An event already
+        delivered ``max_deliveries`` times (:meth:`set_limit`) is NOT
+        requeued: it moves to the ``<topic>.dlq`` dead-letter topic with
+        a ``"dlq"`` metadata record carrying the origin topic/group/seq,
+        the delivery count, and ``reason`` — poison events stop spinning
+        and become observable via a ``payload=False`` tap on the DLQ."""
 
     @abc.abstractmethod
-    def set_limit(self, topic: str, limit: int | None) -> None:
+    def set_limit(self, topic: str, limit: int | None,
+                  max_deliveries: int | None = None) -> None:
         """Bound the topic's unacked-event buffer (credit-based
-        backpressure); falsy ``limit`` clears the bound."""
+        backpressure); falsy ``limit`` clears the bound.
+        ``max_deliveries`` bounds deliveries per (group, event) before
+        the event dead-letters on its next requeue (None leaves the
+        current setting untouched; 0 clears it)."""
 
     @abc.abstractmethod
     def close_topic(self, topic: str) -> None:

@@ -15,6 +15,15 @@ makes :meth:`StreamConsumer.close` safe: anything prefetched but never
 handed to the application is returned to the group (requeued in order)
 instead of leaking its payload reference — a crashed-or-abandoning
 consumer loses nothing for its group.
+
+**Delivery contract.**  Over a replicated broker (the sharded fabric)
+delivery is at-least-once across failover: committed events are never
+skipped, but an event in flight at a crash is redelivered with the SAME
+sequence number.  Consumers needing exactly-once semantics pass
+``dedup=True`` — already-delivered seqs are acked and dropped instead
+of yielded — or dedup by ``seq`` themselves.  Poison events (failing
+handlers that requeue them repeatedly) dead-letter to ``<topic>.dlq``
+after the producer's ``max_deliveries`` bound.
 """
 from __future__ import annotations
 
@@ -30,21 +39,26 @@ class StreamProducer:
     must already be bytes-like).  ``limit`` installs credit-based
     backpressure on the topic: appends park once ``limit`` events sit
     unacked, until consumer acks free slots (TimeoutError past
-    ``timeout``).  Usable as a context manager — the topic closes on
-    exit so consumer groups observe end-of-stream instead of timing out.
+    ``timeout``).  ``max_deliveries`` bounds redeliveries per (group,
+    event): an event requeued past it moves to ``<topic>.dlq`` instead
+    of recycling forever.  Usable as a context manager — the topic
+    closes on exit so consumer groups observe end-of-stream instead of
+    timing out.
     """
 
     def __init__(self, broker: Broker, topic: str, *,
                  serializer: Callable[[Any], Any] | None = None,
                  ttl: float | None = None, limit: int | None = None,
+                 max_deliveries: int | None = None,
                  timeout: float | None = None) -> None:
         self.broker = broker
         self.topic = topic
         self.ttl = ttl
         self.timeout = timeout
         self._serializer = serializer
-        if limit:
-            broker.set_limit(topic, int(limit))
+        if limit or max_deliveries:
+            broker.set_limit(topic, int(limit) if limit else None,
+                             max_deliveries=max_deliveries)
 
     def append(self, obj: Any, *, meta: dict | None = None) -> int:
         """Serialize + publish one event; returns its sequence number.
@@ -84,12 +98,19 @@ class StreamConsumer:
     requeues anything prefetched-but-undelivered back to the group, so
     abandoning mid-stream leaks no payload references.  Iterate inside a
     ``with`` block (or try/finally ``close()``).
+
+    ``dedup=True`` upgrades the at-least-once redelivery that follows a
+    broker failover to exactly-once *for this consumer*: an event whose
+    seq was already delivered is acked (releasing its reference) and
+    silently skipped instead of yielded.  Seen seqs are tracked in
+    memory for the consumer's lifetime.
     """
 
     def __init__(self, broker: Broker, topic: str, group: str = "default",
                  *, start: str = "new", filter: dict | None = None,  # noqa: A002
                  payload: bool = True, prefetch: int = 8,
                  timeout: float = 60.0, ack_every: int = 8,
+                 dedup: bool = False,
                  deserializer: Callable[[Any], Any] | None = None) -> None:
         self.broker = broker
         self.topic = topic
@@ -98,9 +119,11 @@ class StreamConsumer:
         self.prefetch = max(0, int(prefetch))
         self.timeout = timeout
         self.ack_every = max(1, int(ack_every))
+        self.dedup = bool(dedup)
         self._deserializer = deserializer
         self._buffer: list[BrokerEvent] = []   # taken (unacked), undelivered
         self._to_ack: list[int] = []           # delivered, ack not yet sent
+        self._seen: set[int] = set()           # dedup=True: delivered seqs
         self._closed = False
         self._ended = False
         broker.subscribe(topic, group, start=start, filter=filter)
@@ -166,6 +189,19 @@ class StreamConsumer:
                            ev.meta)
 
     def _take(self) -> BrokerEvent:
+        while True:
+            ev = self._take_once()
+            if ev.end or not self.dedup:
+                return ev
+            if ev.seq in self._seen:
+                # failover redelivery: ack to release the reference,
+                # skip the yield — the dedup-by-seq contract
+                self._to_ack.append(ev.seq)
+                continue
+            self._seen.add(ev.seq)
+            return ev
+
+    def _take_once(self) -> BrokerEvent:
         if self._closed:
             raise RuntimeError(
                 f"consumer of stream {self.topic!r} is closed")

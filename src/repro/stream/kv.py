@@ -67,13 +67,17 @@ class KVBroker(Broker):
         self.connector.stream_ack(topic, group, seqs,
                                   location=self.location)
 
-    def requeue(self, topic: str, group: str, seqs) -> None:
-        self.connector.stream_requeue(topic, group, seqs,
+    def requeue(self, topic: str, group: str, seqs,
+                reason: str | None = None) -> None:
+        self.connector.stream_requeue(topic, group, seqs, reason=reason,
                                       location=self.location)
 
     # -- topic admin ---------------------------------------------------------
-    def set_limit(self, topic: str, limit: int | None) -> None:
-        self.connector.stream_limit(topic, limit, location=self.location)
+    def set_limit(self, topic: str, limit: int | None,
+                  max_deliveries: int | None = None) -> None:
+        self.connector.stream_limit(topic, limit,
+                                    max_deliveries=max_deliveries,
+                                    location=self.location)
 
     def close_topic(self, topic: str) -> None:
         self.connector.stream_close(topic, location=self.location)

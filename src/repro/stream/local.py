@@ -29,7 +29,7 @@ def _as_bytes(data) -> bytes:
 
 class _Topic:
     __slots__ = ("count", "closed", "data", "meta", "owners", "groups",
-                 "limit")
+                 "limit", "max_deliveries", "deliveries")
 
     def __init__(self) -> None:
         self.count = 0
@@ -39,6 +39,8 @@ class _Topic:
         self.owners: dict[int, int] = {}       # seq -> outstanding group refs
         self.groups: dict[str, dict] = {}      # {queue, unacked, fn, filter}
         self.limit: int | None = None
+        self.max_deliveries: int | None = None
+        self.deliveries: dict[tuple[str, int], int] = {}
 
 
 class LocalBroker(Broker):
@@ -117,6 +119,8 @@ class LocalBroker(Broker):
                 return
             for seq in (*g["queue"], *g["unacked"]):
                 self._drop_owner(t, seq)
+            for k in [k for k in t.deliveries if k[0] == group]:
+                t.deliveries.pop(k, None)
             self._cond.notify_all()
 
     def _drop_owner(self, t: _Topic, seq: int) -> None:
@@ -137,6 +141,7 @@ class LocalBroker(Broker):
             return None
         seq = g["queue"].popleft()
         g["unacked"].add(seq)
+        t.deliveries[(group, seq)] = t.deliveries.get((group, seq), 0) + 1
         return BrokerEvent(seq, t.data.get(seq) if payload else None,
                            t.meta.get(seq) or {})
 
@@ -178,27 +183,70 @@ class LocalBroker(Broker):
             acked = {int(s) for s in seqs} & g["unacked"]
             g["unacked"] -= acked
             for seq in acked:
+                t.deliveries.pop((group, seq), None)
                 self._drop_owner(t, seq)
             if acked:
                 self._cond.notify_all()   # acks free backpressure credits
 
-    def requeue(self, topic: str, group: str, seqs) -> None:
+    def requeue(self, topic: str, group: str, seqs,
+                reason: str | None = None) -> None:
         with self._cond:
             t = self._topic(topic)
             g = t.groups.get(group)
             if g is None:
                 return
-            back = {int(s) for s in seqs} & g["unacked"]
-            if not back:
+            claimed = {int(s) for s in seqs} & g["unacked"]
+            if not claimed:
                 return
-            g["unacked"] -= back
-            g["queue"] = collections.deque(sorted(back | set(g["queue"])))
+            limit = t.max_deliveries
+            dead = ({s for s in claimed
+                     if t.deliveries.get((group, s), 0) >= limit}
+                    if limit else set())
+            back = claimed - dead
+            g["unacked"] -= claimed
+            if back:
+                g["queue"] = collections.deque(
+                    sorted(back | set(g["queue"])))
+            for seq in sorted(dead):
+                self._dead_letter(t, topic, group, seq, reason)
             self._cond.notify_all()
 
+    def _dead_letter(self, t: _Topic, topic: str, group: str, seq: int,
+                     reason: str | None) -> None:
+        """Move a poison event to ``<topic>.dlq``: same payload bytes,
+        original metadata plus a ``"dlq"`` failure record, then release
+        the group's claim on the original."""
+        from repro.core.kv_tcp import dlq_topic
+
+        deliveries = t.deliveries.pop((group, seq), 0)
+        d = self._topic(dlq_topic(topic))
+        if not d.closed:
+            dseq = d.count
+            d.count += 1
+            meta = dict(t.meta.get(seq) or {})
+            meta["dlq"] = {"topic": topic, "group": group, "seq": seq,
+                           "deliveries": deliveries, "reason": reason}
+            d.meta[dseq] = meta
+            matched = [g2 for g2 in d.groups.values()
+                       if g2["fn"] is None or g2["fn"](meta)]
+            data = t.data.get(seq)
+            if data is not None and not (d.groups and not matched):
+                d.data[dseq] = data
+                if matched:
+                    d.owners[dseq] = len(matched)
+            for g2 in matched:
+                g2["queue"].append(dseq)
+        self._drop_owner(t, seq)
+
     # -- topic admin ---------------------------------------------------------
-    def set_limit(self, topic: str, limit: int | None) -> None:
+    def set_limit(self, topic: str, limit: int | None,
+                  max_deliveries: int | None = None) -> None:
         with self._cond:
-            self._topic(topic).limit = int(limit) if limit else None
+            t = self._topic(topic)
+            t.limit = int(limit) if limit else None
+            if max_deliveries is not None:
+                t.max_deliveries = (int(max_deliveries)
+                                    if max_deliveries else None)
             self._cond.notify_all()
 
     def close_topic(self, topic: str) -> None:
@@ -217,4 +265,6 @@ class LocalBroker(Broker):
                 st["buffered"] = len(t.owners)
                 if t.limit is not None:
                     st["limit"] = t.limit
+                if t.max_deliveries:
+                    st["max_deliveries"] = t.max_deliveries
             return st

@@ -1,0 +1,454 @@
+"""Durability tier: server-side chain replication, hinted handoff,
+replica repair, replicated consumer-group cursors, and dead-letter
+queues.
+
+The ``chaos``-marked tests SIGKILL shards mid-workload — they run in the
+nightly tier alongside ``slow``; everything else runs in tier-1.
+"""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core.deploy import start_kvserver
+from repro.core.fabric import ShardedConnector
+from repro.core.kv_tcp import KVClient, dlq_topic, stream_item_key
+from repro.core.connectors.memory import LocalMemoryConnector
+from repro.distributed.chaos import (FaultSchedule, Partition,
+                                     crash_during_cursor_replication,
+                                     kill_shard)
+from repro.distributed.fault_tolerance import RetryPolicy, with_retries
+from repro.stream.interface import StreamConsumer
+from repro.stream.local import LocalBroker
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    """Four UDS shards + a replication-2 quorum connector (chain
+    replication on by default)."""
+    handles = [start_kvserver(str(tmp_path), name=f"s{i}", uds=True)
+               for i in range(4)]
+    fab = ShardedConnector([h.host for h in handles], replication=2,
+                           quorum=True, op_timeout=5.0)
+    yield handles, fab
+    fab.close()
+    for h in handles:
+        h.stop()
+
+
+def _handle_for(sid: str, handles):
+    return next(h for h in handles if h.host == sid)
+
+
+# ---------------------------------------------------------------------------
+# retry policy + chaos primitives (no servers)
+# ---------------------------------------------------------------------------
+def test_retry_policy_backoff_jitter_and_deadline():
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.1, max_delay_s=0.4,
+                      jitter=0.5)
+    for attempt, lo in ((0, 0.1), (1, 0.2), (2, 0.4), (5, 0.4)):
+        d = pol.delay_for(attempt)
+        assert lo <= d <= lo * 1.5          # exponential, capped, jittered
+    start = time.monotonic()
+    capped = RetryPolicy(deadline_s=0.05)
+    assert not capped.expired(start)
+    assert capped.expired(start, next_delay=1.0)   # sleep would overrun
+    assert not RetryPolicy(deadline_s=None).expired(start, 1e9)
+
+
+def test_with_retries_respects_total_deadline():
+    calls: list[int] = []
+
+    def boom():
+        calls.append(1)
+        raise ConnectionError("injected")
+
+    # deadline 0: any backoff overruns it — one attempt, no sleep
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.05, deadline_s=0.0)
+    with pytest.raises(ConnectionError):
+        with_retries(boom, pol)()
+    assert len(calls) == 1
+    calls.clear()
+    # no deadline: the full attempt budget is spent
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.001, deadline_s=None)
+    with pytest.raises(ConnectionError):
+        with_retries(boom, pol)()
+    assert len(calls) == 3
+
+
+def test_fault_schedule_fires_in_order_and_records_errors():
+    out: list[str] = []
+
+    def bad():
+        raise ValueError("injected")
+
+    sched = FaultSchedule([(0.01, lambda: out.append("a"), "one"),
+                           (0.01, bad, "two")]).start()
+    sched.join(5.0)
+    assert sched.fired == ["one", "two"] and out == ["a"]
+    assert [(lbl, type(e)) for lbl, e in sched.errors] \
+        == [("two", ValueError)]
+    # cancel stops unfired steps
+    sched = FaultSchedule([(0.5, lambda: out.append("late"), "late")])
+    sched.start()
+    sched.cancel()
+    sched.join(5.0)
+    assert sched.fired == [] and "late" not in out
+
+
+def test_partition_blackholes_every_link_symmetrically():
+    class _Link:
+        def __init__(self):
+            self.black = None
+
+        def blackhole(self, on=True):
+            self.black = bool(on)
+
+    a, b = _Link(), _Link()
+    with Partition(a, b) as cut:
+        assert cut.active and a.black and b.black
+    assert not cut.active and a.black is False and b.black is False
+
+
+# ---------------------------------------------------------------------------
+# chain replication: one upload, server-side forwarding
+# ---------------------------------------------------------------------------
+def test_chain_put_single_upload_and_replica_presence(cluster):
+    handles, fab = cluster
+    legacy = ShardedConnector([h.host for h in handles], replication=2,
+                              quorum=True, op_timeout=5.0, chain=False)
+    try:
+        blobs = [bytes([i % 256]) * 8192 for i in range(24)]
+        keys = fab.put_batch(blobs)
+        legacy.put_batch(blobs)
+        # both modes leave every key on `replication` distinct shards
+        clients = [KVClient(h.host, h.port) for h in handles]
+        for key in keys:
+            assert sum(c.exists(key[1]) for c in clients) == fab.replication
+        for c in clients:
+            c.close()
+        # ...but the chain path uploads ONE copy: the client egress is
+        # about 1/R of the legacy R-copy fanout (plus protocol overhead)
+        chain_tx = fab.stats()["fabric"]["client_tx_bytes"]
+        legacy_tx = legacy.stats()["fabric"]["client_tx_bytes"]
+        assert chain_tx < 0.75 * legacy_tx
+        st = fab.stats()["fabric"]
+        assert st["chain"] and st["n_repl_errors"] == 0
+        assert st["n_repairs_pending"] == 0
+    finally:
+        legacy.close()
+
+
+def test_hinted_handoff_replays_on_recovery(cluster):
+    handles, fab = cluster
+    oid = "hinted-object"
+    blob = b"hinted-payload" * 64
+    owners = fab._owners(oid)
+    primary, successor = owners[0], owners[1]
+    fab._suspect(primary)
+    fab._put_object(oid, blob)
+    ca = KVClient(*(_handle_for(primary, handles).host, 0))
+    cb = KVClient(*(_handle_for(successor, handles).host, 0))
+    try:
+        # the put landed on the successor with a hint record instead of
+        # being forwarded to the suspect primary
+        assert not ca.exists(oid) and cb.exists(oid)
+        assert primary in cb.hints()
+        assert fab.stats()["fabric"]["n_hint_shards_pending"] >= 1
+        # first successful exchange with the primary replays the hint
+        fab._mark_ok(primary)
+        assert bytes(ca.get(oid)) == blob
+        assert not cb.hints().get(primary)
+        st = fab.stats()["fabric"]
+        assert st["n_hints_replayed"] >= 1
+        assert st["n_hint_shards_pending"] == 0
+    finally:
+        ca.close()
+        cb.close()
+
+
+@pytest.mark.chaos
+def test_replica_write_failure_surfaces_and_repairs(cluster, tmp_path):
+    """Satellite regression: kill a chain successor mid-put-storm — the
+    head's per-hop errors surface in stats and queue repairs; when the
+    shard answers again every owed replica copy is re-put."""
+    handles, fab = cluster
+    dead_id = handles[3].host
+    kill_shard(handles[3])
+    for i in range(200):
+        fab.put(f"payload-{i}".encode() * 32)
+        st = fab.stats()["fabric"]
+        if st["n_repl_errors"] and st["n_repairs_pending"]:
+            break
+    st = fab.stats()["fabric"]
+    assert st["n_repl_errors"] > 0 and st["n_repairs_pending"] > 0
+    owed = [oid for (sid, oid) in fab._repair_q if sid == dead_id]
+    assert owed
+    # revive the shard on the same socket; recovery rides ordinary
+    # traffic via the _mark_ok hook
+    handles[3] = start_kvserver(str(tmp_path), name="s3", uds=True)
+    deadline = time.monotonic() + 30.0
+    while fab.stats()["fabric"]["n_repairs_pending"]:
+        fab._mark_ok(dead_id)
+        if time.monotonic() > deadline:
+            break
+        time.sleep(0.05)
+    st = fab.stats()["fabric"]
+    assert st["n_repairs_pending"] == 0 and st["n_repaired"] > 0
+    revived = KVClient(handles[3].host, handles[3].port)
+    try:
+        for oid in owed:
+            assert revived.exists(oid)
+    finally:
+        revived.close()
+
+
+# ---------------------------------------------------------------------------
+# replicated group cursors: snapshot / restore / chain push
+# ---------------------------------------------------------------------------
+def test_stream_snapshot_restore_roundtrip(tmp_path):
+    h0 = start_kvserver(str(tmp_path), name="a", uds=True)
+    h1 = start_kvserver(str(tmp_path), name="b", uds=True)
+    c0 = KVClient(h0.host, h0.port)
+    c1 = KVClient(h1.host, h1.port)
+    try:
+        c0.stream_sub("t", "g")
+        c0.stream_limit("t", 5, max_deliveries=3)
+        for i in range(3):
+            c0.stream_append("t", f"e{i}".encode())
+        ev = c0.stream_take("t", "g", timeout=5.0)
+        assert ev["seq"] == 0                    # delivered, left unacked
+        snap = c0.stream_snap("t")
+        assert snap["count"] == 3 and not snap["closed"]
+        assert sorted(snap["groups"]["g"]["queue"]) == [1, 2]
+        assert list(snap["groups"]["g"]["unacked"]) == [0]
+        assert ["g", 0, 1] in [list(d) for d in snap["deliveries"]]
+        # payload bytes travel separately — copy the owned item keys
+        for s in snap["owners"]:
+            key = stream_item_key("t", int(s))
+            c1.put(key, bytes(c0.get(key)))
+        c1.stream_restore("t", snap)
+        stat = c1.stream_stat("t")
+        assert stat["count"] == 3 and stat["max_deliveries"] == 3
+        assert stat["groups"]["g"] == {"queued": 2, "unacked": 1}
+        ev = c1.stream_take("t", "g", timeout=5.0)
+        assert ev["seq"] == 1 and bytes(ev["data"]) == b"e1"
+        # drop forgets the topic and evicts its payload keys
+        c1.stream_drop("t")
+        assert c1.stream_stat("t")["count"] == 0
+        assert not c1.exists(stream_item_key("t", 2))
+    finally:
+        c0.close()
+        c1.close()
+        h0.stop()
+        h1.stop()
+
+
+def test_stream_chain_pushes_cursor_to_replica(tmp_path):
+    h0 = start_kvserver(str(tmp_path), name="a", uds=True)
+    h1 = start_kvserver(str(tmp_path), name="b", uds=True)
+    c0 = KVClient(h0.host, h0.port)
+    c1 = KVClient(h1.host, h1.port)
+    try:
+        c0.stream_chain("t", [h1.host])
+        c0.stream_sub("t", "g")
+        for i in range(2):
+            c0.stream_append("t", f"e{i}".encode())
+        # chained appends commit synchronously on every chain member:
+        # payload AND cursor are on the replica before the append acks
+        snap = c1.stream_snap("t")
+        assert snap["count"] == 2
+        assert bytes(c1.get(stream_item_key("t", 0))) == b"e0"
+        # group-state mutations push asynchronously (coalesced)
+        ev = c0.stream_take("t", "g", timeout=5.0)
+        c0.stream_ack("t", "g", [ev["seq"]])
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            g = c1.stream_snap("t")["groups"]["g"]
+            if not g["unacked"] and 0 not in g["queue"]:
+                break
+            time.sleep(0.05)
+        g = c1.stream_snap("t")["groups"]["g"]
+        assert not g["unacked"] and list(g["queue"]) == [1]
+    finally:
+        c0.close()
+        c1.close()
+        h0.stop()
+        h1.stop()
+
+
+# ---------------------------------------------------------------------------
+# dead-letter queues
+# ---------------------------------------------------------------------------
+def test_dlq_local_broker_moves_poison_event():
+    b = LocalBroker()
+    b.subscribe("t", "g")
+    b.set_limit("t", None, max_deliveries=2)
+    b.publish("t", b"poison", meta={"job": 7})
+    for expect_back in (True, False):
+        ev = b.take("t", "g", timeout=5.0)
+        assert ev.seq == 0 and bytes(ev.data) == b"poison"
+        b.requeue("t", "g", [ev.seq], reason="handler crashed")
+        assert bool(b.stat("t")["groups"]["g"]["queued"]) == expect_back
+    # second requeue hit max_deliveries: the event moved to <topic>.dlq
+    st = b.stat("t")["groups"]["g"]
+    assert st == {"queued": 0, "unacked": 0}
+    b.subscribe(dlq_topic("t"), "aud", start="begin")
+    dev = b.take(dlq_topic("t"), "aud", timeout=5.0)
+    assert bytes(dev.data) == b"poison" and dev.meta["job"] == 7
+    assert dev.meta["dlq"] == {"topic": "t", "group": "g", "seq": 0,
+                               "deliveries": 2,
+                               "reason": "handler crashed"}
+
+
+def test_dlq_fallback_connector_moves_poison_event():
+    conn = LocalMemoryConnector()
+    try:
+        conn.stream_subscribe("t", "g")
+        conn.stream_subscribe(dlq_topic("t"), "aud")
+        conn.stream_limit("t", None, max_deliveries=1)
+        conn.stream_append("t", b"poison", meta={"job": 1})
+        ev = conn.stream_take("t", "g", timeout=5.0)
+        assert conn.stream_requeue("t", "g", [ev.seq], reason="boom") == 0
+        dev = conn.stream_take(dlq_topic("t"), "aud", timeout=5.0)
+        assert bytes(dev.data) == b"poison"
+        assert dev.meta["dlq"] == {"topic": "t", "group": "g", "seq": 0,
+                                   "deliveries": 1, "reason": "boom"}
+        st = conn.stream_stat("t")["groups"]["g"]
+        assert st == {"queued": 0, "unacked": 0}
+    finally:
+        conn.close()
+
+
+def test_consumer_dedup_acks_and_skips_redelivered():
+    b = LocalBroker()
+    c = StreamConsumer(b, "t", "g", prefetch=0, dedup=True, ack_every=100,
+                       timeout=5.0)
+    for i in range(3):
+        b.publish("t", f"e{i}".encode())
+    b.close_topic("t")
+    assert next(c) == b"e0"
+    # failover-style redelivery: hand the delivered-but-unacked event
+    # back to the group — the dedup consumer must not yield it twice
+    b.requeue("t", "g", [0])
+    assert list(c) == [b"e1", b"e2"]
+    c.close()
+    # the duplicate was acked (its reference released), not leaked
+    assert b.stat("t")["groups"]["g"] == {"queued": 0, "unacked": 0}
+
+
+# ---------------------------------------------------------------------------
+# rebalance with active consumer groups (cursors + DLQ travel)
+# ---------------------------------------------------------------------------
+def test_rebalance_preserves_cursors_and_dlq(cluster, tmp_path):
+    handles, fab = cluster
+    fab.stream_subscribe("jobs", "g")
+    fab.stream_subscribe(dlq_topic("jobs"), "aud")
+    fab.stream_limit("jobs", None, max_deliveries=1)
+    for i in range(6):
+        fab.stream_append("jobs", f"j{i}".encode(), meta={"i": i})
+    ev = fab.stream_take("jobs", "g", timeout=5.0)
+    fab.stream_ack("jobs", "g", [ev.seq])              # j0 done
+    ev = fab.stream_take("jobs", "g", timeout=5.0)
+    assert ev.seq == 1
+    fab.stream_requeue("jobs", "g", [ev.seq], reason="poison")  # -> DLQ
+    owners_before = fab._owners("@t:jobs")
+    extra = start_kvserver(str(tmp_path), name="s4", uds=True)
+    try:
+        fab.add_shard(extra.host)
+        for seq in (2, 3):                  # cursor survived the move
+            ev = fab.stream_take("jobs", "g", timeout=5.0)
+            assert ev.seq == seq and bytes(ev.data) == f"j{seq}".encode()
+            fab.stream_ack("jobs", "g", [ev.seq])
+        # removing the old primary forces the topic home to move again
+        fab.remove_shard(owners_before[0])
+        for seq in (4, 5):
+            ev = fab.stream_take("jobs", "g", timeout=5.0)
+            assert ev.seq == seq and bytes(ev.data) == f"j{seq}".encode()
+            fab.stream_ack("jobs", "g", [ev.seq])
+        # the dead-lettered event travelled with its co-homed DLQ topic
+        dev = fab.stream_take(dlq_topic("jobs"), "aud", timeout=5.0)
+        assert bytes(dev.data) == b"j1" and dev.meta["i"] == 1
+        assert dev.meta["dlq"]["seq"] == 1
+        assert dev.meta["dlq"]["reason"] == "poison"
+        stat = fab.stream_stat("jobs")
+        assert stat["count"] == 6 and stat["max_deliveries"] == 1
+        # the stream stays live across both membership changes
+        fab.stream_append("jobs", b"j6", meta={"i": 6})
+        ev = fab.stream_take("jobs", "g", timeout=5.0)
+        assert ev.seq == 6 and bytes(ev.data) == b"j6"
+    finally:
+        extra.stop()
+
+
+# ---------------------------------------------------------------------------
+# chaos tier: at-least-once across failover + poison -> DLQ
+# ---------------------------------------------------------------------------
+def _retrying(fn, deadline_s=30.0):
+    deadline = time.monotonic() + deadline_s
+    while True:
+        try:
+            return fn()
+        except (ConnectionError, TimeoutError, OSError):
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.05)
+
+
+@pytest.mark.chaos
+def test_failover_delivers_all_committed_and_dead_letters_poison(cluster):
+    """SIGKILL the topic's home shard with a consumer group mid-stream:
+    the group resumes from the replicated cursor and every committed
+    event is delivered at least once (zero skipped seqs); the poison
+    event dead-letters to ``<topic>.dlq`` after ``max_deliveries``."""
+    handles, fab = cluster
+    fab.stream_subscribe("t", "g")
+    fab.stream_subscribe(dlq_topic("t"), "aud")
+    fab.stream_limit("t", None, max_deliveries=2)
+    committed: set[int] = set()
+    poison_seq = None
+    for i in range(6):
+        meta = {"i": i, "poison": True} if i == 3 else {"i": i}
+        seq = fab.stream_append("t", f"e{i}".encode(), meta=meta)
+        committed.add(seq)
+        if i == 3:
+            poison_seq = seq
+    home = fab._stream_home["t"]
+    sched = crash_during_cursor_replication(_handle_for(home, handles),
+                                            delay_s=0.05)
+    for i in range(6, 12):                 # appends ride out the crash
+        seq = _retrying(lambda i=i: fab.stream_append(
+            "t", f"e{i}".encode(), meta={"i": i}))
+        committed.add(seq)
+    sched.join(10.0)
+    assert sched.fired == ["kill-stream-home"]
+
+    seen: dict[int, bytes] = {}
+    poison_dead = False           # requeue returns 0 once it dead-letters
+    deadline = time.monotonic() + 60.0
+    while not (committed <= set(seen) and poison_dead):
+        assert time.monotonic() < deadline, \
+            f"missing seqs {sorted(committed - set(seen))}, " \
+            f"poison_dead={poison_dead}"
+        ev = _retrying(lambda: fab.stream_take("t", "g", timeout=10.0))
+        seen[ev.seq] = bytes(ev.data) if ev.data is not None else b""
+        if ev.meta.get("poison"):
+            back = _retrying(lambda: fab.stream_requeue(
+                "t", "g", [ev.seq], reason="poison"))
+            if not back:
+                poison_dead = True
+        else:
+            _retrying(lambda: fab.stream_ack("t", "g", [ev.seq]))
+    # zero committed events skipped; duplicates are the permitted cost
+    assert committed <= set(seen)
+    assert seen[poison_seq] == b"e3"
+    # the poison event keeps redelivering until max_deliveries, then
+    # lands in the DLQ with its failure record
+    dev = _retrying(lambda: fab.stream_take(dlq_topic("t"), "aud",
+                                            timeout=15.0), deadline_s=60.0)
+    assert bytes(dev.data) == b"e3" and dev.meta.get("poison")
+    assert dev.meta["dlq"]["topic"] == "t"
+    assert dev.meta["dlq"]["group"] == "g"
+    assert fab.n_failovers > 0
+    assert fab._stream_home["t"] != home

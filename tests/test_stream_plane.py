@@ -305,9 +305,10 @@ def test_kvserver_store_fanout_and_filter(kv, tmp_path):
 # ---------------------------------------------------------------------------
 @pytest.mark.chaos
 def test_fabric_stream_group_survives_shard_kill(tmp_path):
-    """Kill the topic's home shard mid-stream: the subscription re-homes
-    to a replica (re-subscribed ``start="new"``) and the group keeps
-    consuming appends — at-most-once across the failover, never stuck."""
+    """Kill the topic's home shard mid-stream: the group re-homes to a
+    replica that already holds the chained events AND the replicated
+    group cursor, and resumes at-least-once — redelivery of in-flight
+    events is allowed, a skipped committed event is the bug."""
     from repro.core.deploy import start_kvserver
     from repro.core.fabric import ShardedConnector
     from repro.distributed.chaos import kill_shard
@@ -318,28 +319,34 @@ def test_fabric_stream_group_survives_shard_kill(tmp_path):
                            quorum=True, op_timeout=5.0)
     try:
         fab.stream_subscribe("events", "workers")
-        fab.stream_append("events", b"before")
+        for i in range(3):                     # committed before the kill
+            fab.stream_append("events", f"e{i}".encode())
         ev = fab.stream_take("events", "workers", timeout=5.0)
-        assert bytes(ev.data) == b"before"
+        assert bytes(ev.data) == b"e0"
         fab.stream_ack("events", "workers", [ev.seq])
 
         home = fab._stream_home["events"]
         victim = next(h for h in handles if h.host == home)
         kill_shard(victim)
 
-        # appends fail over to a replica; the group was re-subscribed
-        # there so the take below is served by the new home
+        # appends fail over to the replica holding the restored cursor
         deadline = time.monotonic() + 30.0
         while True:
             try:
-                fab.stream_append("events", b"after")
+                fab.stream_append("events", b"e3")
                 break
             except (ConnectionError, TimeoutError):
                 if time.monotonic() > deadline:
                     raise
-        ev = fab.stream_take("events", "workers", timeout=10.0)
-        assert bytes(ev.data) == b"after"
-        assert fab.stream_ack("events", "workers", [ev.seq]) == 1
+        # every committed-but-unacked event (1, 2) plus the post-kill
+        # append (3) must be delivered; a redelivery of acked seq 0 is a
+        # permitted duplicate (the consumer dedup-by-seq contract)
+        seen: dict[int, bytes] = {}
+        while not {1, 2, 3} <= set(seen):
+            ev = fab.stream_take("events", "workers", timeout=10.0)
+            seen[ev.seq] = bytes(ev.data) if ev.data is not None else b""
+            fab.stream_ack("events", "workers", [ev.seq])
+        assert seen[1] == b"e1" and seen[2] == b"e2" and seen[3] == b"e3"
         assert fab.n_failovers > 0
         assert fab._stream_home["events"] != home
     finally:
